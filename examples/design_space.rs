@@ -1,0 +1,78 @@
+//! Design-space exploration ablation (§4.4 / DESIGN.md ablation index):
+//! MOO-STAGE vs AMOSA vs random search at an equal evaluation budget on
+//! the Eq. 6 PTN problem — the comparison the paper cites MOO-STAGE [10]
+//! winning, especially at high objective counts.
+//!
+//! Run with: `cargo run --release --example design_space [-- full]`
+
+use hetrax::config::Config;
+use hetrax::experiments::common;
+use hetrax::optim::amosa::Amosa;
+use hetrax::optim::random_search::RandomSearch;
+use hetrax::optim::{Evaluator, MooStage, ObjectiveSet};
+use hetrax::util::bench::Table;
+use hetrax::util::rng::Rng;
+
+fn front_quality(archive: &hetrax::optim::ParetoArchive) -> (f64, usize) {
+    // Balanced scalarized best + front size (simple, monotone proxies
+    // for front quality; lower scalar is better).
+    let best = archive.best_scalarized().expect("front non-empty");
+    let scale = [1.0, 1.0, 2000.0, 0.25];
+    let q: f64 = (0..4)
+        .filter(|&i| archive.set.active[i])
+        .map(|i| best.objectives.vals[i] / scale[i])
+        .sum::<f64>()
+        / archive.set.count() as f64;
+    (q, archive.len())
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "full");
+    let cfg = Config::default();
+    let w = common::dse_workload();
+    let ev = Evaluator::new(&cfg, &w);
+    let set = ObjectiveSet::ptn();
+
+    let (epochs, steps, perturb) = if full { (50, 10, 10) } else { (12, 6, 8) };
+    let budget = epochs * steps * perturb;
+    println!("PTN design-space ablation, budget ≈ {budget} evaluations each\n");
+
+    let mut table = Table::new(
+        "optimizer ablation (lower best-scalar = better)",
+        &["best scalar", "front size", "evaluations"],
+    );
+
+    let mut stage = MooStage::new(&cfg, &ev, set);
+    stage.epochs = epochs;
+    stage.steps_per_epoch = steps;
+    stage.perturbations = perturb;
+    let stage_res = stage.run(&mut Rng::new(7));
+    let (q, n) = front_quality(&stage_res.archive);
+    table.row("MOO-STAGE", &[format!("{q:.4}"), n.to_string(),
+                             stage_res.evaluations.to_string()]);
+
+    let amosa = Amosa {
+        evaluator: &ev,
+        set,
+        iterations: budget,
+        t_start: 1.0,
+        t_end: 1e-3,
+    };
+    let amosa_res = amosa.run(&mut Rng::new(7));
+    let (q, n) = front_quality(&amosa_res.archive);
+    table.row("AMOSA", &[format!("{q:.4}"), n.to_string(),
+                         amosa_res.evaluations.to_string()]);
+
+    let random = RandomSearch { evaluator: &ev, set, samples: budget };
+    let random_res = random.run(&mut Rng::new(7));
+    let (q, n) = front_quality(&random_res.archive);
+    table.row("random", &[format!("{q:.4}"), n.to_string(),
+                          random_res.evaluations.to_string()]);
+
+    table.print();
+
+    println!("\nMOO-STAGE convergence (best scalar per epoch):");
+    for (i, q) in stage_res.history.iter().enumerate() {
+        println!("  epoch {i:>3}: {q:.4}");
+    }
+}

@@ -1,0 +1,64 @@
+//! Quickstart — the 60-second tour:
+//!   1. load an AOT-compiled attention artifact and execute it via PJRT
+//!      (real numerics, Python not involved),
+//!   2. estimate a BERT-Large inference on the HeTraX architecture,
+//!   3. run the thermal model on the resulting power map.
+//!
+//! Run with: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use hetrax::arch::Placement;
+use hetrax::config::Config;
+use hetrax::model::{ArchVariant, ModelId, Workload};
+use hetrax::perf::PerfEstimator;
+use hetrax::power;
+use hetrax::runtime::Runtime;
+use hetrax::thermal::{PowerGrid, ThermalModel};
+use hetrax::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let cfg = Config::default();
+
+    // --- 1. Real numerics through the PJRT runtime.
+    println!("== 1. AOT artifact execution (fused online-softmax attention) ==");
+    match Runtime::open("artifacts") {
+        Ok(mut rt) => {
+            let platform = rt.platform();
+            let art = rt.load("attention_tiny")?;
+            let n: usize = art.inputs[0].element_count();
+            let mut rng = Rng::new(0);
+            let gen = |rng: &mut Rng| (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect::<Vec<_>>();
+            let out = art.run_f32(&[gen(&mut rng), gen(&mut rng), gen(&mut rng)])?;
+            println!("  platform: {platform}");
+            println!("  attention({:?}) -> {} values, first = {:.6}",
+                     art.inputs[0].shape, out[0].len(), out[0][0]);
+        }
+        Err(e) => println!("  (skipped — {e:#}; run `make artifacts`)"),
+    }
+
+    // --- 2. Architecture-level inference estimate.
+    println!("\n== 2. HeTraX inference estimate (BERT-Large, n=1024) ==");
+    let w = Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, 1024);
+    let report = PerfEstimator::new(&cfg).estimate(&w);
+    println!("  latency: {:.2} ms | energy: {:.2} J | EDP: {:.4} J·s",
+             report.latency_s * 1e3, report.energy.total_j(), report.edp());
+    for (kernel, t) in &report.kernel_time_s {
+        println!("    {kernel:<6} {:.3} ms", t * 1e3);
+    }
+
+    // --- 3. Thermal feasibility.
+    println!("\n== 3. Steady-state thermal map (PTN-style stack) ==");
+    let mut placement = Placement::mesh_baseline(&cfg);
+    placement.tier_order.swap(0, 3); // ReRAM nearest the sink (Fig. 3b)
+    let powers = power::core_powers(&cfg, &report.activity);
+    let grid = PowerGrid::from_core_powers(&cfg, &placement, &powers);
+    let thermal = ThermalModel::new(&cfg).evaluate(&grid);
+    for (t, peak) in thermal.tier_peak_c.iter().enumerate() {
+        let kind = if t == placement.reram_tier() { "ReRAM" } else { "SM-MC" };
+        println!("  tier {t} ({kind:<5}): peak {:.1} °C", peak);
+    }
+    println!("  system peak {:.1} °C (DRAM limit 95 °C — feasible: {})",
+             thermal.peak_c, thermal.peak_c < 95.0);
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Thermal design-space sweep: how peak and ReRAM-tier temperature move
+//! with (a) the vertical position of the ReRAM tier, (b) ambient
+//! temperature, and (c) workload intensity — the §4.3/§5.2 trade-off
+//! surface behind Fig. 3, plus the resulting Fig. 4-style accuracy-risk
+//! classification per operating point.
+//!
+//! Run with: `cargo run --release --example thermal_sweep`
+
+use hetrax::arch::{Placement, TierKind};
+use hetrax::config::Config;
+use hetrax::model::{ArchVariant, ModelId, Workload};
+use hetrax::perf::PerfEstimator;
+use hetrax::power;
+use hetrax::reram::NoiseModel;
+use hetrax::thermal::{PowerGrid, ThermalModel};
+use hetrax::util::bench::Table;
+
+fn placement_with_reram_at(cfg: &Config, tier: usize) -> Placement {
+    let mut p = Placement::mesh_baseline(cfg);
+    let cur = p.reram_tier();
+    p.tier_order.swap(cur, tier);
+    let _ = TierKind::ReRam;
+    p
+}
+
+fn main() {
+    let cfg = Config::default();
+    let w = Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, 1024);
+    let report = PerfEstimator::new(&cfg).estimate(&w);
+    let powers = power::core_powers(&cfg, &report.activity);
+
+    // --- (a) ReRAM tier position.
+    let mut t1 = Table::new(
+        "ReRAM tier position vs temperatures (BERT-Large n=1024)",
+        &["peak °C", "ReRAM °C", "P(digit err)", "accuracy risk"],
+    );
+    for tier in 0..4 {
+        let p = placement_with_reram_at(&cfg, tier);
+        let grid = PowerGrid::from_core_powers(&cfg, &p, &powers);
+        let th = ThermalModel::new(&cfg).evaluate(&grid);
+        let reram_c = th.tier_peak_c[p.reram_tier()];
+        let perr = NoiseModel::new(&cfg, reram_c).digit_error_probability();
+        t1.row(
+            &format!("tier {tier} {}", if tier == 0 { "(sink)" } else { "" }),
+            &[
+                format!("{:.1}", th.peak_c),
+                format!("{reram_c:.1}"),
+                format!("{perr:.2e}"),
+                (if perr > 1e-3 { "LOSS" } else { "safe" }).to_string(),
+            ],
+        );
+    }
+    t1.print();
+
+    // --- (b) Ambient sweep at the PTN stack.
+    let mut t2 = Table::new("ambient temperature sweep (ReRAM at sink)", &[
+        "peak °C", "ReRAM °C", "P(digit err)",
+    ]);
+    for ambient in [25.0, 35.0, 45.0, 55.0, 65.0] {
+        let mut c = cfg.clone();
+        c.ambient_c = ambient;
+        let p = placement_with_reram_at(&c, 0);
+        let grid = PowerGrid::from_core_powers(&c, &p, &powers);
+        let th = ThermalModel::new(&c).evaluate(&grid);
+        let reram_c = th.tier_peak_c[p.reram_tier()];
+        let perr = NoiseModel::new(&c, reram_c).digit_error_probability();
+        t2.row(&format!("{ambient:.0} °C"), &[
+            format!("{:.1}", th.peak_c),
+            format!("{reram_c:.1}"),
+            format!("{perr:.2e}"),
+        ]);
+    }
+    t2.print();
+
+    // --- (c) Workload intensity (sequence length) sweep.
+    let mut t3 = Table::new("workload sweep (PTN stack)", &["latency ms", "peak °C", "ReRAM °C"]);
+    for seq in [128usize, 512, 1024, 2056] {
+        let w = Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, seq);
+        let r = PerfEstimator::new(&cfg).estimate(&w);
+        let p = placement_with_reram_at(&cfg, 0);
+        let grid = PowerGrid::from_core_powers(&cfg, &p, &power::core_powers(&cfg, &r.activity));
+        let th = ThermalModel::new(&cfg).evaluate(&grid);
+        t3.row(&format!("n={seq}"), &[
+            format!("{:.2}", r.latency_s * 1e3),
+            format!("{:.1}", th.peak_c),
+            format!("{:.1}", th.tier_peak_c[p.reram_tier()]),
+        ]);
+    }
+    t3.print();
+}

@@ -1,0 +1,178 @@
+"""AOT compiler: lower the L2 model to HLO *text* artifacts for the Rust
+runtime, train + export the Fig. 4 classifier, and write the artifact
+manifest.
+
+Interchange format is HLO text, NOT ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run from ``python/``:  ``python -m compile.aot --out-dir ../artifacts``
+(this is what ``make artifacts`` does). Python never runs at request time;
+the Rust binary is self-contained once ``artifacts/`` exists.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import classifier as clf
+from . import model as model_lib
+from . import tensor_io
+from . import train_classifier
+from .kernels import attention as attn_k
+
+# Dimensions of the artifacts the Rust examples/tests execute. bert-tiny is
+# the real published BERT-Tiny geometry; SEQ is kept at 128 so the
+# interpret-mode pallas loops stay fast on CPU.
+TINY = model_lib.MODEL_ZOO["bert-tiny"]
+TINY_SEQ = 128
+ATTN_HEADS, ATTN_SEQ, ATTN_HEAD_DIM = 2, 128, 64
+CLF_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_attention():
+    """Standalone fused-attention artifact (quickstart + runtime tests)."""
+    def fn(q, k, v):
+        return (attn_k.fused_attention(q, k, v),)
+
+    s = _spec((ATTN_HEADS, ATTN_SEQ, ATTN_HEAD_DIM))
+    lowered = jax.jit(fn).lower(s, s, s)
+    inputs = [("q", s.shape), ("k", s.shape), ("v", s.shape)]
+    return to_hlo_text(lowered), inputs, [("out", s.shape)]
+
+
+def lower_encoder_block(variant: str = "encoder_only"):
+    """One Table-1 block, weights as HLO parameters (bert-tiny dims)."""
+    cfg = model_lib.ModelConfig("bert-tiny", 2, TINY.d_model, TINY.heads,
+                                TINY.d_ff, variant)
+    shapes = model_lib.block_param_shapes(cfg)
+
+    def fn(x, *params):
+        causal = variant == "decoder_only"
+        return (model_lib.encoder_block(x, params, cfg, causal=causal),)
+
+    x_spec = _spec((TINY_SEQ, cfg.d_model))
+    param_specs = [_spec(shapes[n]) for n in model_lib.BLOCK_PARAM_NAMES]
+    lowered = jax.jit(fn).lower(x_spec, *param_specs)
+    inputs = [("x", x_spec.shape)] + [
+        (n, shapes[n]) for n in model_lib.BLOCK_PARAM_NAMES]
+    return to_hlo_text(lowered), inputs, [("out", x_spec.shape)]
+
+
+def lower_classifier():
+    """Batched classifier forward, weights as parameters (Fig. 4 driver)."""
+    shapes = clf.param_shapes()
+
+    def fn(x_batch, *params):
+        return (clf.forward_batch(x_batch, list(params)),)
+
+    x_spec = _spec((CLF_BATCH, clf.SEQ_LEN, clf.D_MODEL))
+    param_specs = [_spec(shapes[n]) for n in clf.PARAM_NAMES]
+    lowered = jax.jit(fn).lower(x_spec, *param_specs)
+    inputs = [("x", x_spec.shape)] + [(n, shapes[n]) for n in clf.PARAM_NAMES]
+    return to_hlo_text(lowered), inputs, [("logits", (CLF_BATCH, clf.NUM_CLASSES))]
+
+
+def export_bert_tiny_weights(out_dir: str) -> None:
+    """Random-init bert-tiny weights for the end-to-end serving example
+    (the example measures systems behaviour, not task accuracy)."""
+    key = jax.random.PRNGKey(42)
+    tensors: dict[str, np.ndarray] = {}
+    for layer in range(TINY.layers):
+        key, sub = jax.random.split(key)
+        params = model_lib.init_block_params(sub, TINY)
+        for name, p in zip(model_lib.BLOCK_PARAM_NAMES, params):
+            tensors[f"l{layer}_{name}"] = np.asarray(p)
+    tensor_io.write_archive(os.path.join(out_dir, "bert_tiny_weights.htx"),
+                            tensors)
+
+
+def export_golden_archive(out_dir: str) -> None:
+    """Golden HTX file cross-checking the Python writer vs the Rust reader."""
+    tensor_io.write_archive(
+        os.path.join(out_dir, "golden.htx"),
+        {
+            "f32_2x3": np.arange(6, dtype=np.float32).reshape(2, 3) / 4.0,
+            "i32_4": np.array([-2, -1, 0, 2_000_000_000], np.int32),
+            "u8_scalar": np.array(255, np.uint8),
+            "f32_empty": np.zeros((0, 5), np.float32),
+        })
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="skip classifier training (artifacts for tests only)")
+    ap.add_argument("--train-steps", type=int, default=train_classifier.STEPS)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest: dict = {"format": "hlo-text", "artifacts": {}}
+
+    jobs = {
+        "attention_tiny": lower_attention,
+        "encoder_block_tiny": lambda: lower_encoder_block("encoder_only"),
+        "encoder_block_tiny_mqa": lambda: lower_encoder_block("mqa"),
+        "encoder_block_tiny_parallel": lambda: lower_encoder_block("parallel"),
+        "decoder_block_tiny": lambda: lower_encoder_block("decoder_only"),
+        "classifier": lower_classifier,
+    }
+    for name, job in jobs.items():
+        text, inputs, outputs = job()
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"name": n, "shape": list(s)} for n, s in inputs],
+            "outputs": [{"name": n, "shape": list(s)} for n, s in outputs],
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(inputs)} inputs)")
+
+    export_bert_tiny_weights(args.out_dir)
+    export_golden_archive(args.out_dir)
+
+    accs = {}
+    if not args.skip_train:
+        for t in ("sst2-syn", "qnli-syn"):
+            print(f"training classifier on {t} ...")
+            accs[t] = train_classifier.export_task(t, args.out_dir,
+                                                   steps=args.train_steps)
+    manifest["classifier"] = {
+        "batch": CLF_BATCH, "seq": clf.SEQ_LEN, "d_model": clf.D_MODEL,
+        "param_names": list(clf.PARAM_NAMES),
+        "ref_eval_acc": accs,
+    }
+    manifest["bert_tiny"] = {
+        "layers": TINY.layers, "d_model": TINY.d_model, "heads": TINY.heads,
+        "d_ff": TINY.d_ff, "seq": TINY_SEQ,
+        "param_names": list(model_lib.BLOCK_PARAM_NAMES),
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

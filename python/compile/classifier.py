@@ -1,0 +1,144 @@
+"""Sequence classifier used for the Fig. 4 accuracy-vs-ReRAM-noise study.
+
+A small transformer encoder (2 blocks) + mean-pool + linear head, trained
+at build time by :mod:`compile.train_classifier` on the two synthetic GLUE
+stand-ins described in DESIGN.md (SST2-syn, QNLI-syn). The forward pass is
+AOT-lowered with *weights as HLO parameters*, so the Rust side (Fig. 4
+driver) can inject temperature-dependent ReRAM conductance perturbations
+into the FF weights and measure the resulting accuracy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_lib
+from .kernels import primitives as prim_k
+
+# Classifier geometry — small enough to train in seconds on CPU while
+# keeping real multi-block attention + crossbar-mapped FF layers.
+SEQ_LEN = 32
+D_MODEL = 32
+HEADS = 2
+D_FF = 128
+LAYERS = 2
+NUM_CLASSES = 2
+
+CLF_CONFIG = model_lib.ModelConfig("clf-tiny", LAYERS, D_MODEL, HEADS, D_FF)
+
+# Flat parameter order (the AOT manifest and Rust reader rely on it):
+# per-layer block params then the head.
+PARAM_NAMES = tuple(
+    f"l{i}_{n}" for i in range(LAYERS) for n in model_lib.BLOCK_PARAM_NAMES
+) + ("head_w", "head_b")
+
+
+def param_shapes() -> dict[str, tuple[int, ...]]:
+    shapes = {}
+    block = model_lib.block_param_shapes(CLF_CONFIG)
+    for i in range(LAYERS):
+        for n, s in block.items():
+            shapes[f"l{i}_{n}"] = s
+    shapes["head_w"] = (D_MODEL, NUM_CLASSES)
+    shapes["head_b"] = (NUM_CLASSES,)
+    return shapes
+
+
+def init_params(key: jax.Array) -> list[jax.Array]:
+    params = []
+    for i in range(LAYERS):
+        key, sub = jax.random.split(key)
+        params.extend(model_lib.init_block_params(sub, CLF_CONFIG))
+    key, sub = jax.random.split(key)
+    params.append(jax.random.normal(sub, (D_MODEL, NUM_CLASSES)) * 0.1)
+    params.append(jnp.zeros((NUM_CLASSES,)))
+    return params
+
+
+def forward_single(x_emb: jax.Array, params, *, on_reram: bool = True,
+                   interpret: bool = True) -> jax.Array:
+    """Logits for one embedded sequence (SEQ_LEN, D_MODEL) → (NUM_CLASSES,)."""
+    n_block = len(model_lib.BLOCK_PARAM_NAMES)
+    layer_params = [params[i * n_block:(i + 1) * n_block] for i in range(LAYERS)]
+    head_w, head_b = params[LAYERS * n_block], params[LAYERS * n_block + 1]
+    h = model_lib.encoder(x_emb, layer_params, CLF_CONFIG,
+                          on_reram=on_reram, interpret=interpret)
+    pooled = jnp.mean(h, axis=0)
+    return pooled @ head_w + head_b
+
+
+def forward_batch(x_batch: jax.Array, params, *, on_reram: bool = True,
+                  interpret: bool = True) -> jax.Array:
+    """Logits for a batch (B, SEQ_LEN, D_MODEL) → (B, NUM_CLASSES).
+
+    Uses lax.map (sequential over examples) rather than vmap so the lowered
+    HLO stays a compact while-loop — this is the artifact Rust executes.
+    """
+    def one(x):
+        return forward_single(x, params, on_reram=on_reram, interpret=interpret)
+    return jax.lax.map(one, x_batch)
+
+
+def predict(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1)
+
+
+def softmax_probs(logits: jax.Array) -> jax.Array:
+    return prim_k.softmax(logits)
+
+
+@dataclasses.dataclass(frozen=True)
+class SynTask:
+    """A synthetic binary classification task over embedded sequences.
+
+    * ``sst2-syn`` (sentiment stand-in): a class-dependent "cue" vector is
+      added at a few random token positions; the model must attend to the
+      sparse cues to classify. Mirrors sentiment cues in a sentence.
+    * ``qnli-syn`` (entailment stand-in): the sequence is two halves; label
+      1 iff both halves share a common latent direction. The model must
+      compare segments — a cross-segment attention task.
+    """
+    name: str
+    noise_scale: float = 1.0
+
+
+def make_dataset(task: SynTask, key: jax.Array, n: int):
+    """Returns (x: (n, SEQ_LEN, D_MODEL) f32, y: (n,) int32)."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    y = jax.random.bernoulli(k1, 0.5, (n,)).astype(jnp.int32)
+    base = task.noise_scale * jax.random.normal(k2, (n, SEQ_LEN, D_MODEL))
+    if task.name == "sst2-syn":
+        # Fixed (per-task) cue directions for the two classes.
+        cue_pos = jax.random.normal(jax.random.PRNGKey(101), (D_MODEL,))
+        cue_neg = jax.random.normal(jax.random.PRNGKey(102), (D_MODEL,))
+        cue = jnp.where(y[:, None] == 1, cue_pos[None], cue_neg[None])
+        # 3 random cue positions per example; per-example cue strength varies
+        # so examples near the decision boundary exist (noise sensitivity).
+        pos = jax.random.randint(k3, (n, 3), 0, SEQ_LEN)
+        onehot = jax.nn.one_hot(pos, SEQ_LEN).sum(axis=1)  # (n, SEQ_LEN)
+        strength = 0.25 + 0.75 * jax.random.uniform(k5, (n, 1, 1))
+        x = base + strength * onehot[:, :, None] * cue[:, None, :]
+        return x.astype(jnp.float32), y
+    if task.name == "qnli-syn":
+        half = SEQ_LEN // 2
+        latent = jax.random.normal(k3, (n, D_MODEL))
+        other = jax.random.normal(k4, (n, D_MODEL))
+        # Premise half always carries `latent`; hypothesis half carries the
+        # same latent iff y == 1, an unrelated latent otherwise.
+        hyp = jnp.where(y[:, None] == 1, latent, other)
+        # Per-example signal strength varies so borderline examples exist.
+        strength = 1.0 + 0.8 * jax.random.uniform(k5, (n, 1, 1))
+        x = base
+        x = x.at[:, :half, :].add(strength * latent[:, None, :])
+        x = x.at[:, half:, :].add(strength * hyp[:, None, :])
+        return x.astype(jnp.float32), y
+    raise ValueError(f"unknown task {task.name}")
+
+
+TASKS = {
+    "sst2-syn": SynTask("sst2-syn"),
+    "qnli-syn": SynTask("qnli-syn"),
+}

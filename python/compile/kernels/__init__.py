@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels for HeTraX.
+
+Two kernels carry the paper's kernel-level ideas:
+
+* :mod:`attention` -- the fused score + online-softmax attention executed on
+  the SM-MC tiers (paper section 4.2 "MHA"), expressed as a Pallas kernel with
+  the flash-attention schedule (Q blocks resident, K/V streamed, running
+  max/sum carries; the score matrix S never materializes in HBM).
+
+* :mod:`crossbar` -- the ReRAM-crossbar matrix multiplication executed on the
+  PIM tier (paper section 4.2 "FF"), expressed as a bit-sliced integer matmul
+  with DAC/ADC quantization and additive thermal conductance noise (Eq. 5).
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls) and are validated against the pure-jnp oracles in :mod:`ref`
+by the pytest suite.
+"""

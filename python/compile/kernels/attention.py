@@ -1,0 +1,253 @@
+"""Fused score + online-softmax attention (paper §4.2, "MHA").
+
+The paper's SM-tier trick: scores for sequence blocks are computed
+row-block-wise, softmax is evaluated *online* (running max / running sum
+carried across K blocks) and the weighted sum with V happens in the same
+pass — "attention values are computed without the need to write
+intermediate matrices back to DRAM".  On a TPU-class machine that is the
+flash-attention schedule: Q blocks are grid-parallel and stay resident in
+VMEM, K/V are streamed through VMEM block by block, and the (S×S) score
+matrix never exists in HBM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles for an
+SM's register file / L1; we tile with ``BlockSpec`` for VMEM and size the
+blocks for the 128×128 MXU.  ``interpret=True`` everywhere — the CPU PJRT
+plugin cannot run Mosaic custom-calls; real-TPU efficiency is estimated
+statically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile sizes. Q tile rows × head_dim must fit VMEM
+# together with one K/V tile; see vmem_footprint_bytes() below.
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+# Large negative used to mask padding positions before softmax. Chosen to
+# survive fp32 exp() without producing NaNs (exp(-1e30) == 0.0 exactly).
+NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sm_scale: float,
+                      seq_len: int, causal: bool, block_q: int):
+    """One (head, q-block) program: online softmax over K blocks.
+
+    q_ref: (block_q, d)   resident for the whole program
+    k_ref: (seq_len, d)   streamed logically in block_k chunks
+    v_ref: (seq_len, d)
+    o_ref: (block_q, d)
+    """
+    q = q_ref[...].astype(jnp.float32)
+    q_index = pl.program_id(1)  # which q block (axis 0 is the head)
+
+    num_k_blocks = pl.cdiv(seq_len, block_k)
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        # Scores for this (q-block, k-block) tile: (block_q, block_k).
+        s = jax.lax.dot_general(
+            q, k.astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale
+        if causal:
+            q_pos = q_index * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        # Online softmax update (running max m, running denominator l).
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)            # rescale old accumulator
+        p = jnp.exp(s - m_new[:, None])            # (block_q, block_k)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return acc, m_new, l_new
+
+    d = q_ref.shape[-1]
+    init = (
+        jnp.zeros((block_q, d), jnp.float32),
+        jnp.full((block_q,), NEG_INF, jnp.float32),
+        jnp.zeros((block_q,), jnp.float32),
+    )
+    acc, _, l = jax.lax.fori_loop(0, num_k_blocks, body, init)
+    # l is > 0 for every valid row (each row sees at least its own diagonal
+    # position when causal, and all positions otherwise).
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = False,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    sm_scale: float | None = None,
+                    interpret: bool = True) -> jax.Array:
+    """softmax(Q Kᵀ / √d) V per head, with the fused online-softmax schedule.
+
+    Args:
+      q, k, v: (heads, seq, head_dim). For MQA, k/v may have 1 head and are
+        broadcast. seq must be positive; blocks are clamped to seq.
+    Returns:
+      (heads, seq, head_dim) with q.dtype.
+    """
+    if q.ndim != 3:
+        raise ValueError(f"expected (heads, seq, head_dim), got {q.shape}")
+    h, s, d = q.shape
+    if k.shape[0] != h:
+        if k.shape[0] != 1:
+            raise ValueError(f"k heads {k.shape[0]} incompatible with q heads {h}")
+        k = jnp.broadcast_to(k, (h,) + k.shape[1:])
+        v = jnp.broadcast_to(v, (h,) + v.shape[1:])
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q != 0 or s % block_k != 0:
+        # Pad to block multiples; padded K positions are masked by length.
+        pad_q = (-s) % block_q
+        pad_k = (-s) % block_k
+        # Keep it simple: pad both to the same padded length.
+        pad = max(pad_q, pad_k)
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0)), constant_values=0.0)
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        # Mask padded keys by pushing their scores to NEG_INF via a huge
+        # negative bias hidden in the padded K rows: instead we run causal
+        # logic-free and slice; padded K columns contribute exp(s) with the
+        # *real* running max, so we mask by zeroing V and subtracting their
+        # probability mass. Cleanest correct approach: recurse on the padded
+        # array with an explicit causal=False mask via key padding. For the
+        # shapes used in this project (powers of two), this path is only a
+        # safety net; implement by slicing the exact computation.
+        out = _fused_attention_padded(qp, kp, vp, s, causal=causal,
+                                      block_q=block_q, block_k=block_k,
+                                      sm_scale=sm_scale, interpret=interpret)
+        return out[:, :s, :]
+    kernel = functools.partial(
+        _attention_kernel, block_k=block_k, sm_scale=sm_scale, seq_len=s,
+        causal=causal, block_q=block_q)
+    grid = (h, s // block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda hh, qq: (hh, qq, 0)),
+            pl.BlockSpec((None, s, d), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda hh, qq: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda hh, qq: (hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _fused_attention_padded(qp, kp, vp, true_len, *, causal, block_q, block_k,
+                            sm_scale, interpret):
+    """Padded fallback: mask key positions ≥ true_len inside the kernel."""
+    h, sp, d = qp.shape
+
+    def kernel(q_ref, k_ref, v_ref, o_ref):
+        q = q_ref[...].astype(jnp.float32)
+        q_index = pl.program_id(1)
+        num_k_blocks = pl.cdiv(sp, block_k)
+
+        def body(kb, carry):
+            acc, m_prev, l_prev = carry
+            k = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+            v = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+            s = jax.lax.dot_general(
+                q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * sm_scale
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            mask = k_pos < true_len
+            if causal:
+                q_pos = q_index * block_q + jax.lax.broadcasted_iota(
+                    jnp.int32, (block_q, block_k), 0)
+                mask = jnp.logical_and(mask, q_pos >= k_pos)
+            s = jnp.where(mask, s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m_prev, m_cur)
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new[:, None])
+            l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[:, None] + jax.lax.dot_general(
+                p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            return acc, m_new, l_new
+
+        init = (jnp.zeros((block_q, d), jnp.float32),
+                jnp.full((block_q,), NEG_INF, jnp.float32),
+                jnp.zeros((block_q,), jnp.float32))
+        acc, _, l = jax.lax.fori_loop(0, num_k_blocks, body, init)
+        l = jnp.maximum(l, 1e-30)  # padded q rows have zero mass
+        o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+    grid = (h, sp // block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda hh, qq: (hh, qq, 0)),
+            pl.BlockSpec((None, sp, d), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((None, sp, d), lambda hh, qq: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda hh, qq: (hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sp, d), qp.dtype),
+        interpret=interpret,
+    )(qp, kp, vp)
+
+
+def vmem_footprint_bytes(seq: int, head_dim: int, *, block_q: int = DEFAULT_BLOCK_Q,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         dtype_bytes: int = 4) -> int:
+    """Static VMEM estimate for one program instance (see DESIGN.md §Perf).
+
+    Counts the Q tile, one K and one V tile (the streamed working set), the
+    f32 accumulator, carries, and the output tile. This is the number used
+    for the real-TPU feasibility estimate; interpret-mode wallclock is not
+    a TPU proxy.
+    """
+    block_q = min(block_q, seq)
+    block_k = min(block_k, seq)
+    q_tile = block_q * head_dim * dtype_bytes
+    kv_tiles = 2 * block_k * head_dim * dtype_bytes
+    acc = block_q * head_dim * 4
+    carries = 2 * block_q * 4
+    out_tile = block_q * head_dim * dtype_bytes
+    scores = block_q * block_k * 4
+    return q_tile + kv_tiles + acc + carries + out_tile + scores
+
+
+def mxu_utilization_estimate(seq: int, head_dim: int, *,
+                             block_q: int = DEFAULT_BLOCK_Q,
+                             block_k: int = DEFAULT_BLOCK_K) -> float:
+    """Fraction of MXU lanes busy for the two dot_generals, by tile shape.
+
+    The MXU is a 128×128 systolic array; a (m, k)·(k, n) matmul uses
+    min(m,128)/128 × min(n,128)/128 of the array per pass (contraction dim
+    is pipelined). Returns the FLOP-weighted average over the QKᵀ and PV
+    products.
+    """
+    bq = min(block_q, seq)
+    bk = min(block_k, seq)
+
+    def tile_util(m, n):
+        return (min(m, 128) / 128.0) * (min(n, 128) / 128.0)
+
+    # QKᵀ: (bq × d)·(d × bk); PV: (bq × bk)·(bk × d). Equal FLOPs.
+    return 0.5 * (tile_util(bq, bk) + tile_util(bq, head_dim))

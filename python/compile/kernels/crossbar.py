@@ -1,0 +1,225 @@
+"""ReRAM crossbar matrix multiplication (paper §4.1/§4.2, "FF").
+
+Functional model of the PIM tier: a 128×128 1T1R crossbar array with
+2-bit/cell conductance storage (Table 2), 1-bit DACs on the rows and 8-bit
+ADCs on the columns. An 8-bit weight is bit-sliced across ``8/2 = 4``
+adjacent cells; an 8-bit activation is applied over 8 one-bit DAC cycles.
+The analog dot product along a column accumulates the per-slice partial
+sums, each clipped by the ADC range, and the digital shift-add reassembles
+the full-precision product.
+
+Thermal conductance noise (paper Eq. 5) enters as additive Gaussian noise
+on the stored conductances::
+
+    Noise(λ) = N(0, sqrt(4 · G · K_b · T_ReRAM · F) / V)
+
+The noise standard deviation is computed from the tier temperature by
+``conductance_noise_sigma`` below (same formula as the Rust side,
+``rust/src/reram/noise.rs``; the two are cross-checked by tests).
+
+The Pallas kernel performs the quantize → sliced-integer-matmul →
+ADC-clip → rescale pipeline, tiled to the crossbar geometry. The analog
+physics is simulated digitally; the *dataflow* (weight-stationary,
+activations streaming, per-column ADC saturation) matches the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Table 2 geometry.
+CROSSBAR_ROWS = 128
+CROSSBAR_COLS = 128
+CELL_BITS = 2
+WEIGHT_BITS = 8
+ADC_BITS = 8
+NUM_SLICES = WEIGHT_BITS // CELL_BITS  # 4 cells per 8-bit weight
+
+# Physical constants for Eq. 5.
+BOLTZMANN = 1.380649e-23          # J/K
+RERAM_G_ON = 1.0 / 25e3           # S  (25 kΩ LRS, ISAAC-class device)
+RERAM_FREQ = 10e6                 # Hz (Table 2: 10 MHz)
+RERAM_READ_V = 0.2                # V  read voltage
+
+
+def conductance_noise_sigma(temp_kelvin: float, *, g: float = RERAM_G_ON,
+                            f: float = RERAM_FREQ, v: float = RERAM_READ_V) -> float:
+    """σ of the thermal (Johnson–Nyquist) conductance noise, Eq. 5.
+
+    Returned in units of conductance (S); divide by ``g`` for the relative
+    perturbation applied to a normalized weight.
+    """
+    return math.sqrt(4.0 * g * BOLTZMANN * temp_kelvin * f) / v
+
+
+def relative_noise_sigma(temp_kelvin: float) -> float:
+    """Eq. 5 noise relative to the on-conductance — the σ applied to
+    normalized (|w| ≤ 1) weight values."""
+    return conductance_noise_sigma(temp_kelvin) / RERAM_G_ON
+
+
+def quantize_weights(w: jax.Array, bits: int = WEIGHT_BITS):
+    """Symmetric per-tensor quantization to ``bits`` signed levels.
+
+    Returns (w_q int32 in [-(2^(b-1)-1), 2^(b-1)-1], scale f32).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12) / qmax
+    w_q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int32)
+    return w_q, scale
+
+
+def slice_weights(w_q: jax.Array):
+    """Bit-slice signed int8-range weights into NUM_SLICES × 2-bit planes.
+
+    Uses offset-binary: w_off = w_q + 128 ∈ [0, 255] is split into base-4
+    digits; the offset is subtracted digitally after the analog MACs (the
+    standard ISAAC/NeuroSim trick to store signed weights in unipolar
+    conductances).
+
+    Returns (slices, offset) where slices has shape (NUM_SLICES,) + w.shape
+    holding digits in [0, 3], most significant slice first.
+    """
+    w_off = (w_q + 2 ** (WEIGHT_BITS - 1)).astype(jnp.int32)
+    digits = []
+    for i in range(NUM_SLICES - 1, -1, -1):
+        digits.append((w_off // (4 ** i)) % 4)
+    return jnp.stack(digits, axis=0), 2 ** (WEIGHT_BITS - 1)
+
+
+def _crossbar_kernel(x_ref, wslice_ref, noise_ref, o_ref, *,
+                     adc_max: int, rows_per_xbar: int, n_slices: int):
+    """One (row-tile, col-tile) program of the sliced analog MVM.
+
+    x_ref:      (m, kb)            int32 activations (already quantized)
+    wslice_ref: (n_slices, kb, nb) int32 digit planes in [0,3]
+    noise_ref:  (n_slices, kb, nb) f32 conductance noise (normalized units)
+    o_ref:      (m, nb)            f32 accumulated partial output
+
+    Grid is (n_tiles, k_tiles) with the K axis innermost so the same output
+    block is revisited on consecutive programs; it is zeroed on the first
+    K step and accumulated afterwards.
+    """
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    kb = x_ref.shape[1]
+    # Each group of `rows_per_xbar` input rows shares one physical crossbar;
+    # the ADC clips the *per-crossbar* column sum. kb is a multiple of
+    # rows_per_xbar by construction (padding in the wrapper).
+    n_xbars = kb // rows_per_xbar
+
+    total = jnp.zeros((x.shape[0], o_ref.shape[1]), jnp.float32)
+    for s in range(n_slices):
+        w = wslice_ref[s].astype(jnp.float32) + noise_ref[s]
+        # Analog MAC per crossbar segment with ADC saturation.
+        xs = x.reshape(x.shape[0], n_xbars, rows_per_xbar)
+        ws = w.reshape(n_xbars, rows_per_xbar, w.shape[1])
+        # partial[m, b, n] = Σ_r xs[m,b,r] · ws[b,r,n]
+        partial = jax.lax.dot_general(
+            xs, ws, (((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32)
+        # dot_general with batch dims returns (b, m, n).
+        partial = jnp.clip(partial, -adc_max, adc_max)
+        col = jnp.sum(partial, axis=0)  # digital accumulation across crossbars
+        total = total + col * float(4 ** (n_slices - 1 - s))
+    o_ref[...] = o_ref[...] + total
+
+
+def crossbar_matmul(x: jax.Array, w: jax.Array, *,
+                    temp_kelvin: float = 300.0,
+                    noise_key: jax.Array | None = None,
+                    adc_bits: int = ADC_BITS,
+                    act_bits: int = 8,
+                    tile_k: int = CROSSBAR_ROWS,
+                    tile_n: int = CROSSBAR_COLS,
+                    interpret: bool = True) -> jax.Array:
+    """x @ w computed through the simulated ReRAM crossbar pipeline.
+
+    Args:
+      x: (m, k) f32 activations.
+      w: (k, n) f32 stationary weights (mapped once to crossbars).
+      temp_kelvin: ReRAM tier temperature — sets the Eq. 5 noise σ.
+      noise_key: PRNG key for the conductance noise draw; None → noiseless
+        (σ is still temperature-derived but a zero sample is used).
+    Returns:
+      (m, n) f32 ≈ x @ w (exact up to quantization + ADC clipping + noise).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"shape mismatch {x.shape} @ {w.shape}")
+
+    # Quantize activations (DAC side) and weights (cells).
+    x_q, x_scale = quantize_weights(x, act_bits)
+    w_q, w_scale = quantize_weights(w, WEIGHT_BITS)
+    slices, w_offset = slice_weights(w_q)          # (S, k, n) in [0,3]
+
+    # Conductance noise: one draw per cell, σ from Eq. 5, in *digit* units
+    # (a digit step of 1 corresponds to one conductance level out of 4).
+    sigma_rel = relative_noise_sigma(temp_kelvin)
+    sigma_digit = sigma_rel * (2 ** CELL_BITS - 1)
+    if noise_key is not None and sigma_digit > 0:
+        noise = sigma_digit * jax.random.normal(
+            noise_key, (NUM_SLICES, k, n), jnp.float32)
+    else:
+        noise = jnp.zeros((NUM_SLICES, k, n), jnp.float32)
+
+    # Pad K and N to crossbar multiples.
+    pad_k = (-k) % tile_k
+    pad_n = (-n) % tile_n
+    kp, np_ = k + pad_k, n + pad_n
+    x_q = jnp.pad(x_q, ((0, 0), (0, pad_k)))
+    slices = jnp.pad(slices, ((0, 0), (0, pad_k), (0, pad_n)))
+    noise = jnp.pad(noise, ((0, 0), (0, pad_k), (0, pad_n)))
+
+    # ADC full-scale: with 1-bit DAC cycles the per-cycle column sum is at
+    # most rows·3; an 8-bit ADC covers 255 levels. We model act-parallel
+    # (not bit-serial) MACs, so scale the clip level by the activation
+    # magnitude bound to keep the same *relative* saturation point.
+    act_max = float(2 ** (act_bits - 1) - 1)
+    adc_max = (2 ** adc_bits - 1) * act_max
+
+    kernel = functools.partial(
+        _crossbar_kernel, adc_max=adc_max, rows_per_xbar=tile_k,
+        n_slices=NUM_SLICES)
+
+    grid = (np_ // tile_n, kp // tile_k)  # K innermost → sequential revisits
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, tile_k), lambda nn, kk: (0, kk)),
+            pl.BlockSpec((NUM_SLICES, tile_k, tile_n), lambda nn, kk: (0, kk, nn)),
+            pl.BlockSpec((NUM_SLICES, tile_k, tile_n), lambda nn, kk: (0, kk, nn)),
+        ],
+        out_specs=pl.BlockSpec((m, tile_n), lambda nn, kk: (0, nn)),
+        out_shape=jax.ShapeDtypeStruct((m, np_), jnp.float32),
+        interpret=interpret,
+    )(x_q, slices, noise)
+
+    out = out[:, :n]
+    # Undo the offset-binary: Σ_k x_k·(w_off − 128) = Σ x·w_off − 128·Σ x.
+    x_row_sum = jnp.sum(x_q[:, :k].astype(jnp.float32), axis=1, keepdims=True)
+    out = out - float(w_offset) * x_row_sum
+    return out * (x_scale * w_scale)
+
+
+def crossbars_required(k: int, n: int, *, rows: int = CROSSBAR_ROWS,
+                       cols: int = CROSSBAR_COLS,
+                       slices: int = NUM_SLICES) -> int:
+    """Number of physical 128×128 crossbars to hold a (k, n) weight matrix.
+
+    Matches the Rust-side mapping in ``rust/src/reram/mapping.rs`` (cross-
+    checked by a test fixture in artifacts/).
+    """
+    k_tiles = -(-k // rows)
+    n_tiles = -(-n // cols)
+    return k_tiles * n_tiles * slices

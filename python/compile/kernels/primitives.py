@@ -1,0 +1,116 @@
+"""Auxiliary Pallas kernels: layer-norm and GELU (paper Table 1: L-1, FF-1/2).
+
+These are the "additional computations" (§1) that force baseline PIM
+accelerators to round-trip to a host — TransPIM/HAIMA offload softmax and
+normalization to the host over the interposer (§5.3), while HeTraX executes
+them on the SM tier. Here they are row-tiled Pallas kernels so the whole
+encoder block lowers into one HLO module.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+# GELU uses the tanh approximation: the `erf` HLO opcode only exists in
+# XLA > 0.5.1, and the Rust loader's HLO-text parser (xla_extension 0.5.1)
+# rejects it. tanh lowers to a classic opcode everywhere.
+SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+GELU_C = 0.044715
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+              eps: float = 1e-5, block_rows: int = DEFAULT_BLOCK_ROWS,
+              interpret: bool = True) -> jax.Array:
+    """Row-wise LayerNorm over the last axis of a (rows, d) array."""
+    if x.ndim != 2:
+        raise ValueError(f"expected (rows, d), got {x.shape}")
+    rows, d = x.shape
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        pad = (-rows) % block_rows
+        out = layernorm(jnp.pad(x, ((0, pad), (0, 0))), gamma, beta, eps=eps,
+                        block_rows=block_rows, interpret=interpret)
+        return out[:rows]
+    kernel = functools.partial(_layernorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+            pl.BlockSpec((d,), lambda r: (0,)),
+            pl.BlockSpec((d,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta)
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    inner = SQRT_2_OVER_PI * (x + GELU_C * x * x * x)
+    o_ref[...] = (0.5 * x * (1.0 + jnp.tanh(inner))).astype(o_ref.dtype)
+
+
+def gelu(x: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+         interpret: bool = True) -> jax.Array:
+    """tanh-approximate GELU, row-tiled (see module note on erf)."""
+    if x.ndim != 2:
+        raise ValueError(f"expected (rows, d), got {x.shape}")
+    rows, d = x.shape
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        pad = (-rows) % block_rows
+        return gelu(jnp.pad(x, ((0, pad), (0, 0))), block_rows=block_rows,
+                    interpret=interpret)[:rows]
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def softmax(x: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+            interpret: bool = True) -> jax.Array:
+    """Numerically-stable row softmax (used by the classifier head)."""
+    if x.ndim != 2:
+        raise ValueError(f"expected (rows, d), got {x.shape}")
+    rows, d = x.shape
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        pad = (-rows) % block_rows
+        return softmax(jnp.pad(x, ((0, pad), (0, 0))), block_rows=block_rows,
+                       interpret=interpret)[:rows]
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x)

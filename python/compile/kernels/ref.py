@@ -1,0 +1,112 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references by
+``python/tests/`` (hypothesis sweeps shapes/dtypes + assert_allclose).
+The references are deliberately naive — materialize the score matrix, use
+straightforward math — so a disagreement always indicts the kernel, not
+the oracle.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = False, sm_scale: float | None = None) -> jax.Array:
+    """Naive softmax(QKᵀ/√d)V per head. q,k,v: (heads, seq, head_dim)."""
+    h, s, d = q.shape
+    if k.shape[0] == 1 and h > 1:  # MQA broadcast
+        k = jnp.broadcast_to(k, (h,) + k.shape[1:])
+        v = jnp.broadcast_to(v, (h,) + v.shape[1:])
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def crossbar_ref(x: jax.Array, w: jax.Array, *, act_bits: int = 8,
+                 weight_bits: int = 8) -> jax.Array:
+    """Quantized matmul oracle: what the crossbar computes with *no* noise
+    and *no* ADC saturation — symmetric per-tensor quantization of both
+    operands, integer matmul, rescale.
+
+    The Pallas kernel must match this exactly when the ADC never clips
+    (small k) and noise_key is None; tests also check the clipping path
+    against ``crossbar_clipped_ref``.
+    """
+    def q(t, bits):
+        qmax = float(2 ** (bits - 1) - 1)
+        scale = jnp.maximum(jnp.max(jnp.abs(t)), 1e-12) / qmax
+        return jnp.clip(jnp.round(t / scale), -qmax, qmax), scale
+
+    x_q, sx = q(x, act_bits)
+    w_q, sw = q(w, weight_bits)
+    return (x_q @ w_q) * (sx * sw)
+
+
+def crossbar_clipped_ref(x: jax.Array, w: jax.Array, *, act_bits: int = 8,
+                         weight_bits: int = 8, cell_bits: int = 2,
+                         rows_per_xbar: int = 128, adc_bits: int = 8) -> jax.Array:
+    """Bit-sliced oracle *with* per-crossbar ADC saturation, mirroring the
+    kernel's offset-binary digit decomposition step by step (but with
+    plain jnp loops over slices and crossbar segments)."""
+    def q(t, bits):
+        qmax = float(2 ** (bits - 1) - 1)
+        scale = jnp.maximum(jnp.max(jnp.abs(t)), 1e-12) / qmax
+        return jnp.clip(jnp.round(t / scale), -qmax, qmax).astype(jnp.int32), scale
+
+    x_q, sx = q(x, act_bits)
+    w_q, sw = q(w, weight_bits)
+    n_slices = weight_bits // cell_bits
+    offset = 2 ** (weight_bits - 1)
+    w_off = w_q + offset
+
+    k = x.shape[1]
+    pad_k = (-k) % rows_per_xbar
+    x_p = jnp.pad(x_q, ((0, 0), (0, pad_k)))
+    w_p = jnp.pad(w_off, ((0, pad_k), (0, 0)))
+    kp = k + pad_k
+    n_xbars = kp // rows_per_xbar
+
+    act_max = float(2 ** (act_bits - 1) - 1)
+    adc_max = (2 ** adc_bits - 1) * act_max
+
+    total = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
+    for s in range(n_slices - 1, -1, -1):
+        digit = ((w_p // (4 ** s)) % 4).astype(jnp.float32)
+        acc = jnp.zeros_like(total)
+        for b in range(n_xbars):
+            rows = slice(b * rows_per_xbar, (b + 1) * rows_per_xbar)
+            part = x_p[:, rows].astype(jnp.float32) @ digit[rows]
+            acc = acc + jnp.clip(part, -adc_max, adc_max)
+        total = total + acc * float(4 ** s)
+    x_row_sum = jnp.sum(x_q.astype(jnp.float32), axis=1, keepdims=True)
+    total = total - float(offset) * x_row_sum
+    return total * (sx * sw)
+
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+                  eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return (((x32 - mean) / jnp.sqrt(var + eps)) * gamma + beta).astype(x.dtype)
+
+
+def gelu_ref(x: jax.Array) -> jax.Array:
+    """tanh-approximate GELU (matches the deployed kernel; erf is not
+    parseable by the Rust loader's XLA)."""
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)
+
+
+def softmax_ref(x: jax.Array) -> jax.Array:
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1).astype(x.dtype)

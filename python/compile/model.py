@@ -1,0 +1,202 @@
+"""Layer-2: transformer forward pass (paper Table 1), composed from the
+Pallas kernels in :mod:`compile.kernels`.
+
+Implements every computational kernel row of Table 1:
+
+  INPUT  X = I_emb + PositionalEncoding(I_emb)
+  MHA-1  Q_i, K_i, V_i = X W_i^Q, X W_i^K, X W_i^V      (SM tier)
+  MHA-2  S_i = softmax(Q Kᵀ / √d)                        (fused, SM tier)
+  MHA-3  O_i = S_i V_i                                   (fused with MHA-2)
+  MHA-4  H_m = concat(O_i) W^O                           (SM tier)
+  L-1    M = LayerNorm(X + H_m)                          (SM tier)
+  FF-1   X¹ = GeLU(M W^{F1})                             (ReRAM tier)
+  FF-2   X² = GeLU(X¹ W^{F2})                            (ReRAM tier)
+  L-2    LayerNorm(M + X²)
+
+plus the architecture variants of §3: encoder-only, decoder-only (causal),
+encoder-decoder (cross-attention), MQA (shared K/V across heads) and
+parallel attention (MHA ∥ FF).
+
+MHA-2/3 run through the fused online-softmax kernel; FF-1/2 run through the
+simulated ReRAM crossbar kernel — mirroring where each kernel executes on
+the HeTraX die. Everything is float32 here; the 16-bit deployment precision
+is modeled on the Rust timing side.
+
+This module is build-time only: it is lowered once by :mod:`compile.aot`
+and never imported at runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import crossbar as xbar_k
+from .kernels import primitives as prim_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer dimensions (matches ``rust/src/model/zoo.rs``)."""
+    name: str
+    layers: int          # encoder layers (or decoder layers if decoder_only)
+    d_model: int
+    heads: int
+    d_ff: int
+    variant: str = "encoder_only"  # encoder_only|decoder_only|encoder_decoder|mqa|parallel
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.heads == 0
+        return self.d_model // self.heads
+
+
+# The model zoo of §5.1 (dims are the published checkpoints') plus the tiny
+# config the AOT artifacts are built from.
+MODEL_ZOO = {
+    "bert-tiny": ModelConfig("bert-tiny", 2, 128, 2, 512),
+    "bert-base": ModelConfig("bert-base", 12, 768, 12, 3072),
+    "bert-large": ModelConfig("bert-large", 24, 1024, 16, 4096),
+    "bart-base": ModelConfig("bart-base", 6, 768, 12, 3072, "encoder_decoder"),
+    "bart-large": ModelConfig("bart-large", 12, 1024, 16, 4096, "encoder_decoder"),
+}
+
+# Flat parameter order for one encoder block — the AOT manifest and the
+# Rust runtime both rely on this exact order.
+BLOCK_PARAM_NAMES = (
+    "wq", "wk", "wv", "wo", "ln1_g", "ln1_b", "wf1", "wf2", "ln2_g", "ln2_b",
+)
+
+
+def block_param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    d, f = cfg.d_model, cfg.d_ff
+    kv_d = cfg.head_dim if cfg.variant == "mqa" else d
+    return {
+        "wq": (d, d), "wk": (d, kv_d), "wv": (d, kv_d), "wo": (d, d),
+        "ln1_g": (d,), "ln1_b": (d,),
+        "wf1": (d, f), "wf2": (f, d),
+        "ln2_g": (d,), "ln2_b": (d,),
+    }
+
+
+def init_block_params(key: jax.Array, cfg: ModelConfig) -> list[jax.Array]:
+    """Xavier-ish init, returned in BLOCK_PARAM_NAMES order."""
+    shapes = block_param_shapes(cfg)
+    params = []
+    for name in BLOCK_PARAM_NAMES:
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith("_g"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            params.append(jax.random.normal(sub, shape, jnp.float32)
+                          / math.sqrt(fan_in))
+    return params
+
+
+def _split_heads(x: jax.Array, heads: int) -> jax.Array:
+    """(s, d) → (heads, s, d/heads)."""
+    s, d = x.shape
+    return x.reshape(s, heads, d // heads).transpose(1, 0, 2)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    """(heads, s, hd) → (s, heads·hd)."""
+    h, s, hd = x.shape
+    return x.transpose(1, 0, 2).reshape(s, h * hd)
+
+
+def multi_head_attention(x: jax.Array, wq, wk, wv, wo, *, heads: int,
+                         causal: bool = False, mqa: bool = False,
+                         kv_source: jax.Array | None = None,
+                         interpret: bool = True) -> jax.Array:
+    """MHA-1..4 of Table 1. ``kv_source`` enables cross-attention (BART).
+
+    With ``mqa`` the K/V projections produce a single shared head
+    (wk/wv: (d, head_dim)).
+    """
+    kv_in = x if kv_source is None else kv_source
+    q = _split_heads(x @ wq, heads)                      # MHA-1
+    if mqa:
+        k = (kv_in @ wk)[None, :, :]                     # one shared head
+        v = (kv_in @ wv)[None, :, :]
+    else:
+        k = _split_heads(kv_in @ wk, heads)
+        v = _split_heads(kv_in @ wv, heads)
+    o = attn_k.fused_attention(q, k, v, causal=causal,
+                               interpret=interpret)      # MHA-2 + MHA-3
+    return _merge_heads(o) @ wo                          # MHA-4
+
+
+def feed_forward(m: jax.Array, wf1, wf2, *, on_reram: bool = True,
+                 interpret: bool = True) -> jax.Array:
+    """FF-1/FF-2 of Table 1. On the ReRAM tier both GEMMs run through the
+    crossbar kernel (weights stationary); ``on_reram=False`` gives the
+    ideal digital path used for ablation."""
+    if on_reram:
+        x1 = prim_k.gelu(
+            xbar_k.crossbar_matmul(m, wf1, interpret=interpret),
+            interpret=interpret)
+        x2 = prim_k.gelu(
+            xbar_k.crossbar_matmul(x1, wf2, interpret=interpret),
+            interpret=interpret)
+    else:
+        x1 = prim_k.gelu(m @ wf1, interpret=interpret)
+        x2 = prim_k.gelu(x1 @ wf2, interpret=interpret)
+    return x2
+
+
+def encoder_block(x: jax.Array, params: Sequence[jax.Array], cfg: ModelConfig,
+                  *, causal: bool = False, on_reram: bool = True,
+                  interpret: bool = True) -> jax.Array:
+    """One full Table-1 block. ``params`` in BLOCK_PARAM_NAMES order."""
+    wq, wk, wv, wo, ln1_g, ln1_b, wf1, wf2, ln2_g, ln2_b = params
+    mqa = cfg.variant == "mqa"
+    if cfg.variant == "parallel":
+        # Parallel attention (§3): MHA and FF both read the *same*
+        # (pre-normalized) input and their outputs are summed — the PaLM
+        # formulation; on HeTraX the two tiers compute concurrently
+        # (§5.3 "fused MHA-FF").
+        x_norm = prim_k.layernorm(x, ln1_g, ln1_b, interpret=interpret)
+        h = multi_head_attention(x_norm, wq, wk, wv, wo, heads=cfg.heads,
+                                 causal=causal, mqa=mqa, interpret=interpret)
+        f = feed_forward(x_norm, wf1, wf2, on_reram=on_reram,
+                         interpret=interpret)
+        y = x + h + f
+        return prim_k.layernorm(y, ln2_g, ln2_b, interpret=interpret)
+    h = multi_head_attention(x, wq, wk, wv, wo, heads=cfg.heads,
+                             causal=causal, mqa=mqa, interpret=interpret)
+    m = prim_k.layernorm(x + h, ln1_g, ln1_b, interpret=interpret)   # L-1
+    x2 = feed_forward(m, wf1, wf2, on_reram=on_reram, interpret=interpret)
+    return prim_k.layernorm(m + x2, ln2_g, ln2_b, interpret=interpret)
+
+
+def positional_encoding(seq: int, d_model: int) -> jax.Array:
+    """Sinusoidal positional encoding (Table 1 INPUT row)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2.0 * i / d_model)
+    pe = jnp.zeros((seq, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+def encoder(x_emb: jax.Array, layer_params: Sequence[Sequence[jax.Array]],
+            cfg: ModelConfig, *, interpret: bool = True,
+            on_reram: bool = True) -> jax.Array:
+    """Stack of encoder blocks over positionally-encoded embeddings."""
+    x = x_emb + positional_encoding(x_emb.shape[0], cfg.d_model)
+    causal = cfg.variant == "decoder_only"
+    for params in layer_params:
+        x = encoder_block(x, params, cfg, causal=causal,
+                          on_reram=on_reram, interpret=interpret)
+    return x

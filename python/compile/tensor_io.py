@@ -1,0 +1,70 @@
+"""HTX tensor archive — the weight/dataset interchange format.
+
+A deliberately simple binary container read by ``rust/src/util/tensor_io.rs``
+(no numpy/npz dependency on the Rust side). Layout, all little-endian:
+
+    magic   b"HTX1"
+    count   u32
+    count × records:
+        name_len u32, name utf-8 bytes
+        dtype    u8   (0 = f32, 1 = i32, 2 = u8)
+        ndim     u32, dims u32 × ndim
+        data     raw bytes, C order
+
+The Python writer and Rust reader are cross-checked by
+``python/tests/test_tensor_io.py`` and ``rust/tests/integration.rs`` via a
+golden file in ``artifacts/``.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"HTX1"
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint8}
+_DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1,
+                np.dtype(np.uint8): 2}
+
+
+def write_archive(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write named tensors. Order is preserved (dict order)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.asarray(arr)
+            if arr.ndim:  # ascontiguousarray would promote 0-d to 1-d
+                arr = np.ascontiguousarray(arr)
+            code = _DTYPE_CODES.get(arr.dtype)
+            if code is None:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", code))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_archive(path: str) -> dict[str, np.ndarray]:
+    """Read an HTX1 archive back into an ordered dict of arrays."""
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (code,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = np.dtype(_DTYPES[code])
+            n = int(np.prod(dims, dtype=np.int64)) if ndim else 1
+            data = f.read(n * dtype.itemsize)
+            out[name] = np.frombuffer(data, dtype=dtype).reshape(tuple(dims)).copy()
+    return out

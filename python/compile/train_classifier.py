@@ -1,0 +1,139 @@
+"""Build-time training of the Fig. 4 classifier on the synthetic GLUE
+stand-ins (DESIGN.md substitution table).
+
+Training runs through a pure-jnp twin of the classifier forward pass
+(identical math, no Pallas, no quantization) for speed and differentiability;
+the trained weights are then *deployed* through the kernel-based forward
+(crossbar-quantized FF) exactly as the Rust Fig. 4 driver does. Hand-rolled
+Adam — no optimizer library on the image.
+
+Outputs (``artifacts/``):
+  classifier_{task}.htx       — trained weights (PARAM_NAMES order)
+  eval_{task}.htx             — held-out eval set (x: f32, y: i32)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import classifier as clf
+from . import model as model_lib
+from . import tensor_io
+
+TRAIN_N = 2048
+EVAL_N = 512
+BATCH = 128
+STEPS = 400
+LR = 3e-3
+
+
+def _attention_ref(q, k, v):
+    d = q.shape[-1]
+    s = jnp.einsum("hqd,hkd->hqk", q, k) / math.sqrt(d)
+    return jnp.einsum("hqk,hkd->hqd", jax.nn.softmax(s, axis=-1), v)
+
+
+def _layernorm_ref(x, g, b, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * g + b
+
+
+def forward_ref(x_emb, params):
+    """Differentiable twin of classifier.forward_single (pure jnp)."""
+    cfg = clf.CLF_CONFIG
+    n_block = len(model_lib.BLOCK_PARAM_NAMES)
+    x = x_emb + model_lib.positional_encoding(clf.SEQ_LEN, clf.D_MODEL)
+    for i in range(clf.LAYERS):
+        wq, wk, wv, wo, g1, b1, wf1, wf2, g2, b2 = params[i * n_block:(i + 1) * n_block]
+        q = model_lib._split_heads(x @ wq, cfg.heads)
+        k = model_lib._split_heads(x @ wk, cfg.heads)
+        v = model_lib._split_heads(x @ wv, cfg.heads)
+        h = model_lib._merge_heads(_attention_ref(q, k, v)) @ wo
+        m = _layernorm_ref(x + h, g1, b1)
+        x1 = jax.nn.gelu(m @ wf1, approximate=True)
+        x2 = jax.nn.gelu(x1 @ wf2, approximate=True)
+        x = _layernorm_ref(m + x2, g2, b2)
+    head_w, head_b = params[clf.LAYERS * n_block], params[clf.LAYERS * n_block + 1]
+    return jnp.mean(x, axis=0) @ head_w + head_b
+
+
+def loss_fn(params, xb, yb):
+    logits = jax.vmap(lambda x: forward_ref(x, params))(xb)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=1))
+
+
+@functools.partial(jax.jit, static_argnums=())
+def adam_step(params, m, v, t, xb, yb):
+    """One Adam step (β1=0.9, β2=0.999, eps=1e-8)."""
+    grads = jax.grad(loss_fn)(params, xb, yb)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * jnp.square(g)
+        mhat = mi / (1 - b1 ** t)
+        vhat = vi / (1 - b2 ** t)
+        new_params.append(p - LR * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_params, new_m, new_v
+
+
+def accuracy_ref(params, x, y, batch=256):
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = jax.vmap(lambda xx: forward_ref(xx, params))(x[i:i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i:i + batch]))
+    return correct / x.shape[0]
+
+
+def train_task(task_name: str, seed: int = 0, steps: int = STEPS,
+               verbose: bool = True):
+    task = clf.TASKS[task_name]
+    key = jax.random.PRNGKey(seed)
+    kd, ke, ki = jax.random.split(key, 3)
+    x_train, y_train = clf.make_dataset(task, kd, TRAIN_N)
+    x_eval, y_eval = clf.make_dataset(task, ke, EVAL_N)
+    params = clf.init_params(ki)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+
+    rng = np.random.default_rng(seed)
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, TRAIN_N, BATCH)
+        params, m, v = adam_step(params, m, v, t,
+                                 x_train[idx], y_train[idx])
+        if verbose and t % 100 == 0:
+            acc = accuracy_ref(params, x_eval, y_eval)
+            print(f"  [{task_name}] step {t:4d} eval acc {acc:.4f}")
+    acc = accuracy_ref(params, x_eval, y_eval)
+    if verbose:
+        print(f"  [{task_name}] final ref-forward eval acc {acc:.4f}")
+    return params, (x_eval, y_eval), acc
+
+
+def export_task(task_name: str, out_dir: str, seed: int = 0,
+                steps: int = STEPS) -> float:
+    params, (x_eval, y_eval), acc = train_task(task_name, seed, steps)
+    weights = {name: np.asarray(p) for name, p in zip(clf.PARAM_NAMES, params)}
+    tensor_io.write_archive(
+        os.path.join(out_dir, f"classifier_{task_name}.htx"), weights)
+    tensor_io.write_archive(
+        os.path.join(out_dir, f"eval_{task_name}.htx"),
+        {"x": np.asarray(x_eval, np.float32),
+         "y": np.asarray(y_eval, np.int32)})
+    return acc
+
+
+if __name__ == "__main__":
+    os.makedirs("../artifacts", exist_ok=True)
+    for t in ("sst2-syn", "qnli-syn"):
+        export_task(t, "../artifacts")

@@ -1,0 +1,121 @@
+"""ReRAM crossbar kernel vs the quantized-matmul oracles."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import crossbar, ref
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=20, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(seed, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@hypothesis.given(
+    m=st.integers(1, 16),
+    k=st.sampled_from([8, 32, 100, 128, 200, 384]),
+    n=st.sampled_from([8, 64, 128, 130, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_clipped_oracle(m, k, n, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    out = crossbar.crossbar_matmul(x, w)
+    exp = ref.crossbar_clipped_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-4, rtol=1e-4)
+
+
+@hypothesis.given(seed=st.integers(0, 2**16))
+def test_no_clip_matches_plain_quantized(seed):
+    """With small k (column sums below ADC range) the crossbar equals the
+    plain quantized matmul oracle."""
+    x = rand(seed, (8, 32), scale=0.5)
+    w = rand(seed + 1, (32, 64), scale=0.5)
+    out = crossbar.crossbar_matmul(x, w)
+    exp = ref.crossbar_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_quantized_matmul_close_to_fp():
+    """Quantization error of the full pipeline stays within the 8-bit
+    budget: relative Frobenius error below ~2% (symmetric per-tensor
+    8-bit on both operands over k=256)."""
+    x = rand(0, (32, 256))
+    w = rand(1, (256, 128))
+    out = np.asarray(crossbar.crossbar_matmul(x, w))
+    exact = np.asarray(x @ w)
+    rel = np.linalg.norm(out - exact) / np.linalg.norm(exact)
+    assert rel < 0.02, rel
+
+
+def test_noise_increases_with_temperature():
+    x = rand(0, (8, 128))
+    w = rand(1, (128, 128))
+    clean = np.asarray(crossbar.crossbar_matmul(x, w))
+    errs = []
+    for t in (300.0, 350.0, 400.0):
+        noisy = np.asarray(crossbar.crossbar_matmul(
+            x, w, temp_kelvin=t, noise_key=jax.random.PRNGKey(7)))
+        errs.append(np.abs(noisy - clean).mean())
+    assert errs[0] < errs[1] < errs[2]
+
+
+def test_noise_zero_without_key():
+    x = rand(0, (4, 64))
+    w = rand(1, (64, 32))
+    a = np.asarray(crossbar.crossbar_matmul(x, w, temp_kelvin=400.0))
+    b = np.asarray(crossbar.crossbar_matmul(x, w, temp_kelvin=300.0))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_eq5_sigma_formula():
+    """σ = sqrt(4 G k_B T F) / V — checked against hand-computed value and
+    the √T scaling law."""
+    s300 = crossbar.conductance_noise_sigma(300.0)
+    expected = np.sqrt(4 * crossbar.RERAM_G_ON * crossbar.BOLTZMANN * 300.0
+                       * crossbar.RERAM_FREQ) / crossbar.RERAM_READ_V
+    assert s300 == pytest.approx(expected)
+    assert crossbar.conductance_noise_sigma(1200.0) == pytest.approx(2 * s300)
+
+
+@hypothesis.given(seed=st.integers(0, 1000))
+def test_weight_quantization_roundtrip(seed):
+    w = rand(seed, (16, 16), scale=3.0)
+    w_q, scale = crossbar.quantize_weights(w)
+    assert int(jnp.max(jnp.abs(w_q))) <= 127
+    np.testing.assert_allclose(np.asarray(w_q * scale), np.asarray(w),
+                               atol=float(scale) / 2 + 1e-7)
+
+
+def test_slice_weights_reassembles():
+    w = rand(3, (32, 8), scale=2.0)
+    w_q, _ = crossbar.quantize_weights(w)
+    slices, offset = crossbar.slice_weights(w_q)
+    assert slices.shape == (crossbar.NUM_SLICES, 32, 8)
+    assert int(jnp.min(slices)) >= 0 and int(jnp.max(slices)) <= 3
+    weights = jnp.array([4 ** i for i in range(crossbar.NUM_SLICES - 1, -1, -1)],
+                        jnp.int32)
+    rebuilt = jnp.tensordot(weights, slices, axes=1) - offset
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(w_q))
+
+
+def test_crossbars_required():
+    # BERT-Large FF1: (1024, 4096) → 8 × 32 tiles × 4 slices = 1024 crossbars
+    assert crossbar.crossbars_required(1024, 4096) == 8 * 32 * 4
+    assert crossbar.crossbars_required(1, 1) == 4
+    assert crossbar.crossbars_required(128, 128) == 4
+
+
+def test_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        crossbar.crossbar_matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))

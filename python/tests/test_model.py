@@ -1,0 +1,145 @@
+"""L2 model: shapes, variants, Table-1 structure, and AOT manifest order."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import classifier as clf
+from compile import model as model_lib
+
+
+CFG = model_lib.ModelConfig("t", 1, 32, 2, 64)
+
+
+def params_for(cfg, seed=0):
+    return model_lib.init_block_params(jax.random.PRNGKey(seed), cfg)
+
+
+def x_for(cfg, s=16, seed=9):
+    return jax.random.normal(jax.random.PRNGKey(seed), (s, cfg.d_model))
+
+
+@pytest.mark.parametrize("variant", ["encoder_only", "decoder_only", "mqa",
+                                     "parallel"])
+def test_block_shapes(variant):
+    cfg = model_lib.ModelConfig("t", 1, 32, 2, 64, variant)
+    x = x_for(cfg)
+    out = model_lib.encoder_block(x, params_for(cfg), cfg,
+                                  causal=variant == "decoder_only")
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_zoo_dims_match_published():
+    z = model_lib.MODEL_ZOO
+    assert (z["bert-base"].layers, z["bert-base"].d_model,
+            z["bert-base"].heads, z["bert-base"].d_ff) == (12, 768, 12, 3072)
+    assert (z["bert-large"].layers, z["bert-large"].d_model,
+            z["bert-large"].heads, z["bert-large"].d_ff) == (24, 1024, 16, 4096)
+    assert z["bert-tiny"].d_model == 128 and z["bert-tiny"].layers == 2
+    for m in z.values():
+        assert m.d_ff == 4 * m.d_model  # §4.2: hidden 4× model dim
+        assert m.d_model % m.heads == 0
+
+
+def test_mqa_param_shapes_shrink():
+    cfg = model_lib.ModelConfig("t", 1, 32, 4, 64, "mqa")
+    shapes = model_lib.block_param_shapes(cfg)
+    assert shapes["wk"] == (32, 8) and shapes["wv"] == (32, 8)
+    assert shapes["wq"] == (32, 32)
+
+
+def test_causal_block_is_causal():
+    """Changing a late token must not affect early outputs in the decoder.
+
+    Uses the digital FF path: the crossbar kernel's *per-tensor* activation
+    quantization scale couples all rows by design (the DAC range is shared
+    across the tile), so exact causality only holds pre-quantization.
+    """
+    cfg = model_lib.ModelConfig("t", 1, 32, 2, 64, "decoder_only")
+    p = params_for(cfg)
+    x = x_for(cfg, s=16)
+    out1 = model_lib.encoder_block(x, p, cfg, causal=True, on_reram=False)
+    x2 = x.at[12].add(5.0)
+    out2 = model_lib.encoder_block(x2, p, cfg, causal=True, on_reram=False)
+    np.testing.assert_allclose(np.asarray(out1[:12]), np.asarray(out2[:12]),
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(out1[12:]), np.asarray(out2[12:]))
+
+
+def test_causal_block_quantized_rows_near_causal():
+    """On the ReRAM path the quantization-scale coupling must stay tiny."""
+    cfg = model_lib.ModelConfig("t", 1, 32, 2, 64, "decoder_only")
+    p = params_for(cfg)
+    x = x_for(cfg, s=16)
+    out1 = model_lib.encoder_block(x, p, cfg, causal=True)
+    out2 = model_lib.encoder_block(x.at[12].add(5.0), p, cfg, causal=True)
+    assert np.abs(np.asarray(out1[:12]) - np.asarray(out2[:12])).max() < 0.05
+
+
+def test_non_causal_block_is_not_causal():
+    p = params_for(CFG)
+    x = x_for(CFG, s=16)
+    out1 = model_lib.encoder_block(x, p, CFG)
+    out2 = model_lib.encoder_block(x.at[12].add(5.0), p, CFG)
+    assert not np.allclose(np.asarray(out1[:12]), np.asarray(out2[:12]))
+
+
+def test_on_reram_close_to_digital():
+    """The crossbar FF path quantizes: outputs differ slightly but stay
+    within the 8-bit error budget after layernorm."""
+    p = params_for(CFG)
+    x = x_for(CFG)
+    reram = np.asarray(model_lib.encoder_block(x, p, CFG, on_reram=True))
+    digital = np.asarray(model_lib.encoder_block(x, p, CFG, on_reram=False))
+    assert np.abs(reram - digital).max() < 0.1
+    assert not np.array_equal(reram, digital)
+
+
+def test_positional_encoding_properties():
+    pe = np.asarray(model_lib.positional_encoding(64, 32))
+    assert pe.shape == (64, 32)
+    np.testing.assert_allclose(pe[0, 0::2], 0.0, atol=1e-7)   # sin(0)
+    np.testing.assert_allclose(pe[0, 1::2], 1.0, atol=1e-7)   # cos(0)
+    assert np.abs(pe).max() <= 1.0 + 1e-6
+    # Distinct positions get distinct encodings.
+    assert not np.allclose(pe[1], pe[2])
+
+
+def test_encoder_stacks_layers():
+    cfg = model_lib.ModelConfig("t", 2, 32, 2, 64)
+    layer_params = [params_for(cfg, s) for s in (0, 1)]
+    x = x_for(cfg)
+    out = model_lib.encoder(x, layer_params, cfg)
+    assert out.shape == x.shape
+    # Two different layers must not act like one layer applied twice.
+    out_same = model_lib.encoder(x, [layer_params[0]] * 2, cfg)
+    assert not np.allclose(np.asarray(out), np.asarray(out_same))
+
+
+def test_classifier_param_names_cover_shapes():
+    shapes = clf.param_shapes()
+    assert set(clf.PARAM_NAMES) == set(shapes)
+    assert clf.PARAM_NAMES[-2:] == ("head_w", "head_b")
+    assert shapes["l0_wf1"] == (clf.D_MODEL, clf.D_FF)
+
+
+def test_classifier_forward_batch_matches_single():
+    params = clf.init_params(jax.random.PRNGKey(0))
+    x, _ = clf.make_dataset(clf.TASKS["sst2-syn"], jax.random.PRNGKey(1), 3)
+    batch = clf.forward_batch(x, params)
+    singles = jnp.stack([clf.forward_single(xx, params) for xx in x])
+    np.testing.assert_allclose(np.asarray(batch), np.asarray(singles),
+                               atol=1e-5)
+
+
+def test_datasets_are_balanced_and_deterministic():
+    for name, task in clf.TASKS.items():
+        x, y = clf.make_dataset(task, jax.random.PRNGKey(5), 512)
+        assert x.shape == (512, clf.SEQ_LEN, clf.D_MODEL)
+        frac = float(jnp.mean(y.astype(jnp.float32)))
+        assert 0.4 < frac < 0.6, (name, frac)
+        x2, y2 = clf.make_dataset(task, jax.random.PRNGKey(5), 512)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(x2))

@@ -1,0 +1,73 @@
+"""LayerNorm / GELU / softmax Pallas kernels vs jnp oracles."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import primitives, ref
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=20, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(seed, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@hypothesis.given(rows=st.integers(1, 300), d=st.sampled_from([8, 32, 64, 128]),
+                  seed=st.integers(0, 1000))
+def test_layernorm(rows, d, seed):
+    x = rand(seed, (rows, d), scale=3.0)
+    g = rand(seed + 1, (d,)) + 1.0
+    b = rand(seed + 2, (d,))
+    out = primitives.layernorm(x, g, b)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.layernorm_ref(x, g, b)),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_layernorm_output_statistics():
+    x = rand(0, (64, 128), scale=5.0)
+    out = np.asarray(primitives.layernorm(x, jnp.ones(128), jnp.zeros(128)))
+    np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(axis=-1), 1.0, atol=1e-2)
+
+
+@hypothesis.given(rows=st.integers(1, 300), seed=st.integers(0, 1000))
+def test_gelu(rows, seed):
+    x = rand(seed, (rows, 32), scale=4.0)
+    np.testing.assert_allclose(np.asarray(primitives.gelu(x)),
+                               np.asarray(ref.gelu_ref(x)),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_gelu_known_values():
+    x = jnp.array([[0.0, 1.0, -1.0, 10.0, -10.0]], jnp.float32)
+    out = np.asarray(primitives.gelu(x))[0]
+    np.testing.assert_allclose(out[0], 0.0, atol=1e-7)
+    # tanh approximation: Φ(1)·1 ≈ 0.8412 (vs exact 0.8413).
+    np.testing.assert_allclose(out[1], 0.841192, atol=1e-4)
+    np.testing.assert_allclose(out[2], -0.158808, atol=1e-4)
+    np.testing.assert_allclose(out[3], 10.0, atol=1e-5)
+    np.testing.assert_allclose(out[4], 0.0, atol=1e-5)
+
+
+@hypothesis.given(rows=st.integers(1, 200), d=st.sampled_from([2, 10, 64]),
+                  seed=st.integers(0, 1000))
+def test_softmax(rows, d, seed):
+    x = rand(seed, (rows, d), scale=10.0)
+    out = np.asarray(primitives.softmax(x))
+    np.testing.assert_allclose(out, np.asarray(ref.softmax_ref(x)),
+                               atol=1e-6, rtol=1e-5)
+    np.testing.assert_allclose(out.sum(axis=-1), 1.0, atol=1e-6)
+
+
+def test_softmax_extreme_values_stable():
+    x = jnp.array([[1000.0, 0.0, -1000.0]], jnp.float32)
+    out = np.asarray(primitives.softmax(x))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out[0, 0], 1.0, atol=1e-6)

@@ -1,0 +1,75 @@
+"""HTX archive round-trip (the Rust side re-checks the golden file)."""
+
+import os
+import tempfile
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from compile import tensor_io
+
+hypothesis.settings.register_profile("io", max_examples=25, deadline=None)
+hypothesis.settings.load_profile("io")
+
+
+def roundtrip(tensors):
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "t.htx")
+        tensor_io.write_archive(p, tensors)
+        return tensor_io.read_archive(p)
+
+
+@hypothesis.given(
+    shape=st.lists(st.integers(0, 7), min_size=0, max_size=4),
+    dtype=st.sampled_from([np.float32, np.int32, np.uint8]),
+    seed=st.integers(0, 2**16),
+)
+def test_roundtrip_any_shape(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    arr = (rng.standard_normal(shape) * 100).astype(dtype)
+    out = roundtrip({"t": arr})["t"]
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_order_preserved():
+    tensors = {f"t{i}": np.full((2,), i, np.float32) for i in range(20)}
+    out = roundtrip(tensors)
+    assert list(out) == list(tensors)
+
+
+def test_unicode_names():
+    arr = np.ones((3,), np.float32)
+    out = roundtrip({"wéight/λ_0": arr})
+    np.testing.assert_array_equal(out["wéight/λ_0"], arr)
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "bad.htx"
+    p.write_bytes(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        tensor_io.read_archive(str(p))
+
+
+def test_unsupported_dtype_rejected(tmp_path):
+    with pytest.raises(TypeError):
+        tensor_io.write_archive(str(tmp_path / "x.htx"),
+                                {"t": np.zeros(3, np.float64)})
+
+
+def test_golden_file_contents():
+    """The golden archive written by aot.py must decode to known values
+    (Rust integration tests read the same file)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                        "golden.htx")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built yet")
+    t = tensor_io.read_archive(path)
+    np.testing.assert_allclose(t["f32_2x3"],
+                               np.arange(6, dtype=np.float32).reshape(2, 3) / 4.0)
+    np.testing.assert_array_equal(t["i32_4"],
+                                  np.array([-2, -1, 0, 2_000_000_000]))
+    assert t["u8_scalar"] == 255
+    assert t["f32_empty"].shape == (0, 5)

@@ -1,0 +1,27 @@
+//! Fig. 3 bench: regenerates the PT-vs-PTN placement figure and times the
+//! DSE pipeline (placement evaluation is the MOO hot path).
+use hetrax::arch::Placement;
+use hetrax::config::Config;
+use hetrax::experiments::common::Effort;
+use hetrax::experiments::fig3;
+use hetrax::optim::Evaluator;
+use hetrax::util::bench::Bencher;
+
+fn main() {
+    let cfg = Config::default();
+    let quick = std::env::var("HETRAX_FULL_BENCH").is_err();
+    let effort = if quick { Effort::quick() } else { Effort::paper() };
+
+    // The figure itself.
+    let outcome = fig3::run(&cfg, effort, 42);
+    println!("\nPT ReRAM tier {} vs PTN ReRAM tier {}",
+             outcome.pt_reram_tier, outcome.ptn_reram_tier);
+
+    // Hot-path timing: single-design objective evaluation.
+    let w = hetrax::experiments::common::dse_workload();
+    let ev = Evaluator::new(&cfg, &w);
+    let p = Placement::mesh_baseline(&cfg);
+    let b = Bencher::default();
+    println!();
+    b.time("objective evaluation (one design point)", || ev.evaluate(&p));
+}

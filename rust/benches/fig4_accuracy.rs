@@ -1,0 +1,22 @@
+//! Fig. 4 bench: accuracy-under-noise through the real PJRT classifier.
+use hetrax::config::Config;
+use hetrax::experiments::fig4;
+use hetrax::reram::NoiseModel;
+use hetrax::util::bench::Bencher;
+use hetrax::util::rng::Rng;
+
+fn main() {
+    let cfg = Config::default();
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        fig4::run(&cfg, "artifacts", 78.0, 57.0, 7).expect("fig4");
+    } else {
+        println!("artifacts missing — run `make artifacts` for the full figure");
+    }
+    // Hot path: weight perturbation throughput.
+    let noise = NoiseModel::new(&cfg, 78.0);
+    let w: Vec<f32> = (0..65536).map(|i| ((i % 255) as f32 - 127.0) / 127.0).collect();
+    let mut rng = Rng::new(5);
+    let b = Bencher::default();
+    println!();
+    b.time("perturb_weights (64k weights)", || noise.perturb_weights(&w, &mut rng));
+}

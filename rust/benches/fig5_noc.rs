@@ -1,0 +1,22 @@
+//! Fig. 5 bench: router-port histogram + topology-construction timing.
+use hetrax::arch::Placement;
+use hetrax::config::Config;
+use hetrax::experiments::common::Effort;
+use hetrax::experiments::fig5;
+use hetrax::noc::Topology;
+use hetrax::util::bench::Bencher;
+
+fn main() {
+    let cfg = Config::default();
+    let quick = std::env::var("HETRAX_FULL_BENCH").is_err();
+    let effort = if quick { Effort::quick() } else { Effort::paper() };
+    let outcome = fig5::run(&cfg, effort, 7);
+    println!("\nmean ports: mesh {:.2} vs hetrax {:.2} | links {} vs {}",
+             fig5::mean_ports(&outcome.mesh_hist),
+             fig5::mean_ports(&outcome.hetrax_hist),
+             outcome.mesh_links, outcome.hetrax_links);
+    let p = Placement::mesh_baseline(&cfg);
+    let b = Bencher::default();
+    println!();
+    b.time("Topology::build + routing tables (43 routers)", || Topology::build(&cfg, &p));
+}

@@ -1,0 +1,16 @@
+//! Fig. 6a bench: per-kernel execution times vs baselines.
+use hetrax::config::Config;
+use hetrax::experiments::fig6a;
+use hetrax::model::{ArchVariant, ModelId, Workload};
+use hetrax::perf::PerfEstimator;
+use hetrax::util::bench::Bencher;
+
+fn main() {
+    let cfg = Config::default();
+    fig6a::run(&cfg, 1024);
+    let w = Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, 1024);
+    let est = PerfEstimator::new(&cfg);
+    let b = Bencher::default();
+    println!();
+    b.time("PerfEstimator::estimate (BERT-Large n=1024, 192 kernels)", || est.estimate(&w));
+}

@@ -1,0 +1,17 @@
+//! Fig. 6b bench: architecture variants, speedups and temperatures.
+use hetrax::arch::Placement;
+use hetrax::config::Config;
+use hetrax::experiments::fig6b;
+use hetrax::util::bench::Bencher;
+
+fn main() {
+    let cfg = Config::default();
+    let mut p = Placement::mesh_baseline(&cfg);
+    p.tier_order.swap(0, 3);
+    fig6b::run(&cfg, 1024, &p);
+    let b = Bencher::default();
+    let w = hetrax::experiments::common::dse_workload();
+    println!();
+    b.time("hetrax_temp_c (estimate + power map + thermal solve)",
+           || fig6b::hetrax_temp_c(&cfg, &p, &w));
+}

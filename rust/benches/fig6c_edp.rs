@@ -1,0 +1,10 @@
+//! Fig. 6c bench: the full EDP sweep (5 models × 4 sequence lengths).
+use hetrax::config::Config;
+use hetrax::experiments::fig6c;
+use hetrax::util::bench::Bencher;
+
+fn main() {
+    let cfg = Config::default();
+    let b = Bencher::quick();
+    b.time("fig6c full sweep (20 design points × 3 accelerators)", || fig6c::run(&cfg));
+}

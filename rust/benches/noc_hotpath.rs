@@ -1,0 +1,47 @@
+//! NoC simulator hot-path bench — the §Perf headline metric
+//! (flit-hops/second) plus routing/evaluation microbenchmarks.
+use hetrax::arch::Placement;
+use hetrax::config::Config;
+use hetrax::noc::{traffic, NocSim, Topology};
+use hetrax::util::bench::Bencher;
+use hetrax::util::rng::Rng;
+
+fn main() {
+    let cfg = Config::default();
+    let p = Placement::mesh_baseline(&cfg);
+    let topo = Topology::build(&cfg, &p);
+
+    // Saturating uniform-random trace.
+    let mut rng = Rng::new(1);
+    let flows: Vec<traffic::Flow> = (0..200)
+        .map(|i| traffic::Flow { src: i % 43, dst: (i * 11 + 5) % 43, bytes: 8192.0 })
+        .filter(|f| f.src != f.dst)
+        .collect();
+    let trace = traffic::trace_from_flows(&cfg, &flows, 2_000, &mut rng);
+    let total_flits: u64 = trace.packets.iter().map(|p| p.flits as u64).sum();
+
+    let b = Bencher::default();
+    let t = b.time("cycle sim: saturating trace to completion", || {
+        let mut sim = NocSim::new(&cfg, &topo);
+        sim.run(&trace, 10_000_000)
+    });
+    // Report the perf metric.
+    let mut sim = NocSim::new(&cfg, &topo);
+    let report = sim.run(&trace, 10_000_000);
+    let hops_per_s = report.flit_hops as f64 / t.median_s();
+    println!("\n  flit-hops/s: {:.2} M  (cycles {} | flits {} | {:.3} flits/cycle)",
+             hops_per_s / 1e6, report.cycles, total_flits, report.throughput());
+
+    b.time("analytic Eq.1 utilization (200 flows)", || {
+        topo.utilization_stats(&cfg, &flows, 1e-3)
+    });
+    b.time("routed path lookup (all pairs)", || {
+        let mut acc = 0usize;
+        for s in 0..topo.n {
+            for d in 0..topo.n {
+                acc += topo.path(s, d).map(|p| p.len()).unwrap_or(0);
+            }
+        }
+        acc
+    });
+}

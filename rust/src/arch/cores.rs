@@ -1,0 +1,106 @@
+//! Core identities and physical sites.
+
+use crate::config::Config;
+
+/// Global core index. Layout is fixed:
+/// `0..sm_count` = SMs, then MCs, then ReRAM cores.
+pub type CoreId = usize;
+
+/// The three heterogeneous core types of §4.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoreKind {
+    /// Streaming multiprocessor (tensor cores) — MHA compute.
+    Sm,
+    /// Memory controller (last-level cache + DRAM/DFI interface).
+    Mc,
+    /// ReRAM PIM core (16 tiles of crossbars) — FF compute.
+    ReRam,
+}
+
+impl CoreKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CoreKind::Sm => "SM",
+            CoreKind::Mc => "MC",
+            CoreKind::ReRam => "ReRAM",
+        }
+    }
+}
+
+/// Which kind is core `id` under configuration `cfg`?
+pub fn kind_of(cfg: &Config, id: CoreId) -> CoreKind {
+    if id < cfg.sm_count {
+        CoreKind::Sm
+    } else if id < cfg.sm_count + cfg.mc_count {
+        CoreKind::Mc
+    } else {
+        debug_assert!(id < cfg.total_cores());
+        CoreKind::ReRam
+    }
+}
+
+/// Iterator helpers over core-id ranges.
+pub fn sm_ids(cfg: &Config) -> std::ops::Range<CoreId> {
+    0..cfg.sm_count
+}
+pub fn mc_ids(cfg: &Config) -> std::ops::Range<CoreId> {
+    cfg.sm_count..cfg.sm_count + cfg.mc_count
+}
+pub fn reram_ids(cfg: &Config) -> std::ops::Range<CoreId> {
+    cfg.sm_count + cfg.mc_count..cfg.total_cores()
+}
+
+/// A physical site on the die: tier index (0 = nearest the heat sink) and
+/// planar grid coordinates within that tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Site {
+    pub tier: usize,
+    pub x: usize,
+    pub y: usize,
+}
+
+impl Site {
+    /// Physical center position in millimetres given the tier's grid size.
+    pub fn center_mm(&self, grid: usize, tier_size_mm: f64) -> (f64, f64) {
+        let cell = tier_size_mm / grid as f64;
+        (
+            (self.x as f64 + 0.5) * cell,
+            (self.y as f64 + 0.5) * cell,
+        )
+    }
+
+    /// Manhattan distance in grid hops (same tier only).
+    pub fn manhattan(&self, other: &Site) -> usize {
+        debug_assert_eq!(self.tier, other.tier);
+        self.x.abs_diff(other.x) + self.y.abs_diff(other.y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_ranges_partition() {
+        let cfg = Config::default();
+        assert_eq!(sm_ids(&cfg).len(), 21);
+        assert_eq!(mc_ids(&cfg).len(), 6);
+        assert_eq!(reram_ids(&cfg).len(), 16);
+        assert_eq!(kind_of(&cfg, 0), CoreKind::Sm);
+        assert_eq!(kind_of(&cfg, 20), CoreKind::Sm);
+        assert_eq!(kind_of(&cfg, 21), CoreKind::Mc);
+        assert_eq!(kind_of(&cfg, 26), CoreKind::Mc);
+        assert_eq!(kind_of(&cfg, 27), CoreKind::ReRam);
+        assert_eq!(kind_of(&cfg, 42), CoreKind::ReRam);
+    }
+
+    #[test]
+    fn site_geometry() {
+        let s = Site { tier: 0, x: 0, y: 0 };
+        let (cx, cy) = s.center_mm(4, 10.0);
+        assert!((cx - 1.25).abs() < 1e-12 && (cy - 1.25).abs() < 1e-12);
+        let a = Site { tier: 1, x: 0, y: 2 };
+        let b = Site { tier: 1, x: 2, y: 0 };
+        assert_eq!(a.manhattan(&b), 4);
+    }
+}

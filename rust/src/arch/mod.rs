@@ -1,0 +1,13 @@
+//! S2 — 3D architecture and placement representation.
+//!
+//! A [`Placement`] is the design point λ of §4.4: the vertical ordering of
+//! the four tiers, the assignment of SM/MC cores to the 27 SM-MC sites,
+//! and the set of planar NoC links (bounded by the 3D-mesh port budget).
+//! The ReRAM tier's internal layout is fixed offline (§4.2: unidirectional
+//! FF dataflow ⇒ core placement and inter-core links determined offline).
+
+pub mod cores;
+pub mod placement;
+
+pub use cores::{CoreId, CoreKind, Site};
+pub use placement::{Placement, TierKind};

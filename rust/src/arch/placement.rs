@@ -1,0 +1,496 @@
+//! The design point λ (§4.4): tier ordering, SM/MC site assignment, and
+//! planar link selection — with the perturbation moves MOO-STAGE/AMOSA
+//! explore and the canonical designs (3D-mesh, PT-style, PTN-style)
+//! experiments start from.
+
+use crate::arch::cores::{kind_of, CoreId, CoreKind, Site};
+use crate::config::Config;
+use crate::util::rng::Rng;
+
+/// What occupies a physical tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TierKind {
+    /// The i-th SM-MC tier (i in 0..sm_mc_tiers).
+    SmMc(usize),
+    ReRam,
+}
+
+/// The design point λ. Cheap to clone (the DSE clones per perturbation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    /// `tier_order[t]` = what occupies physical tier `t`
+    /// (t = 0 is nearest the heat sink).
+    pub tier_order: Vec<TierKind>,
+    /// For each SM-MC site (logical tier i, then row-major x,y):
+    /// the core id assigned there. Length = sm_mc_tiers × grid².
+    pub smmc_sites: Vec<CoreId>,
+    /// Selected *planar* links within SM-MC tiers, as unordered core-id
+    /// pairs. (ReRAM-tier planar links are fixed offline, see
+    /// `reram_chain_links`; vertical TSV links are implied by geometry.)
+    pub planar_links: Vec<(CoreId, CoreId)>,
+}
+
+impl Placement {
+    /// The 3D-mesh baseline: identity tier order (ReRAM on top, farthest
+    /// from the sink — the naive arrangement), MCs distributed evenly
+    /// across the SM-MC tiers (§5.1: 21 SMs and 6 MCs across three tiers
+    /// = 7 + 2 per tier), and all grid-adjacent planar links.
+    pub fn mesh_baseline(cfg: &Config) -> Placement {
+        let mut tier_order: Vec<TierKind> =
+            (0..cfg.sm_mc_tiers).map(TierKind::SmMc).collect();
+        tier_order.push(TierKind::ReRam);
+        let per = cfg.sm_mc_grid * cfg.sm_mc_grid;
+        let mut smmc_sites = Vec::with_capacity(cfg.sm_mc_tiers * per);
+        let mut next_sm = 0usize;
+        let mut next_mc = cfg.sm_count;
+        for t in 0..cfg.sm_mc_tiers {
+            // MCs per tier: evenly split with remainder to earlier tiers.
+            let mcs_here = cfg.mc_count / cfg.sm_mc_tiers
+                + usize::from(t < cfg.mc_count % cfg.sm_mc_tiers);
+            let sms_here = per - mcs_here;
+            for _ in 0..sms_here {
+                smmc_sites.push(next_sm);
+                next_sm += 1;
+            }
+            for _ in 0..mcs_here {
+                smmc_sites.push(next_mc);
+                next_mc += 1;
+            }
+        }
+        let planar_links = full_mesh_links(cfg, &smmc_sites);
+        Placement { tier_order, smmc_sites, planar_links }
+    }
+
+    /// Randomized starting point for DSE: random tier order, random SM/MC
+    /// permutation, mesh links (the optimizer prunes/moves them). Links
+    /// are rebuilt *after* the shuffle — they are wires between sites,
+    /// so they must follow the final geometry.
+    pub fn random(cfg: &Config, rng: &mut Rng) -> Placement {
+        let mut p = Placement::mesh_baseline(cfg);
+        // Random tier permutation.
+        for i in (1..p.tier_order.len()).rev() {
+            let j = rng.below(i + 1);
+            p.tier_order.swap(i, j);
+        }
+        rng.shuffle(&mut p.smmc_sites);
+        p.planar_links = full_mesh_links(cfg, &p.smmc_sites);
+        p
+    }
+
+    /// Number of SM-MC sites per logical tier.
+    pub fn sites_per_smmc_tier(cfg: &Config) -> usize {
+        cfg.sm_mc_grid * cfg.sm_mc_grid
+    }
+
+    /// Physical tier index occupied by `kind`.
+    pub fn physical_tier(&self, kind: TierKind) -> usize {
+        self.tier_order
+            .iter()
+            .position(|&t| t == kind)
+            .expect("tier kind present")
+    }
+
+    /// Physical tier holding the ReRAM grid.
+    pub fn reram_tier(&self) -> usize {
+        self.physical_tier(TierKind::ReRam)
+    }
+
+    /// Site of a core (SM/MC from the assignment; ReRAM row-major fixed).
+    pub fn site_of(&self, cfg: &Config, id: CoreId) -> Site {
+        match kind_of(cfg, id) {
+            CoreKind::Sm | CoreKind::Mc => {
+                let pos = self
+                    .smmc_sites
+                    .iter()
+                    .position(|&c| c == id)
+                    .expect("core assigned");
+                let per = Self::sites_per_smmc_tier(cfg);
+                let logical = pos / per;
+                let within = pos % per;
+                Site {
+                    tier: self.physical_tier(TierKind::SmMc(logical)),
+                    x: within % cfg.sm_mc_grid,
+                    y: within / cfg.sm_mc_grid,
+                }
+            }
+            CoreKind::ReRam => {
+                let idx = id - cfg.sm_count - cfg.mc_count;
+                Site {
+                    tier: self.reram_tier(),
+                    x: idx % cfg.reram_grid,
+                    y: idx / cfg.reram_grid,
+                }
+            }
+        }
+    }
+
+    /// Fixed ReRAM-tier planar links: a serpentine chain matching the
+    /// unidirectional layer-to-layer FF dataflow (§4.2), plus row links
+    /// for operand broadcast.
+    pub fn reram_chain_links(cfg: &Config) -> Vec<(CoreId, CoreId)> {
+        let base = cfg.sm_count + cfg.mc_count;
+        let g = cfg.reram_grid;
+        let mut links = Vec::new();
+        // Serpentine chain 0→1→…→15.
+        let order: Vec<usize> = (0..g)
+            .flat_map(|row| {
+                let cols: Vec<usize> = if row % 2 == 0 {
+                    (0..g).collect()
+                } else {
+                    (0..g).rev().collect()
+                };
+                cols.into_iter().map(move |c| row * g + c)
+            })
+            .collect();
+        for w in order.windows(2) {
+            links.push((base + w[0], base + w[1]));
+        }
+        // Column ties every other row for shorter return paths.
+        for row in (0..g - 1).step_by(2) {
+            for col in 0..g {
+                links.push((base + row * g + col, base + (row + 1) * g + col));
+            }
+        }
+        links.sort_unstable();
+        links.dedup();
+        links
+    }
+
+    /// Perturbation move for DSE (one of the §4.4 neighbourhood moves):
+    /// 0. swap two SM-MC core assignments,
+    /// 1. swap two tiers in the vertical order,
+    /// 2. rewire one planar link (remove one, add a legal non-adjacent or
+    ///    adjacent candidate respecting the port budget).
+    pub fn perturb(&self, cfg: &Config, rng: &mut Rng) -> Placement {
+        let mut p = self.clone();
+        match rng.below(3) {
+            0 => {
+                // Swap two sites holding different kinds when possible
+                // (SM↔MC swaps change traffic locality; same-kind swaps
+                // are no-ops for objectives but harmless).
+                let n = p.smmc_sites.len();
+                for _ in 0..8 {
+                    let a = rng.below(n);
+                    let b = rng.below(n);
+                    if a != b
+                        && kind_of(cfg, p.smmc_sites[a]) != kind_of(cfg, p.smmc_sites[b])
+                    {
+                        p.swap_sites(a, b);
+                        return p;
+                    }
+                }
+                let (a, b) = (rng.below(n), rng.below(n));
+                if a != b {
+                    p.swap_sites(a, b);
+                }
+            }
+            1 => {
+                let n = p.tier_order.len();
+                let a = rng.below(n);
+                let mut b = rng.below(n);
+                while b == a {
+                    b = rng.below(n);
+                }
+                p.tier_order.swap(a, b);
+            }
+            _ => {
+                p.rewire_link(cfg, rng);
+            }
+        }
+        p
+    }
+
+    /// Link neighbourhood move: remove a link (routers shrink — the
+    /// Fig. 5 pressure, backed by router power in the thermal objective),
+    /// add a link, or move one. Disconnection is allowed here; the
+    /// objective evaluation poisons disconnected designs.
+    fn rewire_link(&mut self, cfg: &Config, rng: &mut Rng) {
+        let roll = rng.f64();
+        if roll < 0.4 && self.planar_links.len() > self.smmc_sites.len() {
+            // Remove only (keep at least ~1 link per SM-MC core so pure
+            // removal cannot trivially shred the fabric).
+            let victim = rng.below(self.planar_links.len());
+            self.planar_links.swap_remove(victim);
+            return;
+        }
+        if roll >= 0.7 && !self.planar_links.is_empty() {
+            // Move: remove then add.
+            let victim = rng.below(self.planar_links.len());
+            self.planar_links.swap_remove(victim);
+        }
+        // Add: any same-tier SM-MC pair within manhattan distance 2 not
+        // already linked, respecting the port budget and the §4.4 global
+        // constraint (links at most equivalent to a 3D mesh).
+        let mesh_cap = cfg.sm_mc_tiers * 2 * cfg.sm_mc_grid * (cfg.sm_mc_grid - 1);
+        if self.planar_links.len() >= mesh_cap {
+            return;
+        }
+        for _ in 0..16 {
+            let a = self.smmc_sites[rng.below(self.smmc_sites.len())];
+            let b = self.smmc_sites[rng.below(self.smmc_sites.len())];
+            if a == b {
+                continue;
+            }
+            let (sa, sb) = (self.site_of(cfg, a), self.site_of(cfg, b));
+            if sa.tier != sb.tier || sa.manhattan(&sb) > 2 {
+                continue;
+            }
+            let key = (a.min(b), a.max(b));
+            if self.planar_links.contains(&key) {
+                continue;
+            }
+            if self.port_count(cfg, a) >= cfg.max_ports
+                || self.port_count(cfg, b) >= cfg.max_ports
+            {
+                continue;
+            }
+            self.planar_links.push(key);
+            return;
+        }
+        // No legal candidate found: restore a mesh link so the move is
+        // not a silent no-op.
+        let mesh = full_mesh_links(cfg, &self.smmc_sites);
+        for l in mesh {
+            if !self.planar_links.contains(&l) {
+                self.planar_links.push(l);
+                return;
+            }
+        }
+    }
+
+    /// Swap the cores at two SM-MC site positions, keeping planar links
+    /// attached to *sites* (links are physical wires between router
+    /// locations): every link endpoint naming one of the swapped cores is
+    /// renamed to the other, so link geometry is preserved and links can
+    /// never straddle tiers.
+    fn swap_sites(&mut self, a: usize, b: usize) {
+        let ca = self.smmc_sites[a];
+        let cb = self.smmc_sites[b];
+        self.smmc_sites.swap(a, b);
+        for l in self.planar_links.iter_mut() {
+            let remap = |id: usize| {
+                if id == ca {
+                    cb
+                } else if id == cb {
+                    ca
+                } else {
+                    id
+                }
+            };
+            let (x, y) = (remap(l.0), remap(l.1));
+            *l = (x.min(y), x.max(y));
+        }
+        // Renaming can merge two distinct links into duplicates only if
+        // both (ca,x) and (cb,x) existed; canonicalize.
+        self.planar_links.sort_unstable();
+        self.planar_links.dedup();
+    }
+
+    /// Planar-link degree of a core (vertical/local ports counted by the
+    /// NoC builder).
+    pub fn port_count(&self, _cfg: &Config, id: CoreId) -> usize {
+        self.planar_links
+            .iter()
+            .filter(|&&(a, b)| a == id || b == id)
+            .count()
+    }
+
+    /// All planar links including the fixed ReRAM chain.
+    pub fn all_planar_links(&self, cfg: &Config) -> Vec<(CoreId, CoreId)> {
+        let mut links = self.planar_links.clone();
+        links.extend(Self::reram_chain_links(cfg));
+        links
+    }
+
+    /// Compact feature vector describing λ — input to MOO-STAGE's learned
+    /// value function (optim::stage).
+    pub fn features(&self, cfg: &Config) -> Vec<f64> {
+        let reram_tier = self.reram_tier() as f64;
+        let n_links = self.planar_links.len() as f64;
+        // Mean planar link length (grid hops).
+        let mut hop_sum = 0.0;
+        for &(a, b) in &self.planar_links {
+            let (sa, sb) = (self.site_of(cfg, a), self.site_of(cfg, b));
+            if sa.tier == sb.tier {
+                hop_sum += sa.manhattan(&sb) as f64;
+            }
+        }
+        let mean_len = if self.planar_links.is_empty() { 0.0 } else { hop_sum / n_links };
+        // MC dispersion: mean pairwise distance between MCs (same tier
+        // pairs only), normalized.
+        let mc_ids: Vec<CoreId> = (cfg.sm_count..cfg.sm_count + cfg.mc_count).collect();
+        let mut mc_spread = 0.0;
+        let mut pairs = 0.0;
+        for i in 0..mc_ids.len() {
+            for j in i + 1..mc_ids.len() {
+                let (a, b) = (
+                    self.site_of(cfg, mc_ids[i]),
+                    self.site_of(cfg, mc_ids[j]),
+                );
+                let dz = a.tier.abs_diff(b.tier) as f64;
+                let dxy = a.x.abs_diff(b.x) as f64 + a.y.abs_diff(b.y) as f64;
+                mc_spread += dxy + 2.0 * dz;
+                pairs += 1.0;
+            }
+        }
+        if pairs > 0.0 {
+            mc_spread /= pairs;
+        }
+        // MCs per logical tier (balance).
+        let per = Self::sites_per_smmc_tier(cfg);
+        let mut mc_balance = 0.0;
+        for t in 0..cfg.sm_mc_tiers {
+            let count = self.smmc_sites[t * per..(t + 1) * per]
+                .iter()
+                .filter(|&&c| kind_of(cfg, c) == CoreKind::Mc)
+                .count() as f64;
+            let ideal = cfg.mc_count as f64 / cfg.sm_mc_tiers as f64;
+            mc_balance += (count - ideal).abs();
+        }
+        vec![reram_tier, n_links, mean_len, mc_spread, mc_balance]
+    }
+}
+
+/// All grid-adjacent planar links across SM-MC tiers given a site
+/// assignment.
+fn full_mesh_links(cfg: &Config, smmc_sites: &[CoreId]) -> Vec<(CoreId, CoreId)> {
+    let g = cfg.sm_mc_grid;
+    let per = g * g;
+    let mut links = Vec::new();
+    for t in 0..cfg.sm_mc_tiers {
+        let tier_sites = &smmc_sites[t * per..(t + 1) * per];
+        for y in 0..g {
+            for x in 0..g {
+                let here = tier_sites[y * g + x];
+                if x + 1 < g {
+                    let right = tier_sites[y * g + x + 1];
+                    links.push((here.min(right), here.max(right)));
+                }
+                if y + 1 < g {
+                    let down = tier_sites[(y + 1) * g + x];
+                    links.push((here.min(down), here.max(down)));
+                }
+            }
+        }
+    }
+    links
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> Config {
+        Config::default()
+    }
+
+    #[test]
+    fn mesh_baseline_site_coverage() {
+        let cfg = cfg();
+        let p = Placement::mesh_baseline(&cfg);
+        // Every core has a unique site.
+        let mut seen = std::collections::HashSet::new();
+        for id in 0..cfg.total_cores() {
+            let s = p.site_of(&cfg, id);
+            assert!(seen.insert(s), "site collision at {s:?} for core {id}");
+            assert!(s.tier < 4);
+        }
+        // 3×3 mesh per SM-MC tier = 12 links/tier × 3 tiers.
+        assert_eq!(p.planar_links.len(), 36);
+        // ReRAM on top in the naive baseline.
+        assert_eq!(p.reram_tier(), 3);
+    }
+
+    #[test]
+    fn reram_chain_is_connected_and_fixed() {
+        let cfg = cfg();
+        let links = Placement::reram_chain_links(&cfg);
+        // Serpentine: 15 links; column ties rows 0–1 and 2–3: 8, of which
+        // 2 duplicate the serpentine's row transitions → 21 unique.
+        assert_eq!(links.len(), 21);
+        // Connectivity over the 16 ReRAM cores via union-find-lite.
+        let base = cfg.sm_count + cfg.mc_count;
+        let mut parent: Vec<usize> = (0..16).collect();
+        fn find(p: &mut Vec<usize>, i: usize) -> usize {
+            if p[i] != i {
+                let r = find(p, p[i]);
+                p[i] = r;
+            }
+            p[i]
+        }
+        for (a, b) in &links {
+            let (ra, rb) = (find(&mut parent, a - base), find(&mut parent, b - base));
+            parent[ra] = rb;
+        }
+        let root = find(&mut parent, 0);
+        for i in 0..16 {
+            assert_eq!(find(&mut parent, i), root);
+        }
+    }
+
+    #[test]
+    fn perturb_preserves_invariants() {
+        let cfg = cfg();
+        let mut rng = Rng::new(42);
+        let mut p = Placement::mesh_baseline(&cfg);
+        for step in 0..500 {
+            p = p.perturb(&cfg, &mut rng);
+            // Assignment is a permutation of 0..27.
+            let mut ids = p.smmc_sites.clone();
+            ids.sort_unstable();
+            assert_eq!(ids, (0..27).collect::<Vec<_>>(), "step {step}");
+            // Tier order is a permutation of the 4 tier kinds.
+            assert_eq!(p.tier_order.len(), 4);
+            assert!(p.tier_order.contains(&TierKind::ReRam));
+            // Port budget respected.
+            for id in 0..cfg.total_cores() {
+                assert!(
+                    p.port_count(&cfg, id) <= cfg.max_ports,
+                    "step {step}: core {id} exceeds port budget"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn random_placements_differ_and_are_valid() {
+        let cfg = cfg();
+        let mut rng = Rng::new(7);
+        let a = Placement::random(&cfg, &mut rng);
+        let b = Placement::random(&cfg, &mut rng);
+        assert_ne!(a, b);
+        let mut ids = a.smmc_sites.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..27).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn features_respond_to_reram_tier() {
+        let cfg = cfg();
+        let p = Placement::mesh_baseline(&cfg);
+        let f_top = p.features(&cfg);
+        let mut p2 = p.clone();
+        p2.tier_order.swap(0, 3); // ReRAM to the sink
+        let f_bottom = p2.features(&cfg);
+        assert_eq!(f_top[0], 3.0);
+        assert_eq!(f_bottom[0], 0.0);
+        assert_eq!(f_top.len(), f_bottom.len());
+    }
+
+    #[test]
+    fn tier_swap_moves_reram() {
+        let cfg = cfg();
+        let mut rng = Rng::new(1);
+        let p = Placement::mesh_baseline(&cfg);
+        let mut moved = false;
+        let mut cur = p;
+        for _ in 0..50 {
+            cur = cur.perturb(&cfg, &mut rng);
+            if cur.reram_tier() != 3 {
+                moved = true;
+                break;
+            }
+        }
+        assert!(moved, "tier swap move never fired");
+    }
+}

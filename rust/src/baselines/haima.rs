@@ -1,0 +1,164 @@
+//! HAIMA [5] — hybrid SRAM + DRAM accelerator-in-memory: SRAM compute
+//! units handle the dynamic self-attention GEMMs, DRAM banks handle the
+//! large weight-matrix multiplications; softmax/LayerNorm still offload
+//! to the host (§2, §5.3).
+//!
+//! CALIBRATION: HAIMA's hybrid gives it better attention latency than
+//! TransPIM, but its per-unit power (§5.3: 3.138 W × 8 units/bank —
+//! ~8 W/mm² bank density) makes it the *energy* loser: Fig. 6c's 14.5×
+//! EDP gap at BERT-Large n = 2056 is against HAIMA.
+
+use crate::baselines::{hbm_thermal, Accelerator, HostOffload};
+use crate::model::kernels::KernelCost;
+use crate::model::{Kernel, Workload};
+
+#[derive(Debug, Clone)]
+pub struct Haima {
+    /// DRAM-bank weight GEMM throughput (FLOP/s).
+    pub gemm_flops: f64,
+    /// SRAM compute-unit attention throughput (FLOP/s) — the hybrid's
+    /// advantage over pure DRAM PIM.
+    pub attn_flops: f64,
+    pub offload: HostOffload,
+    /// Average power while computing (W): the §5.3 compute-unit budget
+    /// derated to a realistic duty cycle (all-units-on would be 400 W).
+    pub active_power_w: f64,
+    /// Interposer energy (pJ/bit) for host offloads.
+    pub pj_per_interposer_bit: f64,
+}
+
+impl Default for Haima {
+    fn default() -> Self {
+        Haima {
+            gemm_flops: 10e12,
+            attn_flops: 6e12,
+            offload: HostOffload {
+                interposer_bps: 100e9,
+                host_flops: 2e12,
+                stall_s: 2e-6,
+            },
+            active_power_w: 70.0,
+            pj_per_interposer_bit: 10.0,
+        }
+    }
+}
+
+impl Haima {
+    /// Compute-unit power scales with how much of the CU array the model
+    /// keeps busy (wider models activate more banks' units).
+    fn active_power(&self, w: &Workload) -> f64 {
+        self.active_power_w * (w.dims.d_model as f64 / 1024.0).min(1.25)
+    }
+
+    fn die_power_w(&self, w: &Workload) -> f64 {
+        // SRAM CUs + DRAM banks concurrently active; parallel attention
+        // keeps both fully busy (§5.3 peak case).
+        let base = 9.3;
+        let seq_factor = (w.seq as f64 / 1024.0).min(1.5) * 0.6;
+        let parallel_bump = if w.variant.mha_ff_parallel() { 1.6 } else { 0.0 };
+        base + seq_factor + parallel_bump
+    }
+}
+
+impl Accelerator for Haima {
+    fn name(&self) -> &'static str {
+        "HAIMA"
+    }
+
+    fn kernel_time_s(&self, kernel: Kernel, cost: &KernelCost, _w: &Workload) -> f64 {
+        match kernel {
+            Kernel::Mha1Qkv | Kernel::Mha4Proj | Kernel::Ff1 | Kernel::Ff2 => {
+                cost.flops / self.gemm_flops
+            }
+            Kernel::Mha2Score => {
+                let gemm = cost.flops / self.attn_flops;
+                let softmax_bytes = cost.act_out_bytes;
+                gemm + self.offload.offload_time_s(softmax_bytes, softmax_bytes, 0.0)
+            }
+            Kernel::Mha3Av => cost.flops / self.attn_flops,
+            Kernel::LayerNorm1 | Kernel::LayerNorm2 => {
+                self.offload
+                    .offload_time_s(cost.act_in_bytes, cost.act_out_bytes, cost.flops)
+            }
+        }
+    }
+
+    fn kernel_energy_j(&self, kernel: Kernel, cost: &KernelCost, w: &Workload) -> f64 {
+        // Power-dominated model: the §5.3 point is that HAIMA's compute
+        // units burn watts whenever the pipeline is busy.
+        let window = self.kernel_time_s(kernel, cost, w);
+        let burn = self.active_power(w) * window;
+        let interposer = match kernel {
+            Kernel::Mha2Score => 2.0 * cost.act_out_bytes * 8.0 * self.pj_per_interposer_bit * 1e-12,
+            Kernel::LayerNorm1 | Kernel::LayerNorm2 => {
+                (cost.act_in_bytes + cost.act_out_bytes) * 8.0 * self.pj_per_interposer_bit * 1e-12
+            }
+            _ => 0.0,
+        };
+        burn + interposer
+    }
+
+    fn steady_temp_c(&self, w: &Workload) -> f64 {
+        let die = self.die_power_w(w);
+        hbm_thermal::stack_peak_c(die, 0.7 * die)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::transpim::TransPim;
+    use crate::model::{ArchVariant, ModelId};
+
+    fn w(seq: usize) -> Workload {
+        Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, seq)
+    }
+
+    #[test]
+    fn faster_attention_than_transpim() {
+        let h = Haima::default();
+        let t = TransPim::default();
+        let wl = w(1024);
+        let score = wl.instances.iter().find(|i| i.kernel == Kernel::Mha3Av).unwrap();
+        assert!(
+            h.kernel_time_s(Kernel::Mha3Av, &score.cost, &wl)
+                < t.kernel_time_s(Kernel::Mha3Av, &score.cost, &wl)
+        );
+        // End-to-end too (the hybrid's pitch).
+        assert!(h.infer_latency_s(&wl) < t.infer_latency_s(&wl));
+    }
+
+    #[test]
+    fn higher_energy_than_transpim() {
+        // The §5.3 power-density critique: HAIMA pays in watts.
+        let h = Haima::default();
+        let t = TransPim::default();
+        let wl = w(2056);
+        assert!(h.infer_energy_j(&wl) > t.infer_energy_j(&wl));
+    }
+
+    #[test]
+    fn thermally_infeasible() {
+        let h = Haima::default();
+        for seq in [128, 1024, 2056] {
+            let temp = h.steady_temp_c(&w(seq));
+            assert!(temp > 110.0, "{temp}");
+            assert!(!hbm_thermal::dram_safe(temp));
+        }
+        // Hottest case ≤ ~150 (Fig. 6b tops out at 142).
+        let par = h.steady_temp_c(&Workload::build(
+            ModelId::BertLarge,
+            ArchVariant::ParallelAttention,
+            2056,
+        ));
+        assert!(par < 152.0, "{par}");
+    }
+
+    #[test]
+    fn energy_scales_with_latency() {
+        let h = Haima::default();
+        let e1 = h.infer_energy_j(&w(512));
+        let e2 = h.infer_energy_j(&w(1024));
+        assert!(e2 > 1.8 * e1);
+    }
+}

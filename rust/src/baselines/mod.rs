@@ -1,0 +1,70 @@
+//! S9 — Baseline accelerators: TransPIM [4] and HAIMA [5], as analytical
+//! models built from the numbers their papers (and §5.3 of HeTraX) state.
+//!
+//! Neither baseline is open-source; DESIGN.md's substitution table
+//! documents the calibration: per-kernel throughputs sized so the
+//! *published relative behaviour* holds (both beat GPUs on transformer
+//! inference; both offload softmax/LayerNorm to a host over an interposer,
+//! which stalls the pipeline; both run HBM compute-in-bank power densities
+//! that violate the 95 °C DRAM limit — §5.3 computes 8 W/mm² for HAIMA).
+
+pub mod haima;
+pub mod hbm_thermal;
+pub mod transpim;
+
+use crate::model::kernels::KernelCost;
+use crate::model::{Kernel, Workload};
+
+/// Common interface the experiment drivers consume.
+pub trait Accelerator {
+    fn name(&self) -> &'static str;
+
+    /// Latency of one kernel instance.
+    fn kernel_time_s(&self, kernel: Kernel, cost: &KernelCost, w: &Workload) -> f64;
+
+    /// Energy of one kernel instance (J).
+    fn kernel_energy_j(&self, kernel: Kernel, cost: &KernelCost, w: &Workload) -> f64;
+
+    /// End-to-end latency: sequential kernel walk (baselines have no
+    /// cross-tier overlap; their published dataflows serialize blocks).
+    fn infer_latency_s(&self, w: &Workload) -> f64 {
+        w.instances
+            .iter()
+            .map(|i| self.kernel_time_s(i.kernel, &i.cost, w))
+            .sum()
+    }
+
+    fn infer_energy_j(&self, w: &Workload) -> f64 {
+        w.instances
+            .iter()
+            .map(|i| self.kernel_energy_j(i.kernel, &i.cost, w))
+            .sum()
+    }
+
+    fn infer_edp(&self, w: &Workload) -> f64 {
+        self.infer_latency_s(w) * self.infer_energy_j(w)
+    }
+
+    /// Steady-state peak temperature under this workload (°C).
+    fn steady_temp_c(&self, w: &Workload) -> f64;
+}
+
+/// Host-offload penalty shared by both baselines (§5.3: "HAIMA and
+/// TransPIM rely on an additional host for softmax, which prevents online
+/// execution and results in repeated data exchange with the host").
+#[derive(Debug, Clone, Copy)]
+pub struct HostOffload {
+    /// Interposer bandwidth device↔host (B/s).
+    pub interposer_bps: f64,
+    /// Host vector throughput (FLOP/s).
+    pub host_flops: f64,
+    /// Fixed round-trip stall per offloaded kernel invocation (s).
+    pub stall_s: f64,
+}
+
+impl HostOffload {
+    /// Time to offload a kernel: ship operands over, compute, ship back.
+    pub fn offload_time_s(&self, in_bytes: f64, out_bytes: f64, flops: f64) -> f64 {
+        self.stall_s + (in_bytes + out_bytes) / self.interposer_bps + flops / self.host_flops
+    }
+}

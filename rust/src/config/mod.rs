@@ -1,0 +1,278 @@
+//! Configuration system: Table-2 defaults (`specs`), a runtime-overridable
+//! [`Config`] struct, and an INI-style config-file parser so experiments
+//! can be re-parameterized without recompiling (`hetrax --config sys.cfg`).
+//!
+//! File format (subset of TOML):
+//!
+//! ```text
+//! [system]
+//! sm_count = 21
+//! mc_count = 6
+//! ambient_c = 45.0
+//!
+//! [noc]
+//! fifo_depth = 4
+//! ```
+//!
+//! Unknown keys are an error (catches typos in experiment sweeps).
+
+pub mod specs;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Runtime-tunable system configuration. Field defaults mirror `specs`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    // [system]
+    pub sm_count: usize,
+    pub mc_count: usize,
+    pub reram_count: usize,
+    pub sm_mc_tiers: usize,
+    pub sm_mc_grid: usize,
+    pub reram_grid: usize,
+    pub ambient_c: f64,
+    // [noc]
+    pub fifo_depth: usize,
+    pub flit_bits: usize,
+    pub noc_clock_hz: f64,
+    pub max_ports: usize,
+    // [thermal]
+    pub r_tier: f64,
+    pub r_base: f64,
+    pub lateral_coupling: f64,
+    // [reram]
+    pub reram_clock_hz: f64,
+    pub tile_power_w: f64,
+    pub reram_tile_gops: f64,
+    pub drift_level_per_k: f64,
+    pub prog_sigma_level: f64,
+    // [dram]
+    pub mc_dram_bw_bps: f64,
+    // [optim]
+    pub moo_epochs: usize,
+    pub moo_perturbations: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        use specs::*;
+        Config {
+            sm_count: NUM_SM,
+            mc_count: NUM_MC,
+            reram_count: NUM_RERAM,
+            sm_mc_tiers: SM_MC_TIERS,
+            sm_mc_grid: SM_MC_GRID,
+            reram_grid: RERAM_GRID,
+            ambient_c: AMBIENT_C,
+            fifo_depth: NOC_FIFO_DEPTH,
+            flit_bits: NOC_FLIT_BITS,
+            noc_clock_hz: NOC_CLOCK_HZ,
+            max_ports: NOC_MAX_PORTS,
+            r_tier: R_TIER_K_PER_W,
+            r_base: R_BASE_K_PER_W,
+            lateral_coupling: LATERAL_COUPLING,
+            reram_clock_hz: RERAM_CLOCK_HZ,
+            tile_power_w: RERAM_TILE_POWER_W,
+            reram_tile_gops: RERAM_TILE_GOPS_EFF,
+            drift_level_per_k: RERAM_DRIFT_LEVEL_PER_K,
+            prog_sigma_level: RERAM_PROG_SIGMA_LEVEL,
+            mc_dram_bw_bps: MC_DRAM_BW_BPS,
+            // §5.2: "MOO-STAGE algorithm is run for 50 epochs with 10
+            // perturbations from the same starting point".
+            moo_epochs: 50,
+            moo_perturbations: 10,
+            seed: 0xC0DE,
+        }
+    }
+}
+
+impl Config {
+    /// Parse an INI-style file and apply overrides on top of defaults.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config> {
+        let text = fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_str_overrides(&text)
+    }
+
+    pub fn from_str_overrides(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        for (section, key, value) in parse_ini(text)? {
+            cfg.apply(&section, &key, &value)
+                .with_context(|| format!("at [{section}] {key} = {value}"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply(&mut self, section: &str, key: &str, value: &str) -> Result<()> {
+        macro_rules! set {
+            ($field:ident, usize) => {
+                self.$field = value.parse::<usize>().context("expected integer")?
+            };
+            ($field:ident, f64) => {
+                self.$field = value.parse::<f64>().context("expected number")?
+            };
+            ($field:ident, u64) => {
+                self.$field = value.parse::<u64>().context("expected integer")?
+            };
+        }
+        match (section, key) {
+            ("system", "sm_count") => set!(sm_count, usize),
+            ("system", "mc_count") => set!(mc_count, usize),
+            ("system", "reram_count") => set!(reram_count, usize),
+            ("system", "sm_mc_tiers") => set!(sm_mc_tiers, usize),
+            ("system", "sm_mc_grid") => set!(sm_mc_grid, usize),
+            ("system", "reram_grid") => set!(reram_grid, usize),
+            ("system", "ambient_c") => set!(ambient_c, f64),
+            ("noc", "fifo_depth") => set!(fifo_depth, usize),
+            ("noc", "flit_bits") => set!(flit_bits, usize),
+            ("noc", "clock_hz") => set!(noc_clock_hz, f64),
+            ("noc", "max_ports") => set!(max_ports, usize),
+            ("thermal", "r_tier") => set!(r_tier, f64),
+            ("thermal", "r_base") => set!(r_base, f64),
+            ("thermal", "lateral_coupling") => set!(lateral_coupling, f64),
+            ("reram", "clock_hz") => set!(reram_clock_hz, f64),
+            ("reram", "tile_power_w") => set!(tile_power_w, f64),
+            ("reram", "tile_gops") => set!(reram_tile_gops, f64),
+            ("reram", "drift_level_per_k") => set!(drift_level_per_k, f64),
+            ("reram", "prog_sigma_level") => set!(prog_sigma_level, f64),
+            ("dram", "mc_bw_bps") => set!(mc_dram_bw_bps, f64),
+            ("optim", "epochs") => set!(moo_epochs, usize),
+            ("optim", "perturbations") => set!(moo_perturbations, usize),
+            ("optim", "seed") => set!(seed, u64),
+            _ => bail!("unknown config key [{section}] {key}"),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let sm_mc_sites = self.sm_mc_tiers * self.sm_mc_grid * self.sm_mc_grid;
+        if self.sm_count + self.mc_count != sm_mc_sites {
+            bail!(
+                "sm_count + mc_count = {} must fill the {} SM-MC sites",
+                self.sm_count + self.mc_count,
+                sm_mc_sites
+            );
+        }
+        if self.reram_count != self.reram_grid * self.reram_grid {
+            bail!("reram_count must fill the ReRAM grid");
+        }
+        if self.mc_count == 0 {
+            bail!("need at least one MC (DRAM interface)");
+        }
+        if self.fifo_depth == 0 || self.flit_bits == 0 {
+            bail!("NoC parameters must be positive");
+        }
+        if self.reram_tile_gops <= 0.0 {
+            bail!("reram tile throughput must be positive");
+        }
+        Ok(())
+    }
+
+    /// Total number of cores across all tiers.
+    pub fn total_cores(&self) -> usize {
+        self.sm_count + self.mc_count + self.reram_count
+    }
+}
+
+/// Parse INI text into (section, key, value) triples. `#` and `;` start
+/// comments; blank lines ignored; keys require a section header.
+fn parse_ini(text: &str) -> Result<Vec<(String, String, String)>> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    let mut seen: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find(['#', ';']) {
+            Some(i) => &raw[..i],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name.strip_suffix(']').with_context(|| {
+                format!("line {}: unterminated section header", lineno + 1)
+            })?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        if section.is_empty() {
+            bail!("line {}: key outside any [section]", lineno + 1);
+        }
+        let key = k.trim().to_string();
+        if let Some(prev) = seen.insert((section.clone(), key.clone()), lineno) {
+            bail!(
+                "line {}: duplicate key {key} (first at line {})",
+                lineno + 1,
+                prev + 1
+            );
+        }
+        out.push((section.clone(), key, v.trim().to_string()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        Config::default().validate().unwrap();
+        assert_eq!(Config::default().total_cores(), 43);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let cfg = Config::from_str_overrides(
+            "[system]\nambient_c = 25.0\n\n[noc]\nfifo_depth = 8 # deeper\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.ambient_c, 25.0);
+        assert_eq!(cfg.fifo_depth, 8);
+        assert_eq!(cfg.sm_count, Config::default().sm_count);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(Config::from_str_overrides("[system]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn key_outside_section_rejected() {
+        assert!(Config::from_str_overrides("x = 1\n").is_err());
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(Config::from_str_overrides("[noc]\nfifo_depth=4\nfifo_depth=8\n").is_err());
+    }
+
+    #[test]
+    fn invalid_counts_rejected() {
+        // 20 SMs + 6 MCs ≠ 27 sites.
+        assert!(Config::from_str_overrides("[system]\nsm_count = 20\n").is_err());
+        // But a consistent override passes.
+        let cfg =
+            Config::from_str_overrides("[system]\nsm_count = 20\nmc_count = 7\n").unwrap();
+        assert_eq!(cfg.total_cores(), 43);
+    }
+
+    #[test]
+    fn comments_and_whitespace() {
+        let cfg = Config::from_str_overrides(
+            "; leading comment\n\n[optim]\n  seed =   99   # trailing\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 99);
+    }
+}

@@ -1,0 +1,155 @@
+//! Dynamic batcher: groups compatible requests (same model/variant/seq
+//! bucket) arriving within a time window, up to a max batch size — the
+//! standard continuous-batching front end, specialized to the two-tier
+//! pipeline behind it.
+
+use crate::coordinator::request::Request;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    /// Maximum time a request may wait for batch-mates (s).
+    pub max_wait_s: f64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait_s: 2e-3 }
+    }
+}
+
+/// A formed batch (requests share model, variant and padded seq).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    /// When the batch was sealed (simulated clock).
+    pub ready_s: f64,
+}
+
+impl Batch {
+    pub fn seq(&self) -> usize {
+        self.requests.iter().map(|r| r.seq).max().unwrap_or(0)
+    }
+}
+
+/// Greedy windowed batcher over an arrival-ordered request list.
+#[derive(Debug)]
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher { cfg }
+    }
+
+    /// Partition requests (sorted by arrival) into batches. Compatible =
+    /// same (model, variant); sequences pad to the batch max.
+    pub fn form_batches(&self, mut requests: Vec<Request>) -> Vec<Batch> {
+        requests.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let mut batches: Vec<Batch> = Vec::new();
+        let mut open: Vec<Request> = Vec::new();
+
+        let seal = |open: &mut Vec<Request>, batches: &mut Vec<Batch>| {
+            if open.is_empty() {
+                return;
+            }
+            let ready = open
+                .iter()
+                .map(|r| r.arrival_s)
+                .fold(f64::NEG_INFINITY, f64::max);
+            batches.push(Batch { requests: std::mem::take(open), ready_s: ready });
+        };
+
+        for r in requests {
+            let compatible = open
+                .first()
+                .map(|f| f.model == r.model && f.variant == r.variant)
+                .unwrap_or(true);
+            let window_ok = open
+                .first()
+                .map(|f| r.arrival_s - f.arrival_s <= self.cfg.max_wait_s)
+                .unwrap_or(true);
+            if !compatible || !window_ok || open.len() >= self.cfg.max_batch {
+                seal(&mut open, &mut batches);
+            }
+            open.push(r);
+        }
+        seal(&mut open, &mut batches);
+        batches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelId;
+
+    fn req(id: u64, model: ModelId, arrival: f64) -> Request {
+        Request::synthetic(id, model, 128, arrival)
+    }
+
+    #[test]
+    fn batches_compatible_requests() {
+        let b = Batcher::new(BatcherConfig { max_batch: 4, max_wait_s: 1.0 });
+        let batches = b.form_batches(vec![
+            req(0, ModelId::BertTiny, 0.0),
+            req(1, ModelId::BertTiny, 0.1),
+            req(2, ModelId::BertTiny, 0.2),
+        ]);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 3);
+        assert_eq!(batches[0].ready_s, 0.2);
+    }
+
+    #[test]
+    fn splits_on_model_change() {
+        let b = Batcher::new(BatcherConfig { max_batch: 8, max_wait_s: 1.0 });
+        let batches = b.form_batches(vec![
+            req(0, ModelId::BertTiny, 0.0),
+            req(1, ModelId::BertBase, 0.01),
+            req(2, ModelId::BertTiny, 0.02),
+        ]);
+        assert_eq!(batches.len(), 3);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let b = Batcher::new(BatcherConfig { max_batch: 2, max_wait_s: 10.0 });
+        let batches =
+            b.form_batches((0..5).map(|i| req(i, ModelId::BertTiny, i as f64 * 0.001)).collect());
+        assert_eq!(batches.len(), 3);
+        assert!(batches.iter().all(|b| b.requests.len() <= 2));
+    }
+
+    #[test]
+    fn respects_wait_window() {
+        let b = Batcher::new(BatcherConfig { max_batch: 8, max_wait_s: 0.05 });
+        let batches = b.form_batches(vec![
+            req(0, ModelId::BertTiny, 0.0),
+            req(1, ModelId::BertTiny, 0.2), // too late for batch 0
+        ]);
+        assert_eq!(batches.len(), 2);
+    }
+
+    #[test]
+    fn out_of_order_arrivals_sorted() {
+        let b = Batcher::new(BatcherConfig::default());
+        let batches = b.form_batches(vec![
+            req(1, ModelId::BertTiny, 0.001),
+            req(0, ModelId::BertTiny, 0.0),
+        ]);
+        assert_eq!(batches[0].requests[0].id, 0);
+    }
+
+    #[test]
+    fn padded_seq_is_batch_max() {
+        let b = Batcher::new(BatcherConfig::default());
+        let mut r1 = req(0, ModelId::BertTiny, 0.0);
+        r1.seq = 60;
+        let mut r2 = req(1, ModelId::BertTiny, 0.0005);
+        r2.seq = 128;
+        let batches = b.form_batches(vec![r1, r2]);
+        assert_eq!(batches[0].seq(), 128);
+    }
+}

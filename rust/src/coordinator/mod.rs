@@ -1,0 +1,24 @@
+//! S10 — Inference coordinator: the Layer-3 serving loop.
+//!
+//! The paper's architectural contribution is tier-level heterogeneity:
+//! MHA runs on the SM-MC tiers while the FF of the *previous* request (or
+//! block, for parallel attention) runs on the ReRAM tier. The coordinator
+//! exploits exactly that: a dynamic batcher groups arriving requests, and
+//! the engine schedules each block's MHA/FF phases onto the two tier
+//! resources with simulated time — so independent requests pipeline
+//! across tiers the way the §4.2 dataflow intends.
+//!
+//! Numerics are real when an AOT artifact is attached: the engine feeds
+//! activations through the PJRT executables (bert-tiny encoder blocks)
+//! while the timing model advances the simulated clock. Python is never
+//! involved at request time.
+
+pub mod batcher;
+pub mod engine;
+pub mod request;
+pub mod server;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use engine::{Engine, ServeReport};
+pub use request::{Request, Response};
+pub use server::Server;

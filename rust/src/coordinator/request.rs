@@ -1,0 +1,56 @@
+//! Request/response types for the serving path.
+
+use crate::model::{ArchVariant, ModelId};
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub model: ModelId,
+    pub variant: ArchVariant,
+    pub seq: usize,
+    /// Arrival time on the simulated clock (seconds).
+    pub arrival_s: f64,
+    /// Optional embedded input (seq × d_model f32) for real execution.
+    pub input: Option<Vec<f32>>,
+}
+
+impl Request {
+    pub fn synthetic(id: u64, model: ModelId, seq: usize, arrival_s: f64) -> Request {
+        Request {
+            id,
+            model,
+            variant: model.default_variant(),
+            seq,
+            arrival_s,
+            input: None,
+        }
+    }
+}
+
+/// Completion record.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Simulated completion time (s).
+    pub finish_s: f64,
+    /// Simulated end-to-end latency including queueing (s).
+    pub latency_s: f64,
+    /// Energy attributed to this request (J).
+    pub energy_j: f64,
+    /// Output activations when real numerics ran.
+    pub output: Option<Vec<f32>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_request_defaults() {
+        let r = Request::synthetic(7, ModelId::BartBase, 128, 0.5);
+        assert_eq!(r.variant, ArchVariant::EncoderDecoder);
+        assert!(r.input.is_none());
+        assert_eq!(r.id, 7);
+    }
+}

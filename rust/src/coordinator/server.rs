@@ -1,0 +1,123 @@
+//! Thread-based serving front end: a request queue fed from any thread,
+//! a worker that forms batches and runs the engine, and a response
+//! channel. (tokio is unavailable offline; std::thread + mpsc gives the
+//! same shape for this workload.)
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::config::Config;
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::request::{Request, Response};
+
+/// Commands accepted by the server loop.
+enum Command {
+    Submit(Request),
+    Flush,
+    Shutdown,
+}
+
+/// Handle to a running server thread.
+pub struct Server {
+    tx: mpsc::Sender<Command>,
+    rx_resp: mpsc::Receiver<Response>,
+    worker: Option<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the worker. Requests accumulate until `flush()` (or enough
+    /// arrive to fill a batch window) — the worker then schedules them
+    /// through the engine and streams responses back.
+    pub fn spawn(cfg: Config, batcher_cfg: BatcherConfig) -> Server {
+        let (tx, rx) = mpsc::channel::<Command>();
+        let (tx_resp, rx_resp) = mpsc::channel::<Response>();
+        let worker = thread::spawn(move || {
+            let engine = Engine::new(&cfg);
+            let batcher = Batcher::new(batcher_cfg);
+            let mut pending: Vec<Request> = Vec::new();
+            loop {
+                match rx.recv() {
+                    Ok(Command::Submit(r)) => {
+                        pending.push(r);
+                        if pending.len() >= batcher_cfg.max_batch * 4 {
+                            drain(&engine, &batcher, &mut pending, &tx_resp);
+                        }
+                    }
+                    Ok(Command::Flush) => drain(&engine, &batcher, &mut pending, &tx_resp),
+                    Ok(Command::Shutdown) | Err(_) => {
+                        drain(&engine, &batcher, &mut pending, &tx_resp);
+                        break;
+                    }
+                }
+            }
+        });
+        Server { tx, rx_resp, worker: Some(worker) }
+    }
+
+    pub fn submit(&self, r: Request) {
+        let _ = self.tx.send(Command::Submit(r));
+    }
+
+    pub fn flush(&self) {
+        let _ = self.tx.send(Command::Flush);
+    }
+
+    /// Collect `n` responses (blocking).
+    pub fn collect(&self, n: usize) -> Vec<Response> {
+        (0..n).filter_map(|_| self.rx_resp.recv().ok()).collect()
+    }
+}
+
+fn drain(
+    engine: &Engine<'_>,
+    batcher: &Batcher,
+    pending: &mut Vec<Request>,
+    tx: &mpsc::Sender<Response>,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let batches = batcher.form_batches(std::mem::take(pending));
+    let report = engine.serve(&batches);
+    for resp in report.responses {
+        let _ = tx.send(resp);
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelId;
+
+    #[test]
+    fn server_round_trip() {
+        let server = Server::spawn(Config::default(), BatcherConfig::default());
+        for i in 0..5 {
+            server.submit(Request::synthetic(i, ModelId::BertTiny, 128, i as f64 * 1e-4));
+        }
+        server.flush();
+        let responses = server.collect(5);
+        assert_eq!(responses.len(), 5);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        assert!(responses.iter().all(|r| r.latency_s > 0.0));
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let server = Server::spawn(Config::default(), BatcherConfig::default());
+        server.submit(Request::synthetic(9, ModelId::BertTiny, 64, 0.0));
+        drop(server); // must not hang; worker drains and exits
+    }
+}

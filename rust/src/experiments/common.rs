@@ -1,0 +1,140 @@
+//! Shared experiment plumbing.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::arch::Placement;
+use crate::config::Config;
+use crate::model::{ArchVariant, ModelId, Workload};
+use crate::optim::{Evaluator, MooStage, ObjectiveSet};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Write a result document to disk (creating parent dirs).
+pub fn write_json(path: impl AsRef<Path>, doc: &Json) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    std::fs::write(path, doc.pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// The evaluation workload used for the DSE figures (BERT-Large
+/// encoder-only, n = 1024 — the §5.3 running example).
+pub fn dse_workload() -> Workload {
+    Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, 1024)
+}
+
+/// DSE effort knob: the benches use a reduced budget, the CLI the paper's
+/// full 50 × 10.
+#[derive(Debug, Clone, Copy)]
+pub struct Effort {
+    pub epochs: usize,
+    pub perturbations: usize,
+    pub steps_per_epoch: usize,
+}
+
+impl Effort {
+    /// §5.2: 50 epochs, 10 perturbations.
+    pub fn paper() -> Effort {
+        Effort { epochs: 50, perturbations: 10, steps_per_epoch: 10 }
+    }
+
+    pub fn quick() -> Effort {
+        Effort { epochs: 8, perturbations: 6, steps_per_epoch: 5 }
+    }
+}
+
+/// Run MOO-STAGE under an objective set; return the full result.
+pub fn optimize_front(
+    cfg: &Config,
+    workload: &Workload,
+    set: ObjectiveSet,
+    effort: Effort,
+    seed: u64,
+) -> crate::optim::DseResult {
+    let ev = Evaluator::new(cfg, workload);
+    let mut stage = MooStage::new(cfg, &ev, set);
+    stage.epochs = effort.epochs;
+    stage.perturbations = effort.perturbations;
+    stage.steps_per_epoch = effort.steps_per_epoch;
+    let mut rng = Rng::new(seed);
+    stage.run(&mut rng)
+}
+
+/// Run MOO-STAGE and return the balanced-scalarization best design
+/// (the §4.4 "best design" after cycle-accurate validation).
+pub fn optimize(
+    cfg: &Config,
+    workload: &Workload,
+    set: ObjectiveSet,
+    effort: Effort,
+    seed: u64,
+) -> (Placement, crate::optim::Objectives, usize) {
+    let result = optimize_front(cfg, workload, set, effort, seed);
+    let best = result
+        .archive
+        .best_scalarized()
+        .expect("non-empty archive")
+        .clone();
+    (best.placement, best.objectives, result.evaluations)
+}
+
+/// Serialize a placement for the figure output: tier order + per-tier
+/// core map.
+pub fn placement_json(cfg: &Config, p: &Placement) -> Json {
+    let mut doc = Json::obj();
+    let tiers: Vec<String> = p
+        .tier_order
+        .iter()
+        .map(|t| match t {
+            crate::arch::TierKind::ReRam => "ReRAM".to_string(),
+            crate::arch::TierKind::SmMc(i) => format!("SM-MC-{i}"),
+        })
+        .collect();
+    doc.set("tier_order_sink_first", tiers);
+    doc.set("reram_tier", p.reram_tier());
+    let mut sites = Vec::new();
+    for id in 0..cfg.total_cores() {
+        let s = p.site_of(cfg, id);
+        let mut o = Json::obj();
+        o.set("core", id)
+            .set("kind", crate::arch::cores::kind_of(cfg, id).name())
+            .set("tier", s.tier)
+            .set("x", s.x)
+            .set("y", s.y);
+        sites.push(o);
+    }
+    doc.set("sites", Json::Arr(sites));
+    doc.set("planar_links", p.planar_links.len());
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_json_well_formed() {
+        let cfg = Config::default();
+        let p = Placement::mesh_baseline(&cfg);
+        let doc = placement_json(&cfg, &p);
+        assert_eq!(doc.at(&["sites"]).unwrap().as_arr().unwrap().len(), 43);
+        assert!(doc.at(&["reram_tier"]).unwrap().as_usize().unwrap() < 4);
+    }
+
+    #[test]
+    fn quick_optimize_runs() {
+        let cfg = Config::default();
+        let w = dse_workload();
+        let effort = Effort { epochs: 2, perturbations: 3, steps_per_epoch: 2 };
+        let (p, obj, evals) = optimize(&cfg, &w, ObjectiveSet::pt(), effort, 1);
+        assert!(obj.connected);
+        assert!(evals > 5);
+        assert!(p.reram_tier() < 4);
+    }
+}

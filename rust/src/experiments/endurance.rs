@@ -1,0 +1,69 @@
+//! §5.1 — the ReRAM write-endurance analysis that motivates the
+//! heterogeneous split: running MHA on ReRAM needs ~5·10⁴ rewrites per
+//! inference (BERT-Large, n = 1024, one head per core) and races toward
+//! the 10⁶–10⁹ endurance bound; FF needs a fixed, sequence-independent
+//! number of updates.
+
+use anyhow::Result;
+
+use crate::config::specs;
+use crate::experiments::common;
+use crate::model::ModelId;
+use crate::reram::endurance;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+pub fn run() -> Json {
+    let mut doc = Json::obj();
+    let mut table = Table::new(
+        "§5.1 — ReRAM rewrites per inference (MHA-on-ReRAM vs FF-on-ReRAM)",
+        &["MHA writes", "FF writes", "inferences to 1e6 (MHA)", "inferences to 1e6 (FF)"],
+    );
+    let mut rows = Vec::new();
+    for model in ModelId::ALL {
+        let dims = model.dims();
+        for seq in [512usize, 1024, 2056] {
+            let mha = endurance::mha_row_writes_per_inference(&dims, seq);
+            let ff = endurance::ff_row_writes_per_inference(&dims);
+            let t = endurance::EnduranceTracker::new();
+            let mha_life = t.inferences_to_failure(mha, specs::RERAM_ENDURANCE_MIN);
+            let ff_life = t.inferences_to_failure(ff, specs::RERAM_ENDURANCE_MIN);
+            table.row(
+                &format!("{} n={seq}", dims.name),
+                &[
+                    format!("{mha:.2e}"),
+                    format!("{ff:.2e}"),
+                    format!("{mha_life:.1}"),
+                    format!("{ff_life:.1}"),
+                ],
+            );
+            let mut o = Json::obj();
+            o.set("model", dims.name)
+                .set("seq", seq)
+                .set("mha_writes", mha)
+                .set("ff_writes", ff)
+                .set("mha_inferences_to_1e6", mha_life)
+                .set("ff_inferences_to_1e6", ff_life);
+            rows.push(o);
+        }
+    }
+    table.print();
+    doc.set("rows", Json::Arr(rows));
+    doc.set("paper_reference", "~5e4 rewrites for BERT-Large n=1024; endurance 1e6-1e9");
+    doc
+}
+
+pub fn run_and_write(out: &str) -> Result<()> {
+    common::write_json(out, &run())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn document_contains_all_model_seq_pairs() {
+        let doc = run();
+        assert_eq!(doc.at(&["rows"]).unwrap().as_arr().unwrap().len(), 15);
+    }
+}

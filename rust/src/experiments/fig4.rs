@@ -1,0 +1,197 @@
+//! Fig. 4 — model accuracy with/without ReRAM noise as an optimization
+//! objective (SST-2-syn and QNLI-syn; DESIGN.md documents the GLUE
+//! substitution).
+//!
+//! Three scenarios per task:
+//! * **Ideal** — no thermal perturbation (quantization only).
+//! * **HeTraX-PT** — FF weights perturbed at the PT placement's ReRAM
+//!   tier temperature (~78 °C): measurable accuracy loss (paper ≤ 3.3%).
+//! * **HeTraX-PTN** — perturbed at ~57 °C: no loss (shifts stay inside
+//!   the quantization boundaries).
+//!
+//! Inference is REAL: classifier weights load from the HTX archive, FF
+//! weights are perturbed by `reram::NoiseModel`, and logits come from the
+//! AOT-compiled PJRT executable — the same three-layer path production
+//! would use.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::Config;
+use crate::experiments::common;
+use crate::reram::NoiseModel;
+use crate::runtime::Runtime;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::tensor_io::Archive;
+
+pub const TASKS: [&str; 2] = ["sst2-syn", "qnli-syn"];
+
+/// One scenario's accuracy on one task.
+#[derive(Debug, Clone)]
+pub struct Accuracy {
+    pub task: String,
+    pub scenario: String,
+    pub temp_c: Option<f64>,
+    pub accuracy: f64,
+}
+
+/// Number of independent conductance-noise draws averaged per scenario
+/// (each draw is one "deployment" of the weights to the crossbars).
+pub const NOISE_DRAWS: u64 = 4;
+
+/// Classifier forward through the PJRT artifact; weights optionally
+/// perturbed at `temp_c`, averaged over NOISE_DRAWS deployments.
+pub fn eval_task(
+    runtime: &mut Runtime,
+    artifacts_dir: &str,
+    cfg: &Config,
+    task: &str,
+    temp_c: Option<f64>,
+    seed: u64,
+) -> Result<f64> {
+    if temp_c.is_some() {
+        let mut acc = 0.0;
+        for draw in 0..NOISE_DRAWS {
+            acc += eval_task_once(runtime, artifacts_dir, cfg, task, temp_c,
+                                  seed ^ (0x9E37 + draw * 0x79B9))?;
+        }
+        return Ok(acc / NOISE_DRAWS as f64);
+    }
+    eval_task_once(runtime, artifacts_dir, cfg, task, temp_c, seed)
+}
+
+fn eval_task_once(
+    runtime: &mut Runtime,
+    artifacts_dir: &str,
+    cfg: &Config,
+    task: &str,
+    temp_c: Option<f64>,
+    seed: u64,
+) -> Result<f64> {
+    // Load weights + eval data.
+    let weights = Archive::load(format!("{artifacts_dir}/classifier_{task}.htx"))?;
+    let eval = Archive::load(format!("{artifacts_dir}/eval_{task}.htx"))?;
+    let x = eval.get("x").ok_or_else(|| anyhow!("missing eval x"))?;
+    let y = eval.get("y").ok_or_else(|| anyhow!("missing eval y"))?.as_i32()?;
+    let x_data = x.as_f32()?;
+    let (n, seq, d) = (x.dims[0], x.dims[1], x.dims[2]);
+
+    // Manifest gives the artifact's parameter order and batch size.
+    let param_names: Vec<String> = runtime
+        .manifest()
+        .at(&["classifier", "param_names"])
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| anyhow!("manifest missing classifier.param_names"))?
+        .iter()
+        .map(|s| s.as_str().unwrap_or("?").to_string())
+        .collect();
+    let batch = runtime
+        .manifest()
+        .at(&["classifier", "batch"])
+        .and_then(|j| j.as_usize())
+        .ok_or_else(|| anyhow!("manifest missing classifier.batch"))?;
+
+    // Assemble parameter buffers in artifact order, perturbing FF weights
+    // (wf1/wf2 live on the ReRAM tier) at the scenario temperature.
+    let mut rng = Rng::new(seed);
+    let mut params: Vec<Vec<f32>> = Vec::with_capacity(param_names.len());
+    for name in &param_names {
+        let t = weights
+            .get(name)
+            .ok_or_else(|| anyhow!("weights archive missing {name}"))?;
+        let mut buf = t.as_f32()?;
+        if let Some(temp) = temp_c {
+            if name.contains("_wf1") || name.contains("_wf2") {
+                let noise = NoiseModel::new(cfg, temp);
+                buf = noise.perturb_weights(&buf, &mut rng);
+            }
+        }
+        params.push(buf);
+    }
+
+    let artifact = runtime.load("classifier")?;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let ex_len = seq * d;
+    let mut batch_buf = vec![0f32; batch * ex_len];
+    let mut i = 0usize;
+    while i < n {
+        let this_batch = (n - i).min(batch);
+        batch_buf[..this_batch * ex_len]
+            .copy_from_slice(&x_data[i * ex_len..(i + this_batch) * ex_len]);
+        // Pad the tail batch with zeros (predictions ignored).
+        for v in batch_buf[this_batch * ex_len..].iter_mut() {
+            *v = 0.0;
+        }
+        let mut inputs = Vec::with_capacity(1 + params.len());
+        inputs.push(batch_buf.clone());
+        inputs.extend(params.iter().cloned());
+        let outputs = artifact.run_f32(&inputs).context("classifier execution")?;
+        let logits = &outputs[0]; // (batch, 2)
+        for b in 0..this_batch {
+            let pred = if logits[b * 2] >= logits[b * 2 + 1] { 0 } else { 1 };
+            if pred == y[i + b] {
+                correct += 1;
+            }
+            total += 1;
+        }
+        i += this_batch;
+    }
+    Ok(correct as f64 / total as f64)
+}
+
+/// Full Fig. 4: both tasks × three scenarios.
+pub fn run(
+    cfg: &Config,
+    artifacts_dir: &str,
+    pt_temp_c: f64,
+    ptn_temp_c: f64,
+    seed: u64,
+) -> Result<(Vec<Accuracy>, Json)> {
+    let mut runtime = Runtime::open(artifacts_dir)?;
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Fig. 4 — accuracy under ReRAM thermal noise",
+        &["Ideal", "HeTraX-PT", "HeTraX-PTN"],
+    );
+    let mut doc = Json::obj();
+    for task in TASKS {
+        let ideal = eval_task(&mut runtime, artifacts_dir, cfg, task, None, seed)?;
+        let pt = eval_task(&mut runtime, artifacts_dir, cfg, task, Some(pt_temp_c), seed)?;
+        let ptn = eval_task(&mut runtime, artifacts_dir, cfg, task, Some(ptn_temp_c), seed)?;
+        table.row(task, &[
+            format!("{:.4}", ideal),
+            format!("{:.4}", pt),
+            format!("{:.4}", ptn),
+        ]);
+        let mut t = Json::obj();
+        t.set("ideal", ideal).set("pt", pt).set("ptn", ptn);
+        t.set("pt_temp_c", pt_temp_c).set("ptn_temp_c", ptn_temp_c);
+        doc.set(task, t);
+        rows.push(Accuracy { task: task.into(), scenario: "ideal".into(), temp_c: None, accuracy: ideal });
+        rows.push(Accuracy { task: task.into(), scenario: "pt".into(), temp_c: Some(pt_temp_c), accuracy: pt });
+        rows.push(Accuracy { task: task.into(), scenario: "ptn".into(), temp_c: Some(ptn_temp_c), accuracy: ptn });
+    }
+    table.print();
+    doc.set(
+        "paper_reference",
+        "PTN: no accuracy loss (57C); PT: up to 3.3% loss (78C ReRAM tier)",
+    );
+    Ok((rows, doc))
+}
+
+pub fn run_and_write(
+    cfg: &Config,
+    artifacts_dir: &str,
+    pt_temp_c: f64,
+    ptn_temp_c: f64,
+    seed: u64,
+    out: &str,
+) -> Result<()> {
+    let (_, doc) = run(cfg, artifacts_dir, pt_temp_c, ptn_temp_c, seed)?;
+    common::write_json(out, &doc)
+}
+
+// Integration-level tests (need built artifacts) live in
+// rust/tests/integration.rs.

@@ -1,0 +1,148 @@
+//! Fig. 6(c) — normalized EDP + temperature across real models × sequence
+//! lengths.
+//!
+//! Paper result: HeTraX's EDP advantage *grows* with model size and
+//! sequence length (scalability); at BERT-Large n = 2056 the gap vs HAIMA
+//! is an order of magnitude (14.5×).
+
+use anyhow::Result;
+
+use crate::baselines::haima::Haima;
+use crate::baselines::transpim::TransPim;
+use crate::baselines::Accelerator;
+use crate::config::Config;
+use crate::experiments::common;
+use crate::model::{ModelId, Workload};
+use crate::perf::PerfEstimator;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+pub const SEQ_LENGTHS: [usize; 4] = [128, 512, 1024, 2056];
+
+#[derive(Debug, Clone)]
+pub struct EdpRow {
+    pub model: &'static str,
+    pub seq: usize,
+    pub hetrax_edp: f64,
+    pub haima_edp: f64,
+    pub transpim_edp: f64,
+}
+
+pub struct Fig6cOutcome {
+    pub rows: Vec<EdpRow>,
+    pub doc: Json,
+}
+
+pub fn run(cfg: &Config) -> Fig6cOutcome {
+    let haima = Haima::default();
+    let transpim = TransPim::default();
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Fig. 6c — normalized EDP (baseline / HeTraX)",
+        &["HAIMA", "TransPIM"],
+    );
+    for model in ModelId::ALL {
+        for seq in SEQ_LENGTHS {
+            let w = Workload::build(model, model.default_variant(), seq);
+            let r = PerfEstimator::new(cfg).estimate(&w);
+            let hetrax_edp = r.edp();
+            let row = EdpRow {
+                model: w.dims.name,
+                seq,
+                hetrax_edp,
+                haima_edp: haima.infer_edp(&w),
+                transpim_edp: transpim.infer_edp(&w),
+            };
+            table.row_f(
+                &format!("{} n={seq}", w.dims.name),
+                &[row.haima_edp / hetrax_edp, row.transpim_edp / hetrax_edp],
+            );
+            rows.push(row);
+        }
+    }
+    table.print();
+
+    let mut doc = Json::obj();
+    let mut series = Vec::new();
+    for r in &rows {
+        let mut o = Json::obj();
+        o.set("model", r.model)
+            .set("seq", r.seq)
+            .set("hetrax_edp", r.hetrax_edp)
+            .set("haima_edp_norm", r.haima_edp / r.hetrax_edp)
+            .set("transpim_edp_norm", r.transpim_edp / r.hetrax_edp);
+        series.push(o);
+    }
+    doc.set("series", Json::Arr(series));
+    doc.set(
+        "paper_reference",
+        "EDP gains grow with model/seq; 14.5x vs HAIMA at BERT-Large n=2056",
+    );
+    Fig6cOutcome { rows, doc }
+}
+
+pub fn run_and_write(cfg: &Config, out: &str) -> Result<()> {
+    let outcome = run(cfg);
+    common::write_json(out, &outcome.doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome() -> Fig6cOutcome {
+        run(&Config::default())
+    }
+
+    #[test]
+    fn hetrax_edp_always_best() {
+        for r in outcome().rows {
+            assert!(r.haima_edp > r.hetrax_edp, "{} n={}", r.model, r.seq);
+            assert!(r.transpim_edp > r.hetrax_edp, "{} n={}", r.model, r.seq);
+        }
+    }
+
+    #[test]
+    fn headline_gap_14_5x_at_bert_large_2056() {
+        let o = outcome();
+        let r = o
+            .rows
+            .iter()
+            .find(|r| r.model == "bert-large" && r.seq == 2056)
+            .unwrap();
+        let gap = r.haima_edp / r.hetrax_edp;
+        assert!(
+            (9.0..20.0).contains(&gap),
+            "HAIMA EDP gap {gap} should be order-of-magnitude (paper: 14.5x)"
+        );
+    }
+
+    #[test]
+    fn gap_grows_with_sequence_length() {
+        let o = outcome();
+        let gap = |seq: usize| {
+            let r = o
+                .rows
+                .iter()
+                .find(|r| r.model == "bert-large" && r.seq == seq)
+                .unwrap();
+            r.haima_edp / r.hetrax_edp
+        };
+        assert!(gap(2056) > gap(512), "{} vs {}", gap(2056), gap(512));
+    }
+
+    #[test]
+    fn gap_grows_with_model_size() {
+        let o = outcome();
+        let gap = |model: &str| {
+            let r = o.rows.iter().find(|r| r.model == model && r.seq == 1024).unwrap();
+            r.haima_edp / r.hetrax_edp
+        };
+        assert!(
+            gap("bert-large") > gap("bert-tiny"),
+            "{} vs {}",
+            gap("bert-large"),
+            gap("bert-tiny")
+        );
+    }
+}

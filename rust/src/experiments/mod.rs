@@ -1,0 +1,17 @@
+//! Experiment drivers — one per paper figure (+ the §5.1 endurance
+//! analysis). Each driver returns a [`Json`](crate::util::json::Json)
+//! document with the figure's rows/series, prints a table, and is reused
+//! verbatim by the corresponding `rust/benches/fig*.rs` bench and the
+//! `hetrax fig*` CLI subcommands. DESIGN.md's experiment index maps each
+//! driver to the paper figure it regenerates; EXPERIMENTS.md records
+//! paper-vs-measured.
+
+pub mod ablations;
+pub mod common;
+pub mod endurance;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6a;
+pub mod fig6b;
+pub mod fig6c;

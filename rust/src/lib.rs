@@ -1,0 +1,27 @@
+//! # HeTraX — 3D heterogeneous manycore transformer accelerator (reproduction)
+//!
+//! Full-system reproduction of *HeTraX: Energy Efficient 3D Heterogeneous
+//! Manycore Architecture for Transformer Acceleration* (ISLPED '24).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer Rust + JAX +
+//! Pallas stack (see DESIGN.md): it owns the architecture model, the
+//! cycle-level NoC simulator, thermal/power/ReRAM substrates, the
+//! multi-objective design-space optimizer, the baseline accelerator
+//! models, and the experiment drivers that regenerate every figure of the
+//! paper — plus a PJRT runtime that executes the AOT-compiled transformer
+//! numerics (`artifacts/*.hlo.txt`) with Python never on the request path.
+
+pub mod arch;
+pub mod baselines;
+pub mod config;
+pub mod experiments;
+pub mod coordinator;
+pub mod model;
+pub mod noc;
+pub mod optim;
+pub mod perf;
+pub mod power;
+pub mod reram;
+pub mod runtime;
+pub mod thermal;
+pub mod util;

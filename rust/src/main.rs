@@ -1,0 +1,257 @@
+//! `hetrax` — CLI launcher for the HeTraX reproduction.
+//!
+//! ```text
+//! hetrax spec                         # Table 2 + derived constants
+//! hetrax fig3 [--quick] [--out F]     # PT vs PTN placement (Fig. 3)
+//! hetrax fig4 [--out F]               # accuracy under ReRAM noise (Fig. 4)
+//! hetrax fig5 [--quick] [--out F]     # router-port histogram (Fig. 5)
+//! hetrax fig6a [--seq N] [--out F]    # per-kernel times (Fig. 6a)
+//! hetrax fig6b [--seq N] [--out F]    # variants + temperature (Fig. 6b)
+//! hetrax fig6c [--out F]              # EDP sweep (Fig. 6c)
+//! hetrax endurance [--out F]          # §5.1 rewrite analysis
+//! hetrax simulate [--model M] [--seq N]  # cycle-accurate NoC validation
+//! hetrax optimize [--quick]           # full Eq. 6 DSE, prints the front
+//! hetrax serve [--requests N]         # coordinator serving demo
+//! ```
+//!
+//! Global flags: `--config FILE` (INI overrides), `--seed N`,
+//! `--artifacts DIR`.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use hetrax::arch::Placement;
+use hetrax::config::Config;
+use hetrax::coordinator::{Batcher, BatcherConfig, Engine, Request};
+use hetrax::experiments::common::{self, Effort};
+use hetrax::experiments::{ablations, endurance, fig3, fig4, fig5, fig6a, fig6b, fig6c};
+use hetrax::model::{ModelId, Workload};
+use hetrax::noc::{traffic, NocSim, Topology};
+use hetrax::optim::{Evaluator, MooStage, ObjectiveSet};
+use hetrax::perf::PerfEstimator;
+use hetrax::util::rng::Rng;
+
+/// Tiny argv parser: positional command + `--key value` / `--flag` pairs.
+struct Args {
+    command: String,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut argv = std::env::args().skip(1);
+        let command = argv.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = Vec::new();
+        let rest: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let arg = &rest[i];
+            let key = arg
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("unexpected argument {arg}"))?;
+            let value = if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                i += 1;
+                Some(rest[i].clone())
+            } else {
+                None
+            };
+            flags.push((key.to_string(), value));
+            i += 1;
+        }
+        Ok(Args { command, flags })
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    let cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    let seed = args.get_usize("seed", 0xC0DE)? as u64;
+    let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let effort = if args.has("quick") { Effort::quick() } else { Effort::paper() };
+
+    match args.command.as_str() {
+        "spec" => cmd_spec(&cfg),
+        "fig3" => fig3::run_and_write(&cfg, effort, seed, args.get("out").unwrap_or("results/fig3.json")),
+        "fig4" => {
+            // Tier temperatures default to the paper's §5.2 operating
+            // points; `--from-fig3` re-derives them from a fresh DSE run.
+            let (pt_t, ptn_t) = if args.has("from-fig3") {
+                let outcome = fig3::run(&cfg, effort, seed);
+                (outcome.pt_reram_c, outcome.ptn_reram_c)
+            } else {
+                (78.0, 57.0)
+            };
+            fig4::run_and_write(&cfg, &artifacts, pt_t, ptn_t, seed,
+                                args.get("out").unwrap_or("results/fig4.json"))
+        }
+        "fig5" => fig5::run_and_write(&cfg, effort, seed, args.get("out").unwrap_or("results/fig5.json")),
+        "fig6a" => {
+            let seq = args.get_usize("seq", 1024)?;
+            fig6a::run_and_write(&cfg, seq, args.get("out").unwrap_or("results/fig6a.json"))
+        }
+        "fig6b" => {
+            let seq = args.get_usize("seq", 1024)?;
+            let mut p = Placement::mesh_baseline(&cfg);
+            p.tier_order.swap(0, 3); // PTN-style stack for HeTraX temps
+            fig6b::run_and_write(&cfg, seq, &p, args.get("out").unwrap_or("results/fig6b.json"))
+        }
+        "fig6c" => fig6c::run_and_write(&cfg, args.get("out").unwrap_or("results/fig6c.json")),
+        "endurance" => endurance::run_and_write(args.get("out").unwrap_or("results/endurance.json")),
+        "ablations" => ablations::run_and_write(&cfg, args.get("out").unwrap_or("results/ablations.json")),
+        "simulate" => cmd_simulate(&cfg, &args, seed),
+        "optimize" => cmd_optimize(&cfg, effort, seed),
+        "serve" => cmd_serve(&cfg, &args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} — try `hetrax help`"),
+    }
+}
+
+const HELP: &str = "\
+hetrax — HeTraX (ISLPED'24) full-system reproduction
+
+USAGE: hetrax <COMMAND> [--config FILE] [--seed N] [--quick] [--out FILE]
+
+COMMANDS:
+  spec        Table 2 architecture specification + derived constants
+  fig3        PT vs PTN core placement (Fig. 3)
+  fig4        accuracy under ReRAM thermal noise (Fig. 4; needs artifacts)
+  fig5        router-port histogram vs 3D mesh (Fig. 5)
+  fig6a       per-kernel execution time vs baselines (Fig. 6a) [--seq N]
+  fig6b       architecture variants + temperatures (Fig. 6b) [--seq N]
+  fig6c       EDP sweep across models x sequence lengths (Fig. 6c)
+  endurance   §5.1 ReRAM write-endurance analysis
+  ablations   DVFS extension + design-choice ablations (fused/overlap/replication)
+  simulate    cycle-accurate NoC run [--model M --seq N]
+  optimize    full Eq. 6 multi-objective DSE, prints the Pareto front
+  serve       coordinator serving demo [--requests N --batch N]
+";
+
+fn cmd_spec(cfg: &Config) -> Result<()> {
+    use hetrax::config::specs;
+    println!("HeTraX architecture (Table 2)");
+    println!("  tiers: {} ({} SM-MC + 1 ReRAM), {} x {} mm",
+             specs::NUM_TIERS, cfg.sm_mc_tiers, specs::TIER_SIZE_MM, specs::TIER_SIZE_MM);
+    println!("  SMs: {} (8 TC @ {:.2} GHz, {:.2} TFLOPS/SM)",
+             cfg.sm_count, specs::SM_CLOCK_HZ / 1e9, specs::sm_peak_flops() / 1e12);
+    println!("  MCs: {} ({} KB L2, {:.1} GB/s DRAM each)",
+             cfg.mc_count, specs::MC_L2_BYTES / 1024, cfg.mc_dram_bw_bps / 1e9);
+    println!("  ReRAM: {} cores x {} tiles ({} crossbars {}x{}, {}-bit cells, {:.0} GOPS/tile eff.)",
+             cfg.reram_count, specs::RERAM_TILES_PER_CORE, specs::RERAM_XBARS_PER_TILE,
+             specs::RERAM_XBAR_ROWS, specs::RERAM_XBAR_COLS, specs::RERAM_CELL_BITS,
+             cfg.reram_tile_gops);
+    println!("  TSV: {} µm dia, {} fF, {:.2} pJ/flit vertical",
+             specs::TSV_DIAMETER_UM, specs::TSV_CAP_FF,
+             specs::tsv_pj_per_bit() * cfg.flit_bits as f64);
+    println!("  NoC: {}-bit flits @ {:.1} GHz, FIFO depth {}, max {} ports",
+             cfg.flit_bits, cfg.noc_clock_hz / 1e9, cfg.fifo_depth, cfg.max_ports);
+    Ok(())
+}
+
+fn cmd_simulate(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
+    let model = ModelId::parse(args.get("model").unwrap_or("bert-large"))
+        .ok_or_else(|| anyhow!("unknown model"))?;
+    let seq = args.get_usize("seq", 512)?;
+    let w = Workload::build(model, model.default_variant(), seq);
+    let mut p = Placement::mesh_baseline(cfg);
+    p.tier_order.swap(0, 3);
+    let topo = Topology::build(cfg, &p);
+    let flows = traffic::workload_flows(cfg, &w);
+    // Scale to a tractable trace (contention validation, not duration).
+    let scaled = traffic::scale_flows(&flows, 2e-4);
+    let mut rng = Rng::new(seed);
+    let trace = traffic::trace_from_flows(cfg, &scaled, 20_000, &mut rng);
+    println!("cycle-accurate NoC: {} packets over {} links ...",
+             trace.packets.len(), topo.links.len());
+    let mut sim = NocSim::new(cfg, &topo);
+    let report = sim.run(&trace, 50_000_000);
+    println!("  cycles: {}", report.cycles);
+    println!("  delivered flits: {} ({:.3} flits/cycle)",
+             report.delivered_flits, report.throughput());
+    println!("  packet latency: avg {:.1} cycles, p99 {:.1}",
+             report.avg_latency(), report.p99_latency());
+    let mu = hetrax::util::stats::mean(&report.measured_utilization());
+    println!("  measured mean link utilization: {mu:.4}");
+    // Analytic Eq. 1 view of the same flows for cross-validation.
+    let (a_mu, a_sigma) = topo.utilization_stats(
+        cfg, &scaled, report.cycles as f64 / cfg.noc_clock_hz);
+    println!("  analytic Eq.1 over the same window: mu={a_mu:.4} sigma={a_sigma:.4}");
+    Ok(())
+}
+
+fn cmd_optimize(cfg: &Config, effort: Effort, seed: u64) -> Result<()> {
+    let w = common::dse_workload();
+    let ev = Evaluator::new(cfg, &w);
+    let mut stage = MooStage::new(cfg, &ev, ObjectiveSet::ptn());
+    stage.epochs = effort.epochs;
+    stage.perturbations = effort.perturbations;
+    stage.steps_per_epoch = effort.steps_per_epoch;
+    let mut rng = Rng::new(seed);
+    let result = stage.run(&mut rng);
+    println!("Eq. 6 PTN optimization: {} evaluations, front size {}",
+             result.evaluations, result.archive.len());
+    println!("{:<6} {:>8} {:>8} {:>10} {:>10} {:>8} {:>8}",
+             "design", "mu", "sigma", "T(obj)", "noise", "peak C", "ReRAM C");
+    for (i, e) in result.archive.entries.iter().enumerate() {
+        println!("{:<6} {:>8.4} {:>8.4} {:>10.1} {:>10.2e} {:>8.1} {:>8.1}",
+                 i, e.objectives.mu(), e.objectives.sigma(), e.objectives.thermal(),
+                 e.objectives.noise(), e.objectives.peak_c, e.objectives.reram_tier_c);
+    }
+    Ok(())
+}
+
+fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
+    let n = args.get_usize("requests", 64)?;
+    let batch = args.get_usize("batch", 8)?;
+    let model = ModelId::parse(args.get("model").unwrap_or("bert-base"))
+        .ok_or_else(|| anyhow!("unknown model"))?;
+    let seq = args.get_usize("seq", 256)?;
+    let mut rng = Rng::new(1);
+    let requests: Vec<Request> = (0..n as u64)
+        .map(|i| {
+            let mut r = Request::synthetic(i, model, seq, 0.0);
+            r.arrival_s = i as f64 * 1e-3 + rng.f64() * 5e-4;
+            r
+        })
+        .collect();
+    let batches = Batcher::new(BatcherConfig { max_batch: batch, max_wait_s: 2e-3 })
+        .form_batches(requests);
+    let engine = Engine::new(cfg);
+    let report = engine.serve(&batches);
+    println!("served {n} requests of {model} n={seq} in {} batches", batches.len());
+    println!("  makespan:   {:.2} ms (sim)", report.makespan_s * 1e3);
+    println!("  throughput: {:.1} req/s (sim)", report.throughput_rps);
+    println!("  latency:    avg {:.2} ms, p99 {:.2} ms",
+             report.avg_latency_s * 1e3, report.p99_latency_s * 1e3);
+    println!("  energy:     {:.3} J total, {:.1} mJ/req",
+             report.total_energy_j, report.total_energy_j / n as f64 * 1e3);
+    println!("  tier overlap: {:.2} ms", report.overlap_s * 1e3);
+    // Perf estimate for one inference, for reference.
+    let w = Workload::build(model, model.default_variant(), seq);
+    let r = PerfEstimator::new(cfg).estimate(&w);
+    println!("  single-inference estimate: {:.2} ms, {:.1} mJ",
+             r.latency_s * 1e3, r.energy.total_j() * 1e3);
+    Ok(())
+}

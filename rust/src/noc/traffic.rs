@@ -1,0 +1,295 @@
+//! Traffic representation and the transformer traffic-pattern generator.
+//!
+//! §4.2: MHA produces *many-to-few / few-to-many* traffic (21 SMs served
+//! by 6 MCs), head concatenation is many-to-one, the FF phase streams
+//! activations through the TSVs to the ReRAM tier and onward along the
+//! fixed chain. This module turns a [`Workload`](crate::model::Workload)
+//! + kernel→core mapping into (a) aggregate [`Flow`]s for the analytic
+//! Eq. 1 objectives and (b) timed [`PacketSpec`]s for the cycle simulator.
+
+use crate::arch::cores::{mc_ids, reram_ids, sm_ids};
+use crate::arch::CoreId;
+use crate::config::Config;
+use crate::model::{Kernel, Workload};
+use crate::util::rng::Rng;
+
+/// Aggregate traffic between one (src, dst) pair over the window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Flow {
+    pub src: CoreId,
+    pub dst: CoreId,
+    pub bytes: f64,
+}
+
+/// One packet for the cycle simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct PacketSpec {
+    pub src: CoreId,
+    pub dst: CoreId,
+    /// Payload size in flits (≥ 1).
+    pub flits: u32,
+    /// Injection cycle.
+    pub inject_at: u64,
+}
+
+/// A timed packet trace plus its aggregate flow view.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficTrace {
+    pub packets: Vec<PacketSpec>,
+}
+
+impl TrafficTrace {
+    /// Aggregate per-pair byte totals (for Eq. 1 evaluation of the same
+    /// trace the cycle simulator runs).
+    pub fn flows(&self, cfg: &Config) -> Vec<Flow> {
+        let mut map = std::collections::HashMap::<(CoreId, CoreId), f64>::new();
+        for p in &self.packets {
+            *map.entry((p.src, p.dst)).or_insert(0.0) +=
+                p.flits as f64 * cfg.flit_bits as f64 / 8.0;
+        }
+        let mut v: Vec<Flow> = map
+            .into_iter()
+            .map(|((src, dst), bytes)| Flow { src, dst, bytes })
+            .collect();
+        v.sort_by_key(|f| (f.src, f.dst));
+        v
+    }
+}
+
+/// Per-inference aggregate flows for one transformer workload under the
+/// §4.2 kernel→core mapping (heads round-robined over SMs, MCs feeding
+/// SMs, FF streamed to/from the ReRAM tier). Bytes are *per block* summed
+/// over all blocks.
+pub fn workload_flows(cfg: &Config, w: &Workload) -> Vec<Flow> {
+    let sms: Vec<CoreId> = sm_ids(cfg).collect();
+    let mcs: Vec<CoreId> = mc_ids(cfg).collect();
+    let rerams: Vec<CoreId> = reram_ids(cfg).collect();
+    let mut acc = std::collections::HashMap::<(CoreId, CoreId), f64>::new();
+    let mut add = |src: CoreId, dst: CoreId, bytes: f64| {
+        if src != dst && bytes > 0.0 {
+            *acc.entry((src, dst)).or_insert(0.0) += bytes;
+        }
+    };
+
+    for inst in &w.instances {
+        let c = &inst.cost;
+        match inst.kernel {
+            // MC → SM: weights + input activations; SM → MC: outputs.
+            // Few-to-many and many-to-few (§4.2).
+            Kernel::Mha1Qkv | Kernel::Mha4Proj => {
+                let in_bytes = c.act_in_bytes + c.weight_bytes;
+                per_pair(&mcs, &sms, in_bytes, &mut add);
+                per_pair(&sms, &mcs, c.act_out_bytes, &mut add);
+            }
+            // Fused score+softmax+AV runs SM-local per head: K/V blocks
+            // are exchanged SM↔SM (each head's SM needs all K/V rows).
+            Kernel::Mha2Score => {
+                per_pair(&sms, &sms, c.act_in_bytes, &mut add);
+            }
+            Kernel::Mha3Av => {
+                // Fused with MHA-2 on-SM (§4.2): only the head outputs
+                // move, many-to-one toward the SM that concatenates
+                // (deterministically the first SM).
+                let concat_sm = sms[0];
+                for &s in &sms {
+                    add(s, concat_sm, c.act_out_bytes / sms.len() as f64);
+                }
+            }
+            Kernel::LayerNorm1 | Kernel::LayerNorm2 => {
+                // LN executes where the data lives; residual fetch via MC.
+                per_pair(&mcs, &sms, c.act_in_bytes * 0.5, &mut add);
+            }
+            // FF: activations descend the TSVs to ReRAM (spatially
+            // partitioned weights → scatter), results return.
+            Kernel::Ff1 => {
+                per_pair(&sms, &rerams, c.act_in_bytes, &mut add);
+                // FF-1 → FF-2 stays on the chain (neighbour hops).
+                chain_flow(&rerams, c.act_out_bytes, &mut add);
+            }
+            Kernel::Ff2 => {
+                chain_flow(&rerams, c.act_in_bytes, &mut add);
+                per_pair(&rerams, &sms, c.act_out_bytes, &mut add);
+            }
+        }
+        // Weight-update stream for the *next* layer flows MC → ReRAM
+        // during MHA (§4.2 write-latency hiding): attribute to MHA-1.
+        if inst.kernel == Kernel::Mha1Qkv {
+            let ff_weights = (w.dims.d_model * w.dims.d_ff * 2) as f64 * 2.0;
+            per_pair(&mcs, &rerams, ff_weights, &mut add);
+        }
+    }
+
+    let mut flows: Vec<Flow> = acc
+        .into_iter()
+        .map(|((src, dst), bytes)| Flow { src, dst, bytes })
+        .collect();
+    flows.sort_by(|a, b| (a.src, a.dst).cmp(&(b.src, b.dst)));
+    flows
+}
+
+/// Distribute `bytes` uniformly over all (src, dst) pairs.
+fn per_pair(
+    srcs: &[CoreId],
+    dsts: &[CoreId],
+    bytes: f64,
+    add: &mut impl FnMut(CoreId, CoreId, f64),
+) {
+    let pairs = (srcs.len() * dsts.len()) as f64;
+    for &s in srcs {
+        for &d in dsts {
+            add(s, d, bytes / pairs);
+        }
+    }
+}
+
+/// Flow along the ReRAM chain: neighbour-to-neighbour (unidirectional
+/// dataflow, §4.2).
+fn chain_flow(rerams: &[CoreId], bytes: f64, add: &mut impl FnMut(CoreId, CoreId, f64)) {
+    let hops = (rerams.len() - 1) as f64;
+    for w in rerams.windows(2) {
+        add(w[0], w[1], bytes / hops);
+    }
+}
+
+/// Convert aggregate flows into a timed packet trace for the cycle
+/// simulator: packets of ≤ `max_flits` injected at uniform-random cycles
+/// over the window (seeded — reproducible).
+pub fn trace_from_flows(
+    cfg: &Config,
+    flows: &[Flow],
+    window_cycles: u64,
+    rng: &mut Rng,
+) -> TrafficTrace {
+    let flit_bytes = cfg.flit_bits as f64 / 8.0;
+    let max_flits = 16u32; // typical NoC packet: 16 × 16 B = 256 B
+    let mut packets = Vec::new();
+    for f in flows {
+        let total_flits = (f.bytes / flit_bytes).ceil() as u64;
+        let mut remaining = total_flits;
+        while remaining > 0 {
+            let flits = remaining.min(max_flits as u64) as u32;
+            remaining -= flits as u64;
+            packets.push(PacketSpec {
+                src: f.src,
+                dst: f.dst,
+                flits,
+                inject_at: rng.below(window_cycles as usize) as u64,
+            });
+        }
+    }
+    packets.sort_by_key(|p| p.inject_at);
+    TrafficTrace { packets }
+}
+
+/// Downscale flows so the trace is simulable in bounded time while
+/// preserving relative intensities (the cycle sim validates *contention
+/// behaviour*, not absolute duration).
+pub fn scale_flows(flows: &[Flow], factor: f64) -> Vec<Flow> {
+    flows
+        .iter()
+        .map(|f| Flow { src: f.src, dst: f.dst, bytes: (f.bytes * factor).max(0.0) })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ArchVariant, ModelId, Workload};
+
+    #[test]
+    fn flows_cover_expected_pairs() {
+        let cfg = Config::default();
+        let w = Workload::build(ModelId::BertTiny, ArchVariant::EncoderOnly, 128);
+        let flows = workload_flows(&cfg, &w);
+        assert!(!flows.is_empty());
+        // Some MC→SM, SM→ReRAM, ReRAM→SM flows must exist.
+        let has = |pred: &dyn Fn(&Flow) -> bool| flows.iter().any(|f| pred(f));
+        assert!(has(&|f| f.src >= 21 && f.src < 27 && f.dst < 21), "MC→SM");
+        assert!(has(&|f| f.src < 21 && f.dst >= 27), "SM→ReRAM");
+        assert!(has(&|f| f.src >= 27 && f.dst < 21), "ReRAM→SM");
+        // All byte counts positive and finite.
+        assert!(flows.iter().all(|f| f.bytes > 0.0 && f.bytes.is_finite()));
+    }
+
+    #[test]
+    fn many_to_few_pattern_dominates_mc_traffic() {
+        // 21 SMs vs 6 MCs: per-MC ingress should exceed per-SM egress.
+        let cfg = Config::default();
+        let w = Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, 512);
+        let flows = workload_flows(&cfg, &w);
+        let mc_in: f64 = flows.iter().filter(|f| f.dst >= 21 && f.dst < 27).map(|f| f.bytes).sum();
+        let sm_in: f64 = flows.iter().filter(|f| f.dst < 21).map(|f| f.bytes).sum();
+        let per_mc = mc_in / 6.0;
+        let per_sm = sm_in / 21.0;
+        assert!(per_mc > 0.0 && per_sm > 0.0);
+    }
+
+    #[test]
+    fn longer_sequences_increase_traffic() {
+        let cfg = Config::default();
+        let f1: f64 = workload_flows(
+            &cfg,
+            &Workload::build(ModelId::BertBase, ArchVariant::EncoderOnly, 256),
+        )
+        .iter()
+        .map(|f| f.bytes)
+        .sum();
+        let f2: f64 = workload_flows(
+            &cfg,
+            &Workload::build(ModelId::BertBase, ArchVariant::EncoderOnly, 1024),
+        )
+        .iter()
+        .map(|f| f.bytes)
+        .sum();
+        assert!(f2 > 2.0 * f1);
+    }
+
+    #[test]
+    fn trace_roundtrips_to_flows() {
+        let cfg = Config::default();
+        let flows = vec![
+            Flow { src: 0, dst: 5, bytes: 4096.0 },
+            Flow { src: 3, dst: 27, bytes: 1024.0 },
+        ];
+        let mut rng = Rng::new(1);
+        let trace = trace_from_flows(&cfg, &flows, 1000, &mut rng);
+        let back = trace.flows(&cfg);
+        assert_eq!(back.len(), 2);
+        // Flit quantization rounds up only.
+        for (orig, got) in flows.iter().zip(&back) {
+            assert_eq!((orig.src, orig.dst), (got.src, got.dst));
+            assert!(got.bytes >= orig.bytes);
+            assert!(got.bytes < orig.bytes + cfg.flit_bits as f64 / 8.0 * 16.0);
+        }
+        // Injection times within the window and sorted.
+        assert!(trace.packets.windows(2).all(|w| w[0].inject_at <= w[1].inject_at));
+        assert!(trace.packets.iter().all(|p| p.inject_at < 1000));
+    }
+
+    #[test]
+    fn mqa_reduces_total_traffic() {
+        let cfg = Config::default();
+        let std: f64 = workload_flows(
+            &cfg,
+            &Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, 1024),
+        )
+        .iter()
+        .map(|f| f.bytes)
+        .sum();
+        let mqa: f64 = workload_flows(
+            &cfg,
+            &Workload::build(ModelId::BertLarge, ArchVariant::Mqa, 1024),
+        )
+        .iter()
+        .map(|f| f.bytes)
+        .sum();
+        assert!(mqa < std, "MQA {mqa} should be < standard {std}");
+    }
+
+    #[test]
+    fn scale_flows_scales() {
+        let flows = vec![Flow { src: 0, dst: 1, bytes: 100.0 }];
+        let s = scale_flows(&flows, 0.25);
+        assert_eq!(s[0].bytes, 25.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! S8 — Multi-objective design-space optimization (§4.4, Eq. 6):
+//!
+//! λ* = MOO( μ(λ), σ(λ), T(λ), Noise(λ) )
+//!
+//! * [`objectives`] — evaluates a placement λ into the four objectives
+//!   (Eq. 1 link-utilization mean/stddev, Eq. 4 thermal, Eq. 5-driven
+//!   ReRAM noise).
+//! * [`pareto`] — dominance and the Pareto archive.
+//! * [`stage`] — MOO-STAGE [10]: Pareto local search + a learned value
+//!   function that predicts the quality of the local optimum reachable
+//!   from a start state, used to pick promising restarts.
+//! * [`amosa`] — archived multi-objective simulated annealing baseline.
+//! * [`random_search`] — uniform-sampling baseline.
+
+pub mod amosa;
+pub mod objectives;
+pub mod pareto;
+pub mod random_search;
+pub mod stage;
+
+pub use objectives::{ObjectiveSet, Objectives, ObjectiveVector, Evaluator};
+pub use pareto::ParetoArchive;
+pub use stage::{DseResult, MooStage};

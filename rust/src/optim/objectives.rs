@@ -1,0 +1,229 @@
+//! Objective evaluation for a design point λ (Eq. 6).
+//!
+//! All four objectives are *minimized*:
+//!   0. μ(λ)     — mean link utilization (Eq. 1)
+//!   1. σ(λ)     — stddev of link utilization (Eq. 1)
+//!   2. T(λ)     — combined thermal objective (Eq. 4)
+//!   3. Noise(λ) — ReRAM digit-error probability at the ReRAM tier's
+//!                 steady temperature (Eq. 5 + drift model)
+//!
+//! PT optimization (Fig. 3a) uses {0,1,2}; PTN (Fig. 3b) uses {0,1,2,3}.
+
+use crate::arch::Placement;
+use crate::config::Config;
+use crate::model::Workload;
+use crate::noc::{traffic, Topology};
+use crate::perf::PerfEstimator;
+use crate::power;
+use crate::reram::NoiseModel;
+use crate::thermal::{PowerGrid, ThermalModel};
+
+pub const OBJ_MU: usize = 0;
+pub const OBJ_SIGMA: usize = 1;
+pub const OBJ_THERMAL: usize = 2;
+pub const OBJ_NOISE: usize = 3;
+pub const NUM_OBJECTIVES: usize = 4;
+
+/// A point in objective space.
+pub type ObjectiveVector = [f64; NUM_OBJECTIVES];
+
+/// Which objectives participate in dominance comparisons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObjectiveSet {
+    pub active: [bool; NUM_OBJECTIVES],
+}
+
+impl ObjectiveSet {
+    /// Performance-thermal (the "existing work" mode of Fig. 3a).
+    pub fn pt() -> Self {
+        ObjectiveSet { active: [true, true, true, false] }
+    }
+
+    /// Performance-thermal-noise (HeTraX's full Eq. 6, Fig. 3b).
+    pub fn ptn() -> Self {
+        ObjectiveSet { active: [true, true, true, true] }
+    }
+
+    pub fn count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+}
+
+/// Evaluated objectives plus diagnostic detail for the figures.
+#[derive(Debug, Clone)]
+pub struct Objectives {
+    pub vals: ObjectiveVector,
+    pub peak_c: f64,
+    pub reram_tier_c: f64,
+    pub tier_peaks_c: Vec<f64>,
+    pub connected: bool,
+}
+
+impl Objectives {
+    pub fn mu(&self) -> f64 {
+        self.vals[OBJ_MU]
+    }
+    pub fn sigma(&self) -> f64 {
+        self.vals[OBJ_SIGMA]
+    }
+    pub fn thermal(&self) -> f64 {
+        self.vals[OBJ_THERMAL]
+    }
+    pub fn noise(&self) -> f64 {
+        self.vals[OBJ_NOISE]
+    }
+}
+
+/// Caches the placement-independent parts (flows, activity, window) so
+/// the DSE hot path only rebuilds topology + thermal per candidate.
+pub struct Evaluator<'a> {
+    pub cfg: &'a Config,
+    pub workload: &'a Workload,
+    flows: Vec<traffic::Flow>,
+    window_s: f64,
+    core_powers: Vec<f64>,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(cfg: &'a Config, workload: &'a Workload) -> Evaluator<'a> {
+        let flows = traffic::workload_flows(cfg, workload);
+        let report = PerfEstimator::new(cfg).estimate(workload);
+        let core_powers = power::core_powers(cfg, &report.activity);
+        Evaluator { cfg, workload, flows, window_s: report.latency_s, core_powers }
+    }
+
+    /// Evaluate λ → objectives.
+    pub fn evaluate(&self, placement: &Placement) -> Objectives {
+        let topo = Topology::build(self.cfg, placement);
+        if !topo.connected() {
+            // Hard-reject disconnected designs.
+            return Objectives {
+                vals: [f64::INFINITY; NUM_OBJECTIVES],
+                peak_c: f64::INFINITY,
+                reram_tier_c: f64::INFINITY,
+                tier_peaks_c: vec![f64::INFINITY; 4],
+                connected: false,
+            };
+        }
+        let (mu, sigma) = topo.utilization_stats(self.cfg, &self.flows, self.window_s);
+
+        // Router power scales with port count (buffers + crossbar):
+        // bigger routers heat their tier — the physical pressure behind
+        // Fig. 5's "smaller routers and a reduced number of links".
+        const ROUTER_W_PER_PORT: f64 = 0.05;
+        let mut powers = self.core_powers.clone();
+        let mut ports = vec![1usize; topo.n]; // local port
+        for l in &topo.links {
+            ports[l.from] += 1;
+        }
+        for (p, &n_ports) in powers.iter_mut().zip(&ports) {
+            *p += n_ports as f64 * ROUTER_W_PER_PORT;
+        }
+        let grid = PowerGrid::from_core_powers(self.cfg, placement, &powers);
+        let thermal = ThermalModel::new(self.cfg).evaluate(&grid);
+        let reram_tier_c = thermal.tier_peak_c[placement.reram_tier()];
+        let noise = NoiseModel::new(self.cfg, reram_tier_c).digit_error_probability();
+
+        Objectives {
+            vals: [mu, sigma, thermal.objective(), noise],
+            peak_c: thermal.peak_c,
+            reram_tier_c,
+            tier_peaks_c: thermal.tier_peak_c.clone(),
+            connected: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ArchVariant, ModelId};
+    use crate::util::rng::Rng;
+
+    fn eval_setup() -> (Config, Workload) {
+        (
+            Config::default(),
+            Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, 512),
+        )
+    }
+
+    #[test]
+    fn mesh_baseline_evaluates_finite() {
+        let (cfg, w) = eval_setup();
+        let ev = Evaluator::new(&cfg, &w);
+        let obj = ev.evaluate(&Placement::mesh_baseline(&cfg));
+        assert!(obj.connected);
+        for v in obj.vals {
+            assert!(v.is_finite() && v >= 0.0, "{:?}", obj.vals);
+        }
+        assert!(obj.peak_c > cfg.ambient_c);
+    }
+
+    #[test]
+    fn reram_at_sink_reduces_noise_objective() {
+        let (cfg, w) = eval_setup();
+        let ev = Evaluator::new(&cfg, &w);
+        let top = Placement::mesh_baseline(&cfg); // ReRAM farthest (tier 3)
+        let mut bottom = top.clone();
+        bottom.tier_order.swap(0, 3); // ReRAM at the sink
+        let o_top = ev.evaluate(&top);
+        let o_bottom = ev.evaluate(&bottom);
+        assert!(o_bottom.reram_tier_c < o_top.reram_tier_c);
+        assert!(o_bottom.noise() <= o_top.noise());
+    }
+
+    #[test]
+    fn pt_favours_reram_far_ptn_favours_reram_near() {
+        // The Fig. 3 trade-off must be visible in raw objectives:
+        // PT's thermal objective prefers ReRAM far from the sink (SM
+        // tiers cooled first); PTN's noise objective prefers the reverse.
+        let (cfg, w) = eval_setup();
+        let ev = Evaluator::new(&cfg, &w);
+        let far = Placement::mesh_baseline(&cfg);
+        let mut near = far.clone();
+        near.tier_order.swap(0, 3);
+        let o_far = ev.evaluate(&far);
+        let o_near = ev.evaluate(&near);
+        assert!(
+            o_far.thermal() < o_near.thermal(),
+            "thermal: far {} near {}",
+            o_far.thermal(),
+            o_near.thermal()
+        );
+        assert!(
+            o_near.noise() < o_far.noise(),
+            "noise: near {} far {}",
+            o_near.noise(),
+            o_far.noise()
+        );
+    }
+
+    #[test]
+    fn disconnected_designs_poisoned() {
+        let (cfg, w) = eval_setup();
+        let ev = Evaluator::new(&cfg, &w);
+        let mut p = Placement::mesh_baseline(&cfg);
+        p.planar_links.clear();
+        let o = ev.evaluate(&p);
+        if !o.connected {
+            assert!(o.vals.iter().all(|v| v.is_infinite()));
+        }
+    }
+
+    #[test]
+    fn evaluation_deterministic() {
+        let (cfg, w) = eval_setup();
+        let ev = Evaluator::new(&cfg, &w);
+        let mut rng = Rng::new(3);
+        let p = Placement::random(&cfg, &mut rng);
+        let a = ev.evaluate(&p);
+        let b = ev.evaluate(&p);
+        assert_eq!(a.vals, b.vals);
+    }
+
+    #[test]
+    fn objective_sets() {
+        assert_eq!(ObjectiveSet::pt().count(), 3);
+        assert_eq!(ObjectiveSet::ptn().count(), 4);
+    }
+}

@@ -1,0 +1,253 @@
+//! Pareto dominance and the non-dominated archive.
+
+use crate::arch::Placement;
+use crate::optim::objectives::{ObjectiveSet, Objectives};
+
+/// Does `a` dominate `b` over the active objectives? (≤ everywhere,
+/// < somewhere; all objectives minimized.)
+pub fn dominates(a: &Objectives, b: &Objectives, set: &ObjectiveSet) -> bool {
+    let mut strictly_better = false;
+    for i in 0..a.vals.len() {
+        if !set.active[i] {
+            continue;
+        }
+        if a.vals[i] > b.vals[i] {
+            return false;
+        }
+        if a.vals[i] < b.vals[i] {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// An entry in the archive.
+#[derive(Debug, Clone)]
+pub struct ArchiveEntry {
+    pub placement: Placement,
+    pub objectives: Objectives,
+}
+
+/// Bounded non-dominated archive.
+#[derive(Debug, Clone)]
+pub struct ParetoArchive {
+    pub set: ObjectiveSet,
+    pub entries: Vec<ArchiveEntry>,
+    pub capacity: usize,
+}
+
+impl ParetoArchive {
+    pub fn new(set: ObjectiveSet, capacity: usize) -> ParetoArchive {
+        ParetoArchive { set, entries: Vec::new(), capacity }
+    }
+
+    /// Try to insert; returns true if the candidate enters the archive
+    /// (i.e. it is not dominated by any current member).
+    pub fn insert(&mut self, placement: &Placement, objectives: &Objectives) -> bool {
+        if !objectives.connected {
+            return false;
+        }
+        if self
+            .entries
+            .iter()
+            .any(|e| dominates(&e.objectives, objectives, &self.set))
+        {
+            return false;
+        }
+        // Remove members the candidate dominates.
+        let set = self.set;
+        self.entries
+            .retain(|e| !dominates(objectives, &e.objectives, &set));
+        self.entries.push(ArchiveEntry {
+            placement: placement.clone(),
+            objectives: objectives.clone(),
+        });
+        if self.entries.len() > self.capacity {
+            self.prune();
+        }
+        true
+    }
+
+    /// Crowding-style prune: drop the entry closest to its neighbour in
+    /// normalized objective space (keeps the front spread).
+    fn prune(&mut self) {
+        if self.entries.len() <= 2 {
+            return;
+        }
+        // Normalize per active objective.
+        let idxs: Vec<usize> = (0..4).filter(|&i| self.set.active[i]).collect();
+        let mut lo = vec![f64::INFINITY; idxs.len()];
+        let mut hi = vec![f64::NEG_INFINITY; idxs.len()];
+        for e in &self.entries {
+            for (j, &i) in idxs.iter().enumerate() {
+                lo[j] = lo[j].min(e.objectives.vals[i]);
+                hi[j] = hi[j].max(e.objectives.vals[i]);
+            }
+        }
+        let norm = |e: &ArchiveEntry| -> Vec<f64> {
+            idxs.iter()
+                .enumerate()
+                .map(|(j, &i)| {
+                    let span = (hi[j] - lo[j]).max(1e-12);
+                    (e.objectives.vals[i] - lo[j]) / span
+                })
+                .collect()
+        };
+        let pts: Vec<Vec<f64>> = self.entries.iter().map(norm).collect();
+        let mut worst = (0usize, f64::INFINITY);
+        for i in 0..pts.len() {
+            let mut nearest = f64::INFINITY;
+            for j in 0..pts.len() {
+                if i == j {
+                    continue;
+                }
+                let d: f64 = pts[i]
+                    .iter()
+                    .zip(&pts[j])
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                nearest = nearest.min(d);
+            }
+            if nearest < worst.1 {
+                worst = (i, nearest);
+            }
+        }
+        self.entries.swap_remove(worst.0);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Best entry under a weighted scalarization of normalized objectives
+    /// (used to pick "the best design" for cycle-accurate validation,
+    /// §4.4 last step).
+    pub fn best_scalarized(&self) -> Option<&ArchiveEntry> {
+        if self.entries.is_empty() {
+            return None;
+        }
+        let idxs: Vec<usize> = (0..4).filter(|&i| self.set.active[i]).collect();
+        let mut lo = vec![f64::INFINITY; idxs.len()];
+        let mut hi = vec![f64::NEG_INFINITY; idxs.len()];
+        for e in &self.entries {
+            for (j, &i) in idxs.iter().enumerate() {
+                lo[j] = lo[j].min(e.objectives.vals[i]);
+                hi[j] = hi[j].max(e.objectives.vals[i]);
+            }
+        }
+        self.entries.iter().min_by(|a, b| {
+            let score = |e: &ArchiveEntry| -> f64 {
+                idxs.iter()
+                    .enumerate()
+                    .map(|(j, &i)| {
+                        let span = (hi[j] - lo[j]).max(1e-12);
+                        (e.objectives.vals[i] - lo[j]) / span
+                    })
+                    .sum()
+            };
+            score(a).partial_cmp(&score(b)).unwrap()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Placement;
+    use crate::config::Config;
+
+    fn obj(vals: [f64; 4]) -> Objectives {
+        Objectives {
+            vals,
+            peak_c: 0.0,
+            reram_tier_c: 0.0,
+            tier_peaks_c: vec![],
+            connected: true,
+        }
+    }
+
+    #[test]
+    fn dominance_rules() {
+        let set = ObjectiveSet::ptn();
+        let a = obj([1.0, 1.0, 1.0, 1.0]);
+        let b = obj([2.0, 1.0, 1.0, 1.0]);
+        assert!(dominates(&a, &b, &set));
+        assert!(!dominates(&b, &a, &set));
+        assert!(!dominates(&a, &a, &set)); // not strictly better
+        // Incomparable.
+        let c = obj([0.5, 2.0, 1.0, 1.0]);
+        assert!(!dominates(&a, &c, &set) && !dominates(&c, &a, &set));
+    }
+
+    #[test]
+    fn masked_objectives_ignored() {
+        let set = ObjectiveSet::pt(); // noise inactive
+        let a = obj([1.0, 1.0, 1.0, 99.0]);
+        let b = obj([1.0, 1.0, 2.0, 0.0]);
+        assert!(dominates(&a, &b, &set));
+    }
+
+    #[test]
+    fn archive_keeps_only_nondominated() {
+        let cfg = Config::default();
+        let p = Placement::mesh_baseline(&cfg);
+        let mut arch = ParetoArchive::new(ObjectiveSet::ptn(), 10);
+        assert!(arch.insert(&p, &obj([2.0, 2.0, 2.0, 2.0])));
+        assert!(arch.insert(&p, &obj([1.0, 3.0, 2.0, 2.0]))); // incomparable
+        assert_eq!(arch.len(), 2);
+        // Dominator removes both.
+        assert!(arch.insert(&p, &obj([1.0, 1.0, 1.0, 1.0])));
+        assert_eq!(arch.len(), 1);
+        // Dominated candidate rejected.
+        assert!(!arch.insert(&p, &obj([1.5, 1.0, 1.0, 1.0])));
+        assert_eq!(arch.len(), 1);
+    }
+
+    #[test]
+    fn capacity_prunes_crowded() {
+        let cfg = Config::default();
+        let p = Placement::mesh_baseline(&cfg);
+        let mut arch = ParetoArchive::new(ObjectiveSet::pt(), 4);
+        // A spread front plus one crowded pair.
+        for (i, v) in [
+            [1.0, 10.0, 5.0, 0.0],
+            [2.0, 8.0, 4.0, 0.0],
+            [3.0, 6.0, 3.0, 0.0],
+            [4.0, 4.0, 2.0, 0.0],
+            [4.01, 3.99, 2.005, 0.0], // crowds the previous
+        ]
+        .iter()
+        .enumerate()
+        {
+            let _ = i;
+            arch.insert(&p, &obj(*v));
+        }
+        assert_eq!(arch.len(), 4);
+    }
+
+    #[test]
+    fn disconnected_rejected() {
+        let cfg = Config::default();
+        let p = Placement::mesh_baseline(&cfg);
+        let mut arch = ParetoArchive::new(ObjectiveSet::ptn(), 4);
+        let mut o = obj([1.0; 4]);
+        o.connected = false;
+        assert!(!arch.insert(&p, &o));
+    }
+
+    #[test]
+    fn best_scalarized_balances() {
+        let cfg = Config::default();
+        let p = Placement::mesh_baseline(&cfg);
+        let mut arch = ParetoArchive::new(ObjectiveSet::pt(), 10);
+        arch.insert(&p, &obj([0.0, 10.0, 10.0, 0.0]));
+        arch.insert(&p, &obj([10.0, 0.0, 10.0, 0.0]));
+        arch.insert(&p, &obj([2.0, 2.0, 2.0, 0.0]));
+        let best = arch.best_scalarized().unwrap();
+        assert_eq!(best.objectives.vals, [2.0, 2.0, 2.0, 0.0]);
+    }
+}

@@ -1,0 +1,57 @@
+//! Uniform random-sampling baseline for the optimizer ablation
+//! (examples/design_space.rs): same evaluation budget, no structure.
+
+use crate::arch::Placement;
+use crate::optim::objectives::{Evaluator, ObjectiveSet};
+use crate::optim::pareto::ParetoArchive;
+use crate::optim::stage::DseResult;
+use crate::util::rng::Rng;
+
+pub struct RandomSearch<'a> {
+    pub evaluator: &'a Evaluator<'a>,
+    pub set: ObjectiveSet,
+    pub samples: usize,
+}
+
+impl<'a> RandomSearch<'a> {
+    pub fn run(&self, rng: &mut Rng) -> DseResult {
+        let cfg = self.evaluator.cfg;
+        let mut archive = ParetoArchive::new(self.set, 64);
+        let mut history = Vec::new();
+        for i in 0..self.samples {
+            let p = Placement::random(cfg, rng);
+            let o = self.evaluator.evaluate(&p);
+            archive.insert(&p, &o);
+            if i % 100 == 0 {
+                if let Some(best) = archive.best_scalarized() {
+                    let scale = [1.0, 1.0, 2000.0, 0.25];
+                    let q: f64 = (0..4)
+                        .filter(|&j| self.set.active[j])
+                        .map(|j| best.objectives.vals[j] / scale[j])
+                        .sum::<f64>()
+                        / self.set.count() as f64;
+                    history.push(q);
+                }
+            }
+        }
+        DseResult { archive, evaluations: self.samples, history }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::model::{ArchVariant, ModelId, Workload};
+
+    #[test]
+    fn random_search_fills_archive() {
+        let cfg = Config::default();
+        let w = Workload::build(ModelId::BertBase, ArchVariant::EncoderOnly, 256);
+        let ev = Evaluator::new(&cfg, &w);
+        let rs = RandomSearch { evaluator: &ev, set: ObjectiveSet::ptn(), samples: 50 };
+        let res = rs.run(&mut Rng::new(5));
+        assert!(!res.archive.is_empty());
+        assert_eq!(res.evaluations, 50);
+    }
+}

@@ -1,0 +1,233 @@
+//! MOO-STAGE [10] — the paper's DSE algorithm (§4.4).
+//!
+//! STAGE alternates between:
+//!   1. **Base search** — Pareto local search from a start placement:
+//!      `perturbations` neighbours per step; accept a move when it is not
+//!      dominated by the incumbent; every evaluated point is offered to
+//!      the global archive. Runs until a fixed step budget ("epoch").
+//!   2. **Meta learning** — record (features(start) → quality of the
+//!      front region reached) pairs and fit a ridge-regression value
+//!      function; new starts are chosen by sampling candidates and taking
+//!      the best *predicted* one, which is what lets STAGE outperform
+//!      plain restarts/AMOSA at high objective counts [10].
+
+use crate::arch::Placement;
+use crate::config::Config;
+use crate::optim::objectives::{Evaluator, ObjectiveSet, Objectives};
+use crate::optim::pareto::{dominates, ParetoArchive};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Outcome of one DSE run.
+#[derive(Debug)]
+pub struct DseResult {
+    pub archive: ParetoArchive,
+    pub evaluations: usize,
+    /// Per-epoch best scalarized quality (for convergence plots and the
+    /// optimizer-ablation bench).
+    pub history: Vec<f64>,
+}
+
+pub struct MooStage<'a> {
+    pub evaluator: &'a Evaluator<'a>,
+    pub set: ObjectiveSet,
+    pub epochs: usize,
+    pub perturbations: usize,
+    /// Local-search steps per epoch.
+    pub steps_per_epoch: usize,
+    /// Candidate starts scored by the value function per restart.
+    pub restart_candidates: usize,
+}
+
+impl<'a> MooStage<'a> {
+    pub fn new(cfg: &Config, evaluator: &'a Evaluator<'a>, set: ObjectiveSet) -> MooStage<'a> {
+        MooStage {
+            evaluator,
+            set,
+            epochs: cfg.moo_epochs,
+            perturbations: cfg.moo_perturbations,
+            steps_per_epoch: 10,
+            restart_candidates: 16,
+        }
+    }
+
+    /// Scalar quality of an objective vector for the value function /
+    /// history (lower better): mean of active objectives after a fixed
+    /// soft normalization (objectives have known scales: μ,σ ∈ ~[0,1],
+    /// T(λ) ∈ ~[0, 3000], Noise ∈ [0,1]).
+    fn quality(&self, o: &Objectives) -> f64 {
+        let scale = [1.0, 1.0, 2000.0, 0.25];
+        let mut q = 0.0;
+        let mut n = 0.0;
+        for i in 0..4 {
+            if self.set.active[i] {
+                q += o.vals[i] / scale[i];
+                n += 1.0;
+            }
+        }
+        if n > 0.0 {
+            q / n
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn run(&self, rng: &mut Rng) -> DseResult {
+        let cfg = self.evaluator.cfg;
+        let mut archive = ParetoArchive::new(self.set, 64);
+        let mut evaluations = 0usize;
+        let mut history = Vec::with_capacity(self.epochs);
+
+        // Value-function training set: features(start) → best quality
+        // reached by the local search that started there.
+        let mut train_x: Vec<Vec<f64>> = Vec::new();
+        let mut train_y: Vec<f64> = Vec::new();
+        let mut value_fn: Option<Vec<f64>> = None;
+
+        let mut start = Placement::mesh_baseline(cfg);
+        for _epoch in 0..self.epochs {
+            // --- Base search from `start`.
+            let mut cur = start.clone();
+            let mut cur_obj = self.evaluator.evaluate(&cur);
+            evaluations += 1;
+            archive.insert(&cur, &cur_obj);
+            let start_features = cur.features(cfg);
+            let mut best_q = self.quality(&cur_obj);
+
+            for _step in 0..self.steps_per_epoch {
+                // Generate `perturbations` neighbours, move to the best
+                // non-dominated one (steepest-descent flavour of PLS).
+                let mut best_move: Option<(Placement, Objectives, f64)> = None;
+                for _ in 0..self.perturbations {
+                    let cand = cur.perturb(cfg, rng);
+                    let obj = self.evaluator.evaluate(&cand);
+                    evaluations += 1;
+                    archive.insert(&cand, &obj);
+                    if !obj.connected {
+                        continue;
+                    }
+                    let q = self.quality(&obj);
+                    let acceptable = dominates(&obj, &cur_obj, &self.set)
+                        || (!dominates(&cur_obj, &obj, &self.set) && q < best_q);
+                    if acceptable
+                        && best_move.as_ref().map_or(true, |(_, _, bq)| q < *bq)
+                    {
+                        best_move = Some((cand, obj, q));
+                    }
+                }
+                match best_move {
+                    Some((cand, obj, q)) => {
+                        cur = cand;
+                        cur_obj = obj;
+                        best_q = best_q.min(q);
+                    }
+                    None => break, // local optimum under this neighbourhood
+                }
+            }
+            history.push(best_q);
+
+            // --- Meta: learn from this trajectory.
+            train_x.push(start_features);
+            train_y.push(best_q);
+            if train_x.len() >= 5 {
+                value_fn = Some(stats::ridge_regression(&train_x, &train_y, 1e-3));
+            }
+
+            // --- Pick the next start: guided when the model exists.
+            start = match &value_fn {
+                Some(beta) => {
+                    let mut best: Option<(f64, Placement)> = None;
+                    for _ in 0..self.restart_candidates {
+                        let cand = Placement::random(cfg, rng);
+                        let pred = stats::predict_linear(beta, &cand.features(cfg));
+                        if best.as_ref().map_or(true, |(bp, _)| pred < *bp) {
+                            best = Some((pred, cand));
+                        }
+                    }
+                    best.unwrap().1
+                }
+                None => Placement::random(cfg, rng),
+            };
+        }
+
+        DseResult { archive, evaluations, history }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ArchVariant, ModelId, Workload};
+
+    fn quick_stage<'a>(ev: &'a Evaluator<'a>, set: ObjectiveSet) -> MooStage<'a> {
+        MooStage {
+            evaluator: ev,
+            set,
+            epochs: 6,
+            perturbations: 6,
+            steps_per_epoch: 4,
+            restart_candidates: 4,
+        }
+    }
+
+    fn setup() -> (Config, Workload) {
+        (
+            Config::default(),
+            Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, 512),
+        )
+    }
+
+    #[test]
+    fn produces_nonempty_archive() {
+        let (cfg, w) = setup();
+        let ev = Evaluator::new(&cfg, &w);
+        let stage = quick_stage(&ev, ObjectiveSet::ptn());
+        let mut rng = Rng::new(1);
+        let res = stage.run(&mut rng);
+        assert!(!res.archive.is_empty());
+        assert!(res.evaluations > 20);
+        assert_eq!(res.history.len(), 6);
+    }
+
+    #[test]
+    fn improves_over_mesh_baseline() {
+        let (cfg, w) = setup();
+        let ev = Evaluator::new(&cfg, &w);
+        let baseline = ev.evaluate(&Placement::mesh_baseline(&cfg));
+        let stage = quick_stage(&ev, ObjectiveSet::ptn());
+        let mut rng = Rng::new(2);
+        let res = stage.run(&mut rng);
+        let best = res.archive.best_scalarized().unwrap();
+        // The best found design is not dominated by the baseline.
+        assert!(!dominates(&baseline, &best.objectives, &ObjectiveSet::ptn()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (cfg, w) = setup();
+        let ev = Evaluator::new(&cfg, &w);
+        let stage = quick_stage(&ev, ObjectiveSet::pt());
+        let a = stage.run(&mut Rng::new(7)).history;
+        let b = stage.run(&mut Rng::new(7)).history;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ptn_archive_contains_cool_reram_designs() {
+        // The PTN run must discover placements with the ReRAM tier near
+        // the sink (the Fig. 3b outcome).
+        let (cfg, w) = setup();
+        let ev = Evaluator::new(&cfg, &w);
+        let stage = quick_stage(&ev, ObjectiveSet::ptn());
+        let mut rng = Rng::new(3);
+        let res = stage.run(&mut rng);
+        let min_tier = res
+            .archive
+            .entries
+            .iter()
+            .map(|e| e.placement.reram_tier())
+            .min()
+            .unwrap();
+        assert!(min_tier <= 1, "PTN should explore ReRAM near the sink");
+    }
+}

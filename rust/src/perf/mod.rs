@@ -1,0 +1,9 @@
+//! S7 — Analytical timing model: kernel → core-mapping → latency, the
+//! §4.2 weight-load overlap schedule, and the end-to-end
+//! latency/energy/EDP estimator that Fig. 6(a–c) are built from.
+
+pub mod estimator;
+pub mod timing;
+
+pub use estimator::{InferenceReport, PerfEstimator};
+pub use timing::hetrax_kernel_time_s;

@@ -1,0 +1,231 @@
+//! Per-kernel latency on HeTraX (§4.2 mapping):
+//!
+//! * MHA-1/4 — tiled GEMMs on the 21 SMs (tensor cores), inputs staged
+//!   through the MCs (tiling: "blocks of input data are loaded from DRAM
+//!   to MC"). Weights are already resident in MC L2 (loaded during the
+//!   previous FF phase, §4.2) so the memory term is the L2→SM stream.
+//! * MHA-2/3 — the *fused score + online softmax* pass: QKᵀ and S·V on
+//!   tensor cores, exponentials/normalization on the SIMT lanes, no
+//!   intermediate S matrix traffic (the paper's key SM-side optimization).
+//! * L-1/L-2 — LayerNorm on SIMT lanes.
+//! * FF-1/2 — pipelined crossbar MVMs on the ReRAM tier mapping.
+//!
+//! Every kernel takes `max(compute, memory)` — a roofline with the
+//! operand streams of Table 1.
+
+use crate::config::specs;
+use crate::config::Config;
+use crate::model::kernels::KernelCost;
+use crate::model::{Kernel, Workload};
+use crate::reram::FfMapping;
+
+/// Sustained fraction of tensor-core peak for well-tiled GEMMs.
+pub const SM_GEMM_EFFICIENCY: f64 = 0.55;
+/// Sustained fraction for the fused attention kernel (shorter inner dims).
+pub const SM_FUSED_ATTN_EFFICIENCY: f64 = 0.45;
+/// Sustained fraction of SIMT peak for element-wise kernels.
+pub const SM_VECTOR_EFFICIENCY: f64 = 0.6;
+/// Share of a kernel's FLOPs that are element-wise (softmax inside the
+/// fused kernel): from Table-1 cost model, 5 ops per score.
+fn softmax_fraction(cost: &KernelCost, seq: usize, heads: usize) -> f64 {
+    let s = seq as f64;
+    let softmax_ops = 5.0 * heads as f64 * s * s;
+    (softmax_ops / cost.flops).min(1.0)
+}
+
+/// Aggregate SM-tier GEMM throughput (FLOP/s).
+pub fn sm_tier_gemm_flops(cfg: &Config) -> f64 {
+    cfg.sm_count as f64 * specs::sm_peak_flops() * SM_GEMM_EFFICIENCY
+}
+
+/// Aggregate SIMT throughput (FLOP/s).
+pub fn sm_tier_vector_flops(cfg: &Config) -> f64 {
+    cfg.sm_count as f64 * specs::sm_vector_flops() * SM_VECTOR_EFFICIENCY
+}
+
+/// Aggregate L2→SM stream bandwidth (B/s).
+pub fn l2_stream_bw(cfg: &Config) -> f64 {
+    cfg.mc_count as f64 * specs::MC_L2_BW_BPS
+}
+
+/// Latency of one kernel instance on HeTraX.
+pub fn hetrax_kernel_time_s(
+    cfg: &Config,
+    kernel: Kernel,
+    cost: &KernelCost,
+    w: &Workload,
+    ff_map: &FfMapping,
+) -> f64 {
+    match kernel {
+        Kernel::Mha1Qkv | Kernel::Mha4Proj => {
+            let t_compute = cost.flops / sm_tier_gemm_flops(cfg);
+            // Weights resident in L2 (§4.2); stream weights + activations.
+            let t_mem = (cost.act_in_bytes + cost.weight_bytes + cost.act_out_bytes)
+                / l2_stream_bw(cfg);
+            t_compute.max(t_mem)
+        }
+        Kernel::Mha2Score | Kernel::Mha3Av => {
+            // Fused pass: no S-matrix DRAM traffic (§4.2). Tensor-core
+            // part + SIMT softmax part, overlapped imperfectly (sum of
+            // the two is the conservative model).
+            let sf = softmax_fraction(cost, w.seq, w.dims.heads);
+            let t_tc = cost.flops * (1.0 - sf)
+                / (cfg.sm_count as f64 * specs::sm_peak_flops() * SM_FUSED_ATTN_EFFICIENCY);
+            let t_vec = cost.flops * sf / sm_tier_vector_flops(cfg);
+            // Operand stream: Q/K/V tiles through L2 (S never leaves SMs).
+            let t_mem = cost.act_in_bytes / l2_stream_bw(cfg);
+            (t_tc + t_vec).max(t_mem)
+        }
+        Kernel::LayerNorm1 | Kernel::LayerNorm2 => {
+            let t_compute = cost.flops / sm_tier_vector_flops(cfg);
+            let t_mem = (cost.act_in_bytes + cost.act_out_bytes) / l2_stream_bw(cfg);
+            t_compute.max(t_mem)
+        }
+        Kernel::Ff1 | Kernel::Ff2 => {
+            // Pipelined over the mapped crossbars; activations stream over
+            // the TSVs (vertical bandwidth: one flit per pillar per cycle).
+            let t_compute = cost.flops / ff_map.throughput_ops(cfg);
+            let tsv_bw = 9.0 * cfg.flit_bits as f64 / 8.0 * cfg.noc_clock_hz;
+            let t_mem = (cost.act_in_bytes + cost.act_out_bytes) / tsv_bw;
+            t_compute.max(t_mem)
+        }
+    }
+}
+
+/// Time to load one block's MHA weights from DRAM into MC L2 (hidden
+/// behind the FF phase when possible, §4.2).
+pub fn mha_weight_load_s(cfg: &Config, w: &Workload) -> f64 {
+    let d = w.dims.d_model as f64;
+    let kv = if w.variant == crate::model::ArchVariant::Mqa {
+        w.dims.head_dim() as f64
+    } else {
+        d
+    };
+    let bytes = (d * d + 2.0 * d * kv + d * d) * specs::ACT_BYTES;
+    bytes / (cfg.mc_count as f64 * cfg.mc_dram_bw_bps)
+}
+
+/// Time to load + program one block's FF weights into ReRAM (hidden
+/// behind the MHA phase when possible, §4.2): DRAM fetch + crossbar
+/// programming (row-parallel across crossbars).
+pub fn ff_weight_update_s(cfg: &Config, w: &Workload, ff_map: &FfMapping) -> f64 {
+    let bytes = (w.dims.d_model * w.dims.d_ff * 2) as f64 * specs::ACT_BYTES;
+    let t_dram = bytes / (cfg.mc_count as f64 * cfg.mc_dram_bw_bps);
+    t_dram + ff_map.write_time_s()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ArchVariant, ModelId};
+
+    fn setup(model: ModelId, seq: usize) -> (Config, Workload, FfMapping) {
+        let cfg = Config::default();
+        let w = Workload::build(model, ArchVariant::EncoderOnly, seq);
+        let m = FfMapping::map(&cfg, w.dims.d_model, w.dims.d_ff);
+        (cfg, w, m)
+    }
+
+    #[test]
+    fn all_kernel_times_positive_and_finite() {
+        let (cfg, w, m) = setup(ModelId::BertLarge, 1024);
+        for inst in &w.instances {
+            let t = hetrax_kernel_time_s(&cfg, inst.kernel, &inst.cost, &w, &m);
+            assert!(t > 0.0 && t.is_finite(), "{:?}: {t}", inst.kernel);
+        }
+    }
+
+    #[test]
+    fn gemm_kernels_compute_bound_at_large_dims() {
+        let (cfg, w, m) = setup(ModelId::BertLarge, 1024);
+        let inst = &w.instances[0]; // MHA-1
+        let t = hetrax_kernel_time_s(&cfg, inst.kernel, &inst.cost, &w, &m);
+        let t_compute = inst.cost.flops / sm_tier_gemm_flops(&cfg);
+        assert!((t - t_compute).abs() / t < 1e-9, "MHA-1 should be compute-bound");
+    }
+
+    #[test]
+    fn layernorm_cheap_vs_gemms() {
+        let (cfg, w, m) = setup(ModelId::BertLarge, 1024);
+        let t_ln = hetrax_kernel_time_s(
+            &cfg,
+            Kernel::LayerNorm1,
+            &w.instances.iter().find(|i| i.kernel == Kernel::LayerNorm1).unwrap().cost,
+            &w,
+            &m,
+        );
+        let t_ff = hetrax_kernel_time_s(
+            &cfg,
+            Kernel::Ff1,
+            &w.instances.iter().find(|i| i.kernel == Kernel::Ff1).unwrap().cost,
+            &w,
+            &m,
+        );
+        assert!(t_ln < t_ff / 5.0, "LN {t_ln} vs FF {t_ff}");
+    }
+
+    #[test]
+    fn ff_and_mha_phases_comparable_at_bert_large() {
+        // The design intent: neither tier starves the other badly.
+        let (cfg, w, m) = setup(ModelId::BertLarge, 1024);
+        let mha: f64 = w
+            .instances
+            .iter()
+            .take(5) // first block's MHA-1..L-1
+            .map(|i| hetrax_kernel_time_s(&cfg, i.kernel, &i.cost, &w, &m))
+            .sum();
+        let ff: f64 = w.instances[5..8]
+            .iter()
+            .map(|i| hetrax_kernel_time_s(&cfg, i.kernel, &i.cost, &w, &m))
+            .sum();
+        let ratio = ff / mha;
+        assert!(ratio > 0.2 && ratio < 5.0, "FF/MHA ratio {ratio}");
+    }
+
+    #[test]
+    fn weight_loads_hide_behind_compute_phases() {
+        // §4.2's overlap claims must hold at the design point.
+        let (cfg, w, m) = setup(ModelId::BertLarge, 1024);
+        let mha_time: f64 = w
+            .instances
+            .iter()
+            .take(5)
+            .map(|i| hetrax_kernel_time_s(&cfg, i.kernel, &i.cost, &w, &m))
+            .sum();
+        let ff_update = ff_weight_update_s(&cfg, &w, &m);
+        assert!(
+            ff_update < mha_time,
+            "FF weight update {ff_update} must hide behind MHA {mha_time}"
+        );
+        let ff_time: f64 = w.instances[5..8]
+            .iter()
+            .map(|i| hetrax_kernel_time_s(&cfg, i.kernel, &i.cost, &w, &m))
+            .sum();
+        let mha_load = mha_weight_load_s(&cfg, &w);
+        assert!(
+            mha_load < ff_time * 2.0,
+            "MHA weight load {mha_load} vs FF {ff_time}"
+        );
+    }
+
+    #[test]
+    fn attention_time_scales_superlinearly_with_seq() {
+        let (cfg, w1, m1) = setup(ModelId::BertLarge, 512);
+        let (_, w2, m2) = setup(ModelId::BertLarge, 2048);
+        let t1 = hetrax_kernel_time_s(
+            &cfg,
+            Kernel::Mha2Score,
+            &w1.instances.iter().find(|i| i.kernel == Kernel::Mha2Score).unwrap().cost,
+            &w1,
+            &m1,
+        );
+        let t2 = hetrax_kernel_time_s(
+            &cfg,
+            Kernel::Mha2Score,
+            &w2.instances.iter().find(|i| i.kernel == Kernel::Mha2Score).unwrap().cost,
+            &w2,
+            &m2,
+        );
+        assert!(t2 / t1 > 8.0, "4× seq → ≥8× score time, got {}", t2 / t1);
+    }
+}

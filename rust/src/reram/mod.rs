@@ -1,0 +1,12 @@
+//! S6 — ReRAM substrate: crossbar mapping, write-endurance accounting
+//! (the §5.1 analysis that disqualifies ReRAM for MHA), and the
+//! temperature-dependent conductance error model (Eq. 5 + drift) behind
+//! the Fig. 3/4 PTN optimization.
+
+pub mod endurance;
+pub mod mapping;
+pub mod noise;
+
+pub use endurance::EnduranceTracker;
+pub use mapping::FfMapping;
+pub use noise::NoiseModel;

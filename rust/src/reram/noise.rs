@@ -1,0 +1,234 @@
+//! Temperature-dependent ReRAM error model: Eq. 5 Johnson noise + the
+//! conductance drift that drives the Fig. 4 accuracy study.
+//!
+//! Two effects, mirroring `python/compile/kernels/crossbar.py` (the σ
+//! formula is cross-checked against the Python value in tests):
+//!
+//! 1. **Thermal (Johnson–Nyquist) conductance noise** — Eq. 5:
+//!    `σ_G = sqrt(4 · G · K_b · T · F) / V`. Zero-mean, grows with √T.
+//!    At device scale this is small; it perturbs the analog column sums.
+//!
+//! 2. **Conductance drift** — cells are program-verified at T_prog; at
+//!    operating temperature the stored conductance shifts by
+//!    `drift_level_per_k · (T − T_prog)` in *level units* (one 2-bit
+//!    level = ⅓ of the conductance window), with cell-to-cell programming
+//!    spread `σ_prog`. When the total shift of a cell crosses half a
+//!    level, the read-out digit flips — this is exactly the paper's
+//!    "thermal noise remains confined within the quantization boundaries"
+//!    threshold (§5.2): at 57 °C shifts stay inside the boundary, at 78 °C
+//!    a measurable fraction of cells cross it, costing up to 3.3 %
+//!    accuracy.
+
+use crate::config::specs;
+use crate::config::Config;
+use crate::util::rng::Rng;
+
+/// Error function approximation (Abramowitz & Stegun 7.1.26, |ε|<1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF.
+pub fn phi(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// The temperature-dependent error model for one operating point.
+#[derive(Debug, Clone, Copy)]
+pub struct NoiseModel {
+    pub temp_c: f64,
+    pub drift_level_per_k: f64,
+    pub prog_sigma_level: f64,
+}
+
+impl NoiseModel {
+    pub fn new(cfg: &Config, temp_c: f64) -> NoiseModel {
+        NoiseModel {
+            temp_c,
+            drift_level_per_k: cfg.drift_level_per_k,
+            prog_sigma_level: cfg.prog_sigma_level,
+        }
+    }
+
+    pub fn temp_k(&self) -> f64 {
+        self.temp_c + 273.15
+    }
+
+    /// Eq. 5: σ of the Johnson–Nyquist conductance noise (siemens).
+    pub fn johnson_sigma_s(&self) -> f64 {
+        (4.0 * specs::RERAM_G_ON * specs::BOLTZMANN * self.temp_k() * specs::RERAM_CLOCK_HZ)
+            .sqrt()
+            / specs::RERAM_READ_V
+    }
+
+    /// Eq. 5 noise relative to the on-conductance (applied to normalized
+    /// weights) — identical to python `relative_noise_sigma`.
+    pub fn johnson_sigma_rel(&self) -> f64 {
+        self.johnson_sigma_s() / specs::RERAM_G_ON
+    }
+
+    /// Mean conductance drift in level units at this temperature.
+    pub fn drift_levels(&self) -> f64 {
+        self.drift_level_per_k * (self.temp_k() - specs::RERAM_T_PROG_K)
+    }
+
+    /// Probability that a cell's total shift crosses the ±½-level
+    /// quantization boundary (digit read error), from drift ± N(0, σ_prog).
+    pub fn digit_error_probability(&self) -> f64 {
+        let d = self.drift_levels().abs();
+        let s = self.prog_sigma_level.max(1e-12);
+        // P(d + X > 0.5) + P(d + X < -0.5), X ~ N(0, s).
+        let upper = 1.0 - phi((0.5 - d) / s);
+        let lower = phi((-0.5 - d) / s);
+        (upper + lower).clamp(0.0, 1.0)
+    }
+
+    /// Sample the per-cell level shift (level units): deterministic drift
+    /// + programming spread + Johnson term (level-scaled).
+    pub fn sample_level_shift(&self, rng: &mut Rng) -> f64 {
+        let johnson_levels = self.johnson_sigma_rel() * (4.0 - 1.0); // 2-bit: 3 levels span
+        self.drift_levels()
+            + rng.normal(0.0, self.prog_sigma_level)
+            + rng.normal(0.0, johnson_levels)
+    }
+
+    /// Perturb an f32 weight tensor the way deployment on this tier
+    /// perturbs it: quantize to 8-bit digits (4 × 2-bit cells), shift each
+    /// cell's level, re-read with requantization, dequantize.
+    /// This is what the Fig. 4 driver applies to the classifier FF
+    /// weights before feeding the PJRT executable.
+    ///
+    /// §Perf: drift and the combined Gaussian spread
+    /// √(σ_prog² + σ_johnson²) are temperature constants — hoisted out of
+    /// the per-cell loop (one Gaussian per cell instead of two plus two
+    /// sqrt chains; ~4× on the Fig. 4 path, see EXPERIMENTS.md §Perf).
+    pub fn perturb_weights(&self, w: &[f32], rng: &mut Rng) -> Vec<f32> {
+        if w.is_empty() {
+            return Vec::new();
+        }
+        let qmax = 127.0f64;
+        let absmax = w.iter().fold(0.0f64, |a, &b| a.max((b as f64).abs())).max(1e-12);
+        let scale = absmax / qmax;
+        let drift = self.drift_levels();
+        let johnson_levels = self.johnson_sigma_rel() * 3.0;
+        let sigma = (self.prog_sigma_level * self.prog_sigma_level
+            + johnson_levels * johnson_levels)
+            .sqrt();
+        w.iter()
+            .map(|&x| {
+                let q = ((x as f64) / scale).round().clamp(-qmax, qmax) as i32;
+                let off = q + 128; // offset-binary, 4 base-4 digits
+                let mut out = 0i32;
+                for slice in 0..4 {
+                    let digit = (off >> (2 * slice)) & 0x3;
+                    let shifted = digit as f64 + rng.normal(drift, sigma);
+                    let read = shifted.round().clamp(0.0, 3.0) as i32;
+                    out += read << (2 * slice);
+                }
+                (((out - 128) as f64) * scale) as f32
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(temp_c: f64) -> NoiseModel {
+        NoiseModel::new(&Config::default(), temp_c)
+    }
+
+    #[test]
+    fn johnson_sigma_matches_python_value() {
+        // python: conductance_noise_sigma(300.0) with G=4e-5, F=1e7, V=0.2
+        // = sqrt(4 · 4e-5 · 1.380649e-23 · 300 · 1e7) / 0.2
+        let m = NoiseModel { temp_c: 300.0 - 273.15, ..model(0.0) };
+        let expected = (4.0f64 * 4e-5 * 1.380649e-23 * 300.0 * 1e7).sqrt() / 0.2;
+        let got = m.johnson_sigma_s();
+        assert!((got - expected).abs() / expected < 1e-9, "{got} vs {expected}");
+    }
+
+    #[test]
+    fn johnson_scales_sqrt_t() {
+        let a = NoiseModel { temp_c: 26.85, ..model(0.0) }.johnson_sigma_s(); // 300 K
+        let b = NoiseModel { temp_c: 926.85, ..model(0.0) }.johnson_sigma_s(); // 1200 K
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn digit_error_threshold_behaviour() {
+        // §5.2 operating points: negligible at 57 °C, measurable at 78 °C.
+        let p57 = model(57.0).digit_error_probability();
+        let p78 = model(78.0).digit_error_probability();
+        assert!(p57 < 1e-3, "57 °C inside quantization boundary: {p57}");
+        assert!(p78 > 0.005, "78 °C crosses boundary measurably: {p78}");
+        assert!(p78 > 20.0 * p57);
+    }
+
+    #[test]
+    fn no_drift_at_programming_temperature() {
+        let m = NoiseModel { temp_c: specs::RERAM_T_PROG_K - 273.15, ..model(0.0) };
+        assert!(m.drift_levels().abs() < 1e-12);
+        assert!(m.digit_error_probability() < 1e-12);
+    }
+
+    #[test]
+    fn perturbation_preserves_weights_at_low_temp() {
+        let m = model(40.0);
+        let mut rng = Rng::new(5);
+        let w: Vec<f32> = (0..2048).map(|i| ((i as f32) / 1000.0).sin()).collect();
+        let p = m.perturb_weights(&w, &mut rng);
+        // Quantization error only: bounded by one LSB of 8-bit.
+        let absmax = 1.0f32;
+        let lsb = absmax / 127.0;
+        let max_err = w
+            .iter()
+            .zip(&p)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err <= 1.5 * lsb, "max err {max_err} vs lsb {lsb}");
+    }
+
+    #[test]
+    fn perturbation_corrupts_weights_at_high_temp() {
+        let m = model(78.0);
+        let mut rng = Rng::new(5);
+        let w: Vec<f32> = (0..4096).map(|i| ((i as f32) / 500.0).cos()).collect();
+        let p = m.perturb_weights(&w, &mut rng);
+        let lsb = 1.0 / 127.0;
+        // Some weights flip by at least one 2-bit level in a significant
+        // slice (≫ quantization error).
+        let big_errors = w
+            .iter()
+            .zip(&p)
+            .filter(|(a, b)| (**a - **b).abs() > 4.0 * lsb)
+            .count();
+        assert!(big_errors > 10, "{big_errors} corrupted weights expected");
+    }
+
+    #[test]
+    fn erf_accuracy() {
+        // Known values: erf(1) ≈ 0.8427007929.
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((phi(0.0) - 0.5).abs() < 1e-7);
+        assert!((phi(1.96) - 0.975).abs() < 1e-3);
+    }
+
+    #[test]
+    fn empty_weights_ok() {
+        let m = model(60.0);
+        let mut rng = Rng::new(0);
+        assert!(m.perturb_weights(&[], &mut rng).is_empty());
+    }
+}

@@ -1,0 +1,218 @@
+//! S11 — PJRT runtime: load the AOT-compiled HLO-text artifacts produced
+//! by `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Interchange is HLO *text* (never serialized protos): jax ≥ 0.5 writes
+//! HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README).
+//!
+//! Python runs only at `make artifacts` time; this module makes the Rust
+//! binary self-contained afterwards. One `PjRtLoadedExecutable` per model
+//! variant, compiled once and reused across requests.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Shape + name of one executable input/output.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Artifact {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with f32 input buffers (one per declared input, matching
+    /// element counts). Returns the flattened f32 outputs.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (spec, data) in self.inputs.iter().zip(inputs) {
+            if spec.element_count() != data.len() {
+                bail!(
+                    "{}: input {} expects {} elements ({:?}), got {}",
+                    self.name,
+                    spec.name,
+                    spec.element_count(),
+                    spec.shape,
+                    data.len()
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .with_context(|| format!("reshaping input {}", spec.name))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: outputs arrive as a tuple.
+        let elems = result.to_tuple()?;
+        let mut outputs = Vec::with_capacity(elems.len());
+        for (spec, lit) in self.outputs.iter().zip(elems) {
+            let v = lit
+                .to_vec::<f32>()
+                .with_context(|| format!("reading output {}", spec.name))?;
+            outputs.push(v);
+        }
+        Ok(outputs)
+    }
+}
+
+/// The runtime: PJRT CPU client + artifact registry from manifest.json.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Json,
+    cache: BTreeMap<String, Artifact>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (validated against its manifest).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {} — run `make artifacts`", manifest_path.display()))?;
+        let manifest = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        if manifest.at(&["format"]).and_then(Json::as_str) != Some("hlo-text") {
+            bail!("unexpected artifact format (want hlo-text)");
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir, manifest, cache: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact names declared in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest
+            .at(&["artifacts"])
+            .and_then(Json::as_obj)
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// The raw manifest (for experiment drivers needing metadata).
+    pub fn manifest(&self) -> &Json {
+        &self.manifest
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<&Artifact> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .at(&["artifacts", name])
+                .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+            let file = meta
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                meta.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name} missing {key}"))?
+                    .iter()
+                    .map(|spec| {
+                        let tname = spec
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .unwrap_or("?")
+                            .to_string();
+                        let shape = spec
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("{tname}: missing shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<Vec<_>>>()?;
+                        Ok(TensorSpec { name: tname, shape })
+                    })
+                    .collect()
+            };
+            let artifact = Artifact {
+                name: name.to_string(),
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+                exe,
+            };
+            self.cache.insert(name.to_string(), artifact);
+        }
+        Ok(&self.cache[name])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need built artifacts live in
+    // rust/tests/runtime_e2e.rs (they require `make artifacts`).
+    // Here: manifest-handling unit tests with a synthetic manifest.
+
+    #[test]
+    fn tensor_spec_counts() {
+        let t = TensorSpec { name: "x".into(), shape: vec![2, 3, 4] };
+        assert_eq!(t.element_count(), 24);
+        let s = TensorSpec { name: "s".into(), shape: vec![] };
+        assert_eq!(s.element_count(), 1);
+    }
+
+    #[test]
+    fn open_missing_dir_fails_gracefully() {
+        let Err(err) = Runtime::open("/nonexistent/path") else {
+            panic!("expected error")
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn open_rejects_bad_manifest() {
+        let dir = std::env::temp_dir().join("hetrax_bad_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"format\": \"other\"}").unwrap();
+        let Err(err) = Runtime::open(&dir) else { panic!("expected error") };
+        assert!(format!("{err:#}").contains("hlo-text"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

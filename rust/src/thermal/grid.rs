@@ -1,0 +1,103 @@
+//! Power-density grid: per-tier power maps on a common lateral resolution.
+//!
+//! SM-MC tiers have a 3×3 core grid while the ReRAM tier is 4×4; thermal
+//! columns must align vertically, so all tiers are rasterized onto a
+//! 12×12 fine grid (LCM of 3 and 4). Each core's power is spread uniformly
+//! over the fine cells its site covers.
+
+use crate::arch::cores::kind_of;
+use crate::arch::{CoreKind, Placement};
+use crate::config::specs::NUM_TIERS;
+use crate::config::Config;
+
+/// Fine lateral resolution (LCM of the 3×3 and 4×4 tier grids).
+pub const FINE: usize = 12;
+
+/// Per-tier, per-fine-cell power map (watts).
+#[derive(Debug, Clone)]
+pub struct PowerGrid {
+    /// `power[tier][y * FINE + x]`, tier 0 nearest the sink.
+    pub power: Vec<Vec<f64>>,
+}
+
+impl PowerGrid {
+    pub fn zeros() -> PowerGrid {
+        PowerGrid { power: vec![vec![0.0; FINE * FINE]; NUM_TIERS] }
+    }
+
+    /// Rasterize per-core powers onto the fine grid for a placement.
+    /// `core_power[id]` = watts dissipated by core `id`.
+    pub fn from_core_powers(cfg: &Config, placement: &Placement, core_power: &[f64]) -> PowerGrid {
+        assert_eq!(core_power.len(), cfg.total_cores());
+        let mut g = PowerGrid::zeros();
+        for id in 0..cfg.total_cores() {
+            let site = placement.site_of(cfg, id);
+            let grid = match kind_of(cfg, id) {
+                CoreKind::ReRam => cfg.reram_grid,
+                _ => cfg.sm_mc_grid,
+            };
+            let span = FINE / grid; // fine cells per core cell edge
+            let p_per_cell = core_power[id] / (span * span) as f64;
+            for dy in 0..span {
+                for dx in 0..span {
+                    let fx = site.x * span + dx;
+                    let fy = site.y * span + dy;
+                    g.power[site.tier][fy * FINE + fx] += p_per_cell;
+                }
+            }
+        }
+        g
+    }
+
+    /// Total power of one tier.
+    pub fn tier_power(&self, tier: usize) -> f64 {
+        self.power[tier].iter().sum()
+    }
+
+    /// Total system power.
+    pub fn total_power(&self) -> f64 {
+        (0..NUM_TIERS).map(|t| self.tier_power(t)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Placement;
+
+    #[test]
+    fn rasterization_conserves_power() {
+        let cfg = Config::default();
+        let p = Placement::mesh_baseline(&cfg);
+        let core_power: Vec<f64> = (0..cfg.total_cores()).map(|i| 1.0 + i as f64 * 0.1).collect();
+        let g = PowerGrid::from_core_powers(&cfg, &p, &core_power);
+        let total: f64 = core_power.iter().sum();
+        assert!((g.total_power() - total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tiers_hold_their_cores_power() {
+        let cfg = Config::default();
+        let p = Placement::mesh_baseline(&cfg);
+        // Only ReRAM cores (27..43) dissipate.
+        let mut core_power = vec![0.0; cfg.total_cores()];
+        for id in 27..43 {
+            core_power[id] = 2.0;
+        }
+        let g = PowerGrid::from_core_powers(&cfg, &p, &core_power);
+        let reram_tier = p.reram_tier();
+        assert!((g.tier_power(reram_tier) - 32.0).abs() < 1e-9);
+        for t in 0..NUM_TIERS {
+            if t != reram_tier {
+                assert_eq!(g.tier_power(t), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fine_grid_alignment() {
+        // 12 divides evenly by both grids.
+        assert_eq!(FINE % 3, 0);
+        assert_eq!(FINE % 4, 0);
+    }
+}

@@ -1,0 +1,25 @@
+//! S5 — Thermal model (paper §4.3, Eq. 2–4; HotSpot stand-in).
+//!
+//! The paper estimates peak temperature with the approximate model of
+//! Cong et al. [11]: the die is divided into vertical columns; the
+//! temperature of a core at layer *k* (counting from the heat sink) is
+//!
+//! ```text
+//! T(n,k) = Σ_{i=1..k} ( P_{n,i} · Σ_{j=1..i} R_j ) + R_b · Σ_{i=1..k} P_{n,i}   (Eq. 2)
+//! ```
+//!
+//! horizontal spread is summarized by ΔT(k) = max_n T(n,k) − min_n T(n,k)
+//! (Eq. 3) and the optimization objective combines both (Eq. 4).
+//!
+//! On top of the paper's column model we run a short lateral-diffusion
+//! relaxation (Jacobi smoothing between neighbouring columns of the same
+//! layer) so hotspots bleed realistically into neighbours — this is the
+//! "HotSpot-lite" step used for the steady-state figures (§5.2/5.3
+//! temperatures); the Eq. 2 column estimate remains available for the
+//! optimizer's objective where speed matters.
+
+pub mod grid;
+pub mod model;
+
+pub use grid::PowerGrid;
+pub use model::{ThermalModel, ThermalReport};

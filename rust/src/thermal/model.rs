@@ -1,0 +1,248 @@
+//! Eq. 2–4 implementation + lateral relaxation ("HotSpot-lite").
+
+use crate::config::Config;
+use crate::thermal::grid::{PowerGrid, FINE};
+
+/// Steady-state thermal result.
+#[derive(Debug, Clone)]
+pub struct ThermalReport {
+    /// `temp[tier][fine_cell]` in °C (after lateral relaxation).
+    pub temp: Vec<Vec<f64>>,
+    /// Peak temperature anywhere (°C).
+    pub peak_c: f64,
+    /// Per-tier peak (°C).
+    pub tier_peak_c: Vec<f64>,
+    /// Per-tier ΔT(k) = max_n − min_n (Eq. 3), °C.
+    pub tier_delta_c: Vec<f64>,
+}
+
+impl ThermalReport {
+    /// The Eq. 4 objective: worst column temperature × worst lateral
+    /// gradient (the paper multiplies the two maxima).
+    pub fn objective(&self) -> f64 {
+        let max_t = self.peak_c;
+        let max_d = self.tier_delta_c.iter().copied().fold(0.0f64, f64::max);
+        max_t * max_d.max(1e-9)
+    }
+}
+
+/// Thermal evaluator. Resistances are whole-die aggregates from the
+/// config; per-column values scale with column area (a column that is
+/// 1/144 of the die area has 144× the vertical resistance).
+#[derive(Debug, Clone)]
+pub struct ThermalModel {
+    pub r_tier_col: f64,
+    pub r_base_col: f64,
+    pub ambient_c: f64,
+    pub lateral: f64,
+    pub lateral_iters: usize,
+}
+
+impl ThermalModel {
+    pub fn new(cfg: &Config) -> ThermalModel {
+        let cols = (FINE * FINE) as f64;
+        ThermalModel {
+            r_tier_col: cfg.r_tier * cols,
+            r_base_col: cfg.r_base * cols,
+            ambient_c: cfg.ambient_c,
+            lateral: cfg.lateral_coupling,
+            lateral_iters: 24,
+        }
+    }
+
+    /// Eq. 2 for every column and layer, i.e. the raw column model with
+    /// uniform per-interface resistance R_j = r_tier_col and base R_b.
+    /// Returns temperatures in °C (ambient added).
+    pub fn column_temperatures(&self, grid: &PowerGrid) -> Vec<Vec<f64>> {
+        let tiers = grid.power.len();
+        let mut temp = vec![vec![0.0; FINE * FINE]; tiers];
+        for n in 0..FINE * FINE {
+            // Cumulative resistance from the sink up to layer i:
+            // Σ_{j=1..i} R_j = i · r_tier_col (uniform interfaces).
+            let mut t_acc = 0.0; // Σ_i P_i · (i · R)
+            let mut p_acc = 0.0; // Σ_i P_i
+            for k in 0..tiers {
+                let p = grid.power[k][n];
+                t_acc += p * (k as f64 + 1.0) * self.r_tier_col;
+                p_acc += p;
+                temp[k][n] = self.ambient_c + t_acc + self.r_base_col * p_acc;
+            }
+        }
+        temp
+    }
+
+    /// Full evaluation: Eq. 2 columns + lateral Jacobi relaxation within
+    /// each layer (heat spreads toward cooler neighbouring columns), then
+    /// Eq. 3 deltas and peaks.
+    pub fn evaluate(&self, grid: &PowerGrid) -> ThermalReport {
+        let mut temp = self.column_temperatures(grid);
+        // Lateral smoothing: T ← (1-4α)·T + α·Σ_neighbors (per layer).
+        // α is clamped for stability (α ≤ 0.25 ⇒ convex combination).
+        let alpha = (self.lateral / 4.0).min(0.24);
+        let mut next = temp.clone();
+        for _ in 0..self.lateral_iters {
+            for layer in &mut temp {
+                let src = layer.clone();
+                for y in 0..FINE {
+                    for x in 0..FINE {
+                        let i = y * FINE + x;
+                        let mut acc = 0.0;
+                        let mut n = 0.0;
+                        if x > 0 {
+                            acc += src[i - 1];
+                            n += 1.0;
+                        }
+                        if x + 1 < FINE {
+                            acc += src[i + 1];
+                            n += 1.0;
+                        }
+                        if y > 0 {
+                            acc += src[i - FINE];
+                            n += 1.0;
+                        }
+                        if y + 1 < FINE {
+                            acc += src[i + FINE];
+                            n += 1.0;
+                        }
+                        layer[i] = (1.0 - alpha * n) * src[i] + alpha * acc;
+                    }
+                }
+            }
+            std::mem::swap(&mut temp, &mut next);
+            temp.clone_from(&next);
+        }
+        let tiers = temp.len();
+        let mut tier_peak_c = Vec::with_capacity(tiers);
+        let mut tier_delta_c = Vec::with_capacity(tiers);
+        let mut peak = f64::NEG_INFINITY;
+        for layer in &temp {
+            let mx = layer.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            let mn = layer.iter().copied().fold(f64::INFINITY, f64::min);
+            tier_peak_c.push(mx);
+            tier_delta_c.push(mx - mn);
+            peak = peak.max(mx);
+        }
+        ThermalReport { temp, peak_c: peak, tier_peak_c, tier_delta_c }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Placement;
+    use crate::config::Config;
+    use crate::thermal::grid::PowerGrid;
+
+    fn uniform_grid(tier_powers: &[f64; 4]) -> PowerGrid {
+        let mut g = PowerGrid::zeros();
+        for (t, &p) in tier_powers.iter().enumerate() {
+            for c in g.power[t].iter_mut() {
+                *c = p / (FINE * FINE) as f64;
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn eq2_uniform_matches_hand_computation() {
+        let cfg = Config::default();
+        let m = ThermalModel::new(&cfg);
+        let g = uniform_grid(&[10.0, 10.0, 10.0, 10.0]);
+        let t = m.column_temperatures(&g);
+        // Hand Eq. 2 with whole-die powers and resistances:
+        // T(k) = Σ_{i≤k} P·i·R + R_b·Σ_{i≤k} P (per column scales cancel).
+        let r = cfg.r_tier;
+        let rb = cfg.r_base;
+        for k in 0..4 {
+            let mut t_acc = 0.0;
+            let mut p_acc = 0.0;
+            for i in 0..=k {
+                t_acc += 10.0 * (i as f64 + 1.0) * r;
+                p_acc += 10.0;
+            }
+            let expected = cfg.ambient_c + t_acc + rb * p_acc;
+            let got = t[k][0];
+            assert!((got - expected).abs() < 1e-9, "k={k}: {got} vs {expected}");
+        }
+    }
+
+    #[test]
+    fn upper_layers_hotter_under_uniform_power() {
+        let cfg = Config::default();
+        let m = ThermalModel::new(&cfg);
+        let rep = m.evaluate(&uniform_grid(&[20.0, 20.0, 20.0, 20.0]));
+        for k in 1..4 {
+            assert!(rep.tier_peak_c[k] > rep.tier_peak_c[k - 1]);
+        }
+        assert!(rep.peak_c > cfg.ambient_c);
+    }
+
+    #[test]
+    fn hot_tier_near_sink_cooler_than_far() {
+        let cfg = Config::default();
+        let m = ThermalModel::new(&cfg);
+        let near = m.evaluate(&uniform_grid(&[60.0, 5.0, 5.0, 5.0]));
+        let far = m.evaluate(&uniform_grid(&[5.0, 5.0, 5.0, 60.0]));
+        assert!(near.peak_c < far.peak_c, "{} vs {}", near.peak_c, far.peak_c);
+    }
+
+    #[test]
+    fn lateral_relaxation_reduces_delta() {
+        let cfg = Config::default();
+        let m = ThermalModel::new(&cfg);
+        // Single hot column.
+        let mut g = PowerGrid::zeros();
+        g.power[3][0] = 30.0;
+        let raw = m.column_temperatures(&g);
+        let raw_delta = raw[3].iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b))
+            - raw[3].iter().fold(f64::INFINITY, |a, &b| a.min(b));
+        let rep = m.evaluate(&g);
+        assert!(rep.tier_delta_c[3] < raw_delta);
+        assert!(rep.tier_delta_c[3] > 0.0);
+    }
+
+    #[test]
+    fn objective_penalizes_both_peak_and_gradient() {
+        let cfg = Config::default();
+        let m = ThermalModel::new(&cfg);
+        let uniform = m.evaluate(&uniform_grid(&[20.0, 20.0, 20.0, 20.0]));
+        let mut g = uniform_grid(&[20.0, 20.0, 20.0, 0.0]);
+        // Same total power but concentrated in one quadrant of tier 3.
+        for y in 0..FINE {
+            for x in 0..FINE {
+                g.power[3][y * FINE + x] =
+                    if x < 6 && y < 6 { 20.0 / 36.0 } else { 0.0 };
+            }
+        }
+        let skewed = m.evaluate(&g);
+        assert!(skewed.objective() > uniform.objective());
+    }
+
+    #[test]
+    fn realistic_hetrax_powers_land_in_paper_band() {
+        // PT arrangement (ReRAM farthest from sink): peak ≈ 78 °C;
+        // PTN (ReRAM at sink): peak ≈ 81 °C, ReRAM tier ≈ 57 °C (§5.2).
+        // Here: tier powers ≈ SM tiers 24 W, ReRAM 21 W.
+        let cfg = Config::default();
+        let m = ThermalModel::new(&cfg);
+        let pt = m.evaluate(&uniform_grid(&[24.0, 24.0, 24.0, 21.0]));
+        let ptn = m.evaluate(&uniform_grid(&[21.0, 24.0, 24.0, 24.0]));
+        assert!(
+            (pt.peak_c - 78.0).abs() < 6.0,
+            "PT peak {} should be near 78 °C",
+            pt.peak_c
+        );
+        assert!(
+            (ptn.peak_c - 81.0).abs() < 6.0,
+            "PTN peak {} should be near 81 °C",
+            ptn.peak_c
+        );
+        assert!(ptn.peak_c > pt.peak_c, "PTN runs slightly hotter (§5.2)");
+        assert!(
+            (ptn.tier_peak_c[0] - 57.0).abs() < 6.0,
+            "PTN ReRAM tier {} should be near 57 °C",
+            ptn.tier_peak_c[0]
+        );
+        let _ = Placement::mesh_baseline(&cfg);
+    }
+}

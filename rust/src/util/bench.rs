@@ -1,0 +1,203 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Provides the two things the paper benches need: (a) wall-clock timing
+//! with warmup + repeated samples and robust statistics, and (b) a tabular
+//! reporter that prints the same rows/series a paper figure shows.
+//! `cargo bench` runs each `rust/benches/*.rs` with `harness = false`, so
+//! those files call into this module from `fn main()`.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of timing one closure.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl Timing {
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn std_s(&self) -> f64 {
+        stats::std_dev(&self.samples)
+    }
+
+    pub fn median_s(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>12} ± {:>10}  (median {:>12}, n={})",
+            self.name,
+            human_time(self.mean_s()),
+            human_time(self.std_s()),
+            human_time(self.median_s()),
+            self.samples.len(),
+        )
+    }
+}
+
+/// Pretty-print seconds with an adaptive unit.
+pub fn human_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner with warmup and adaptive batching: very fast closures
+/// are looped enough times per sample that timer resolution is irrelevant.
+pub struct Bencher {
+    warmup_iters: u32,
+    samples: u32,
+    min_sample_time_s: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, samples: 12, min_sample_time_s: 0.02 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, samples: 5, min_sample_time_s: 0.005 }
+    }
+
+    /// Time `f`, preventing the compiler from discarding its result.
+    pub fn time<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Timing {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        // Calibrate: how many iterations per sample to cover min_sample_time?
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = (self.min_sample_time_s / once).ceil().max(1.0) as u64;
+
+        let mut samples = Vec::with_capacity(self.samples as usize);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        let timing = Timing { name: name.to_string(), samples };
+        println!("{}", timing.report());
+        timing
+    }
+}
+
+/// Tabular reporter for figure-style output: named rows × named columns.
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<(String, Vec<String>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, name: &str, values: &[String]) -> &mut Self {
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((name.to_string(), values.to_vec()));
+        self
+    }
+
+    pub fn row_f(&mut self, name: &str, values: &[f64]) -> &mut Self {
+        let vals: Vec<String> = values.iter().map(|v| format!("{v:.3}")).collect();
+        self.row(name, &vals)
+    }
+
+    pub fn print(&self) {
+        let name_w = self
+            .rows
+            .iter()
+            .map(|(n, _)| n.len())
+            .chain([12])
+            .max()
+            .unwrap();
+        let col_w = self
+            .columns
+            .iter()
+            .map(|c| c.len())
+            .chain(self.rows.iter().flat_map(|(_, v)| v.iter().map(|s| s.len())))
+            .max()
+            .unwrap()
+            + 2;
+        println!("\n== {} ==", self.title);
+        print!("{:<name_w$}", "");
+        for c in &self.columns {
+            print!("{c:>col_w$}");
+        }
+        println!();
+        for (name, vals) in &self.rows {
+            print!("{name:<name_w$}");
+            for v in vals {
+                print!("{v:>col_w$}");
+            }
+            println!();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats_reasonable() {
+        let b = Bencher::quick();
+        let t = b.time("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(t.mean_s() > 0.0);
+        assert!(t.samples.len() == 5);
+        assert!(t.mean_s() < 0.01, "100 mults should be fast, got {}", t.mean_s());
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(2.5), "2.500 s");
+        assert!(human_time(3e-3).ends_with("ms"));
+        assert!(human_time(4e-6).ends_with("µs"));
+        assert!(human_time(5e-9).ends_with("ns"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row("x", &["1".into()]);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new("demo", &["col1", "col2"]);
+        t.row_f("r1", &[1.0, 2.0]);
+        t.row_f("r2", &[3.5, 4.25]);
+        t.print(); // should not panic
+        assert_eq!(t.rows.len(), 2);
+    }
+}

@@ -1,0 +1,9 @@
+//! Shared utilities: deterministic PRNG, statistics, JSON, HTX tensor IO,
+//! and the bench harness. All self-contained — the offline environment
+//! provides no rand/serde/criterion.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod tensor_io;

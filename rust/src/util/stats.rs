@@ -1,0 +1,239 @@
+//! Small statistics helpers shared by the NoC stats, thermal solver,
+//! optimizer objectives (Eq. 1 uses mean/stddev of link utilization) and
+//! the bench harness.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation (the paper's Eq. 1 σ(λ) divides by L,
+/// not L−1); 0.0 for an empty slice.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Linear-interpolated percentile, p in [0, 100]. Sorts a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p), "percentile {p}");
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Online mean/variance/min/max accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Accumulator { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.m2 / self.n as f64 }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Ordinary least squares fit y ≈ X·β via normal equations with ridge
+/// damping (used by MOO-STAGE's learned value function). `xs` rows are
+/// feature vectors (a 1-bias column is appended internally).
+pub fn ridge_regression(xs: &[Vec<f64>], ys: &[f64], lambda: f64) -> Vec<f64> {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    let d = xs[0].len() + 1; // + bias
+    // Build Xᵀ X + λI and Xᵀ y.
+    let mut ata = vec![vec![0.0; d]; d];
+    let mut aty = vec![0.0; d];
+    for (row, &y) in xs.iter().zip(ys) {
+        debug_assert_eq!(row.len() + 1, d);
+        let feat = |i: usize| if i < row.len() { row[i] } else { 1.0 };
+        for i in 0..d {
+            aty[i] += feat(i) * y;
+            for j in 0..d {
+                ata[i][j] += feat(i) * feat(j);
+            }
+        }
+    }
+    for (i, row) in ata.iter_mut().enumerate() {
+        row[i] += lambda;
+    }
+    solve_linear(&mut ata, &mut aty);
+    aty
+}
+
+/// In-place Gaussian elimination with partial pivoting; solution left in `b`.
+/// Singular systems fall back to the unregularized least-norm-ish result of
+/// whatever pivots exist (fine for a heuristic value function).
+fn solve_linear(a: &mut [Vec<f64>], b: &mut [f64]) {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv][col].abs() < 1e-12 {
+            continue;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let diag = a[col][col];
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = a[r][col] / diag;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    for i in 0..n {
+        if a[i][i].abs() > 1e-12 {
+            b[i] /= a[i][i];
+        } else {
+            b[i] = 0.0;
+        }
+    }
+}
+
+/// Evaluate a ridge_regression model on a feature vector.
+pub fn predict_linear(beta: &[f64], x: &[f64]) -> f64 {
+    debug_assert_eq!(beta.len(), x.len() + 1);
+    x.iter().zip(beta).map(|(a, b)| a * b).sum::<f64>() + beta[beta.len() - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_slices() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn accumulator_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut acc = Accumulator::new();
+        for &x in &xs {
+            acc.push(x);
+        }
+        assert!((acc.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((acc.std_dev() - std_dev(&xs)).abs() < 1e-12);
+        assert_eq!(acc.min(), 1.0);
+        assert_eq!(acc.max(), 9.0);
+        assert_eq!(acc.count(), 8);
+    }
+
+    #[test]
+    fn regression_recovers_linear_function() {
+        // y = 2 x0 - 3 x1 + 0.5
+        let xs: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![i as f64 * 0.1, (i % 7) as f64])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x[0] - 3.0 * x[1] + 0.5).collect();
+        let beta = ridge_regression(&xs, &ys, 1e-9);
+        assert!((beta[0] - 2.0).abs() < 1e-6, "{beta:?}");
+        assert!((beta[1] + 3.0).abs() < 1e-6);
+        assert!((beta[2] - 0.5).abs() < 1e-6);
+        let pred = predict_linear(&beta, &[1.0, 1.0]);
+        assert!((pred - (2.0 - 3.0 + 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn regression_handles_collinear_features() {
+        // x1 == x0 duplicated: ridge keeps it finite.
+        let xs: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64, i as f64]).collect();
+        let ys: Vec<f64> = (0..20).map(|i| 4.0 * i as f64).collect();
+        let beta = ridge_regression(&xs, &ys, 1e-6);
+        let pred = predict_linear(&beta, &[10.0, 10.0]);
+        assert!((pred - 40.0).abs() < 0.1, "pred {pred}");
+    }
+}

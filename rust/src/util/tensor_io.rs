@@ -1,0 +1,227 @@
+//! HTX tensor-archive reader — the Rust half of
+//! `python/compile/tensor_io.py` (see that file for the format spec).
+//!
+//! Loads classifier weights, eval datasets, and the bert-tiny serving
+//! weights written at `make artifacts` time. Order-preserving; the Fig. 4
+//! driver relies on the archive order matching `classifier.PARAM_NAMES`.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    fn from_code(code: u8) -> Result<DType> {
+        Ok(match code {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U8,
+            _ => bail!("unknown dtype code {code}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+}
+
+/// A named tensor from an HTX archive.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    /// Raw little-endian bytes, C order.
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<usize>().max(if self.dims.is_empty() { 1 } else { 0 })
+    }
+
+    /// View as f32; errors if the dtype differs.
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("{}: expected f32, found {:?}", self.name, self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("{}: expected i32, found {:?}", self.name, self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+/// An order-preserving collection of tensors.
+#[derive(Debug, Default)]
+pub struct Archive {
+    pub tensors: Vec<Tensor>,
+}
+
+impl Archive {
+    pub fn load(path: impl AsRef<Path>) -> Result<Archive> {
+        let path = path.as_ref();
+        let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<Archive> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            let end = pos.checked_add(n).context("overflow")?;
+            if end > bytes.len() {
+                bail!("truncated archive at byte {pos}");
+            }
+            let s = &bytes[*pos..end];
+            *pos = end;
+            Ok(s)
+        };
+        let read_u32 = |pos: &mut usize| -> Result<u32> {
+            let b = take(pos, 4)?;
+            Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        };
+
+        if take(&mut pos, 4)? != b"HTX1" {
+            bail!("bad magic (not an HTX1 archive)");
+        }
+        let count = read_u32(&mut pos)? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nlen = read_u32(&mut pos)? as usize;
+            let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())
+                .context("tensor name not utf-8")?;
+            let dtype = DType::from_code(take(&mut pos, 1)?[0])?;
+            let ndim = read_u32(&mut pos)? as usize;
+            if ndim > 8 {
+                bail!("{name}: implausible ndim {ndim}");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut pos)? as usize);
+            }
+            let n: usize = if ndim == 0 { 1 } else { dims.iter().product() };
+            let data = take(&mut pos, n * dtype.size())?.to_vec();
+            tensors.push(Tensor { name, dtype, dims, data });
+        }
+        if pos != bytes.len() {
+            bail!("trailing bytes after last tensor");
+        }
+        Ok(Archive { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.iter().map(|t| t.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build a tiny archive matching the Python writer's layout.
+    fn build(entries: &[(&str, u8, &[u32], &[u8])]) -> Vec<u8> {
+        let mut v = b"HTX1".to_vec();
+        v.extend((entries.len() as u32).to_le_bytes());
+        for (name, code, dims, data) in entries {
+            v.extend((name.len() as u32).to_le_bytes());
+            v.extend(name.as_bytes());
+            v.push(*code);
+            v.extend((dims.len() as u32).to_le_bytes());
+            for d in *dims {
+                v.extend(d.to_le_bytes());
+            }
+            v.extend(*data);
+        }
+        v
+    }
+
+    #[test]
+    fn parses_f32_matrix() {
+        let data: Vec<u8> = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]
+            .iter()
+            .flat_map(|f| f.to_le_bytes())
+            .collect();
+        let bytes = build(&[("w", 0, &[2, 3], &data)]);
+        let a = Archive::parse(&bytes).unwrap();
+        let t = a.get("w").unwrap();
+        assert_eq!(t.dims, vec![2, 3]);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn parses_scalar_and_empty() {
+        let bytes = build(&[
+            ("s", 2, &[], &[255u8]),
+            ("e", 0, &[0, 5], &[]),
+        ]);
+        let a = Archive::parse(&bytes).unwrap();
+        assert_eq!(a.get("s").unwrap().data, vec![255]);
+        assert_eq!(a.get("e").unwrap().element_count(), 0);
+    }
+
+    #[test]
+    fn preserves_order() {
+        let bytes = build(&[
+            ("z", 2, &[1], &[1]),
+            ("a", 2, &[1], &[2]),
+            ("m", 2, &[1], &[3]),
+        ]);
+        let a = Archive::parse(&bytes).unwrap();
+        assert_eq!(a.names(), vec!["z", "a", "m"]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Archive::parse(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let data: Vec<u8> = [1.0f32; 6].iter().flat_map(|f| f.to_le_bytes()).collect();
+        let bytes = build(&[("w", 0, &[2, 3], &data)]);
+        assert!(Archive::parse(&bytes[..bytes.len() - 1]).is_err());
+        assert!(Archive::parse(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = build(&[("s", 2, &[1], &[9])]);
+        bytes.push(0);
+        assert!(Archive::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let bytes = build(&[("s", 1, &[1], &[0, 0, 0, 0])]);
+        let a = Archive::parse(&bytes).unwrap();
+        assert!(a.get("s").unwrap().as_f32().is_err());
+        assert_eq!(a.get("s").unwrap().as_i32().unwrap(), vec![0]);
+    }
+}

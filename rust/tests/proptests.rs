@@ -1,0 +1,284 @@
+//! Property-based tests over coordinator/NoC/optimizer invariants.
+//!
+//! The offline environment has no proptest crate, so properties are
+//! checked with seeded random-structure sweeps (256+ cases each): every
+//! case is reproducible from its printed seed. These cover the
+//! L3-invariant surface DESIGN.md calls out: routing (paths legal and
+//! loop-free on arbitrary perturbed topologies), batching (no request
+//! lost/duplicated under any arrival pattern), and state management
+//! (placement perturbation chains never violate structural invariants;
+//! archives stay mutually non-dominated).
+
+use hetrax::arch::{CoreKind, Placement};
+use hetrax::config::Config;
+use hetrax::coordinator::{Batcher, BatcherConfig, Engine, Request};
+use hetrax::model::{ArchVariant, ModelId, Workload};
+use hetrax::noc::{traffic, NocSim, Topology};
+use hetrax::optim::pareto::dominates;
+use hetrax::optim::{Evaluator, ObjectiveSet, ParetoArchive};
+use hetrax::util::rng::Rng;
+
+/// Random placement from a random perturbation chain.
+fn random_perturbed(cfg: &Config, rng: &mut Rng) -> Placement {
+    let mut p = Placement::random(cfg, rng);
+    for _ in 0..rng.below(30) {
+        p = p.perturb(cfg, rng);
+    }
+    p
+}
+
+#[test]
+fn prop_routing_paths_are_legal_on_any_topology() {
+    let cfg = Config::default();
+    let mut rng = Rng::new(2024);
+    for case in 0..64 {
+        let p = random_perturbed(&cfg, &mut rng);
+        let topo = Topology::build(&cfg, &p);
+        for src in 0..topo.n {
+            for dst in 0..topo.n {
+                match topo.path(src, dst) {
+                    Some(path) => {
+                        // Contiguous, ends at dst, length == dist, simple.
+                        let mut cur = src;
+                        let mut seen = vec![false; topo.n];
+                        seen[cur] = true;
+                        for &l in &path {
+                            assert_eq!(topo.links[l].from, cur, "case {case}");
+                            cur = topo.links[l].to;
+                            assert!(!seen[cur], "case {case}: loop at {cur}");
+                            seen[cur] = true;
+                        }
+                        if src != dst {
+                            assert_eq!(cur, dst, "case {case}");
+                        }
+                        assert_eq!(
+                            path.len(),
+                            topo.dist[src * topo.n + dst] as usize,
+                            "case {case}: {src}->{dst}"
+                        );
+                    }
+                    None => {
+                        assert_eq!(
+                            topo.dist[src * topo.n + dst],
+                            u16::MAX,
+                            "case {case}: missing path with finite dist"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_up_down_routing_is_deadlock_free_under_saturation() {
+    // Saturating random traffic on random (connected) topologies must
+    // always drain — the up*/down* guarantee the wormhole sim relies on.
+    let cfg = Config::default();
+    let mut rng = Rng::new(777);
+    let mut tested = 0;
+    while tested < 8 {
+        let p = random_perturbed(&cfg, &mut rng);
+        let topo = Topology::build(&cfg, &p);
+        if !topo.connected() {
+            continue;
+        }
+        tested += 1;
+        let mut packets = Vec::new();
+        for i in 0..400u64 {
+            let src = rng.below(topo.n);
+            let mut dst = rng.below(topo.n);
+            while dst == src {
+                dst = rng.below(topo.n);
+            }
+            packets.push(hetrax::noc::PacketSpec {
+                src,
+                dst,
+                flits: 1 + rng.below(16) as u32,
+                inject_at: i % 50,
+            });
+        }
+        let total: u64 = packets.iter().map(|p| p.flits as u64).sum();
+        let trace = hetrax::noc::TrafficTrace { packets };
+        let mut sim = NocSim::new(&cfg, &topo);
+        let report = sim.run(&trace, 5_000_000);
+        assert_eq!(report.delivered_flits, total, "deadlock or loss (case {tested})");
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    let mut rng = Rng::new(99);
+    for case in 0..256 {
+        let n = 1 + rng.below(40);
+        let max_batch = 1 + rng.below(12);
+        let max_wait = rng.f64() * 0.01;
+        let models = [ModelId::BertTiny, ModelId::BertBase, ModelId::BartBase];
+        let requests: Vec<Request> = (0..n as u64)
+            .map(|i| {
+                let mut r = Request::synthetic(
+                    i,
+                    *rng.choose(&models),
+                    8 + rng.below(256),
+                    rng.f64() * 0.05,
+                );
+                if rng.chance(0.3) {
+                    r.variant = ArchVariant::Mqa;
+                }
+                r
+            })
+            .collect();
+        let batches = Batcher::new(BatcherConfig { max_batch, max_wait_s: max_wait })
+            .form_batches(requests.clone());
+        // Conservation: every id exactly once.
+        let mut ids: Vec<u64> = batches
+            .iter()
+            .flat_map(|b| b.requests.iter().map(|r| r.id))
+            .collect();
+        ids.sort_unstable();
+        let mut expected: Vec<u64> = requests.iter().map(|r| r.id).collect();
+        expected.sort_unstable();
+        assert_eq!(ids, expected, "case {case}");
+        for b in &batches {
+            assert!(!b.requests.is_empty() && b.requests.len() <= max_batch, "case {case}");
+            // Homogeneity.
+            let (m, v) = (b.requests[0].model, b.requests[0].variant);
+            assert!(b.requests.iter().all(|r| r.model == m && r.variant == v));
+            // Window respected.
+            let first = b.requests.first().unwrap().arrival_s;
+            let last = b.requests.last().unwrap().arrival_s;
+            assert!(last - first <= max_wait + 1e-12, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_engine_serves_every_request_exactly_once() {
+    let cfg = Config::default();
+    let engine = Engine::new(&cfg);
+    let mut rng = Rng::new(55);
+    for case in 0..48 {
+        let n = 1 + rng.below(24);
+        let requests: Vec<Request> = (0..n as u64)
+            .map(|i| Request::synthetic(i, ModelId::BertTiny, 32 + rng.below(128), rng.f64() * 0.01))
+            .collect();
+        let batches = Batcher::new(BatcherConfig {
+            max_batch: 1 + rng.below(8),
+            max_wait_s: rng.f64() * 0.005,
+        })
+        .form_batches(requests);
+        let report = engine.serve(&batches);
+        assert_eq!(report.responses.len(), n, "case {case}");
+        let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "case {case}");
+        // Latency ≥ pure service time, finish after arrival.
+        for r in &report.responses {
+            assert!(r.latency_s > 0.0 && r.finish_s >= r.latency_s - 1e-12, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_placement_perturbation_chain_preserves_invariants() {
+    let cfg = Config::default();
+    let mut rng = Rng::new(31337);
+    let mesh_cap = cfg.sm_mc_tiers * 2 * cfg.sm_mc_grid * (cfg.sm_mc_grid - 1);
+    for case in 0..32 {
+        let mut p = Placement::random(&cfg, &mut rng);
+        for step in 0..100 {
+            p = p.perturb(&cfg, &mut rng);
+            // Permutation of SM/MC cores over sites.
+            let mut ids = p.smmc_sites.clone();
+            ids.sort_unstable();
+            assert_eq!(ids, (0..27).collect::<Vec<_>>(), "case {case} step {step}");
+            // All four tier kinds present exactly once.
+            assert_eq!(p.tier_order.len(), 4);
+            // Link cap (§4.4 power constraint) and port budget.
+            assert!(p.planar_links.len() <= mesh_cap, "case {case}");
+            for id in 0..cfg.total_cores() {
+                assert!(p.port_count(&cfg, id) <= cfg.max_ports);
+            }
+            // No self-links or duplicates.
+            for (i, &(a, b)) in p.planar_links.iter().enumerate() {
+                assert_ne!(a, b);
+                assert!(a < b, "canonical ordering");
+                assert!(
+                    !p.planar_links[i + 1..].contains(&(a, b)),
+                    "case {case}: duplicate link"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pareto_archive_mutually_nondominated() {
+    let cfg = Config::default();
+    let w = Workload::build(ModelId::BertBase, ArchVariant::EncoderOnly, 256);
+    let ev = Evaluator::new(&cfg, &w);
+    let mut rng = Rng::new(4242);
+    let set = ObjectiveSet::ptn();
+    let mut archive = ParetoArchive::new(set, 24);
+    for _ in 0..80 {
+        let p = random_perturbed(&cfg, &mut rng);
+        let o = ev.evaluate(&p);
+        archive.insert(&p, &o);
+    }
+    assert!(!archive.is_empty());
+    for i in 0..archive.entries.len() {
+        for j in 0..archive.entries.len() {
+            if i != j {
+                assert!(
+                    !dominates(
+                        &archive.entries[i].objectives,
+                        &archive.entries[j].objectives,
+                        &set
+                    ),
+                    "archive entries {i} dominates {j}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_traffic_flows_conserve_bytes_across_placements() {
+    // Workload flows are placement-independent; utilization must scale
+    // linearly with flow bytes on every topology.
+    let cfg = Config::default();
+    let w = Workload::build(ModelId::BertBase, ArchVariant::EncoderOnly, 256);
+    let flows = traffic::workload_flows(&cfg, &w);
+    let mut rng = Rng::new(808);
+    for case in 0..16 {
+        let p = random_perturbed(&cfg, &mut rng);
+        let topo = Topology::build(&cfg, &p);
+        if !topo.connected() {
+            continue;
+        }
+        let u1 = topo.link_utilization(&cfg, &flows, 1e-3);
+        let u2 = topo.link_utilization(&cfg, &traffic::scale_flows(&flows, 2.0), 1e-3);
+        for (a, b) in u1.iter().zip(&u2) {
+            assert!((2.0 * a - b).abs() < 1e-9, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_core_kind_partition_is_stable() {
+    let cfg = Config::default();
+    let mut rng = Rng::new(606);
+    for _ in 0..64 {
+        let p = random_perturbed(&cfg, &mut rng);
+        // Kind of core never changes with placement; ReRAM cores always
+        // land on the ReRAM tier, SM/MC never do.
+        let reram_tier = p.reram_tier();
+        for id in 0..cfg.total_cores() {
+            let site = p.site_of(&cfg, id);
+            match hetrax::arch::cores::kind_of(&cfg, id) {
+                CoreKind::ReRam => assert_eq!(site.tier, reram_tier),
+                _ => assert_ne!(site.tier, reram_tier),
+            }
+        }
+    }
+}
