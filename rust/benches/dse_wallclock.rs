@@ -1,0 +1,68 @@
+//! DSE wall-clock bench — MOO-STAGE end to end, serial (threads = 1, the
+//! pre-parallel-engine path) vs the worker-pool fan-out, plus the seeded
+//! determinism contract: both must produce byte-identical Pareto
+//! archives. Emits `BENCH_dse.json` (path overridable via
+//! `BENCH_DSE_JSON`) for the CI perf trajectory.
+use hetrax::config::Config;
+use hetrax::model::{ArchVariant, ModelId, Workload};
+use hetrax::optim::{DseResult, Evaluator, MooStage, ObjectiveSet};
+use hetrax::util::bench::Bencher;
+use hetrax::util::json::Json;
+use hetrax::util::pool;
+use hetrax::util::rng::Rng;
+
+/// A fresh evaluator per run keeps the memo cold, so each timed sample
+/// pays the same evaluation cost (memo hits *within* a run still count —
+/// they are part of the engine being measured).
+fn run_dse(cfg: &Config, w: &Workload, threads: usize, seed: u64) -> DseResult {
+    let ev = Evaluator::new(cfg, w);
+    let mut stage = MooStage::new(cfg, &ev, ObjectiveSet::ptn());
+    stage.epochs = 6;
+    stage.perturbations = 10;
+    stage.steps_per_epoch = 6;
+    stage.threads = threads;
+    stage.run(&mut Rng::new(seed))
+}
+
+fn main() {
+    let cfg = Config::default();
+    let w = Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, 512);
+    let auto = pool::resolve_threads(0);
+
+    let b = Bencher::quick();
+    let t_serial = b.time("MOO-STAGE PTN, serial (threads=1)", || {
+        run_dse(&cfg, &w, 1, 42)
+    });
+    let t_par = b.time(
+        &format!("MOO-STAGE PTN, worker pool (threads={auto})"),
+        || run_dse(&cfg, &w, auto, 42),
+    );
+    let speedup = t_serial.median_s() / t_par.median_s();
+
+    // Determinism contract: identical archives regardless of threads.
+    let serial = run_dse(&cfg, &w, 1, 7);
+    let parallel = run_dse(&cfg, &w, auto, 7);
+    assert_eq!(serial.evaluations, parallel.evaluations);
+    assert_eq!(serial.history, parallel.history);
+    assert_eq!(serial.archive.len(), parallel.archive.len());
+    for (a, bb) in serial.archive.entries.iter().zip(&parallel.archive.entries) {
+        assert_eq!(a.objectives.vals, bb.objectives.vals);
+        assert!(a.placement == bb.placement);
+    }
+    println!("\n  determinism: serial and parallel archives identical \
+              ({} entries, {} evaluations)",
+             serial.archive.len(), serial.evaluations);
+    println!("  DSE wall-clock speedup: {speedup:.2}x (threads={auto})");
+
+    let mut doc = Json::obj();
+    doc.set("bench", "dse_wallclock")
+        .set("threads", auto)
+        .set("serial_median_s", t_serial.median_s())
+        .set("parallel_median_s", t_par.median_s())
+        .set("speedup", speedup)
+        .set("evaluations", serial.evaluations)
+        .set("archive_len", serial.archive.len());
+    let out = std::env::var("BENCH_DSE_JSON").unwrap_or_else(|_| "BENCH_dse.json".into());
+    std::fs::write(&out, doc.pretty()).expect("write bench json");
+    println!("wrote {out}");
+}

@@ -1,9 +1,15 @@
 //! NoC simulator hot-path bench — the §Perf headline metric
 //! (flit-hops/second) plus routing/evaluation microbenchmarks.
+//!
+//! Reports the fast-lane gain directly: "rebuild `NocSim` per run" is the
+//! pre-fast-lane sweep shape, "reused instance" is the `reset()` lane
+//! sweeps use now (DESIGN.md §Perf). Emits `BENCH_noc.json` (path
+//! overridable via `BENCH_NOC_JSON`) for the CI perf trajectory.
 use hetrax::arch::Placement;
 use hetrax::config::Config;
 use hetrax::noc::{traffic, NocSim, Topology};
 use hetrax::util::bench::Bencher;
+use hetrax::util::json::Json;
 use hetrax::util::rng::Rng;
 
 fn main() {
@@ -21,16 +27,22 @@ fn main() {
     let total_flits: u64 = trace.packets.iter().map(|p| p.flits as u64).sum();
 
     let b = Bencher::default();
-    let t = b.time("cycle sim: saturating trace to completion", || {
+    let t_rebuild = b.time("cycle sim: rebuild NocSim per run", || {
         let mut sim = NocSim::new(&cfg, &topo);
         sim.run(&trace, 10_000_000)
     });
-    // Report the perf metric.
     let mut sim = NocSim::new(&cfg, &topo);
+    let t_reuse = b.time("cycle sim: reused instance (reset fast lane)", || {
+        sim.run(&trace, 10_000_000)
+    });
+
+    // Report the perf metric off the fast lane.
     let report = sim.run(&trace, 10_000_000);
-    let hops_per_s = report.flit_hops as f64 / t.median_s();
+    let hops_per_s = report.flit_hops as f64 / t_reuse.median_s();
+    let reuse_speedup = t_rebuild.median_s() / t_reuse.median_s();
     println!("\n  flit-hops/s: {:.2} M  (cycles {} | flits {} | {:.3} flits/cycle)",
              hops_per_s / 1e6, report.cycles, total_flits, report.throughput());
+    println!("  sweep speedup, reused instance vs rebuild-per-run: {reuse_speedup:.2}x");
 
     b.time("analytic Eq.1 utilization (200 flows)", || {
         topo.utilization_stats(&cfg, &flows, 1e-3)
@@ -44,4 +56,19 @@ fn main() {
         }
         acc
     });
+
+    // Machine-readable record for the CI perf trajectory.
+    let mut doc = Json::obj();
+    doc.set("bench", "noc_hotpath")
+        .set("flit_hops_per_s", hops_per_s)
+        .set("flit_hops", report.flit_hops)
+        .set("cycles", report.cycles)
+        .set("delivered_flits", report.delivered_flits)
+        .set("throughput_flits_per_cycle", report.throughput())
+        .set("run_median_s", t_reuse.median_s())
+        .set("rebuild_median_s", t_rebuild.median_s())
+        .set("reuse_speedup", reuse_speedup);
+    let out = std::env::var("BENCH_NOC_JSON").unwrap_or_else(|_| "BENCH_noc.json".into());
+    std::fs::write(&out, doc.pretty()).expect("write bench json");
+    println!("wrote {out}");
 }

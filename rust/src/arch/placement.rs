@@ -302,6 +302,56 @@ impl Placement {
         links
     }
 
+    /// Stable 64-bit fingerprint of the design point, independent of the
+    /// incidental order of `planar_links` (perturbation moves shuffle it
+    /// via `swap_remove`, but the wires are an unordered set). Keys the
+    /// objective-evaluation memo (optim::objectives) so DSE restarts
+    /// never re-simulate a visited point. FNV-1a over the canonicalized
+    /// fields; not a std `Hasher` because the value must be identical
+    /// across runs and platforms.
+    pub fn stable_hash(&self) -> u64 {
+        #[inline]
+        fn mix(h: u64, x: u64) -> u64 {
+            (h ^ x).wrapping_mul(0x100000001b3)
+        }
+        let mut h = 0xcbf29ce484222325u64;
+        for t in &self.tier_order {
+            h = mix(h, match t {
+                TierKind::ReRam => u64::MAX,
+                TierKind::SmMc(i) => *i as u64,
+            });
+        }
+        for &c in &self.smmc_sites {
+            h = mix(h, c as u64);
+        }
+        let mut links = self.planar_links.clone();
+        links.sort_unstable();
+        for (a, b) in links {
+            h = mix(h, ((a as u64) << 32) | b as u64);
+        }
+        h
+    }
+
+    /// Design equality under the same canonicalization as
+    /// [`Placement::stable_hash`]: `planar_links` is an unordered set
+    /// (perturbation moves permute its storage via `swap_remove`), so
+    /// derived `PartialEq` — which is order-sensitive — would call two
+    /// identical designs different. Used by the evaluation memo's
+    /// collision guard so permuted revisits still hit.
+    pub fn same_design(&self, other: &Placement) -> bool {
+        if self.tier_order != other.tier_order || self.smmc_sites != other.smmc_sites {
+            return false;
+        }
+        if self.planar_links.len() != other.planar_links.len() {
+            return false;
+        }
+        let mut a = self.planar_links.clone();
+        let mut b = other.planar_links.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        a == b
+    }
+
     /// Compact feature vector describing λ — input to MOO-STAGE's learned
     /// value function (optim::stage).
     pub fn features(&self, cfg: &Config) -> Vec<f64> {
@@ -475,6 +525,33 @@ mod tests {
         assert_eq!(f_top[0], 3.0);
         assert_eq!(f_bottom[0], 0.0);
         assert_eq!(f_top.len(), f_bottom.len());
+    }
+
+    #[test]
+    fn stable_hash_ignores_link_order_but_not_design() {
+        let cfg = cfg();
+        let p = Placement::mesh_baseline(&cfg);
+        let mut shuffled = p.clone();
+        shuffled.planar_links.reverse();
+        assert_eq!(p.stable_hash(), shuffled.stable_hash());
+
+        let mut other_tier = p.clone();
+        other_tier.tier_order.swap(0, 3);
+        assert_ne!(p.stable_hash(), other_tier.stable_hash());
+
+        let mut other_sites = p.clone();
+        other_sites.smmc_sites.swap(0, 26);
+        assert_ne!(p.stable_hash(), other_sites.stable_hash());
+
+        let mut fewer_links = p.clone();
+        fewer_links.planar_links.pop();
+        assert_ne!(p.stable_hash(), fewer_links.stable_hash());
+
+        // same_design agrees with the hash's canonicalization.
+        assert!(p.same_design(&shuffled), "link order must not matter");
+        assert!(!p.same_design(&other_tier));
+        assert!(!p.same_design(&other_sites));
+        assert!(!p.same_design(&fewer_links));
     }
 
     #[test]

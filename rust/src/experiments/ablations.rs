@@ -25,6 +25,7 @@ use crate::perf::{timing, PerfEstimator};
 use crate::reram::FfMapping;
 use crate::util::bench::Table;
 use crate::util::json::Json;
+use crate::util::pool;
 
 /// Find the largest frequency scale f ∈ (0, 1] keeping `temp(f) ≤ 95 °C`,
 /// where die power scales ∝ f³ around the nominal point. Bisection, 30
@@ -144,7 +145,9 @@ pub fn overlap_ablation(cfg: &Config, seq: usize) -> (f64, f64) {
     (with_overlap, with_overlap - report.weight_stall_s + exposed)
 }
 
-/// Ablation C: FF latency vs the ReRAM replication budget.
+/// Ablation C: FF latency vs the ReRAM replication budget. The points
+/// are independent, so the sweep runs on the worker pool (input order
+/// preserved).
 pub fn replication_sweep(cfg: &Config, seq: usize) -> Vec<(usize, f64)> {
     let w = Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, seq);
     let ff1 = w
@@ -153,17 +156,16 @@ pub fn replication_sweep(cfg: &Config, seq: usize) -> Vec<(usize, f64)> {
         .find(|i| i.kernel == Kernel::Ff1)
         .unwrap();
     let base = FfMapping::map_model(cfg, w.dims.d_model, w.dims.d_ff, w.dims.layers);
-    let mut out = Vec::new();
-    for repl in [1usize, 2, 4, base.replication.max(1)] {
+    let repls = [1usize, 2, 4, base.replication.max(1)];
+    pool::par_map(&repls, |&repl| {
         let mut m = base.clone();
         m.replication = repl;
         let per_copy = m.xbars_f1 + m.xbars_f2;
         m.tiles_used = (per_copy * repl).div_ceil(specs::RERAM_XBARS_PER_TILE);
         let t = timing::hetrax_kernel_time_s(cfg, Kernel::Ff1, &ff1.cost, &w, &m)
             * w.dims.layers as f64;
-        out.push((repl, t));
-    }
-    out
+        (repl, t)
+    })
 }
 
 /// Full extension report (CLI `hetrax ablations`).

@@ -30,6 +30,10 @@ pub fn run(cfg: &Config, effort: Effort, seed: u64) -> Fig3Outcome {
     // the design minimizing the ReRAM-noise objective (tie-break on
     // thermal) — the Fig. 3b choice that sacrifices 3 °C of peak
     // temperature for a cool ReRAM tier.
+    // The two DSE runs are independent, but each already saturates the
+    // cores through MooStage's worker pool — running them sequentially
+    // avoids 2x thread oversubscription (and two live evaluator memos)
+    // for no wall-clock gain.
     let pt_res = common::optimize_front(cfg, &w, ObjectiveSet::pt(), effort, seed);
     let ptn_res = common::optimize_front(cfg, &w, ObjectiveSet::ptn(), effort, seed);
     let pt_best = pt_res

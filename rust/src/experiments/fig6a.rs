@@ -17,6 +17,7 @@ use crate::perf::{timing, PerfEstimator};
 use crate::reram::FfMapping;
 use crate::util::bench::Table;
 use crate::util::json::Json;
+use crate::util::pool;
 
 pub struct Fig6aOutcome {
     /// (kernel, hetrax_s, haima_s, transpim_s)
@@ -33,12 +34,14 @@ pub fn run(cfg: &Config, seq: usize) -> Fig6aOutcome {
     let haima = Haima::default();
     let transpim = TransPim::default();
 
-    let mut rows = Vec::new();
     let mut table = Table::new(
         &format!("Fig. 6a — per-kernel time, BERT-Large n={seq} (normalized to HeTraX)"),
         &["HeTraX", "HAIMA", "TransPIM"],
     );
-    for kernel in Kernel::ALL {
+    // One independent accumulation per kernel row — fan out on the pool,
+    // report in kernel order afterwards.
+    let kernels = Kernel::ALL;
+    let rows: Vec<(&'static str, f64, f64, f64)> = pool::par_map(&kernels, |&kernel| {
         let mut hetrax = 0.0;
         let mut hm = 0.0;
         let mut tp = 0.0;
@@ -47,8 +50,10 @@ pub fn run(cfg: &Config, seq: usize) -> Fig6aOutcome {
             hm += haima.kernel_time_s(kernel, &inst.cost, &w);
             tp += transpim.kernel_time_s(kernel, &inst.cost, &w);
         }
-        table.row_f(kernel.name(), &[1.0, hm / hetrax, tp / hetrax]);
-        rows.push((kernel.name(), hetrax, hm, tp));
+        (kernel.name(), hetrax, hm, tp)
+    });
+    for (name, hetrax, hm, tp) in &rows {
+        table.row_f(name, &[1.0, hm / hetrax, tp / hetrax]);
     }
     table.print();
 

@@ -20,6 +20,7 @@ use crate::power;
 use crate::thermal::{PowerGrid, ThermalModel};
 use crate::util::bench::Table;
 use crate::util::json::Json;
+use crate::util::pool;
 
 #[derive(Debug, Clone)]
 pub struct VariantRow {
@@ -48,37 +49,38 @@ pub fn hetrax_temp_c(cfg: &Config, placement: &Placement, w: &Workload) -> f64 {
 pub fn run(cfg: &Config, seq: usize, placement: &Placement) -> Fig6bOutcome {
     let haima = Haima::default();
     let transpim = TransPim::default();
-    let mut rows = Vec::new();
     let mut table = Table::new(
         &format!("Fig. 6b — variants at BERT-Large dims, n={seq}"),
         &["HeTraX ms", "HAIMA x", "TransPIM x", "HeTraX °C", "HAIMA °C", "TransPIM °C"],
     );
-    for variant in ArchVariant::ALL {
+    // Each variant's workload build + perf + thermal solve is independent
+    // — one sweep point per pool worker, rows kept in variant order.
+    let variants = ArchVariant::ALL;
+    let rows: Vec<VariantRow> = pool::par_map(&variants, |&variant| {
         let w = Workload::build(ModelId::BertLarge, variant, seq);
         let hetrax_s = PerfEstimator::new(cfg).estimate(&w).latency_s;
-        let haima_s = haima.infer_latency_s(&w);
-        let transpim_s = transpim.infer_latency_s(&w);
-        let row = VariantRow {
+        VariantRow {
             variant: variant.name(),
             hetrax_s,
-            haima_s,
-            transpim_s,
+            haima_s: haima.infer_latency_s(&w),
+            transpim_s: transpim.infer_latency_s(&w),
             hetrax_temp_c: hetrax_temp_c(cfg, placement, &w),
             haima_temp_c: haima.steady_temp_c(&w),
             transpim_temp_c: transpim.steady_temp_c(&w),
-        };
+        }
+    });
+    for row in &rows {
         table.row(
-            variant.name(),
+            row.variant,
             &[
-                format!("{:.2}", hetrax_s * 1e3),
-                format!("{:.2}", haima_s / hetrax_s),
-                format!("{:.2}", transpim_s / hetrax_s),
+                format!("{:.2}", row.hetrax_s * 1e3),
+                format!("{:.2}", row.haima_s / row.hetrax_s),
+                format!("{:.2}", row.transpim_s / row.hetrax_s),
                 format!("{:.1}", row.hetrax_temp_c),
                 format!("{:.1}", row.haima_temp_c),
                 format!("{:.1}", row.transpim_temp_c),
             ],
         );
-        rows.push(row);
     }
     table.print();
 

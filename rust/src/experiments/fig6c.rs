@@ -16,6 +16,7 @@ use crate::model::{ModelId, Workload};
 use crate::perf::PerfEstimator;
 use crate::util::bench::Table;
 use crate::util::json::Json;
+use crate::util::pool;
 
 pub const SEQ_LENGTHS: [usize; 4] = [128, 512, 1024, 2056];
 
@@ -36,29 +37,35 @@ pub struct Fig6cOutcome {
 pub fn run(cfg: &Config) -> Fig6cOutcome {
     let haima = Haima::default();
     let transpim = TransPim::default();
-    let mut rows = Vec::new();
     let mut table = Table::new(
         "Fig. 6c — normalized EDP (baseline / HeTraX)",
         &["HAIMA", "TransPIM"],
     );
+    // The model × sequence-length grid is the biggest figure sweep (20
+    // points, each a full workload build + perf estimate) — fan it out
+    // on the pool; the row order matches the serial nested loops.
+    let mut grid: Vec<(ModelId, usize)> = Vec::with_capacity(ModelId::ALL.len() * SEQ_LENGTHS.len());
     for model in ModelId::ALL {
         for seq in SEQ_LENGTHS {
-            let w = Workload::build(model, model.default_variant(), seq);
-            let r = PerfEstimator::new(cfg).estimate(&w);
-            let hetrax_edp = r.edp();
-            let row = EdpRow {
-                model: w.dims.name,
-                seq,
-                hetrax_edp,
-                haima_edp: haima.infer_edp(&w),
-                transpim_edp: transpim.infer_edp(&w),
-            };
-            table.row_f(
-                &format!("{} n={seq}", w.dims.name),
-                &[row.haima_edp / hetrax_edp, row.transpim_edp / hetrax_edp],
-            );
-            rows.push(row);
+            grid.push((model, seq));
         }
+    }
+    let rows: Vec<EdpRow> = pool::par_map(&grid, |&(model, seq)| {
+        let w = Workload::build(model, model.default_variant(), seq);
+        let r = PerfEstimator::new(cfg).estimate(&w);
+        EdpRow {
+            model: w.dims.name,
+            seq,
+            hetrax_edp: r.edp(),
+            haima_edp: haima.infer_edp(&w),
+            transpim_edp: transpim.infer_edp(&w),
+        }
+    });
+    for row in &rows {
+        table.row_f(
+            &format!("{} n={}", row.model, row.seq),
+            &[row.haima_edp / row.hetrax_edp, row.transpim_edp / row.hetrax_edp],
+        );
     }
     table.print();
 

@@ -119,7 +119,7 @@ fn main() -> Result<()> {
         "endurance" => endurance::run_and_write(args.get("out").unwrap_or("results/endurance.json")),
         "ablations" => ablations::run_and_write(&cfg, args.get("out").unwrap_or("results/ablations.json")),
         "simulate" => cmd_simulate(&cfg, &args, seed),
-        "optimize" => cmd_optimize(&cfg, effort, seed),
+        "optimize" => cmd_optimize(&cfg, &args, effort, seed),
         "serve" => cmd_serve(&cfg, &args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -146,6 +146,7 @@ COMMANDS:
   ablations   DVFS extension + design-choice ablations (fused/overlap/replication)
   simulate    cycle-accurate NoC run [--model M --seq N]
   optimize    full Eq. 6 multi-objective DSE, prints the Pareto front
+              [--threads N] (0 = auto; HETRAX_THREADS env also honoured)
   serve       coordinator serving demo [--requests N --batch N]
 ";
 
@@ -185,6 +186,8 @@ fn cmd_simulate(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     let trace = traffic::trace_from_flows(cfg, &scaled, 20_000, &mut rng);
     println!("cycle-accurate NoC: {} packets over {} links ...",
              trace.packets.len(), topo.links.len());
+    // One simulator instance serves the whole command — the reference
+    // run and the load sweep below reuse it via the reset() fast lane.
     let mut sim = NocSim::new(cfg, &topo);
     let report = sim.run(&trace, 50_000_000);
     println!("  cycles: {}", report.cycles);
@@ -198,16 +201,30 @@ fn cmd_simulate(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     let (a_mu, a_sigma) = topo.utilization_stats(
         cfg, &scaled, report.cycles as f64 / cfg.noc_clock_hz);
     println!("  analytic Eq.1 over the same window: mu={a_mu:.4} sigma={a_sigma:.4}");
+    // Load sweep: how latency and throughput respond as injected load
+    // scales around the reference point (contention behaviour, §5.1).
+    println!("  load sweep (x = scale vs reference):");
+    for factor in [0.5f64, 1.0, 2.0, 4.0] {
+        let sweep_flows = traffic::scale_flows(&scaled, factor);
+        let mut sweep_rng = Rng::new(seed);
+        let sweep_trace = traffic::trace_from_flows(cfg, &sweep_flows, 20_000, &mut sweep_rng);
+        let r = sim.run(&sweep_trace, 50_000_000);
+        println!("    {factor:>4.1}x: avg {:>8.1} cyc  p99 {:>8.1}  {:.3} flits/cycle",
+                 r.avg_latency(), r.p99_latency(), r.throughput());
+    }
     Ok(())
 }
 
-fn cmd_optimize(cfg: &Config, effort: Effort, seed: u64) -> Result<()> {
+fn cmd_optimize(cfg: &Config, args: &Args, effort: Effort, seed: u64) -> Result<()> {
     let w = common::dse_workload();
     let ev = Evaluator::new(cfg, &w);
     let mut stage = MooStage::new(cfg, &ev, ObjectiveSet::ptn());
     stage.epochs = effort.epochs;
     stage.perturbations = effort.perturbations;
     stage.steps_per_epoch = effort.steps_per_epoch;
+    // 0 = auto (one worker per core; HETRAX_THREADS overrides). Seeded
+    // results are identical at any thread count.
+    stage.threads = args.get_usize("threads", 0)?;
     let mut rng = Rng::new(seed);
     let result = stage.run(&mut rng);
     println!("Eq. 6 PTN optimization: {} evaluations, front size {}",

@@ -16,8 +16,15 @@
 //!
 //! Performance notes (DESIGN.md §Perf): flat `Vec` state indexed by link
 //! id, no per-flit heap allocation (flits live in fixed ring buffers),
-//! no hash maps on the tick path. The `noc_hotpath` bench tracks
-//! flit-hops/second.
+//! no hash maps on the tick path. Fast lane on top of that: [`NocSim::reset`]
+//! lets sweeps reuse one instance (per-run buffers are recycled, not
+//! reallocated); packet routes are resolved once at trace load instead of
+//! re-indexing `trace.packets`/`topo.paths` per flit per cycle; FIFOs are
+//! power-of-two rings with mask indexing; and idle stretches between
+//! injection bursts fast-forward straight to the next `inject_at`. The
+//! `noc_hotpath` bench tracks flit-hops/second.
+
+use std::collections::VecDeque;
 
 use crate::config::Config;
 use crate::noc::topology::Topology;
@@ -33,21 +40,29 @@ struct Flit {
 }
 
 /// Fixed-capacity FIFO ring for input buffers (no allocation per flit).
+/// The ring is sized to the next power of two so head/tail indices wrap
+/// with a mask instead of `%`; `depth` keeps the configured capacity as
+/// the backpressure threshold, so simulation results are unchanged.
 #[derive(Debug, Clone)]
 struct Fifo {
     buf: Vec<Flit>,
+    /// `buf.len() - 1`; buf.len() is a power of two.
+    mask: usize,
     head: usize,
     len: usize,
+    /// Logical capacity (credit limit) — may be below `buf.len()`.
+    depth: usize,
 }
 
 impl Fifo {
     fn new(depth: usize) -> Fifo {
-        Fifo { buf: vec![Flit::default(); depth], head: 0, len: 0 }
+        let ring = depth.next_power_of_two().max(1);
+        Fifo { buf: vec![Flit::default(); ring], mask: ring - 1, head: 0, len: 0, depth }
     }
 
     #[inline]
     fn is_full(&self) -> bool {
-        self.len == self.buf.len()
+        self.len == self.depth
     }
 
     #[inline]
@@ -67,7 +82,7 @@ impl Fifo {
     #[inline]
     fn push(&mut self, f: Flit) {
         debug_assert!(!self.is_full());
-        let tail = (self.head + self.len) % self.buf.len();
+        let tail = (self.head + self.len) & self.mask;
         self.buf[tail] = f;
         self.len += 1;
     }
@@ -76,9 +91,15 @@ impl Fifo {
     fn pop(&mut self) -> Flit {
         debug_assert!(!self.is_empty());
         let f = self.buf[self.head];
-        self.head = (self.head + 1) % self.buf.len();
+        self.head = (self.head + 1) & self.mask;
         self.len -= 1;
         f
+    }
+
+    #[inline]
+    fn clear(&mut self) {
+        self.head = 0;
+        self.len = 0;
     }
 }
 
@@ -99,14 +120,11 @@ pub struct NocReport {
 
 impl NocReport {
     pub fn avg_latency(&self) -> f64 {
-        stats::mean(&self.packet_latencies.iter().map(|&l| l as f64).collect::<Vec<_>>())
+        stats::mean_u64(&self.packet_latencies)
     }
 
     pub fn p99_latency(&self) -> f64 {
-        stats::percentile(
-            &self.packet_latencies.iter().map(|&l| l as f64).collect::<Vec<_>>(),
-            99.0,
-        )
+        stats::percentile_u64(&self.packet_latencies, 99.0)
     }
 
     /// Delivered flits per cycle (network throughput).
@@ -162,7 +180,7 @@ pub struct NocSim<'a> {
     /// Scratch: staged (src_node, src_port, link) moves for the current
     /// cycle (reused across cycles — no per-cycle allocation).
     moves: Vec<(u32, u32, u32)>,
-    // ---- hot-path acceleration (see DESIGN.md §Perf / EXPERIMENTS.md) --
+    // ---- hot-path acceleration (see DESIGN.md §Perf) -------------------
     /// Flits resident across all in-port FIFOs of each node; nodes with 0
     /// are skipped entirely in the per-cycle scan.
     node_flits: Vec<u32>,
@@ -178,6 +196,18 @@ pub struct NocSim<'a> {
     eject_cand: Vec<u32>,
     /// Nodes with an ejection candidate (for cheap clearing).
     eject_nodes: Vec<u32>,
+    // ---- per-run state, recycled across run() calls (fast lane) --------
+    /// Route of each packet in the current trace, resolved once at trace
+    /// load — the Phase-1a scan never touches `trace.packets` or the
+    /// `src * n + dst` indexing again.
+    routes: Vec<&'a [u32]>,
+    /// Hops taken by each packet's head.
+    hop_idx: Vec<u32>,
+    /// Cycle each packet was released / its tail ejected.
+    inject_time: Vec<u64>,
+    eject_time: Vec<u64>,
+    /// Injection queues: flits pending per source.
+    inj_queue: Vec<VecDeque<Flit>>,
 }
 
 impl<'a> NocSim<'a> {
@@ -227,20 +257,63 @@ impl<'a> NocSim<'a> {
             touched_links: Vec::with_capacity(topo.links.len()),
             eject_cand: vec![u32::MAX; n],
             eject_nodes: Vec::with_capacity(n),
+            routes: Vec::new(),
+            hop_idx: Vec::new(),
+            inject_time: Vec::new(),
+            eject_time: Vec::new(),
+            inj_queue: vec![VecDeque::new(); n],
+        }
+    }
+
+    /// Restore the simulator to its post-construction state so the same
+    /// instance can run another trace with zero reallocation. `run`
+    /// calls this itself — sweeps just keep calling `run` on one
+    /// instance instead of rebuilding `NocSim` per point.
+    pub fn reset(&mut self) {
+        for ports in &mut self.in_ports {
+            for p in ports.iter_mut() {
+                p.fifo.clear();
+                p.reserved_link = usize::MAX;
+                p.reserved_local = false;
+            }
+        }
+        self.rr_link.iter_mut().for_each(|r| *r = 0);
+        self.link_owner.iter_mut().for_each(|o| *o = u32::MAX);
+        self.rr_eject.iter_mut().for_each(|r| *r = 0);
+        self.moves.clear();
+        self.node_flits.iter_mut().for_each(|f| *f = 0);
+        self.link_cand_head.iter_mut().for_each(|c| *c = u32::MAX);
+        self.cand_next.iter_mut().for_each(|c| *c = u32::MAX);
+        self.touched_links.clear();
+        self.eject_cand.iter_mut().for_each(|e| *e = u32::MAX);
+        self.eject_nodes.clear();
+        self.routes.clear();
+        self.hop_idx.clear();
+        self.inject_time.clear();
+        self.eject_time.clear();
+        for q in &mut self.inj_queue {
+            q.clear();
         }
     }
 
     /// Run the trace to completion (or `max_cycles`). Returns the report.
+    /// Safe to call repeatedly on one instance (state resets per run).
     pub fn run(&mut self, trace: &TrafficTrace, max_cycles: u64) -> NocReport {
-        let n = self.topo.n;
-        let num_links = self.topo.links.len();
-        // Per-packet bookkeeping.
+        self.reset();
+        let topo = self.topo;
+        let n = topo.n;
+        let num_links = topo.links.len();
+        // Per-packet bookkeeping. Routes are the precomputed up*/down*
+        // paths (suffix-consistency of next_hop tables does NOT hold for
+        // up*/down*, so the sim follows the full stored path); resolving
+        // them here once is the Phase-1a fast lane.
         let num_packets = trace.packets.len();
-        let mut inject_time = vec![0u64; num_packets];
-        let mut eject_time = vec![u64::MAX; num_packets];
-        // Injection queues: flits pending per source, as (packet, flit idx).
-        let mut inj_queue: Vec<std::collections::VecDeque<Flit>> =
-            vec![std::collections::VecDeque::new(); n];
+        for p in &trace.packets {
+            self.routes.push(topo.paths[p.src * n + p.dst].as_slice());
+        }
+        self.hop_idx.resize(num_packets, 0);
+        self.inject_time.resize(num_packets, 0);
+        self.eject_time.resize(num_packets, u64::MAX);
         let mut next_packet = 0usize;
 
         let mut report = NocReport {
@@ -250,11 +323,6 @@ impl<'a> NocSim<'a> {
             link_busy: vec![0; num_links],
             delivered_flits: 0,
         };
-        // Per-packet routing state: how many hops the head has taken.
-        // Routes are the precomputed up*/down* paths (suffix-consistency
-        // of next_hop tables does NOT hold for up*/down*, so the sim
-        // follows the full stored path).
-        let mut hop_idx = vec![0u32; num_packets];
 
         let mut in_flight: u64 = 0;
         let mut remaining_tails = num_packets as u64;
@@ -266,9 +334,9 @@ impl<'a> NocSim<'a> {
                 && trace.packets[next_packet].inject_at <= cycle
             {
                 let p = &trace.packets[next_packet];
-                inject_time[next_packet] = cycle;
+                self.inject_time[next_packet] = cycle;
                 for f in 0..p.flits {
-                    inj_queue[p.src].push_back(Flit {
+                    self.inj_queue[p.src].push_back(Flit {
                         packet: next_packet as u32,
                         dst: p.dst as u16,
                         is_tail: f + 1 == p.flits,
@@ -294,7 +362,7 @@ impl<'a> NocSim<'a> {
                 let rr_e = self.rr_eject[node];
                 for port in 0..num_ports {
                     let ip = &self.in_ports[node][port];
-                    let Some(flit) = ip.fifo.front() else { continue };
+                    let Some(&flit) = ip.fifo.front() else { continue };
                     // Which single output does this port want?
                     let want_link = if ip.reserved_local {
                         usize::MAX // ejecting
@@ -302,10 +370,10 @@ impl<'a> NocSim<'a> {
                         ip.reserved_link
                     } else {
                         let pid = flit.packet as usize;
-                        let p = &trace.packets[pid];
-                        let path = &self.topo.paths[p.src * n + p.dst];
-                        if (hop_idx[pid] as usize) < path.len() {
-                            path[hop_idx[pid] as usize] as usize
+                        let path = self.routes[pid];
+                        let hop = self.hop_idx[pid] as usize;
+                        if hop < path.len() {
+                            path[hop] as usize
                         } else {
                             usize::MAX // at destination: eject
                         }
@@ -341,7 +409,7 @@ impl<'a> NocSim<'a> {
                 if self.in_ports[dst_node][dst_port].fifo.is_full() {
                     continue; // no credit
                 }
-                let src_node = self.topo.links[li].from;
+                let src_node = topo.links[li].from;
                 let base = self.port_offset[src_node] as usize;
                 let num_ports = self.in_ports[src_node].len();
                 let chosen: Option<usize> = if self.link_owner[li] != u32::MAX {
@@ -393,7 +461,7 @@ impl<'a> NocSim<'a> {
                 let was_head = ip.reserved_link == usize::MAX && !ip.reserved_local;
                 let flit = ip.fifo.pop();
                 if was_head {
-                    hop_idx[flit.packet as usize] += 1;
+                    self.hop_idx[flit.packet as usize] += 1;
                 }
                 // Maintain wormhole reservations (input port + output link).
                 if flit.is_tail {
@@ -427,7 +495,7 @@ impl<'a> NocSim<'a> {
                 in_flight -= 1;
                 if flit.is_tail {
                     let pid = flit.packet as usize;
-                    eject_time[pid] = cycle;
+                    self.eject_time[pid] = cycle;
                     remaining_tails -= 1;
                 }
             }
@@ -436,35 +504,47 @@ impl<'a> NocSim<'a> {
             // --- Phase 3: injection (after traversal so a flit takes ≥ 1
             // cycle per hop).
             for node in 0..n {
-                if let Some(&flit) = inj_queue[node].front().map(|f| f as &Flit) {
+                if let Some(&flit) = self.inj_queue[node].front() {
                     // Local delivery without entering the network.
                     if flit.dst as usize == node {
-                        let f = inj_queue[node].pop_front().unwrap();
+                        let f = self.inj_queue[node].pop_front().unwrap();
                         report.delivered_flits += 1;
                         in_flight -= 1;
                         if f.is_tail {
-                            eject_time[f.packet as usize] = cycle;
+                            self.eject_time[f.packet as usize] = cycle;
                             remaining_tails -= 1;
                         }
                         continue;
                     }
                     let port0 = &mut self.in_ports[node][0];
                     if !port0.fifo.is_full() {
-                        port0.fifo.push(inj_queue[node].pop_front().unwrap());
+                        port0.fifo.push(self.inj_queue[node].pop_front().unwrap());
                         self.node_flits[node] += 1;
                     }
                 }
             }
 
             cycle += 1;
+
+            // --- Idle fast-forward: with nothing in flight and the next
+            // packet strictly in the future, every intervening cycle is a
+            // no-op — jump straight to its release cycle. `cycles` and
+            // all latencies come out identical to ticking through.
+            if in_flight == 0 && next_packet < num_packets {
+                let next_at = trace.packets[next_packet].inject_at;
+                if next_at > cycle {
+                    cycle = next_at.min(max_cycles);
+                }
+            }
         }
 
         report.cycles = cycle;
         for pid in 0..num_packets {
-            if eject_time[pid] != u64::MAX {
-                report
-                    .packet_latencies
-                    .push(eject_time[pid] - inject_time[pid].min(trace.packets[pid].inject_at));
+            if self.eject_time[pid] != u64::MAX {
+                report.packet_latencies.push(
+                    self.eject_time[pid]
+                        - self.inject_time[pid].min(trace.packets[pid].inject_at),
+                );
             }
         }
         let _ = in_flight;
@@ -601,5 +681,190 @@ mod tests {
         let mut sim = NocSim::new(&cfg, &topo);
         let report = sim.run(&trace, 100);
         assert_eq!(report.cycles, 100);
+    }
+
+    // ---- fast-lane regression tests (DESIGN.md §Perf) ------------------
+
+    fn assert_reports_equal(a: &NocReport, b: &NocReport) {
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.packet_latencies, b.packet_latencies);
+        assert_eq!(a.flit_hops, b.flit_hops);
+        assert_eq!(a.link_busy, b.link_busy);
+        assert_eq!(a.delivered_flits, b.delivered_flits);
+    }
+
+    #[test]
+    fn reused_instance_matches_fresh_instance() {
+        // One instance running trace A, then trace B, must report exactly
+        // what fresh instances report — reset() leaves no residue.
+        let (cfg, topo) = setup();
+        let mut rng = Rng::new(17);
+        let flows_a: Vec<Flow> = (0..30)
+            .map(|i| Flow { src: i % 43, dst: (i * 5 + 2) % 43, bytes: 4096.0 })
+            .filter(|f| f.src != f.dst)
+            .collect();
+        let flows_b: Vec<Flow> = (0..12)
+            .map(|i| Flow { src: (i * 3) % 43, dst: (i + 19) % 43, bytes: 1024.0 })
+            .filter(|f| f.src != f.dst)
+            .collect();
+        let trace_a = trace_from_flows(&cfg, &flows_a, 700, &mut rng);
+        let trace_b = trace_from_flows(&cfg, &flows_b, 300, &mut rng);
+
+        let mut reused = NocSim::new(&cfg, &topo);
+        let ra = reused.run(&trace_a, 2_000_000);
+        let rb = reused.run(&trace_b, 2_000_000);
+        let ra_again = reused.run(&trace_a, 2_000_000);
+
+        let fa = NocSim::new(&cfg, &topo).run(&trace_a, 2_000_000);
+        let fb = NocSim::new(&cfg, &topo).run(&trace_b, 2_000_000);
+        assert_reports_equal(&ra, &fa);
+        assert_reports_equal(&rb, &fb);
+        assert_reports_equal(&ra_again, &fa);
+    }
+
+    #[test]
+    fn reset_after_truncated_run_leaves_no_residue() {
+        // A run cut off by max_cycles leaves flits in FIFOs and wormhole
+        // reservations held; the next run must still be pristine.
+        let (cfg, topo) = setup();
+        let packets: Vec<PacketSpec> = (0..500)
+            .map(|i| PacketSpec { src: i % 43, dst: (i + 1) % 43, flits: 16, inject_at: 0 })
+            .collect();
+        let saturating = TrafficTrace { packets };
+        let clean = TrafficTrace {
+            packets: vec![PacketSpec { src: 0, dst: 8, flits: 4, inject_at: 0 }],
+        };
+        let mut sim = NocSim::new(&cfg, &topo);
+        let cut = sim.run(&saturating, 50);
+        assert_eq!(cut.cycles, 50);
+        let after = sim.run(&clean, 10_000);
+        let fresh = NocSim::new(&cfg, &topo).run(&clean, 10_000);
+        assert_reports_equal(&after, &fresh);
+    }
+
+    #[test]
+    fn idle_fast_forward_preserves_results() {
+        // A long idle gap before (and between) injections must not change
+        // latency or cycle accounting, only wall-clock.
+        let (cfg, topo) = setup();
+        let near = TrafficTrace {
+            packets: vec![PacketSpec { src: 0, dst: 8, flits: 4, inject_at: 0 }],
+        };
+        let far = TrafficTrace {
+            packets: vec![PacketSpec { src: 0, dst: 8, flits: 4, inject_at: 5_000_000 }],
+        };
+        let mut sim = NocSim::new(&cfg, &topo);
+        let r_near = sim.run(&near, 100_000_000);
+        let r_far = sim.run(&far, 100_000_000);
+        assert_eq!(r_near.packet_latencies, r_far.packet_latencies);
+        assert_eq!(r_near.flit_hops, r_far.flit_hops);
+        assert!(r_far.cycles >= 5_000_000);
+        assert_eq!(r_far.cycles - r_near.cycles, 5_000_000);
+
+        // Gap in the middle of a trace.
+        let gapped = TrafficTrace {
+            packets: vec![
+                PacketSpec { src: 0, dst: 8, flits: 4, inject_at: 0 },
+                PacketSpec { src: 2, dst: 6, flits: 4, inject_at: 2_000_000 },
+            ],
+        };
+        let r = sim.run(&gapped, 100_000_000);
+        assert_eq!(r.packet_latencies.len(), 2);
+        assert_eq!(r.delivered_flits, 8);
+    }
+
+    #[test]
+    fn fast_forward_respects_max_cycles() {
+        let (cfg, topo) = setup();
+        let trace = TrafficTrace {
+            packets: vec![PacketSpec { src: 0, dst: 8, flits: 4, inject_at: 1_000_000 }],
+        };
+        let mut sim = NocSim::new(&cfg, &topo);
+        let report = sim.run(&trace, 1000);
+        assert_eq!(report.cycles, 1000);
+        assert_eq!(report.delivered_flits, 0);
+    }
+
+    // ---- Fifo edge cases (satellite: wraparound/full/empty) ------------
+
+    fn flit(packet: u32) -> Flit {
+        Flit { packet, dst: 0, is_tail: false }
+    }
+
+    #[test]
+    fn fifo_full_empty_and_order() {
+        let mut f = Fifo::new(3); // non-power-of-two depth: ring is 4
+        assert!(f.is_empty());
+        assert!(!f.is_full());
+        assert!(f.front().is_none());
+        f.push(flit(1));
+        f.push(flit(2));
+        f.push(flit(3));
+        assert!(f.is_full(), "logical depth 3 reached with ring size 4");
+        assert_eq!(f.front().unwrap().packet, 1);
+        assert_eq!(f.pop().packet, 1);
+        assert_eq!(f.pop().packet, 2);
+        assert_eq!(f.pop().packet, 3);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn fifo_wraparound_keeps_fifo_order() {
+        let mut f = Fifo::new(4);
+        let mut next_in = 0u32;
+        let mut next_out = 0u32;
+        // Interleave pushes and pops so head walks around the ring many
+        // times, exercising the mask wrap in both push and pop.
+        for round in 0..50 {
+            let n = 1 + (round % 4);
+            for _ in 0..n {
+                if !f.is_full() {
+                    f.push(flit(next_in));
+                    next_in += 1;
+                }
+            }
+            for _ in 0..(round % 3) + 1 {
+                if !f.is_empty() {
+                    assert_eq!(f.pop().packet, next_out);
+                    next_out += 1;
+                }
+            }
+        }
+        while !f.is_empty() {
+            assert_eq!(f.pop().packet, next_out);
+            next_out += 1;
+        }
+        assert_eq!(next_in, next_out, "every pushed flit popped, in order");
+    }
+
+    #[test]
+    fn fifo_clear_resets_state() {
+        let mut f = Fifo::new(2);
+        f.push(flit(9));
+        f.pop();
+        f.push(flit(10));
+        f.clear();
+        assert!(f.is_empty());
+        assert!(f.front().is_none());
+        f.push(flit(11));
+        assert_eq!(f.front().unwrap().packet, 11);
+    }
+
+    #[test]
+    fn fifo_depth_one_and_power_of_two_depths() {
+        let mut f1 = Fifo::new(1);
+        f1.push(flit(5));
+        assert!(f1.is_full());
+        assert_eq!(f1.pop().packet, 5);
+        assert!(f1.is_empty());
+
+        let mut f4 = Fifo::new(4); // exact power of two: mask == depth - 1
+        for i in 0..4 {
+            f4.push(flit(i));
+        }
+        assert!(f4.is_full());
+        for i in 0..4 {
+            assert_eq!(f4.pop().packet, i);
+        }
     }
 }

@@ -9,6 +9,9 @@
 //!
 //! PT optimization (Fig. 3a) uses {0,1,2}; PTN (Fig. 3b) uses {0,1,2,3}.
 
+use std::collections::HashMap;
+use std::sync::Mutex;
+
 use crate::arch::Placement;
 use crate::config::Config;
 use crate::model::Workload;
@@ -74,6 +77,10 @@ impl Objectives {
     }
 }
 
+/// Memo entries kept before the evaluator stops inserting (a full paper
+/// DSE run visits a few thousand points; this is pure headroom).
+const MEMO_CAP: usize = 1 << 16;
+
 /// Caches the placement-independent parts (flows, activity, window) so
 /// the DSE hot path only rebuilds topology + thermal per candidate.
 pub struct Evaluator<'a> {
@@ -82,6 +89,15 @@ pub struct Evaluator<'a> {
     flows: Vec<traffic::Flow>,
     window_s: f64,
     core_powers: Vec<f64>,
+    /// Placement-fingerprint → (placement, objectives) memo (DESIGN.md
+    /// §Perf): STAGE restarts and AMOSA reheats revisit design points,
+    /// and a hit skips the whole topology + thermal + noise pipeline.
+    /// The placement is stored so a 64-bit fingerprint collision is
+    /// detected (and falls through to a real evaluation) instead of
+    /// silently returning another design's objectives. The Mutex keeps
+    /// `evaluate(&self)` callable from the worker pool; it is held only
+    /// for the lookup/insert, never across an evaluation.
+    memo: Mutex<HashMap<u64, (Placement, Objectives)>>,
 }
 
 impl<'a> Evaluator<'a> {
@@ -89,11 +105,45 @@ impl<'a> Evaluator<'a> {
         let flows = traffic::workload_flows(cfg, workload);
         let report = PerfEstimator::new(cfg).estimate(workload);
         let core_powers = power::core_powers(cfg, &report.activity);
-        Evaluator { cfg, workload, flows, window_s: report.latency_s, core_powers }
+        Evaluator {
+            cfg,
+            workload,
+            flows,
+            window_s: report.latency_s,
+            core_powers,
+            memo: Mutex::new(HashMap::new()),
+        }
     }
 
-    /// Evaluate λ → objectives.
+    /// Evaluate λ → objectives, memoized on the placement fingerprint.
+    /// Evaluation is deterministic, so a hit returns exactly what a
+    /// fresh evaluation would.
     pub fn evaluate(&self, placement: &Placement) -> Objectives {
+        let key = placement.stable_hash();
+        if let Some((stored, obj)) = self.memo.lock().unwrap().get(&key) {
+            // same_design (not derived PartialEq) so a revisit with
+            // permuted planar_links storage order still hits.
+            if stored.same_design(placement) {
+                return obj.clone();
+            }
+            // Fingerprint collision: fall through and re-evaluate.
+        }
+        let obj = self.evaluate_uncached(placement);
+        let mut memo = self.memo.lock().unwrap();
+        if memo.len() < MEMO_CAP {
+            memo.entry(key)
+                .or_insert_with(|| (placement.clone(), obj.clone()));
+        }
+        obj
+    }
+
+    /// Number of memoized design points (diagnostics / tests).
+    pub fn memo_len(&self) -> usize {
+        self.memo.lock().unwrap().len()
+    }
+
+    /// The full evaluation pipeline, bypassing the memo.
+    pub fn evaluate_uncached(&self, placement: &Placement) -> Objectives {
         let topo = Topology::build(self.cfg, placement);
         if !topo.connected() {
             // Hard-reject disconnected designs.
@@ -219,6 +269,26 @@ mod tests {
         let a = ev.evaluate(&p);
         let b = ev.evaluate(&p);
         assert_eq!(a.vals, b.vals);
+    }
+
+    #[test]
+    fn memo_hits_match_uncached_evaluation() {
+        let (cfg, w) = eval_setup();
+        let ev = Evaluator::new(&cfg, &w);
+        let mut rng = Rng::new(11);
+        let p = Placement::random(&cfg, &mut rng);
+        let fresh = ev.evaluate_uncached(&p);
+        let first = ev.evaluate(&p); // populates the memo
+        assert_eq!(ev.memo_len(), 1);
+        let hit = ev.evaluate(&p); // served from the memo
+        assert_eq!(ev.memo_len(), 1, "revisits must not grow the memo");
+        assert_eq!(first.vals, fresh.vals);
+        assert_eq!(hit.vals, fresh.vals);
+        assert_eq!(hit.tier_peaks_c, fresh.tier_peaks_c);
+        // A different design point is a different key.
+        let q = Placement::random(&cfg, &mut rng);
+        ev.evaluate(&q);
+        assert_eq!(ev.memo_len(), 2);
     }
 
     #[test]

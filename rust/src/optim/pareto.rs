@@ -2,6 +2,7 @@
 
 use crate::arch::Placement;
 use crate::optim::objectives::{ObjectiveSet, Objectives};
+use crate::util::pool;
 
 /// Does `a` dominate `b` over the active objectives? (≤ everywhere,
 /// < somewhere; all objectives minimized.)
@@ -34,11 +35,14 @@ pub struct ParetoArchive {
     pub set: ObjectiveSet,
     pub entries: Vec<ArchiveEntry>,
     pub capacity: usize,
+    /// Crowding prunes performed so far — `offer_batch` watches this to
+    /// know when its prefilter assumptions expire.
+    prunes: usize,
 }
 
 impl ParetoArchive {
     pub fn new(set: ObjectiveSet, capacity: usize) -> ParetoArchive {
-        ParetoArchive { set, entries: Vec::new(), capacity }
+        ParetoArchive { set, entries: Vec::new(), capacity, prunes: 0 }
     }
 
     /// Try to insert; returns true if the candidate enters the archive
@@ -66,6 +70,42 @@ impl ParetoArchive {
             self.prune();
         }
         true
+    }
+
+    /// Offer a batch of evaluated candidates, byte-identical to calling
+    /// [`ParetoArchive::insert`] on each pair in order. A candidate the
+    /// *current* archive dominates can normally never enter later in the
+    /// batch — a dominance displacement only removes an entry in favour
+    /// of a design that dominates it, and dominance is transitive, so
+    /// something in the archive keeps dominating the candidate — and
+    /// rejecting it is a no-op insert. Those definite rejects are
+    /// filtered on the worker pool; only survivors take the serial
+    /// insert path (whose candidate-vs-candidate interactions are
+    /// order-dependent and stay serial). The one removal that breaks
+    /// the argument is a crowding [`prune`]: it can evict the very entry
+    /// that justified a reject, so the moment one fires the remaining
+    /// batch falls back to full serial inserts.
+    pub fn offer_batch(&mut self, batch: &[(Placement, Objectives)], threads: usize) {
+        let set = self.set;
+        let entries = &self.entries;
+        // A dominance check is nanoseconds; only fan out when the
+        // batch × front product can amortize the thread-spawn cost
+        // (typical DSE steps — ~10 candidates vs ≤64 entries — stay
+        // inline; bulk offers from experiment sweeps go wide).
+        let prefilter_threads = if batch.len() * entries.len().max(1) >= 1 << 14 {
+            threads
+        } else {
+            1
+        };
+        let viable: Vec<bool> = pool::par_map_threads(batch, prefilter_threads, |(_, o)| {
+            o.connected && !entries.iter().any(|e| dominates(&e.objectives, o, &set))
+        });
+        let prunes_at_prefilter = self.prunes;
+        for ((p, o), ok) in batch.iter().zip(viable) {
+            if ok || self.prunes != prunes_at_prefilter {
+                self.insert(p, o);
+            }
+        }
     }
 
     /// Crowding-style prune: drop the entry closest to its neighbour in
@@ -113,6 +153,7 @@ impl ParetoArchive {
             }
         }
         self.entries.swap_remove(worst.0);
+        self.prunes += 1;
     }
 
     pub fn len(&self) -> usize {
@@ -227,6 +268,82 @@ mod tests {
             arch.insert(&p, &obj(*v));
         }
         assert_eq!(arch.len(), 4);
+    }
+
+    #[test]
+    fn offer_batch_matches_serial_inserts() {
+        let cfg = Config::default();
+        let p = Placement::mesh_baseline(&cfg);
+        // A batch with internal dominance chains, incomparables, a
+        // disconnected point, and entries that displace earlier ones.
+        let mut disconnected = obj([0.1, 0.1, 0.1, 0.1]);
+        disconnected.connected = false;
+        let batch: Vec<(Placement, Objectives)> = [
+            obj([5.0, 5.0, 5.0, 5.0]),
+            obj([4.0, 6.0, 5.0, 5.0]),
+            disconnected,
+            obj([3.0, 3.0, 3.0, 3.0]), // displaces the first
+            obj([3.5, 3.0, 3.0, 3.0]), // dominated by previous
+            obj([2.0, 9.0, 1.0, 1.0]), // incomparable
+        ]
+        .into_iter()
+        .map(|o| (p.clone(), o))
+        .collect();
+
+        let mut serial = ParetoArchive::new(ObjectiveSet::ptn(), 4);
+        for (pl, o) in &batch {
+            serial.insert(pl, o);
+        }
+        for threads in [1usize, 4] {
+            let mut batched = ParetoArchive::new(ObjectiveSet::ptn(), 4);
+            batched.offer_batch(&batch, threads);
+            assert_eq!(batched.len(), serial.len(), "threads {threads}");
+            for (a, b) in batched.entries.iter().zip(&serial.entries) {
+                assert_eq!(a.objectives.vals, b.objectives.vals);
+            }
+        }
+    }
+
+    #[test]
+    fn offer_batch_survives_mid_batch_prune() {
+        // Regression: a crowding prune can evict the entry that made the
+        // prefilter reject a later candidate. Archive at capacity with
+        // A, B, E; batch = [D, C] where D crowds E (prune evicts E) and
+        // C is dominated only by E. Serial replay accepts C after the
+        // prune — offer_batch must too.
+        let cfg = Config::default();
+        let p = Placement::mesh_baseline(&cfg);
+        let set = ObjectiveSet::pt(); // objectives 0,1,2 active
+        let a = obj([0.0, 10.0, 5.0, 0.0]);
+        let b = obj([10.0, 0.0, 5.0, 0.0]);
+        let e = obj([5.0, 5.0, 1.0, 0.0]);
+        let d = obj([4.99, 5.01, 1.001, 0.0]); // incomparable to E, crowds it
+        let c = obj([5.5, 5.005, 1.0005, 0.0]); // dominated by E, not by D
+        assert!(dominates(&e, &c, &set) && !dominates(&d, &c, &set));
+
+        let batch = vec![(p.clone(), d), (p.clone(), c.clone())];
+        let mut serial = ParetoArchive::new(set, 3);
+        let mut batched = ParetoArchive::new(set, 3);
+        for arch in [&mut serial, &mut batched] {
+            assert!(arch.insert(&p, &a));
+            assert!(arch.insert(&p, &b));
+            assert!(arch.insert(&p, &e));
+            assert_eq!(arch.len(), 3);
+        }
+        for (pl, o) in &batch {
+            serial.insert(pl, o);
+        }
+        batched.offer_batch(&batch, 4);
+
+        assert_eq!(batched.len(), serial.len());
+        for (x, y) in batched.entries.iter().zip(&serial.entries) {
+            assert_eq!(x.objectives.vals, y.objectives.vals);
+        }
+        // The scenario only regresses if C actually made it in serially.
+        assert!(
+            serial.entries.iter().any(|en| en.objectives.vals == c.vals),
+            "test scenario must exercise the post-prune acceptance"
+        );
     }
 
     #[test]

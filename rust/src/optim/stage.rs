@@ -15,6 +15,7 @@ use crate::arch::Placement;
 use crate::config::Config;
 use crate::optim::objectives::{Evaluator, ObjectiveSet, Objectives};
 use crate::optim::pareto::{dominates, ParetoArchive};
+use crate::util::pool;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -37,6 +38,11 @@ pub struct MooStage<'a> {
     pub steps_per_epoch: usize,
     /// Candidate starts scored by the value function per restart.
     pub restart_candidates: usize,
+    /// Worker threads for candidate evaluation: 0 = auto (one per core,
+    /// `HETRAX_THREADS` overrides), 1 = fully serial. Any value produces
+    /// byte-identical results for a given seed — randomness is drawn
+    /// serially before each fan-out (DESIGN.md §Perf).
+    pub threads: usize,
 }
 
 impl<'a> MooStage<'a> {
@@ -48,6 +54,7 @@ impl<'a> MooStage<'a> {
             perturbations: cfg.moo_perturbations,
             steps_per_epoch: 10,
             restart_candidates: 16,
+            threads: 0,
         }
     }
 
@@ -74,6 +81,7 @@ impl<'a> MooStage<'a> {
 
     pub fn run(&self, rng: &mut Rng) -> DseResult {
         let cfg = self.evaluator.cfg;
+        let threads = pool::resolve_threads(self.threads);
         let mut archive = ParetoArchive::new(self.set, 64);
         let mut evaluations = 0usize;
         let mut history = Vec::with_capacity(self.epochs);
@@ -97,12 +105,22 @@ impl<'a> MooStage<'a> {
             for _step in 0..self.steps_per_epoch {
                 // Generate `perturbations` neighbours, move to the best
                 // non-dominated one (steepest-descent flavour of PLS).
+                // Candidates are drawn serially — one rng stream, the
+                // same draw order as the serial path — and only the
+                // expensive evaluation fans out over the pool, so seeded
+                // runs are byte-identical at any thread count.
+                let cands: Vec<Placement> =
+                    (0..self.perturbations).map(|_| cur.perturb(cfg, rng)).collect();
+                let objs = pool::par_map_threads(&cands, threads, |c| {
+                    self.evaluator.evaluate(c)
+                });
+                evaluations += cands.len();
+                let batch: Vec<(Placement, Objectives)> =
+                    cands.into_iter().zip(objs).collect();
+                archive.offer_batch(&batch, threads);
+
                 let mut best_move: Option<(Placement, Objectives, f64)> = None;
-                for _ in 0..self.perturbations {
-                    let cand = cur.perturb(cfg, rng);
-                    let obj = self.evaluator.evaluate(&cand);
-                    evaluations += 1;
-                    archive.insert(&cand, &obj);
+                for (cand, obj) in batch {
                     if !obj.connected {
                         continue;
                     }
@@ -134,17 +152,28 @@ impl<'a> MooStage<'a> {
             }
 
             // --- Pick the next start: guided when the model exists.
+            // Candidate generation stays on the rng stream; feature
+            // extraction + prediction fan out — but only for candidate
+            // pools big enough to amortize thread spawns (features +
+            // dot product are microseconds each; the default 16 stay
+            // inline). Ties keep the earliest candidate, exactly like
+            // the serial `pred < best` scan.
             start = match &value_fn {
                 Some(beta) => {
-                    let mut best: Option<(f64, Placement)> = None;
-                    for _ in 0..self.restart_candidates {
-                        let cand = Placement::random(cfg, rng);
-                        let pred = stats::predict_linear(beta, &cand.features(cfg));
-                        if best.as_ref().map_or(true, |(bp, _)| pred < *bp) {
-                            best = Some((pred, cand));
+                    let cands: Vec<Placement> = (0..self.restart_candidates)
+                        .map(|_| Placement::random(cfg, rng))
+                        .collect();
+                    let pred_threads = if cands.len() >= 64 { threads } else { 1 };
+                    let preds = pool::par_map_threads(&cands, pred_threads, |c| {
+                        stats::predict_linear(beta, &c.features(cfg))
+                    });
+                    let mut best = 0usize;
+                    for i in 1..preds.len() {
+                        if preds[i] < preds[best] {
+                            best = i;
                         }
                     }
-                    best.unwrap().1
+                    cands.into_iter().nth(best).expect("restart candidate")
                 }
                 None => Placement::random(cfg, rng),
             };
@@ -167,6 +196,7 @@ mod tests {
             perturbations: 6,
             steps_per_epoch: 4,
             restart_candidates: 4,
+            threads: 1,
         }
     }
 
@@ -210,6 +240,34 @@ mod tests {
         let a = stage.run(&mut Rng::new(7)).history;
         let b = stage.run(&mut Rng::new(7)).history;
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_run_byte_identical_to_serial() {
+        // The tentpole regression: the same seed must produce the exact
+        // same Pareto archive (entries, order, objective values,
+        // placements) and history at every thread count. Separate
+        // evaluators per run so memo state cannot mask a divergence.
+        let (cfg, w) = setup();
+        let ev_serial = Evaluator::new(&cfg, &w);
+        let mut serial_stage = quick_stage(&ev_serial, ObjectiveSet::ptn());
+        serial_stage.threads = 1;
+        let serial = serial_stage.run(&mut Rng::new(13));
+
+        for threads in [2usize, 4] {
+            let ev_par = Evaluator::new(&cfg, &w);
+            let mut par_stage = quick_stage(&ev_par, ObjectiveSet::ptn());
+            par_stage.threads = threads;
+            let par = par_stage.run(&mut Rng::new(13));
+
+            assert_eq!(par.evaluations, serial.evaluations, "threads {threads}");
+            assert_eq!(par.history, serial.history, "threads {threads}");
+            assert_eq!(par.archive.len(), serial.archive.len(), "threads {threads}");
+            for (a, b) in par.archive.entries.iter().zip(&serial.archive.entries) {
+                assert_eq!(a.objectives.vals, b.objectives.vals);
+                assert_eq!(a.placement, b.placement);
+            }
+        }
     }
 
     #[test]

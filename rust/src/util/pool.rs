@@ -1,0 +1,145 @@
+//! Scoped-thread worker pool for batch-parallel evaluation (DESIGN.md
+//! §Perf). std-only — the offline environment provides no rayon — and
+//! built around one invariant: **results come back in input order**, so
+//! callers that fold the results serially behave byte-identically to a
+//! serial loop. All determinism-sensitive users (MOO-STAGE candidate
+//! evaluation, Pareto-archive batch offers, the figure sweeps) rely on
+//! this: randomness is drawn serially *before* the fan-out, only the
+//! pure, expensive evaluation runs on workers.
+//!
+//! Work distribution is a single atomic cursor (dynamic self-scheduling):
+//! evaluation costs vary wildly between design points (disconnected
+//! placements short-circuit, memo hits return instantly), so static
+//! chunking would leave workers idle. Each worker buffers `(index,
+//! result)` pairs locally and the caller scatters them back — no locks on
+//! the hot path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Resolve a thread-count knob: `0` means auto (the `HETRAX_THREADS` env
+/// var when set, otherwise one worker per available core), anything else
+/// is taken literally. Always ≥ 1.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Ok(v) = std::env::var("HETRAX_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to `threads` workers; results are returned
+/// in input order. `threads <= 1` (or a batch of ≤ 1 item) runs inline
+/// with no thread spawn at all, so the serial path stays the serial path.
+pub fn par_map_threads<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len());
+    if threads <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
+    slots.resize_with(items.len(), || None);
+    std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        local.push((i, f(&items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for w in workers {
+            for (i, r) in w.join().expect("worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots.into_iter().map(|r| r.expect("slot filled")).collect()
+}
+
+/// [`par_map_threads`] with the auto thread count.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    par_map_threads(items, resolve_threads(0), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_input_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = par_map_threads(&items, 4, |&x| x * x);
+        assert_eq!(out, items.iter().map(|&x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let items: Vec<u64> = (0..100).collect();
+        let f = |&x: &u64| x.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(17);
+        assert_eq!(
+            par_map_threads(&items, 1, f),
+            par_map_threads(&items, 8, f)
+        );
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map_threads(&empty, 8, |&x| x).is_empty());
+        assert_eq!(par_map_threads(&[7u32], 8, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let items = [1u32, 2, 3];
+        assert_eq!(par_map_threads(&items, 64, |&x| x * 10), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn uneven_work_still_ordered() {
+        // Workers finishing out of order must not scramble results.
+        let items: Vec<u64> = (0..64).collect();
+        let out = par_map_threads(&items, 8, |&x| {
+            // Early items do more work, so later indices finish first.
+            let mut acc = x;
+            for _ in 0..(64 - x) * 1000 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            (x, acc)
+        });
+        for (i, (x, _)) in out.iter().enumerate() {
+            assert_eq!(*x, i as u64);
+        }
+    }
+
+    #[test]
+    fn resolve_threads_literal_and_floor() {
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
+    }
+}

@@ -28,6 +28,37 @@ pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// Arithmetic mean of an integer slice without a `Vec<f64>` round-trip
+/// (the NoC report calls this per sweep point); 0.0 for an empty slice.
+/// Accumulates in u128 so large cycle counts cannot overflow.
+pub fn mean_u64(xs: &[u64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let sum: u128 = xs.iter().map(|&x| x as u128).sum();
+    sum as f64 / xs.len() as f64
+}
+
+/// Linear-interpolated percentile of an integer slice, p in [0, 100].
+/// Sorts a copy of the integers (8 bytes each, `sort_unstable`) instead
+/// of materializing and comparison-sorting a `Vec<f64>`.
+pub fn percentile_u64(xs: &[u64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p), "percentile {p}");
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo] as f64
+    } else {
+        v[lo] as f64 + (rank - lo as f64) * (v[hi] as f64 - v[lo] as f64)
+    }
+}
+
 /// Linear-interpolated percentile, p in [0, 100]. Sorts a copy.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!((0.0..=100.0).contains(&p), "percentile {p}");
@@ -196,6 +227,23 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn integer_helpers_match_float_versions() {
+        let xs: Vec<u64> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3];
+        let fs: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+        assert!((mean_u64(&xs) - mean(&fs)).abs() < 1e-12);
+        for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert!(
+                (percentile_u64(&xs, p) - percentile(&fs, p)).abs() < 1e-12,
+                "p{p}"
+            );
+        }
+        assert_eq!(mean_u64(&[]), 0.0);
+        assert_eq!(percentile_u64(&[], 50.0), 0.0);
+        // Large values must not overflow the accumulator.
+        assert!(mean_u64(&[u64::MAX, u64::MAX]).is_finite());
     }
 
     #[test]
