@@ -57,13 +57,15 @@ fn main() {
         iterations: budget,
         t_start: 1.0,
         t_end: 1e-3,
+        speculation: 8,
+        threads: 0,
     };
     let amosa_res = amosa.run(&mut Rng::new(7));
     let (q, n) = front_quality(&amosa_res.archive);
     table.row("AMOSA", &[format!("{q:.4}"), n.to_string(),
                          amosa_res.evaluations.to_string()]);
 
-    let random = RandomSearch { evaluator: &ev, set, samples: budget };
+    let random = RandomSearch { evaluator: &ev, set, samples: budget, threads: 0 };
     let random_res = random.run(&mut Rng::new(7));
     let (q, n) = front_quality(&random_res.archive);
     table.row("random", &[format!("{q:.4}"), n.to_string(),

@@ -1,0 +1,64 @@
+//! Serve loadtest smoke bench — a short seeded Poisson run through the
+//! whole traffic subsystem (generate → route → admission-controlled
+//! serve), timing the end-to-end wall clock and asserting the
+//! byte-identical-output contract across thread counts. Emits
+//! `BENCH_serve.json` (path overridable via `BENCH_SERVE_JSON`) for the
+//! CI serve trajectory.
+use hetrax::config::Config;
+use hetrax::model::ModelId;
+use hetrax::traffic::loadtest::{self, LoadtestConfig};
+use hetrax::traffic::{ArrivalPattern, RequestMix, RoutePolicy};
+use hetrax::util::bench::Bencher;
+use hetrax::util::pool;
+
+fn config(threads: usize) -> LoadtestConfig {
+    let mut lt = LoadtestConfig::new(
+        ArrivalPattern::Poisson { rps: 300.0 },
+        RequestMix::single(ModelId::BertBase),
+    );
+    lt.duration_s = 1.0;
+    lt.stacks = 2;
+    lt.policy = RoutePolicy::JoinShortestQueue;
+    lt.seed = 7;
+    lt.threads = threads;
+    lt
+}
+
+fn main() {
+    let cfg = Config::default();
+    let auto = pool::resolve_threads(0);
+
+    let b = Bencher::quick();
+    let t_serial = b.time("poisson loadtest, 2 stacks (threads=1)", || {
+        loadtest::run(&cfg, &config(1))
+    });
+    let t_par = b.time(
+        &format!("poisson loadtest, 2 stacks (threads={auto})"),
+        || loadtest::run(&cfg, &config(auto)),
+    );
+
+    // Determinism contract: identical JSON at any thread count.
+    let lt = config(1);
+    let serial = loadtest::run(&cfg, &lt).to_json(&lt).pretty();
+    let lt_par = config(auto);
+    let parallel = loadtest::run(&cfg, &lt_par).to_json(&lt_par).pretty();
+    assert_eq!(serial, parallel, "loadtest output must not depend on threads");
+
+    let report = loadtest::run(&cfg, &lt);
+    println!(
+        "\n  {} completed / {} submitted, p99 {:.2} ms, ReRAM peak {:.1} C, {} throttle events",
+        report.total.completed,
+        report.total.submitted,
+        report.total.latency_us.percentile(99.0) as f64 / 1e3,
+        report.reram_peak_c,
+        report.throttle_events
+    );
+
+    let mut doc = report.to_json(&lt);
+    doc.set("run_median_s", t_serial.median_s())
+        .set("run_median_parallel_s", t_par.median_s())
+        .set("bench_threads", auto);
+    let out = std::env::var("BENCH_SERVE_JSON").unwrap_or_else(|_| "BENCH_serve.json".into());
+    std::fs::write(&out, doc.pretty()).expect("write bench json");
+    println!("wrote {out}");
+}

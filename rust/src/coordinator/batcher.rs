@@ -18,6 +18,14 @@ impl Default for BatcherConfig {
     }
 }
 
+impl BatcherConfig {
+    /// Same window with a different cap (floored at 1) — the admission
+    /// controller's batch-throttle lever.
+    pub fn with_max_batch(self, max_batch: usize) -> BatcherConfig {
+        BatcherConfig { max_batch: max_batch.max(1), ..self }
+    }
+}
+
 /// A formed batch (requests share model, variant and padded seq).
 #[derive(Debug, Clone)]
 pub struct Batch {
@@ -140,6 +148,36 @@ mod tests {
             req(0, ModelId::BertTiny, 0.0),
         ]);
         assert_eq!(batches[0].requests[0].id, 0);
+    }
+
+    #[test]
+    fn with_max_batch_floors_at_one() {
+        let cfg = BatcherConfig::default().with_max_batch(0);
+        assert_eq!(cfg.max_batch, 1);
+        assert_eq!(cfg.max_wait_s, BatcherConfig::default().max_wait_s);
+        assert_eq!(BatcherConfig::default().with_max_batch(3).max_batch, 3);
+    }
+
+    #[test]
+    fn all_three_seal_rules_interact() {
+        // One stream exercising every seal rule: capacity (first 2),
+        // model change (3rd), window expiry (4th).
+        let b = Batcher::new(BatcherConfig { max_batch: 2, max_wait_s: 0.05 });
+        let batches = b.form_batches(vec![
+            req(0, ModelId::BertTiny, 0.00),
+            req(1, ModelId::BertTiny, 0.01),
+            req(2, ModelId::BertTiny, 0.02), // max_batch seals [0,1]
+            req(3, ModelId::BertBase, 0.03), // model change seals [2]
+            req(4, ModelId::BertBase, 0.20), // window seals [3]
+        ]);
+        let ids: Vec<Vec<u64>> = batches
+            .iter()
+            .map(|b| b.requests.iter().map(|r| r.id).collect())
+            .collect();
+        assert_eq!(ids, vec![vec![0, 1], vec![2], vec![3], vec![4]]);
+        // Ready times are each batch's latest arrival.
+        assert_eq!(batches[0].ready_s, 0.01);
+        assert_eq!(batches[3].ready_s, 0.20);
     }
 
     #[test]

@@ -25,6 +25,57 @@ pub struct ServeReport {
     pub total_energy_j: f64,
     /// Time both tiers were busy simultaneously (pipeline overlap).
     pub overlap_s: f64,
+    /// Total SM-tier busy time (Σ batches B·t_MHA).
+    pub sm_busy_s: f64,
+    /// Total ReRAM-tier busy time (Σ batches B·t_FF).
+    pub reram_busy_s: f64,
+}
+
+impl ServeReport {
+    /// SM-tier utilization over the makespan (0 when nothing served).
+    pub fn sm_utilization(&self) -> f64 {
+        if self.makespan_s > 0.0 { self.sm_busy_s / self.makespan_s } else { 0.0 }
+    }
+
+    /// ReRAM-tier utilization over the makespan.
+    pub fn reram_utilization(&self) -> f64 {
+        if self.makespan_s > 0.0 { self.reram_busy_s / self.makespan_s } else { 0.0 }
+    }
+}
+
+/// Rolling tier-horizon state for incremental serving: the serving-scale
+/// traffic loop (`traffic::loadtest`) feeds batches one control window at
+/// a time, so the two `*_free` horizons must persist between calls.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeState {
+    /// When the SM tiers become free.
+    pub sm_free: f64,
+    /// When the ReRAM tier becomes free.
+    pub reram_free: f64,
+}
+
+impl ServeState {
+    pub fn new() -> ServeState {
+        ServeState::default()
+    }
+}
+
+/// Everything one batch contributed: responses plus the per-tier busy
+/// time and energy the telemetry/admission layers account with.
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    pub responses: Vec<Response>,
+    /// When the batch's first MHA phase started on the SM tiers.
+    pub start_s: f64,
+    /// When the batch's last FF phase completed on the ReRAM tier.
+    pub finish_s: f64,
+    /// SM-tier busy seconds added (B · t_MHA).
+    pub sm_busy_s: f64,
+    /// ReRAM-tier busy seconds added (B · t_FF).
+    pub reram_busy_s: f64,
+    /// Pipeline-overlap seconds contributed.
+    pub overlap_s: f64,
+    pub energy_j: f64,
 }
 
 /// Two-tier pipelined scheduler + optional real execution.
@@ -38,8 +89,9 @@ impl<'a> Engine<'a> {
     }
 
     /// Per-request phase times for a workload: MHA-phase seconds on the
-    /// SM tiers, FF-phase seconds on the ReRAM tier.
-    fn phase_times(&self, w: &Workload) -> (f64, f64) {
+    /// SM tiers, FF-phase seconds on the ReRAM tier. Public so the
+    /// traffic router/admission layers can estimate service demand.
+    pub fn phase_times(&self, w: &Workload) -> (f64, f64) {
         let ff_map = FfMapping::map(self.cfg, w.dims.d_model, w.dims.d_ff);
         let mut mha = 0.0;
         let mut ff = 0.0;
@@ -53,56 +105,80 @@ impl<'a> Engine<'a> {
         (mha, ff)
     }
 
-    /// Serve pre-formed batches. Simulated clock; the B requests of a
-    /// batch stream through the two tier resources as a 2-stage pipeline
-    /// (request j+1's MHA on the SM tiers overlaps request j's FF on the
-    /// ReRAM tier — the §4.2 dataflow), and consecutive batches overlap
-    /// the same way through the `sm_free`/`reram_free` horizons.
+    /// Schedule one batch onto the two tier resources, advancing the
+    /// rolling horizons in `state`. The B requests of a batch stream
+    /// through the tiers as a 2-stage pipeline (request j+1's MHA on the
+    /// SM tiers overlaps request j's FF on the ReRAM tier — the §4.2
+    /// dataflow), and consecutive batches overlap the same way through
+    /// the `sm_free`/`reram_free` horizons. Returns `None` for an empty
+    /// batch.
+    pub fn serve_batch(&self, state: &mut ServeState, batch: &Batch) -> Option<BatchOutcome> {
+        if batch.requests.is_empty() {
+            return None;
+        }
+        let probe = &batch.requests[0];
+        let b = batch.requests.len() as f64;
+        let w = Workload::build(probe.model, probe.variant, batch.seq());
+        let (m1, f1) = self.phase_times(&w);
+
+        // 2-stage pipeline over B requests: SM is busy B·m1 from the
+        // start; the last FF completes m1 + f1 + (B-1)·max(m1, f1)
+        // after the start (bounded below by the ReRAM horizon).
+        let mha_start = batch.ready_s.max(state.sm_free);
+        let mha_end = mha_start + b * m1;
+        let ff_end = (mha_start + m1).max(state.reram_free) + f1 + (b - 1.0) * m1.max(f1);
+        let prev_reram_free = state.reram_free;
+        state.sm_free = mha_end;
+        state.reram_free = ff_end;
+        // Overlap diagnostic: SM busy time spent while ReRAM was
+        // still draining earlier work.
+        let overlap = (mha_end.min(prev_reram_free) - mha_start).max(0.0)
+            + (b - 1.0) * m1.min(f1);
+
+        // Energy via the per-inference estimator, scaled by batch.
+        let report = PerfEstimator::new(self.cfg).estimate(&w);
+        let batch_energy = report.energy.total_j() * batch.requests.len() as f64;
+        let per_req_energy = batch_energy / batch.requests.len() as f64;
+
+        let responses = batch
+            .requests
+            .iter()
+            .map(|r| Response {
+                id: r.id,
+                finish_s: ff_end,
+                latency_s: ff_end - r.arrival_s,
+                energy_j: per_req_energy,
+                output: None,
+            })
+            .collect();
+        Some(BatchOutcome {
+            responses,
+            start_s: mha_start,
+            finish_s: ff_end,
+            sm_busy_s: b * m1,
+            reram_busy_s: b * f1,
+            overlap_s: overlap,
+            energy_j: batch_energy,
+        })
+    }
+
+    /// Serve pre-formed batches on a simulated clock: a fold of
+    /// [`Engine::serve_batch`] over one fresh [`ServeState`].
     pub fn serve(&self, batches: &[Batch]) -> ServeReport {
-        let mut sm_free = 0.0f64; // when the SM tiers become free
-        let mut reram_free = 0.0f64;
+        let mut state = ServeState::new();
         let mut responses = Vec::new();
         let mut total_energy = 0.0;
         let mut overlap = 0.0;
+        let mut sm_busy = 0.0;
+        let mut reram_busy = 0.0;
 
         for batch in batches {
-            if batch.requests.is_empty() {
-                continue;
-            }
-            let probe = &batch.requests[0];
-            let b = batch.requests.len() as f64;
-            let w = Workload::build(probe.model, probe.variant, batch.seq());
-            let (m1, f1) = self.phase_times(&w);
-
-            // 2-stage pipeline over B requests: SM is busy B·m1 from the
-            // start; the last FF completes m1 + f1 + (B-1)·max(m1, f1)
-            // after the start (bounded below by the ReRAM horizon).
-            let mha_start = batch.ready_s.max(sm_free);
-            let mha_end = mha_start + b * m1;
-            let ff_end = (mha_start + m1).max(reram_free) + f1 + (b - 1.0) * m1.max(f1);
-            let prev_reram_free = reram_free;
-            sm_free = mha_end;
-            reram_free = ff_end;
-            // Overlap diagnostic: SM busy time spent while ReRAM was
-            // still draining earlier work.
-            overlap += (mha_end.min(prev_reram_free) - mha_start).max(0.0)
-                + (b - 1.0) * m1.min(f1);
-
-            // Energy via the per-inference estimator, scaled by batch.
-            let report = PerfEstimator::new(self.cfg).estimate(&w);
-            let batch_energy = report.energy.total_j() * batch.requests.len() as f64;
-            total_energy += batch_energy;
-            let per_req_energy = batch_energy / batch.requests.len() as f64;
-
-            for r in &batch.requests {
-                responses.push(Response {
-                    id: r.id,
-                    finish_s: ff_end,
-                    latency_s: ff_end - r.arrival_s,
-                    energy_j: per_req_energy,
-                    output: None,
-                });
-            }
+            let Some(out) = self.serve_batch(&mut state, batch) else { continue };
+            total_energy += out.energy_j;
+            overlap += out.overlap_s;
+            sm_busy += out.sm_busy_s;
+            reram_busy += out.reram_busy_s;
+            responses.extend(out.responses);
         }
 
         let makespan = responses.iter().map(|r| r.finish_s).fold(0.0, f64::max);
@@ -118,6 +194,8 @@ impl<'a> Engine<'a> {
             makespan_s: makespan,
             total_energy_j: total_energy,
             overlap_s: overlap,
+            sm_busy_s: sm_busy,
+            reram_busy_s: reram_busy,
             responses,
         }
     }
@@ -234,6 +312,38 @@ mod tests {
         let report = Engine::new(&cfg).serve(&[]);
         assert!(report.responses.is_empty());
         assert_eq!(report.makespan_s, 0.0);
+        assert_eq!(report.sm_utilization(), 0.0);
+    }
+
+    #[test]
+    fn incremental_serve_batch_matches_batch_serve() {
+        // Feeding batches one at a time through a persistent ServeState
+        // must reproduce the one-shot serve() exactly — the contract the
+        // traffic loadtest loop relies on.
+        let cfg = Config::default();
+        let engine = Engine::new(&cfg);
+        let bs = batches(12, 0.002);
+        let whole = engine.serve(&bs);
+
+        let mut state = ServeState::new();
+        let mut finishes = Vec::new();
+        let mut sm_busy = 0.0;
+        let mut reram_busy = 0.0;
+        for b in &bs {
+            let out = engine.serve_batch(&mut state, b).unwrap();
+            assert!(out.finish_s > out.start_s);
+            sm_busy += out.sm_busy_s;
+            reram_busy += out.reram_busy_s;
+            finishes.extend(out.responses.iter().map(|r| r.finish_s));
+        }
+        let whole_finishes: Vec<f64> = whole.responses.iter().map(|r| r.finish_s).collect();
+        assert_eq!(finishes, whole_finishes);
+        assert_eq!(sm_busy, whole.sm_busy_s);
+        assert_eq!(reram_busy, whole.reram_busy_s);
+        assert!(whole.sm_busy_s > 0.0 && whole.reram_busy_s > 0.0);
+        // Utilization is a fraction of the makespan.
+        assert!(whole.sm_utilization() > 0.0 && whole.sm_utilization() <= 1.0 + 1e-9);
+        assert!(whole.reram_utilization() > 0.0 && whole.reram_utilization() <= 1.0 + 1e-9);
     }
 
     #[test]

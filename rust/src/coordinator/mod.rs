@@ -19,6 +19,6 @@ pub mod request;
 pub mod server;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
-pub use engine::{Engine, ServeReport};
+pub use engine::{BatchOutcome, Engine, ServeReport, ServeState};
 pub use request::{Request, Response};
 pub use server::Server;

@@ -2,9 +2,17 @@
 //! a worker that forms batches and runs the engine, and a response
 //! channel. (tokio is unavailable offline; std::thread + mpsc gives the
 //! same shape for this workload.)
+//!
+//! Drain policy: pending work drains when (a) enough requests accumulate
+//! to fill several batch windows, (b) a new submission makes the oldest
+//! pending request older than `BatcherConfig::max_wait_s` on the
+//! simulated clock, or (c) the queue sits idle past `max_wait_s` of wall
+//! clock with work pending — so a submitted request can never wait
+//! indefinitely for an explicit `flush()`.
 
 use std::sync::mpsc;
 use std::thread;
+use std::time::Duration;
 
 use crate::config::Config;
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
@@ -36,16 +44,38 @@ impl Server {
             let engine = Engine::new(&cfg);
             let batcher = Batcher::new(batcher_cfg);
             let mut pending: Vec<Request> = Vec::new();
+            // Wall-clock bound on how long pending work may sit idle.
+            let idle = Duration::from_secs_f64(batcher_cfg.max_wait_s.clamp(1e-4, 60.0));
             loop {
-                match rx.recv() {
-                    Ok(Command::Submit(r)) => {
+                let cmd = if pending.is_empty() {
+                    rx.recv().ok()
+                } else {
+                    match rx.recv_timeout(idle) {
+                        Ok(c) => Some(c),
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            // No batch-mates are coming: drain rather
+                            // than holding the oldest request hostage.
+                            drain(&engine, &batcher, &mut pending, &tx_resp);
+                            continue;
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => None,
+                    }
+                };
+                match cmd {
+                    Some(Command::Submit(r)) => {
+                        // On the simulated clock: a new arrival past the
+                        // batcher window means the oldest pending request
+                        // can never join a fuller batch — drain now.
+                        let overdue = pending
+                            .first()
+                            .map_or(false, |f| r.arrival_s - f.arrival_s > batcher_cfg.max_wait_s);
                         pending.push(r);
-                        if pending.len() >= batcher_cfg.max_batch * 4 {
+                        if overdue || pending.len() >= batcher_cfg.max_batch * 4 {
                             drain(&engine, &batcher, &mut pending, &tx_resp);
                         }
                     }
-                    Ok(Command::Flush) => drain(&engine, &batcher, &mut pending, &tx_resp),
-                    Ok(Command::Shutdown) | Err(_) => {
+                    Some(Command::Flush) => drain(&engine, &batcher, &mut pending, &tx_resp),
+                    Some(Command::Shutdown) | None => {
                         drain(&engine, &batcher, &mut pending, &tx_resp);
                         break;
                     }
@@ -119,5 +149,33 @@ mod tests {
         let server = Server::spawn(Config::default(), BatcherConfig::default());
         server.submit(Request::synthetic(9, ModelId::BertTiny, 64, 0.0));
         drop(server); // must not hang; worker drains and exits
+    }
+
+    #[test]
+    fn overdue_submission_drains_without_flush() {
+        // Regression: fewer than max_batch * 4 requests used to wait
+        // indefinitely for an explicit flush. A submission past the
+        // batcher window must trigger the drain by itself.
+        let server =
+            Server::spawn(Config::default(), BatcherConfig { max_batch: 8, max_wait_s: 2e-3 });
+        server.submit(Request::synthetic(0, ModelId::BertTiny, 64, 0.0));
+        server.submit(Request::synthetic(1, ModelId::BertTiny, 64, 1.0)); // 1 s >> 2 ms window
+        let responses = server.collect(2);
+        assert_eq!(responses.len(), 2);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn idle_pending_drains_on_wall_clock_timeout() {
+        // A lone request with no follow-up traffic and no flush must
+        // still come back (via the recv_timeout drain path).
+        let server =
+            Server::spawn(Config::default(), BatcherConfig { max_batch: 8, max_wait_s: 5e-3 });
+        server.submit(Request::synthetic(7, ModelId::BertTiny, 64, 0.0));
+        let responses = server.collect(1);
+        assert_eq!(responses.len(), 1);
+        assert_eq!(responses[0].id, 7);
     }
 }

@@ -24,4 +24,5 @@ pub mod power;
 pub mod reram;
 pub mod runtime;
 pub mod thermal;
+pub mod traffic;
 pub mod util;

@@ -28,6 +28,8 @@ use hetrax::model::{ModelId, Workload};
 use hetrax::noc::{traffic, NocSim, Topology};
 use hetrax::optim::{Evaluator, MooStage, ObjectiveSet};
 use hetrax::perf::PerfEstimator;
+use hetrax::traffic::loadtest::{self, LoadtestConfig};
+use hetrax::traffic::{ArrivalPattern, RequestMix, RoutePolicy};
 use hetrax::util::rng::Rng;
 
 /// Tiny argv parser: positional command + `--key value` / `--flag` pairs.
@@ -77,6 +79,13 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
 }
 
 fn main() -> Result<()> {
@@ -121,6 +130,7 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(&cfg, &args, seed),
         "optimize" => cmd_optimize(&cfg, &args, effort, seed),
         "serve" => cmd_serve(&cfg, &args),
+        "loadtest" => cmd_loadtest(&cfg, &args, seed),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -148,6 +158,11 @@ COMMANDS:
   optimize    full Eq. 6 multi-objective DSE, prints the Pareto front
               [--threads N] (0 = auto; HETRAX_THREADS env also honoured)
   serve       coordinator serving demo [--requests N --batch N]
+  loadtest    open-loop traffic run with thermal admission control
+              [--pattern poisson|bursty|diurnal|replay --rps R
+               --duration S --stacks N --policy jsq|rr --models a,b
+               --batch N --slo S --ceiling C --uncontrolled
+               --trace FILE (replay) --threads N --out BENCH_serve.json]
 ";
 
 fn cmd_spec(cfg: &Config) -> Result<()> {
@@ -270,5 +285,96 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     let r = PerfEstimator::new(cfg).estimate(&w);
     println!("  single-inference estimate: {:.2} ms, {:.1} mJ",
              r.latency_s * 1e3, r.energy.total_j() * 1e3);
+    Ok(())
+}
+
+fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
+    let rps = args.get_f64("rps", 200.0)?;
+    let duration = args.get_f64("duration", 2.0)?;
+    let pattern = match args.get("pattern").unwrap_or("poisson") {
+        "poisson" => ArrivalPattern::Poisson { rps },
+        "bursty" => ArrivalPattern::Bursty {
+            rps,
+            burst: args.get_f64("burst", 4.0)?,
+            mean_on_s: 0.2,
+            mean_off_s: 0.8,
+        },
+        "diurnal" => ArrivalPattern::Diurnal {
+            rps,
+            period_s: args.get_f64("period", duration.max(1e-9))?,
+            amplitude: args.get_f64("amplitude", 0.8)?,
+        },
+        "replay" => {
+            let path = args
+                .get("trace")
+                .ok_or_else(|| anyhow!("--pattern replay needs --trace FILE"))?;
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}"))?;
+            ArrivalPattern::replay_from_json(&text)
+                .map_err(|e| anyhow!("parsing {path}: {e}"))?
+        }
+        other => bail!("unknown pattern {other:?}"),
+    };
+    let models: Vec<ModelId> = args
+        .get("models")
+        .unwrap_or("bert-base")
+        .split(',')
+        .map(|s| ModelId::parse(s.trim()).ok_or_else(|| anyhow!("unknown model {s:?}")))
+        .collect::<Result<_>>()?;
+    let policy = RoutePolicy::parse(args.get("policy").unwrap_or("jsq"))
+        .ok_or_else(|| anyhow!("unknown policy (jsq | rr)"))?;
+
+    let mut lt = LoadtestConfig::new(pattern, RequestMix::models(&models));
+    lt.duration_s = duration;
+    lt.stacks = args.get_usize("stacks", 1)?;
+    lt.policy = policy;
+    lt.seed = seed;
+    lt.batcher.max_batch = args.get_usize("batch", 8)?;
+    lt.slo_s = args.get_f64("slo", 0.25)?;
+    lt.threads = args.get_usize("threads", 0)?;
+    lt.throttle.ceiling_c = args.get_f64("ceiling", lt.throttle.ceiling_c)?;
+    lt.throttle.enabled = !args.has("uncontrolled");
+
+    let report = loadtest::run(cfg, &lt);
+    let t = &report.total;
+    println!(
+        "loadtest {} @ {:.0} rps x {:.1}s over {} stack(s), policy {}",
+        lt.pattern.name(), lt.pattern.nominal_rps(), duration, lt.stacks, lt.policy.name()
+    );
+    println!(
+        "  requests:  {} submitted, {} completed, {} shed ({} within {:.0} ms SLO)",
+        t.submitted, t.completed, t.shed, t.within_slo, lt.slo_s * 1e3
+    );
+    println!(
+        "  latency:   p50 {:.2} ms  p99 {:.2} ms  p99.9 {:.2} ms",
+        t.latency_us.percentile(50.0) as f64 / 1e3,
+        t.latency_us.percentile(99.0) as f64 / 1e3,
+        t.latency_us.percentile(99.9) as f64 / 1e3
+    );
+    println!(
+        "  goodput:   {:.1} req/s (throughput {:.1} req/s, makespan {:.2} s)",
+        report.goodput_rps(), report.throughput_rps(), t.makespan_s
+    );
+    println!(
+        "  tiers:     SM util {:.2}, ReRAM util {:.2}, energy {:.2} J",
+        report.sm_utilization(), report.reram_utilization(), t.energy_j
+    );
+    println!(
+        "  thermal:   ReRAM peak {:.1} C vs ceiling {:.1} C ({}), {} throttle events / {} windows",
+        report.reram_peak_c,
+        lt.throttle.ceiling_c,
+        if lt.throttle.enabled { "controlled" } else { "uncontrolled" },
+        report.throttle_events,
+        report.windows
+    );
+    let out = args.get("out").unwrap_or("BENCH_serve.json");
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, report.to_json(&lt).pretty())
+        .with_context(|| format!("writing {out}"))?;
+    println!("wrote {out}");
     Ok(())
 }

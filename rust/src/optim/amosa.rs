@@ -5,11 +5,21 @@
 //! moves that dominate are taken; dominated moves are taken with a
 //! Boltzmann probability on the (normalized) amount of domination;
 //! mutually non-dominating moves are accepted with probability ½.
+//!
+//! Parallelism follows the DESIGN.md §Perf discipline: each round draws
+//! `speculation` candidate perturbations of the current point serially
+//! from the one rng stream (multiple-proposal annealing), fans only the
+//! pure evaluations out over the worker pool, then folds archive offers
+//! and the acceptance chain serially in draw order. The trajectory is a
+//! function of (seed, speculation) only — byte-identical at any thread
+//! count — and `speculation = 1` reproduces the classic serial chain
+//! exactly.
 
 use crate::config::Config;
 use crate::optim::objectives::{Evaluator, ObjectiveSet, Objectives};
 use crate::optim::pareto::{dominates, ParetoArchive};
 use crate::optim::stage::DseResult;
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 pub struct Amosa<'a> {
@@ -18,6 +28,12 @@ pub struct Amosa<'a> {
     pub iterations: usize,
     pub t_start: f64,
     pub t_end: f64,
+    /// Candidates drawn (and evaluated in parallel) per round. Part of
+    /// the trajectory definition — NOT tied to the thread count.
+    pub speculation: usize,
+    /// Worker threads for candidate evaluation: 0 = auto
+    /// (`HETRAX_THREADS` / cores), 1 = serial. Never changes results.
+    pub threads: usize,
 }
 
 impl<'a> Amosa<'a> {
@@ -29,6 +45,8 @@ impl<'a> Amosa<'a> {
             iterations: cfg.moo_epochs * 10 * cfg.moo_perturbations,
             t_start: 1.0,
             t_end: 1e-3,
+            speculation: 8,
+            threads: 0,
         }
     }
 
@@ -50,6 +68,8 @@ impl<'a> Amosa<'a> {
 
     pub fn run(&self, rng: &mut Rng) -> DseResult {
         let cfg = self.evaluator.cfg;
+        let threads = pool::resolve_threads(self.threads);
+        let spec = self.speculation.max(1);
         let mut archive = ParetoArchive::new(self.set, 64);
         let mut cur = crate::arch::Placement::mesh_baseline(cfg);
         let mut cur_obj = self.evaluator.evaluate(&cur);
@@ -57,39 +77,52 @@ impl<'a> Amosa<'a> {
         let mut evaluations = 1usize;
         let mut history = Vec::new();
 
-        for it in 0..self.iterations {
-            let frac = it as f64 / self.iterations.max(1) as f64;
-            let temp = self.t_start * (self.t_end / self.t_start).powf(frac);
+        let mut it = 0usize;
+        while it < self.iterations {
+            // Draw the round's candidates serially from the one rng
+            // stream (all perturb the round-start point), fan out only
+            // the pure evaluations.
+            let k = spec.min(self.iterations - it);
+            let cands: Vec<crate::arch::Placement> =
+                (0..k).map(|_| cur.perturb(cfg, rng)).collect();
+            let objs = pool::par_map_threads(&cands, threads, |c| self.evaluator.evaluate(c));
+            evaluations += k;
+            let batch: Vec<(crate::arch::Placement, Objectives)> =
+                cands.into_iter().zip(objs).collect();
+            archive.offer_batch(&batch, threads);
 
-            let cand = cur.perturb(cfg, rng);
-            let obj = self.evaluator.evaluate(&cand);
-            evaluations += 1;
-            if obj.connected {
-                archive.insert(&cand, &obj);
-                let accept = if dominates(&obj, &cur_obj, &self.set) {
-                    true
-                } else if dominates(&cur_obj, &obj, &self.set) {
-                    let amt = self.domination_amount(&cur_obj, &obj);
-                    rng.chance((-amt / temp).exp())
-                } else {
-                    rng.chance(0.5)
-                };
-                if accept {
-                    cur = cand;
-                    cur_obj = obj;
+            // Serial acceptance fold in draw order: the annealing chain
+            // (including its rng draws) never depends on thread count.
+            for (cand, obj) in batch {
+                let frac = it as f64 / self.iterations.max(1) as f64;
+                let temp = self.t_start * (self.t_end / self.t_start).powf(frac);
+                if obj.connected {
+                    let accept = if dominates(&obj, &cur_obj, &self.set) {
+                        true
+                    } else if dominates(&cur_obj, &obj, &self.set) {
+                        let amt = self.domination_amount(&cur_obj, &obj);
+                        rng.chance((-amt / temp).exp())
+                    } else {
+                        rng.chance(0.5)
+                    };
+                    if accept {
+                        cur = cand;
+                        cur_obj = obj;
+                    }
                 }
-            }
-            if it % 100 == 0 {
-                // Track the best scalarized front quality over time.
-                if let Some(best) = archive.best_scalarized() {
-                    let scale = [1.0, 1.0, 2000.0, 0.25];
-                    let q: f64 = (0..4)
-                        .filter(|&i| self.set.active[i])
-                        .map(|i| best.objectives.vals[i] / scale[i])
-                        .sum::<f64>()
-                        / self.set.count() as f64;
-                    history.push(q);
+                if it % 100 == 0 {
+                    // Track the best scalarized front quality over time.
+                    if let Some(best) = archive.best_scalarized() {
+                        let scale = [1.0, 1.0, 2000.0, 0.25];
+                        let q: f64 = (0..4)
+                            .filter(|&i| self.set.active[i])
+                            .map(|i| best.objectives.vals[i] / scale[i])
+                            .sum::<f64>()
+                            / self.set.count() as f64;
+                        history.push(q);
+                    }
                 }
+                it += 1;
             }
         }
         DseResult { archive, evaluations, history }
@@ -112,11 +145,49 @@ mod tests {
             iterations: 120,
             t_start: 1.0,
             t_end: 1e-3,
+            speculation: 8,
+            threads: 1,
         };
         let mut rng = Rng::new(11);
         let res = amosa.run(&mut rng);
         assert!(!res.archive.is_empty());
         assert!(res.evaluations >= 120);
+        // The iteration budget is exact even when speculation does not
+        // divide it.
+        assert_eq!(res.evaluations, 121);
+    }
+
+    #[test]
+    fn parallel_byte_identical_to_serial() {
+        // Same seed + speculation: the archive, history and evaluation
+        // count must match at every thread count. Fresh evaluators per
+        // run so memo state cannot mask a divergence.
+        let cfg = Config::default();
+        let w = Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, 512);
+        let run_with = |threads: usize| {
+            let ev = Evaluator::new(&cfg, &w);
+            let amosa = Amosa {
+                evaluator: &ev,
+                set: ObjectiveSet::ptn(),
+                iterations: 60,
+                t_start: 1.0,
+                t_end: 1e-3,
+                speculation: 4,
+                threads,
+            };
+            amosa.run(&mut Rng::new(13))
+        };
+        let serial = run_with(1);
+        for threads in [2usize, 4] {
+            let par = run_with(threads);
+            assert_eq!(par.evaluations, serial.evaluations, "threads {threads}");
+            assert_eq!(par.history, serial.history, "threads {threads}");
+            assert_eq!(par.archive.len(), serial.archive.len(), "threads {threads}");
+            for (a, b) in par.archive.entries.iter().zip(&serial.archive.entries) {
+                assert_eq!(a.objectives.vals, b.objectives.vals);
+                assert_eq!(a.placement, b.placement);
+            }
+        }
     }
 
     #[test]
@@ -132,6 +203,8 @@ mod tests {
             iterations: 10,
             t_start: 1.0,
             t_end: 1e-3,
+            speculation: 1,
+            threads: 1,
         };
         let a = Objectives {
             vals: [0.1, 0.1, 100.0, 0.0],

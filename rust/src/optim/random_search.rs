@@ -1,38 +1,58 @@
 //! Uniform random-sampling baseline for the optimizer ablation
 //! (examples/design_space.rs): same evaluation budget, no structure.
+//!
+//! Parallelized with the DESIGN.md §Perf discipline: placements draw
+//! serially from the one rng stream in fixed-size chunks (so the draw
+//! order matches the fully-serial loop), only the pure evaluations fan
+//! out over the worker pool, and archive inserts + history sampling fold
+//! serially in draw order — output is byte-identical to the serial path
+//! at any thread count.
 
 use crate::arch::Placement;
 use crate::optim::objectives::{Evaluator, ObjectiveSet};
 use crate::optim::pareto::ParetoArchive;
 use crate::optim::stage::DseResult;
+use crate::util::pool;
 use crate::util::rng::Rng;
+
+/// Draws per fan-out round. Fixed (not tied to the thread count) so the
+/// trajectory is a function of the seed alone.
+const CHUNK: usize = 64;
 
 pub struct RandomSearch<'a> {
     pub evaluator: &'a Evaluator<'a>,
     pub set: ObjectiveSet,
     pub samples: usize,
+    /// Worker threads: 0 = auto (`HETRAX_THREADS` / cores), 1 = serial.
+    pub threads: usize,
 }
 
 impl<'a> RandomSearch<'a> {
     pub fn run(&self, rng: &mut Rng) -> DseResult {
         let cfg = self.evaluator.cfg;
+        let threads = pool::resolve_threads(self.threads);
         let mut archive = ParetoArchive::new(self.set, 64);
         let mut history = Vec::new();
-        for i in 0..self.samples {
-            let p = Placement::random(cfg, rng);
-            let o = self.evaluator.evaluate(&p);
-            archive.insert(&p, &o);
-            if i % 100 == 0 {
-                if let Some(best) = archive.best_scalarized() {
-                    let scale = [1.0, 1.0, 2000.0, 0.25];
-                    let q: f64 = (0..4)
-                        .filter(|&j| self.set.active[j])
-                        .map(|j| best.objectives.vals[j] / scale[j])
-                        .sum::<f64>()
-                        / self.set.count() as f64;
-                    history.push(q);
+        let mut done = 0usize;
+        while done < self.samples {
+            let n = CHUNK.min(self.samples - done);
+            let cands: Vec<Placement> = (0..n).map(|_| Placement::random(cfg, rng)).collect();
+            let objs = pool::par_map_threads(&cands, threads, |p| self.evaluator.evaluate(p));
+            for (j, (p, o)) in cands.iter().zip(&objs).enumerate() {
+                archive.insert(p, o);
+                if (done + j) % 100 == 0 {
+                    if let Some(best) = archive.best_scalarized() {
+                        let scale = [1.0, 1.0, 2000.0, 0.25];
+                        let q: f64 = (0..4)
+                            .filter(|&i| self.set.active[i])
+                            .map(|i| best.objectives.vals[i] / scale[i])
+                            .sum::<f64>()
+                            / self.set.count() as f64;
+                        history.push(q);
+                    }
                 }
             }
+            done += n;
         }
         DseResult { archive, evaluations: self.samples, history }
     }
@@ -49,9 +69,35 @@ mod tests {
         let cfg = Config::default();
         let w = Workload::build(ModelId::BertBase, ArchVariant::EncoderOnly, 256);
         let ev = Evaluator::new(&cfg, &w);
-        let rs = RandomSearch { evaluator: &ev, set: ObjectiveSet::ptn(), samples: 50 };
+        let rs = RandomSearch { evaluator: &ev, set: ObjectiveSet::ptn(), samples: 50, threads: 1 };
         let res = rs.run(&mut Rng::new(5));
         assert!(!res.archive.is_empty());
         assert_eq!(res.evaluations, 50);
+    }
+
+    #[test]
+    fn parallel_byte_identical_to_serial() {
+        // Spans multiple chunks (150 > 2×64) and several history points.
+        let cfg = Config::default();
+        let w = Workload::build(ModelId::BertBase, ArchVariant::EncoderOnly, 256);
+        let run_with = |threads: usize| {
+            let ev = Evaluator::new(&cfg, &w);
+            let rs =
+                RandomSearch { evaluator: &ev, set: ObjectiveSet::ptn(), samples: 150, threads };
+            rs.run(&mut Rng::new(17))
+        };
+        let serial = run_with(1);
+        // Sampled at draws 0 and 100 (skipped while the archive is empty).
+        assert!(serial.history.len() <= 2);
+        for threads in [2usize, 4] {
+            let par = run_with(threads);
+            assert_eq!(par.evaluations, serial.evaluations, "threads {threads}");
+            assert_eq!(par.history, serial.history, "threads {threads}");
+            assert_eq!(par.archive.len(), serial.archive.len(), "threads {threads}");
+            for (a, b) in par.archive.entries.iter().zip(&serial.archive.entries) {
+                assert_eq!(a.objectives.vals, b.objectives.vals);
+                assert_eq!(a.placement, b.placement);
+            }
+        }
     }
 }

@@ -71,6 +71,23 @@ impl ThermalModel {
         temp
     }
 
+    /// Evaluate a uniform per-tier power split: `tier_powers[k]` watts
+    /// spread evenly over tier k's columns (tier 0 nearest the sink) —
+    /// the quick what-if entry point when no placement-resolved grid is
+    /// at hand. (The serving-path admission controller rasterizes real
+    /// core powers via `PowerGrid::from_core_powers` instead.)
+    pub fn evaluate_tier_powers(&self, tier_powers: &[f64]) -> ThermalReport {
+        let mut g = PowerGrid::zeros();
+        assert!(tier_powers.len() <= g.power.len(), "too many tiers");
+        for (t, &p) in tier_powers.iter().enumerate() {
+            let per_cell = p / (FINE * FINE) as f64;
+            for c in g.power[t].iter_mut() {
+                *c = per_cell;
+            }
+        }
+        self.evaluate(&g)
+    }
+
     /// Full evaluation: Eq. 2 columns + lateral Jacobi relaxation within
     /// each layer (heat spreads toward cooler neighbouring columns), then
     /// Eq. 3 deltas and peaks.
@@ -216,6 +233,21 @@ mod tests {
         }
         let skewed = m.evaluate(&g);
         assert!(skewed.objective() > uniform.objective());
+    }
+
+    #[test]
+    fn evaluate_tier_powers_matches_manual_grid() {
+        let cfg = Config::default();
+        let m = ThermalModel::new(&cfg);
+        let powers = [24.0, 24.0, 24.0, 21.0];
+        let via_grid = m.evaluate(&uniform_grid(&powers));
+        let direct = m.evaluate_tier_powers(&powers);
+        assert_eq!(direct.peak_c, via_grid.peak_c);
+        assert_eq!(direct.tier_peak_c, via_grid.tier_peak_c);
+        assert_eq!(direct.tier_delta_c, via_grid.tier_delta_c);
+        // Fewer tiers than the stack is allowed (rest stay unpowered).
+        let partial = m.evaluate_tier_powers(&[30.0]);
+        assert!(partial.tier_peak_c[0] > cfg.ambient_c);
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! Thermally-coupled admission control.
+//!
+//! The paper's §5.2/§5.3 argument is that the PTN-style stack keeps the
+//! ReRAM tier cool enough that inference accuracy survives (Fig. 4
+//! degrades sharply with ReRAM temperature). That argument is made at a
+//! single operating point; under sustained open-loop load the operating
+//! point is whatever the traffic makes it. This controller closes the
+//! loop: each control window it converts the work about to be admitted
+//! into an `Activity` snapshot, runs the `thermal` model on the
+//! placement-resolved power grid, and admits only the largest batch
+//! prefix whose predicted ReRAM-tier peak stays under the configured
+//! ceiling — deferring the rest and halving the batch cap. Deferred
+//! requests that age past the queue-wait bound are shed, so an
+//! over-ceiling offered load degrades to bounded-latency goodput instead
+//! of unbounded queues.
+//!
+//! Invariants (tested in `loadtest`):
+//! * Provided the idle floor (zero admitted work) is below the ceiling,
+//!   every window's recorded ReRAM-tier temperature is ≤ the ceiling.
+//! * Prediction is monotone in the admitted prefix (power is affine in
+//!   the busy fractions, temperature affine in power), so the prefix
+//!   bisection is exact.
+//! * The controller is a pure function of simulated quantities — no
+//!   wall clock, no randomness — keeping loadtests byte-identical.
+
+use crate::arch::Placement;
+use crate::config::Config;
+use crate::coordinator::Batch;
+use crate::perf::timing;
+use crate::power::{self, Activity};
+use crate::thermal::{PowerGrid, ThermalModel, ThermalReport};
+
+/// Throttle policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ThrottleConfig {
+    /// ReRAM-tier peak ceiling (°C). Default sits just under the §5.2
+    /// PTN full-load operating point (~57 °C), so saturating traffic
+    /// trips the controller while nominal load does not.
+    pub ceiling_c: f64,
+    /// Control-window length (simulated seconds).
+    pub interval_s: f64,
+    /// Floor for the throttled batch cap.
+    pub min_batch: usize,
+    /// Deferred requests older than this are shed (seconds).
+    pub max_queue_wait_s: f64,
+    /// When false the controller only observes (telemetry still records
+    /// window temperatures) — the "uncontrolled" comparison run.
+    pub enabled: bool,
+}
+
+impl Default for ThrottleConfig {
+    fn default() -> Self {
+        ThrottleConfig {
+            ceiling_c: 55.0,
+            interval_s: 0.05,
+            min_batch: 1,
+            max_queue_wait_s: 1.0,
+            enabled: true,
+        }
+    }
+}
+
+/// One control action (recorded whenever the controller deferred work or
+/// moved the batch cap).
+#[derive(Debug, Clone)]
+pub struct ThrottleEvent {
+    pub t_s: f64,
+    /// Predicted ReRAM-tier peak had everything been admitted (°C).
+    pub offered_reram_c: f64,
+    /// Predicted ReRAM-tier peak of what was actually admitted (°C).
+    pub admitted_reram_c: f64,
+    pub admitted_batches: usize,
+    pub deferred_batches: usize,
+    pub batch_cap: usize,
+}
+
+/// Per-batch demand the controller prices a window with.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchCost {
+    /// SM-tier busy seconds the batch adds (B · t_MHA).
+    pub sm_s: f64,
+    /// ReRAM-tier busy seconds (B · t_FF).
+    pub ff_s: f64,
+    /// Fraction of ReRAM tiles the batch's model keeps active.
+    pub active_frac: f64,
+}
+
+/// The controller. Owns the thermal model and the placement the power
+/// rasterizes onto (PTN-style stack by default, matching `hetrax fig6b`).
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    cfg: Config,
+    model: ThermalModel,
+    placement: Placement,
+    reram_tier: usize,
+    pub throttle: ThrottleConfig,
+    /// Current (possibly throttled) batch cap.
+    pub batch_cap: usize,
+    base_batch: usize,
+    pub events: Vec<ThrottleEvent>,
+    pub windows: u64,
+    /// Highest recorded window temperature anywhere in the stack (°C).
+    pub peak_c: f64,
+    /// Highest recorded ReRAM-tier window temperature (°C).
+    pub reram_peak_c: f64,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: &Config, throttle: ThrottleConfig, base_batch: usize) -> AdmissionController {
+        // PTN-style stack: ReRAM tier adjacent to the heat sink — the
+        // arrangement the paper serves with (§5.2).
+        let mut placement = Placement::mesh_baseline(cfg);
+        placement.tier_order.swap(0, 3);
+        let reram_tier = placement.reram_tier();
+        AdmissionController {
+            cfg: cfg.clone(),
+            model: ThermalModel::new(cfg),
+            placement,
+            reram_tier,
+            throttle,
+            batch_cap: base_batch.max(1),
+            base_batch: base_batch.max(1),
+            events: Vec::new(),
+            windows: 0,
+            peak_c: 0.0,
+            reram_peak_c: 0.0,
+        }
+    }
+
+    /// Predict the steady-state thermal report for one control window
+    /// given the busy seconds the admitted work contributes to each tier.
+    pub fn predict(&self, sm_busy_s: f64, ff_busy_s: f64, active_frac: f64) -> ThermalReport {
+        let window = self.throttle.interval_s.max(1e-9);
+        let busy = (sm_busy_s / window).min(1.0);
+        let act = Activity {
+            // Same shape as the perf estimator's Activity: compute
+            // efficiency scaling plus the always-on fetch/decode floor.
+            sm_util: busy * timing::SM_GEMM_EFFICIENCY + 0.25,
+            mc_util: 0.7 * busy,
+            reram_active_frac: active_frac,
+            reram_duty: (ff_busy_s / window).min(1.0),
+        };
+        let powers = power::core_powers(&self.cfg, &act);
+        let grid = PowerGrid::from_core_powers(&self.cfg, &self.placement, &powers);
+        self.model.evaluate(&grid)
+    }
+
+    /// Predicted ReRAM-tier peak for a window (°C).
+    pub fn predict_reram_c(&self, sm_busy_s: f64, ff_busy_s: f64, active_frac: f64) -> f64 {
+        self.predict(sm_busy_s, ff_busy_s, active_frac).tier_peak_c[self.reram_tier]
+    }
+
+    /// The zero-load floor: window temperature with nothing admitted.
+    pub fn idle_reram_c(&self) -> f64 {
+        self.predict_reram_c(0.0, 0.0, 0.0)
+    }
+
+    fn prefix_cost(costs: &[BatchCost], n: usize) -> (f64, f64, f64) {
+        let mut sm = 0.0;
+        let mut ff = 0.0;
+        let mut frac = 0.0f64;
+        for c in &costs[..n] {
+            sm += c.sm_s;
+            ff += c.ff_s;
+            frac = frac.max(c.active_frac);
+        }
+        (sm, ff, frac)
+    }
+
+    /// Decide one control window at simulated time `t_s`: split `batches`
+    /// into (admitted, deferred). `costs` must align with `batches`.
+    /// Records window temperatures and throttle events; adjusts the
+    /// batch cap (halve on throttle, recover ×2 when comfortably under
+    /// the ceiling).
+    pub fn admit(
+        &mut self,
+        t_s: f64,
+        batches: Vec<Batch>,
+        costs: &[BatchCost],
+    ) -> (Vec<Batch>, Vec<Batch>) {
+        assert_eq!(batches.len(), costs.len());
+        self.windows += 1;
+        let n = batches.len();
+        let (sm_all, ff_all, frac_all) = Self::prefix_cost(costs, n);
+        let offered = self.predict(sm_all, ff_all, frac_all);
+        let offered_reram = offered.tier_peak_c[self.reram_tier];
+
+        if !self.throttle.enabled {
+            // Observe-only: record what the offered load does.
+            self.peak_c = self.peak_c.max(offered.peak_c);
+            self.reram_peak_c = self.reram_peak_c.max(offered_reram);
+            return (batches, Vec::new());
+        }
+
+        // Largest admissible prefix by bisection (prediction is monotone
+        // in the prefix).
+        let admissible = |ctl: &Self, p: usize| -> bool {
+            let (sm, ff, frac) = Self::prefix_cost(costs, p);
+            ctl.predict_reram_c(sm, ff, frac) <= ctl.throttle.ceiling_c
+        };
+        let keep = if offered_reram <= self.throttle.ceiling_c {
+            n
+        } else {
+            // Invariant: lo admissible (or 0), hi inadmissible.
+            let mut lo = 0usize;
+            let mut hi = n;
+            if !admissible(self, 0) {
+                // Even the idle floor exceeds the ceiling: nothing can be
+                // admitted; ageing will shed the backlog.
+                hi = 0;
+            }
+            while hi - lo > 1 {
+                let mid = (lo + hi) / 2;
+                if admissible(self, mid) {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            lo.min(hi)
+        };
+
+        // Re-solve only when something was deferred; a full admit keeps
+        // the `offered` prediction (same inputs, same result).
+        let (admitted_report, admitted_reram) = if keep == n {
+            (offered, offered_reram)
+        } else {
+            let (sm, ff, frac) = Self::prefix_cost(costs, keep);
+            let report = self.predict(sm, ff, frac);
+            let reram = report.tier_peak_c[self.reram_tier];
+            (report, reram)
+        };
+        self.peak_c = self.peak_c.max(admitted_report.peak_c);
+        self.reram_peak_c = self.reram_peak_c.max(admitted_reram);
+
+        let old_cap = self.batch_cap;
+        if keep < n {
+            self.batch_cap = (self.batch_cap / 2).max(self.throttle.min_batch);
+        } else if admitted_reram <= self.throttle.ceiling_c - 2.0 {
+            self.batch_cap = (self.batch_cap * 2).min(self.base_batch);
+        }
+
+        if keep < n || self.batch_cap != old_cap {
+            self.events.push(ThrottleEvent {
+                t_s,
+                offered_reram_c: offered_reram,
+                admitted_reram_c: admitted_reram,
+                admitted_batches: keep,
+                deferred_batches: n - keep,
+                batch_cap: self.batch_cap,
+            });
+        }
+
+        let mut batches = batches;
+        let deferred = batches.split_off(keep);
+        (batches, deferred)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Request;
+    use crate::model::ModelId;
+
+    fn batch_of(n: usize, t: f64) -> Batch {
+        Batch {
+            requests: (0..n as u64)
+                .map(|i| Request::synthetic(i, ModelId::BertBase, 256, t))
+                .collect(),
+            ready_s: t,
+        }
+    }
+
+    fn saturating_cost() -> BatchCost {
+        // One window's worth of full-tier busy time.
+        BatchCost { sm_s: 0.05, ff_s: 0.02, active_frac: 0.5 }
+    }
+
+    #[test]
+    fn idle_floor_below_saturated_prediction() {
+        let cfg = Config::default();
+        let ctl = AdmissionController::new(&cfg, ThrottleConfig::default(), 8);
+        let idle = ctl.idle_reram_c();
+        let hot = ctl.predict_reram_c(0.05, 0.02, 0.5);
+        assert!(idle > cfg.ambient_c);
+        assert!(hot > idle + 3.0, "saturated {hot} vs idle {idle}");
+        // Prediction is monotone in the busy fractions.
+        let mid = ctl.predict_reram_c(0.025, 0.01, 0.5);
+        assert!(idle <= mid && mid <= hot);
+    }
+
+    #[test]
+    fn uncontrolled_admits_everything_but_records_peaks() {
+        let cfg = Config::default();
+        let mut t = ThrottleConfig::default();
+        t.enabled = false;
+        t.ceiling_c = 0.0; // would reject everything if enabled
+        let mut ctl = AdmissionController::new(&cfg, t, 8);
+        let (adm, def) = ctl.admit(0.0, vec![batch_of(8, 0.0)], &[saturating_cost()]);
+        assert_eq!(adm.len(), 1);
+        assert!(def.is_empty());
+        assert!(ctl.events.is_empty());
+        assert!(ctl.reram_peak_c > cfg.ambient_c);
+    }
+
+    #[test]
+    fn over_ceiling_load_defers_and_throttles() {
+        let cfg = Config::default();
+        let ctl_probe = AdmissionController::new(&cfg, ThrottleConfig::default(), 8);
+        let idle = ctl_probe.idle_reram_c();
+        let hot = ctl_probe.predict_reram_c(0.10, 0.04, 0.5);
+        // Ceiling strictly between idle and the 2-batch offered load,
+        // with margin on both sides of the 1-batch prediction.
+        let mut t = ThrottleConfig::default();
+        t.ceiling_c = idle + 0.3 * (hot - idle);
+        let mut ctl = AdmissionController::new(&cfg, t, 8);
+        let batches = vec![batch_of(8, 0.0), batch_of(8, 0.0)];
+        let costs = [saturating_cost(), saturating_cost()];
+        let (adm, def) = ctl.admit(0.0, batches, &costs);
+        assert!(def.len() >= 1, "hot load must defer something");
+        assert_eq!(adm.len() + def.len(), 2);
+        assert_eq!(ctl.events.len(), 1);
+        assert!(ctl.events[0].offered_reram_c > t.ceiling_c);
+        assert!(ctl.reram_peak_c <= t.ceiling_c + 1e-9);
+        assert!(ctl.batch_cap < 8, "cap should halve");
+    }
+
+    #[test]
+    fn cap_recovers_when_cool() {
+        let cfg = Config::default();
+        let mut ctl = AdmissionController::new(&cfg, ThrottleConfig::default(), 8);
+        ctl.batch_cap = 2;
+        // An idle window comfortably under the ceiling doubles the cap
+        // back toward the base.
+        let (adm, def) = ctl.admit(0.0, Vec::new(), &[]);
+        assert!(adm.is_empty() && def.is_empty());
+        assert_eq!(ctl.batch_cap, 4);
+        ctl.admit(0.05, Vec::new(), &[]);
+        ctl.admit(0.10, Vec::new(), &[]);
+        assert_eq!(ctl.batch_cap, 8, "cap saturates at the base");
+    }
+}

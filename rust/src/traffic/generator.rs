@@ -1,0 +1,385 @@
+//! Open-loop workload generators: seeded arrival processes over the
+//! model zoo with mixed sequence-length distributions.
+//!
+//! All four patterns draw from one `Rng` stream, so a seed fully
+//! determines the request sequence (ids, arrival times, model/seq mix) —
+//! the loadtest's byte-identical-output contract starts here. Arrival
+//! times are simulated seconds; nothing reads the wall clock.
+
+use crate::coordinator::Request;
+use crate::model::{ArchVariant, ModelId};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// One event of a replayed trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayEvent {
+    pub t_s: f64,
+    pub model: ModelId,
+    pub variant: ArchVariant,
+    pub seq: usize,
+}
+
+/// The arrival process. Rates are requests/second of *simulated* time.
+#[derive(Debug, Clone)]
+pub enum ArrivalPattern {
+    /// Homogeneous Poisson at `rps`.
+    Poisson { rps: f64 },
+    /// 2-state MMPP (on/off bursts): exponential state holding times with
+    /// means `mean_on_s`/`mean_off_s`; the on-state rate is `max(burst,
+    /// 1)` × `rps` (a burst factor below 1 would make the "on" state the
+    /// quiet one, so it is clamped — `burst = 1` degenerates to plain
+    /// Poisson) and the off-state rate is chosen so the long-run mean
+    /// stays `rps` (clamped at 0 when the bursts alone exceed it).
+    Bursty { rps: f64, burst: f64, mean_on_s: f64, mean_off_s: f64 },
+    /// Inhomogeneous Poisson with a sinusoidal rate curve of the given
+    /// period starting at the trough: rate(t) = rps·(1 + a·sin(2πt/T −
+    /// π/2)), sampled by Lewis–Shedler thinning. Mean over whole periods
+    /// is `rps`; `amplitude` ∈ [0, 1).
+    Diurnal { rps: f64, period_s: f64, amplitude: f64 },
+    /// Replay a recorded trace (times clipped to the run duration).
+    Replay { events: Vec<ReplayEvent> },
+}
+
+impl ArrivalPattern {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalPattern::Poisson { .. } => "poisson",
+            ArrivalPattern::Bursty { .. } => "bursty",
+            ArrivalPattern::Diurnal { .. } => "diurnal",
+            ArrivalPattern::Replay { .. } => "replay",
+        }
+    }
+
+    /// Long-run mean rate (for replay: events over their span).
+    pub fn nominal_rps(&self) -> f64 {
+        match self {
+            ArrivalPattern::Poisson { rps }
+            | ArrivalPattern::Bursty { rps, .. }
+            | ArrivalPattern::Diurnal { rps, .. } => *rps,
+            ArrivalPattern::Replay { events } => {
+                let span = events.iter().map(|e| e.t_s).fold(0.0, f64::max);
+                if span > 0.0 { events.len() as f64 / span } else { 0.0 }
+            }
+        }
+    }
+
+    /// Parse a replay trace: either a bare JSON array of events or an
+    /// object with an `"events"` array. Each event: `{"t_s": 0.01,
+    /// "model": "bert-base", "seq": 128}` with an optional `"variant"`.
+    pub fn replay_from_json(text: &str) -> Result<ArrivalPattern, String> {
+        let doc = json::parse(text)?;
+        let arr = match &doc {
+            Json::Arr(_) => &doc,
+            Json::Obj(_) => doc.get("events").ok_or("missing \"events\" array")?,
+            _ => return Err("trace must be an array or an object".into()),
+        };
+        let mut events = Vec::new();
+        for (i, e) in arr.as_arr().ok_or("\"events\" is not an array")?.iter().enumerate() {
+            let t_s = e
+                .get("t_s")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("event {i}: missing t_s"))?;
+            let model = e
+                .get("model")
+                .and_then(Json::as_str)
+                .and_then(ModelId::parse)
+                .ok_or_else(|| format!("event {i}: bad model"))?;
+            let variant = match e.get("variant").and_then(Json::as_str) {
+                Some(v) => {
+                    ArchVariant::parse(v).ok_or_else(|| format!("event {i}: bad variant"))?
+                }
+                None => model.default_variant(),
+            };
+            let seq = e
+                .get("seq")
+                .and_then(Json::as_usize)
+                .filter(|&s| s > 0)
+                .ok_or_else(|| format!("event {i}: bad seq"))?;
+            events.push(ReplayEvent { t_s, model, variant, seq });
+        }
+        events.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).unwrap());
+        Ok(ArrivalPattern::Replay { events })
+    }
+}
+
+/// Weighted mix over models and sequence lengths. Weights need not sum
+/// to 1 — they are normalized at sampling time.
+#[derive(Debug, Clone)]
+pub struct RequestMix {
+    pub models: Vec<(ModelId, f64)>,
+    pub seqs: Vec<(usize, f64)>,
+}
+
+impl RequestMix {
+    /// One model with the default mixed sequence-length distribution
+    /// (short-query-heavy, long tail — the shape production transformer
+    /// serving traces show).
+    pub fn single(model: ModelId) -> RequestMix {
+        RequestMix {
+            models: vec![(model, 1.0)],
+            seqs: vec![(64, 0.2), (128, 0.35), (256, 0.3), (512, 0.15)],
+        }
+    }
+
+    /// Uniform mix over several models, default sequence mix.
+    pub fn models(models: &[ModelId]) -> RequestMix {
+        let mut mix = RequestMix::single(models[0]);
+        mix.models = models.iter().map(|&m| (m, 1.0)).collect();
+        mix
+    }
+
+    fn weighted<'a, T>(rng: &mut Rng, items: &'a [(T, f64)]) -> &'a T {
+        let total: f64 = items.iter().map(|(_, w)| w.max(0.0)).sum();
+        let mut x = rng.f64() * total;
+        for (item, w) in items {
+            x -= w.max(0.0);
+            if x < 0.0 {
+                return item;
+            }
+        }
+        &items[items.len() - 1].0
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> (ModelId, ArchVariant, usize) {
+        let model = *Self::weighted(rng, &self.models);
+        let seq = *Self::weighted(rng, &self.seqs);
+        (model, model.default_variant(), seq)
+    }
+}
+
+/// Seeded open-loop traffic generator.
+#[derive(Debug, Clone)]
+pub struct TrafficGen {
+    pub pattern: ArrivalPattern,
+    pub mix: RequestMix,
+    pub seed: u64,
+}
+
+fn exp_rate(rng: &mut Rng, rate: f64) -> f64 {
+    debug_assert!(rate > 0.0);
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+fn push_sample(requests: &mut Vec<Request>, rng: &mut Rng, mix: &RequestMix, t: f64) {
+    let (model, variant, seq) = mix.sample(rng);
+    let mut r = Request::synthetic(0, model, seq, t);
+    r.variant = variant;
+    requests.push(r);
+}
+
+impl TrafficGen {
+    /// Generate the full arrival stream for `duration_s` simulated
+    /// seconds, sorted by arrival time with ids in arrival order.
+    pub fn generate(&self, duration_s: f64) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed);
+        let mut requests = Vec::new();
+
+        match &self.pattern {
+            ArrivalPattern::Poisson { rps } => {
+                if *rps > 0.0 {
+                    let mut t = 0.0;
+                    loop {
+                        t += exp_rate(&mut rng, *rps);
+                        if t >= duration_s {
+                            break;
+                        }
+                        push_sample(&mut requests, &mut rng, &self.mix, t);
+                    }
+                }
+            }
+            ArrivalPattern::Bursty { rps, burst, mean_on_s, mean_off_s } => {
+                let duty = mean_on_s / (mean_on_s + mean_off_s);
+                let rate_on = rps * burst.max(1.0);
+                let rate_off = ((rps - rate_on * duty) / (1.0 - duty).max(1e-9)).max(0.0);
+                let mut t = 0.0;
+                let mut on = true;
+                let mut state_end = exp_rate(&mut rng, 1.0 / mean_on_s);
+                while t < duration_s {
+                    let rate = if on { rate_on } else { rate_off };
+                    let dt = if rate > 0.0 {
+                        exp_rate(&mut rng, rate)
+                    } else {
+                        f64::INFINITY
+                    };
+                    if t + dt <= state_end {
+                        t += dt;
+                        if t < duration_s {
+                            push_sample(&mut requests, &mut rng, &self.mix, t);
+                        }
+                    } else {
+                        // Exponential holding times are memoryless, so
+                        // redrawing the inter-arrival at the boundary is
+                        // distributionally exact.
+                        t = state_end;
+                        on = !on;
+                        let mean = if on { *mean_on_s } else { *mean_off_s };
+                        state_end = t + exp_rate(&mut rng, 1.0 / mean);
+                    }
+                }
+            }
+            ArrivalPattern::Diurnal { rps, period_s, amplitude } => {
+                let a = amplitude.clamp(0.0, 0.999);
+                let rate_max = rps * (1.0 + a);
+                if rate_max > 0.0 {
+                    let two_pi = 2.0 * std::f64::consts::PI;
+                    let mut t = 0.0;
+                    loop {
+                        t += exp_rate(&mut rng, rate_max);
+                        if t >= duration_s {
+                            break;
+                        }
+                        let phase = two_pi * t / period_s - std::f64::consts::FRAC_PI_2;
+                        let rate = rps * (1.0 + a * phase.sin());
+                        if rng.f64() * rate_max < rate {
+                            push_sample(&mut requests, &mut rng, &self.mix, t);
+                        }
+                    }
+                }
+            }
+            ArrivalPattern::Replay { events } => {
+                for e in events {
+                    if e.t_s >= duration_s {
+                        break;
+                    }
+                    let mut r = Request::synthetic(0, e.model, e.seq, e.t_s);
+                    r.variant = e.variant;
+                    requests.push(r);
+                }
+            }
+        }
+
+        for (i, r) in requests.iter_mut().enumerate() {
+            r.id = i as u64;
+        }
+        requests
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(pattern: ArrivalPattern, seed: u64) -> TrafficGen {
+        TrafficGen { pattern, mix: RequestMix::single(ModelId::BertBase), seed }
+    }
+
+    #[test]
+    fn same_seed_identical_stream() {
+        let g = gen(ArrivalPattern::Poisson { rps: 300.0 }, 7);
+        let a = g.generate(2.0);
+        let b = g.generate(2.0);
+        assert_eq!(a.len(), b.len());
+        assert!(!a.is_empty());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.seq, y.seq);
+        }
+        // A different seed diverges.
+        let c = gen(ArrivalPattern::Poisson { rps: 300.0 }, 8).generate(2.0);
+        assert!(c.len() != a.len() || c[0].arrival_s != a[0].arrival_s);
+    }
+
+    #[test]
+    fn poisson_empirical_rate_near_nominal() {
+        let reqs = gen(ArrivalPattern::Poisson { rps: 500.0 }, 1).generate(4.0);
+        let expected = 2000.0;
+        assert!(
+            (reqs.len() as f64 - expected).abs() < expected * 0.1,
+            "{} arrivals vs ~{expected}",
+            reqs.len()
+        );
+        // Sorted, in-range, ids sequential.
+        for (i, w) in reqs.windows(2).enumerate() {
+            assert!(w[0].arrival_s <= w[1].arrival_s, "unsorted at {i}");
+        }
+        assert!(reqs.iter().all(|r| r.arrival_s < 4.0));
+        assert!(reqs.iter().enumerate().all(|(i, r)| r.id == i as u64));
+    }
+
+    #[test]
+    fn bursty_preserves_mean_rate_and_bursts() {
+        let p = ArrivalPattern::Bursty {
+            rps: 200.0,
+            burst: 4.0,
+            mean_on_s: 0.2,
+            mean_off_s: 0.8,
+        };
+        let reqs = gen(p, 3).generate(30.0);
+        let expected = 6000.0;
+        assert!(
+            (reqs.len() as f64 - expected).abs() < expected * 0.25,
+            "{} arrivals vs ~{expected}",
+            reqs.len()
+        );
+        // Burstiness: the busiest 100 ms window is far above the mean.
+        let mut best = 0usize;
+        for start in 0..295 {
+            let lo = start as f64 * 0.1;
+            let n = reqs
+                .iter()
+                .filter(|r| r.arrival_s >= lo && r.arrival_s < lo + 0.1)
+                .count();
+            best = best.max(n);
+        }
+        // Mean window holds 20; an on-state window holds ~80.
+        assert!(best as f64 > 40.0, "max window {best}");
+    }
+
+    #[test]
+    fn diurnal_peak_heavier_than_trough() {
+        let p = ArrivalPattern::Diurnal { rps: 400.0, period_s: 4.0, amplitude: 0.9 };
+        let reqs = gen(p, 5).generate(4.0);
+        // Trough at t≈0 and t≈4 (sin starts at −π/2), peak at t≈2.
+        let count = |lo: f64, hi: f64| {
+            reqs.iter().filter(|r| r.arrival_s >= lo && r.arrival_s < hi).count()
+        };
+        let trough = count(0.0, 0.5) + count(3.5, 4.0);
+        let peak = count(1.5, 2.5);
+        assert!(peak > 2 * trough, "peak {peak} vs trough {trough}");
+        // Mean over the whole period still ≈ rps.
+        let expected = 1600.0;
+        assert!((reqs.len() as f64 - expected).abs() < expected * 0.15);
+    }
+
+    #[test]
+    fn replay_parses_and_clips() {
+        let text = r#"{"events": [
+            {"t_s": 0.5, "model": "bert-tiny", "seq": 64},
+            {"t_s": 0.1, "model": "bart-base", "seq": 128, "variant": "encoder-decoder"},
+            {"t_s": 9.0, "model": "bert-base", "seq": 256}
+        ]}"#;
+        let p = ArrivalPattern::replay_from_json(text).unwrap();
+        assert_eq!(p.name(), "replay");
+        let reqs = gen(p, 0).generate(1.0);
+        // Sorted by time, the 9.0 s event clipped by the 1 s duration.
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].model, ModelId::BartBase);
+        assert_eq!(reqs[0].seq, 128);
+        assert_eq!(reqs[1].model, ModelId::BertTiny);
+        assert!(ArrivalPattern::replay_from_json("[{\"t_s\": 1}]").is_err());
+        assert!(ArrivalPattern::replay_from_json("7").is_err());
+    }
+
+    #[test]
+    fn mix_respects_weights() {
+        let mut mix = RequestMix::single(ModelId::BertBase);
+        mix.seqs = vec![(128, 0.75), (512, 0.25)];
+        let mut rng = Rng::new(11);
+        let n = 10_000;
+        let mut short = 0;
+        for _ in 0..n {
+            let (m, v, s) = mix.sample(&mut rng);
+            assert_eq!(m, ModelId::BertBase);
+            assert_eq!(v, ArchVariant::EncoderOnly);
+            assert!(s == 128 || s == 512);
+            if s == 128 {
+                short += 1;
+            }
+        }
+        let frac = short as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.03, "short fraction {frac}");
+    }
+}

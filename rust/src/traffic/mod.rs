@@ -1,0 +1,44 @@
+//! S11 — Serving-scale traffic subsystem: the open-loop counterpart to
+//! the closed-loop `coordinator` demo.
+//!
+//! The paper's headline claim is thermal feasibility *under sustained
+//! load*; the ROADMAP north star is a production-scale system serving
+//! heavy traffic. This subsystem closes that gap end to end:
+//!
+//! * [`generator`] — seeded open-loop arrival processes (Poisson, bursty
+//!   MMPP on/off, diurnal rate curve, JSON trace replay) producing
+//!   [`crate::coordinator::Request`] streams over the `model::zoo`
+//!   variants with mixed sequence-length distributions.
+//! * [`telemetry`] — streaming latency/queue-depth recording on the
+//!   log-scale [`crate::util::stats::LogHistogram`]: p50/p99/p99.9,
+//!   goodput vs an SLO, time-to-first-batch, per-tier utilization.
+//! * [`admission`] — thermally-coupled admission control: each control
+//!   window the `thermal` model is evaluated against the engine's recent
+//!   per-tier power draw, and batch size is throttled / load is shed
+//!   when the ReRAM tier would cross the configured ceiling — the
+//!   paper's thermal-feasibility claim demonstrated under load, not
+//!   just at a single operating point.
+//! * [`router`] — multi-stack scale-out: a [`router::StackRouter`]
+//!   shards one request stream across N independent engine stacks
+//!   (join-shortest-queue or round-robin), the same tiered dataflow
+//!   scaled out across packages as in the related chiplet work.
+//! * [`loadtest`] — the orchestration: generate → route → per-stack
+//!   windowed serve with admission control (fanned out over
+//!   `util::pool`), aggregated into a deterministic `BENCH_serve.json`.
+//!
+//! Determinism contract (same as DESIGN.md §Perf): all randomness is
+//! drawn from one seeded stream before the fan-out; per-stack serving is
+//! a pure function of its shard; results fold in stack order. A seeded
+//! loadtest is byte-identical across runs and thread counts.
+
+pub mod admission;
+pub mod generator;
+pub mod loadtest;
+pub mod router;
+pub mod telemetry;
+
+pub use admission::{AdmissionController, ThrottleConfig, ThrottleEvent};
+pub use generator::{ArrivalPattern, ReplayEvent, RequestMix, TrafficGen};
+pub use loadtest::{LoadtestConfig, LoadtestReport, StackOutcome};
+pub use router::{RoutePolicy, StackRouter};
+pub use telemetry::StackTelemetry;

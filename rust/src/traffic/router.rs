@@ -1,0 +1,156 @@
+//! Multi-stack scale-out: shard one arrival stream across N independent
+//! engine stacks — the tiered dataflow scaled out across packages, as in
+//! the related chiplet work.
+//!
+//! Routing is a serial pass over the arrival-ordered stream (ties broken
+//! by lowest stack index), so a given stream always shards identically;
+//! the expensive per-stack serving fans out afterwards.
+
+use crate::coordinator::Request;
+
+/// Request-to-stack dispatch policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through stacks in arrival order.
+    RoundRobin,
+    /// Join-shortest-queue on estimated outstanding work: each stack
+    /// tracks a busy-until horizon advanced by the request's estimated
+    /// service demand; arrivals go to the stack with the least backlog.
+    JoinShortestQueue,
+}
+
+impl RoutePolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::JoinShortestQueue => "jsq",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        Some(match s {
+            "round-robin" | "rr" => RoutePolicy::RoundRobin,
+            "jsq" | "join-shortest-queue" => RoutePolicy::JoinShortestQueue,
+            _ => return None,
+        })
+    }
+}
+
+/// Shards a request stream across `stacks` engine instances.
+#[derive(Debug, Clone, Copy)]
+pub struct StackRouter {
+    pub stacks: usize,
+    pub policy: RoutePolicy,
+}
+
+impl StackRouter {
+    pub fn new(stacks: usize, policy: RoutePolicy) -> StackRouter {
+        StackRouter { stacks: stacks.max(1), policy }
+    }
+
+    /// Split `requests` (sorted by arrival) into one sub-stream per
+    /// stack, preserving arrival order within each. `service_est`
+    /// returns the estimated seconds of service demand for a request
+    /// (used by JSQ; round-robin never calls it).
+    pub fn route(
+        &self,
+        requests: &[Request],
+        mut service_est: impl FnMut(&Request) -> f64,
+    ) -> Vec<Vec<Request>> {
+        let mut shards: Vec<Vec<Request>> = vec![Vec::new(); self.stacks];
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                for (i, r) in requests.iter().enumerate() {
+                    shards[i % self.stacks].push(r.clone());
+                }
+            }
+            RoutePolicy::JoinShortestQueue => {
+                let mut busy_until = vec![0.0f64; self.stacks];
+                for r in requests {
+                    let t = r.arrival_s;
+                    let mut best = 0usize;
+                    let mut best_backlog = f64::INFINITY;
+                    for (s, &until) in busy_until.iter().enumerate() {
+                        let backlog = (until - t).max(0.0);
+                        if backlog < best_backlog {
+                            best = s;
+                            best_backlog = backlog;
+                        }
+                    }
+                    busy_until[best] = busy_until[best].max(t) + service_est(r);
+                    shards[best].push(r.clone());
+                }
+            }
+        }
+        shards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelId;
+
+    fn stream(n: u64, gap: f64) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request::synthetic(i, ModelId::BertBase, 128, i as f64 * gap))
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let router = StackRouter::new(4, RoutePolicy::RoundRobin);
+        let shards = router.route(&stream(10, 0.01), |_| 1.0);
+        assert_eq!(shards.len(), 4);
+        let sizes: Vec<usize> = shards.iter().map(Vec::len).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        // Arrival order preserved within a shard.
+        assert_eq!(shards[0].iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 4, 8]);
+    }
+
+    #[test]
+    fn jsq_prefers_idle_stack() {
+        let router = StackRouter::new(2, RoutePolicy::JoinShortestQueue);
+        // Expensive first request occupies stack 0; the burst that
+        // follows must land on stack 1 until backlogs equalize.
+        let reqs = stream(3, 0.0);
+        let shards = router.route(&reqs, |r| if r.id == 0 { 10.0 } else { 1.0 });
+        assert_eq!(shards[0].iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(shards[1].iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn jsq_backlog_decays_with_time() {
+        let router = StackRouter::new(2, RoutePolicy::JoinShortestQueue);
+        // Two heavy requests at t=0 occupy both stacks; a request far in
+        // the future sees both idle again and ties break to stack 0.
+        let mut reqs = stream(2, 0.0);
+        let mut late = Request::synthetic(9, ModelId::BertBase, 128, 100.0);
+        late.seq = 128;
+        reqs.push(late);
+        let shards = router.route(&reqs, |_| 5.0);
+        assert_eq!(shards[0].iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 9]);
+        assert_eq!(shards[1].iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn conserves_requests() {
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::JoinShortestQueue] {
+            let reqs = stream(23, 0.003);
+            let shards = StackRouter::new(3, policy).route(&reqs, |_| 0.01);
+            let mut ids: Vec<u64> =
+                shards.iter().flatten().map(|r| r.id).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, (0..23).collect::<Vec<_>>(), "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [RoutePolicy::RoundRobin, RoutePolicy::JoinShortestQueue] {
+            assert_eq!(RoutePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,139 @@
+//! Streaming serve telemetry: per-stack latency/queue-depth recording on
+//! log-scale histograms plus the counters the `BENCH_serve.json` schema
+//! reports. Latencies record in integer microseconds (the histogram's
+//! 2⁻⁷ relative quantization is far below scheduling noise); queue depth
+//! records the backlog length at each control-window boundary.
+
+use crate::util::stats::LogHistogram;
+
+/// One stack's streaming recorder. Everything is simulated-clock data;
+/// merging across stacks happens in stack order, so aggregate numbers
+/// are deterministic.
+#[derive(Debug, Clone)]
+pub struct StackTelemetry {
+    pub latency_us: LogHistogram,
+    pub queue_depth: LogHistogram,
+    pub submitted: u64,
+    pub completed: u64,
+    /// Requests dropped by the admission layer (aged out past the
+    /// queue-wait bound while deferred).
+    pub shed: u64,
+    /// Completions within the SLO (the goodput numerator).
+    pub within_slo: u64,
+    pub batches: u64,
+    /// Simulated time the first batch started on the SM tiers
+    /// (time-to-first-batch); +∞ until a batch launches.
+    pub first_batch_s: f64,
+    /// Latest response completion time.
+    pub makespan_s: f64,
+    pub sm_busy_s: f64,
+    pub reram_busy_s: f64,
+    pub energy_j: f64,
+}
+
+impl Default for StackTelemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StackTelemetry {
+    pub fn new() -> StackTelemetry {
+        StackTelemetry {
+            latency_us: LogHistogram::new(),
+            queue_depth: LogHistogram::new(),
+            submitted: 0,
+            completed: 0,
+            shed: 0,
+            within_slo: 0,
+            batches: 0,
+            first_batch_s: f64::INFINITY,
+            makespan_s: 0.0,
+            sm_busy_s: 0.0,
+            reram_busy_s: 0.0,
+            energy_j: 0.0,
+        }
+    }
+
+    /// Record one completion.
+    pub fn complete(&mut self, latency_s: f64, finish_s: f64, slo_s: f64) {
+        self.completed += 1;
+        self.latency_us.record((latency_s.max(0.0) * 1e6).round() as u64);
+        if latency_s <= slo_s {
+            self.within_slo += 1;
+        }
+        self.makespan_s = self.makespan_s.max(finish_s);
+    }
+
+    /// SM-tier utilization over this stack's makespan.
+    pub fn sm_utilization(&self) -> f64 {
+        if self.makespan_s > 0.0 { self.sm_busy_s / self.makespan_s } else { 0.0 }
+    }
+
+    /// ReRAM-tier utilization over this stack's makespan.
+    pub fn reram_utilization(&self) -> f64 {
+        if self.makespan_s > 0.0 { self.reram_busy_s / self.makespan_s } else { 0.0 }
+    }
+
+    /// Fold another stack's telemetry into this one (used by the
+    /// aggregate view; fold in stack order for determinism).
+    pub fn merge(&mut self, other: &StackTelemetry) {
+        self.latency_us.merge(&other.latency_us);
+        self.queue_depth.merge(&other.queue_depth);
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.shed += other.shed;
+        self.within_slo += other.within_slo;
+        self.batches += other.batches;
+        self.first_batch_s = self.first_batch_s.min(other.first_batch_s);
+        self.makespan_s = self.makespan_s.max(other.makespan_s);
+        self.sm_busy_s += other.sm_busy_s;
+        self.reram_busy_s += other.reram_busy_s;
+        self.energy_j += other.energy_j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_tracks_slo_and_makespan() {
+        let mut t = StackTelemetry::new();
+        t.complete(0.010, 1.0, 0.050);
+        t.complete(0.200, 2.5, 0.050);
+        assert_eq!(t.completed, 2);
+        assert_eq!(t.within_slo, 1);
+        assert_eq!(t.makespan_s, 2.5);
+        assert_eq!(t.latency_us.count(), 2);
+        // 10 ms records as 10_000 µs (exact ordering preserved).
+        assert!(t.latency_us.percentile(1.0) < t.latency_us.percentile(99.9));
+    }
+
+    #[test]
+    fn merge_sums_counters_and_extremes() {
+        let mut a = StackTelemetry::new();
+        let mut b = StackTelemetry::new();
+        a.complete(0.01, 1.0, 0.05);
+        a.submitted = 3;
+        a.sm_busy_s = 0.4;
+        b.complete(0.02, 4.0, 0.05);
+        b.submitted = 2;
+        b.first_batch_s = 0.125;
+        b.sm_busy_s = 0.6;
+        a.merge(&b);
+        assert_eq!(a.submitted, 5);
+        assert_eq!(a.completed, 2);
+        assert_eq!(a.makespan_s, 4.0);
+        assert_eq!(a.first_batch_s, 0.125);
+        assert!((a.sm_busy_s - 1.0).abs() < 1e-12);
+        assert_eq!(a.latency_us.count(), 2);
+    }
+
+    #[test]
+    fn utilization_guards_empty() {
+        let t = StackTelemetry::new();
+        assert_eq!(t.sm_utilization(), 0.0);
+        assert_eq!(t.reram_utilization(), 0.0);
+    }
+}
