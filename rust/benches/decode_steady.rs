@@ -1,0 +1,89 @@
+//! Decode steady-state smoke bench — a short seeded Poisson generation
+//! run through the whole decode subsystem (generate → route →
+//! continuous-batching serve with KV residency + thermal admission),
+//! timing the end-to-end wall clock, asserting the byte-identical
+//! contract across thread counts, and asserting the continuous-batching
+//! throughput win over one-request-at-a-time serving on the same seeded
+//! trace. Emits `BENCH_decode.json` (path overridable via
+//! `BENCH_DECODE_JSON`) for the CI decode trajectory.
+use hetrax::config::Config;
+use hetrax::decode::{decodetest, DecodeConfig};
+use hetrax::model::ModelId;
+use hetrax::traffic::{ArrivalPattern, OutputLenDist, RequestMix, RoutePolicy};
+use hetrax::util::bench::Bencher;
+use hetrax::util::pool;
+
+fn config(threads: usize, max_running: usize) -> DecodeConfig {
+    let mix = RequestMix::single(ModelId::BertBase)
+        .with_output(OutputLenDist::Geometric { mean: 24.0 });
+    // Overloads a one-at-a-time stack (~450 rps/stack offered) while a
+    // continuous batch keeps up — the throughput-win assertion below
+    // needs the serial baseline to saturate.
+    let mut dc = DecodeConfig::new(ArrivalPattern::Poisson { rps: 900.0 }, mix);
+    dc.duration_s = 0.6;
+    dc.stacks = 2;
+    dc.policy = RoutePolicy::JoinShortestQueue;
+    dc.seed = 7;
+    dc.threads = threads;
+    dc.max_running = max_running;
+    dc
+}
+
+fn main() {
+    let cfg = Config::default();
+    let auto = pool::resolve_threads(0);
+
+    let b = Bencher::quick();
+    let t_serial = b.time("decode run, 2 stacks (threads=1)", || {
+        decodetest::run(&cfg, &config(1, 8))
+    });
+    let t_par = b.time(
+        &format!("decode run, 2 stacks (threads={auto})"),
+        || decodetest::run(&cfg, &config(auto, 8)),
+    );
+
+    // Determinism contract: identical JSON at any thread count.
+    let dc = config(1, 8);
+    let serial = decodetest::run(&cfg, &dc).to_json(&dc).pretty();
+    let dc_par = config(auto, 8);
+    let parallel = decodetest::run(&cfg, &dc_par).to_json(&dc_par).pretty();
+    assert_eq!(serial, parallel, "decode output must not depend on threads");
+
+    // Continuous batching must out-serve one-request-at-a-time on the
+    // same seeded trace (the shared per-step weight streams).
+    let report = decodetest::run(&cfg, &dc);
+    let dc_one = config(1, 1);
+    let one = decodetest::run(&cfg, &dc_one);
+    assert!(
+        report.tokens_per_s() > one.tokens_per_s(),
+        "continuous {} tok/s vs one-at-a-time {} tok/s",
+        report.tokens_per_s(),
+        one.tokens_per_s()
+    );
+
+    println!(
+        "\n  {} completed / {} submitted, {} tokens, ttft p99 {:.2} ms, itl p99 {:.3} ms, \
+         kv peak {:.1} MiB, ReRAM peak {:.1} C",
+        report.total.completed,
+        report.total.submitted,
+        report.total.tokens_out,
+        report.total.ttft_us.percentile(99.0) as f64 / 1e3,
+        report.total.itl_us.percentile(99.0) as f64 / 1e3,
+        report.total.peak_kv_bytes / (1024.0 * 1024.0),
+        report.reram_peak_c
+    );
+    println!(
+        "  continuous batching speedup over one-at-a-time: {:.2}x tokens/s",
+        report.tokens_per_s() / one.tokens_per_s().max(1e-9)
+    );
+
+    let mut doc = report.to_json(&dc);
+    doc.set("run_median_s", t_serial.median_s())
+        .set("run_median_parallel_s", t_par.median_s())
+        .set("bench_threads", auto)
+        .set("one_at_a_time_tokens_per_s", one.tokens_per_s())
+        .set("continuous_tokens_per_s", report.tokens_per_s());
+    let out = std::env::var("BENCH_DECODE_JSON").unwrap_or_else(|_| "BENCH_decode.json".into());
+    std::fs::write(&out, doc.pretty()).expect("write bench json");
+    println!("wrote {out}");
+}

@@ -11,6 +11,10 @@ pub struct Request {
     pub seq: usize,
     /// Arrival time on the simulated clock (seconds).
     pub arrival_s: f64,
+    /// Output tokens to generate (autoregressive serving). 0 means the
+    /// request is a one-shot prefill (the classic serve/loadtest path);
+    /// the decode subsystem clamps to ≥ 1.
+    pub out_tokens: usize,
     /// Optional embedded input (seq × d_model f32) for real execution.
     pub input: Option<Vec<f32>>,
 }
@@ -23,6 +27,7 @@ impl Request {
             variant: model.default_variant(),
             seq,
             arrival_s,
+            out_tokens: 0,
             input: None,
         }
     }
@@ -51,6 +56,7 @@ mod tests {
         let r = Request::synthetic(7, ModelId::BartBase, 128, 0.5);
         assert_eq!(r.variant, ArchVariant::EncoderDecoder);
         assert!(r.input.is_none());
+        assert_eq!(r.out_tokens, 0, "synthetic requests default to prefill-only");
         assert_eq!(r.id, 7);
     }
 }

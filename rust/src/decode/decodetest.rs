@@ -1,0 +1,423 @@
+//! Decode-run orchestration: generate a seeded arrival stream with
+//! sampled output lengths, shard it across stacks, run each stack's
+//! continuous-batching loop (fanned out over `util::pool`), and
+//! aggregate into the deterministic `BENCH_decode.json` document.
+//!
+//! Determinism contract (the same one `traffic::loadtest` keeps): every
+//! random draw happens in the seeded generator before the fan-out;
+//! routing is one serial pass; each stack's loop is a pure function of
+//! its shard; aggregation folds in stack order. A seeded decode run is
+//! byte-identical across runs and thread counts — asserted by tests
+//! here and by the `decode_steady` bench.
+
+use crate::config::Config;
+use crate::coordinator::Request;
+use crate::decode::engine::{DecodeEngine, StepGroup};
+use crate::decode::scheduler::{self, DecodeConfig, DecodeStackOutcome};
+use crate::decode::telemetry::DecodeTelemetry;
+use crate::model::{ArchVariant, ModelId};
+use crate::traffic::generator::TrafficGen;
+use crate::traffic::loadtest;
+use crate::traffic::router::StackRouter;
+use crate::util::json::Json;
+use crate::util::pool;
+
+/// Aggregated decode-run result.
+#[derive(Debug, Clone)]
+pub struct DecodeReport {
+    pub stacks: Vec<DecodeStackOutcome>,
+    /// All stacks merged.
+    pub total: DecodeTelemetry,
+    pub peak_c: f64,
+    pub reram_peak_c: f64,
+    pub throttle_events: u64,
+    pub windows: u64,
+}
+
+impl DecodeReport {
+    pub fn requests_per_s(&self) -> f64 {
+        if self.total.makespan_s > 0.0 {
+            self.total.completed as f64 / self.total.makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        self.total.tokens_per_s()
+    }
+
+    /// Fleet-level tier utilization (busy seconds / stacks × makespan).
+    pub fn sm_utilization(&self) -> f64 {
+        let span = self.total.makespan_s * self.stacks.len() as f64;
+        if span > 0.0 { self.total.sm_busy_s / span } else { 0.0 }
+    }
+
+    pub fn reram_utilization(&self) -> f64 {
+        let span = self.total.makespan_s * self.stacks.len() as f64;
+        if span > 0.0 { self.total.reram_busy_s / span } else { 0.0 }
+    }
+
+    /// The `BENCH_decode.json` document (schema: DESIGN.md §Decode).
+    /// Simulated-clock data only: the same config + seed serializes
+    /// byte-identically at any thread count.
+    pub fn to_json(&self, dc: &DecodeConfig) -> Json {
+        let t = &self.total;
+        let ms = |us: u64| us as f64 / 1e3;
+        let mib = |bytes: f64| bytes / (1024.0 * 1024.0);
+
+        let hist_ms = |h: &crate::util::stats::LogHistogram| {
+            let mut j = Json::obj();
+            j.set("p50_ms", ms(h.percentile(50.0)))
+                .set("p99_ms", ms(h.percentile(99.0)))
+                .set("p999_ms", ms(h.percentile(99.9)))
+                .set("mean_ms", h.mean() / 1e3)
+                .set("max_ms", ms(h.max()));
+            j
+        };
+
+        let mut requests = Json::obj();
+        requests
+            .set("submitted", t.submitted)
+            .set("completed", t.completed)
+            .set("shed", t.shed)
+            .set("refused_kv", t.refused_kv);
+
+        let mut tokens = Json::obj();
+        tokens
+            .set("generated", t.tokens_out)
+            .set("prefill_batches", t.prefill_batches)
+            .set("decode_steps", t.decode_steps)
+            .set("peak_running", t.peak_running);
+
+        let (sm_peak, reram_peak) = dc.kv.split(t.peak_kv_bytes);
+        let mut kv = Json::obj();
+        kv.set("capacity_mib", mib(dc.kv.capacity_bytes))
+            .set("sm_frac", dc.kv.sm_frac)
+            .set("peak_mib", mib(t.peak_kv_bytes))
+            .set("sm_peak_mib", mib(sm_peak))
+            .set("reram_peak_mib", mib(reram_peak));
+        let mut occupancy = Json::obj();
+        occupancy
+            .set("p50_kib", t.kv_used_kib.percentile(50.0))
+            .set("p99_kib", t.kv_used_kib.percentile(99.0))
+            .set("max_kib", t.kv_used_kib.max());
+        kv.set("occupancy", occupancy);
+
+        let mut throughput = Json::obj();
+        throughput
+            .set("requests_per_s", self.requests_per_s())
+            .set("tokens_per_s", self.tokens_per_s());
+
+        let mut util = Json::obj();
+        util.set("sm", self.sm_utilization())
+            .set("reram", self.reram_utilization());
+
+        let mut thermal = Json::obj();
+        thermal
+            .set("ceiling_c", dc.throttle.ceiling_c)
+            .set("controller_enabled", dc.throttle.enabled)
+            .set("peak_c", self.peak_c)
+            .set("reram_peak_c", self.reram_peak_c)
+            .set("throttle_events", self.throttle_events)
+            .set("control_windows", self.windows);
+
+        let per_stack: Vec<Json> = self
+            .stacks
+            .iter()
+            .map(|s| {
+                let st = &s.telemetry;
+                let mut j = Json::obj();
+                j.set("completed", st.completed)
+                    .set("tokens", st.tokens_out)
+                    .set("shed", st.shed)
+                    .set("refused_kv", st.refused_kv)
+                    .set("ttft_p99_ms", ms(st.ttft_us.percentile(99.0)))
+                    .set("itl_p99_ms", ms(st.itl_us.percentile(99.0)))
+                    .set("kv_peak_mib", mib(st.peak_kv_bytes))
+                    .set("sm_util", st.sm_utilization())
+                    .set("reram_util", st.reram_utilization())
+                    .set("throttle_events", s.throttle_events)
+                    .set("energy_j", st.energy_j)
+                    .set("makespan_s", st.makespan_s);
+                j
+            })
+            .collect();
+
+        let mut doc = Json::obj();
+        doc.set("bench", "decode_steady")
+            .set("pattern", dc.pattern.name())
+            .set("rps", dc.pattern.nominal_rps())
+            .set("duration_s", dc.duration_s)
+            .set("stacks", dc.stacks)
+            .set("policy", dc.policy.name())
+            .set("seed", dc.seed)
+            .set("max_running", dc.max_running)
+            .set("max_prefill_batch", dc.max_prefill_batch)
+            .set(
+                "output_dist",
+                dc.mix
+                    .output
+                    .map(|d| d.describe())
+                    .unwrap_or_else(|| "none".to_string()),
+            )
+            .set(
+                "models",
+                dc.mix
+                    .models
+                    .iter()
+                    .map(|(m, _)| Json::from(m.to_string()))
+                    .collect::<Vec<Json>>(),
+            )
+            .set("requests", requests)
+            .set("tokens", tokens)
+            .set("kv", kv)
+            .set("ttft", hist_ms(&t.ttft_us))
+            .set("tpot", hist_ms(&t.tpot_us))
+            .set("itl", hist_ms(&t.itl_us))
+            .set("e2e", hist_ms(&t.e2e_us))
+            .set("throughput", throughput)
+            .set("utilization", util)
+            .set("thermal", thermal)
+            .set("energy_j", t.energy_j)
+            .set("makespan_s", t.makespan_s)
+            .set("per_stack", per_stack);
+        doc
+    }
+}
+
+/// Run a full decode test: generate, route, serve every stack (fanned
+/// out over the worker pool), aggregate.
+pub fn run(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
+    let generator = TrafficGen {
+        pattern: dc.pattern.clone(),
+        mix: dc.mix.clone(),
+        seed: dc.seed,
+    };
+    let requests = generator.generate(dc.duration_s);
+    let threads = pool::resolve_threads(dc.threads);
+    let phases = loadtest::phase_table(cfg, &requests, threads);
+
+    let mut keys: Vec<(ModelId, ArchVariant)> = Vec::new();
+    for r in &requests {
+        if !keys.contains(&(r.model, r.variant)) {
+            keys.push((r.model, r.variant));
+        }
+    }
+    let engine = DecodeEngine::build(cfg, &keys);
+
+    // JSQ service estimate: prefill + the whole generation at the
+    // request's mid-flight context length.
+    let router = StackRouter::new(dc.stacks, dc.policy);
+    let shards = router.route(&requests, |r: &Request| {
+        let info = phases[&(r.model, r.variant, r.seq)];
+        let dw = engine.workload(r.model, r.variant);
+        let out = r.out_tokens.max(1);
+        let g = StepGroup {
+            model: r.model,
+            variant: r.variant,
+            b: 1,
+            sum_self_ctx: dw.self_context(r.seq, out / 2),
+            sum_cross_ctx: if dw.cross { r.seq } else { 0 },
+        };
+        info.mha_s + info.ff_s + engine.step_cost(&[g]).wall_s * out as f64
+    });
+
+    let outcomes = pool::par_map_threads(&shards, threads, |shard| {
+        scheduler::serve_stack(cfg, dc, &phases, &engine, shard)
+    });
+
+    let mut total = DecodeTelemetry::new();
+    let mut peak_c = 0.0f64;
+    let mut reram_peak_c = 0.0f64;
+    let mut throttle_events = 0u64;
+    let mut windows = 0u64;
+    for o in &outcomes {
+        total.merge(&o.telemetry);
+        peak_c = peak_c.max(o.peak_c);
+        reram_peak_c = reram_peak_c.max(o.reram_peak_c);
+        throttle_events += o.throttle_events;
+        windows += o.windows;
+    }
+    DecodeReport {
+        stacks: outcomes,
+        total,
+        peak_c,
+        reram_peak_c,
+        throttle_events,
+        windows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::{ArrivalPattern, OutputLenDist, RequestMix};
+
+    fn base(rps: f64, duration_s: f64) -> DecodeConfig {
+        let mix = RequestMix::single(ModelId::BertBase)
+            .with_output(OutputLenDist::Geometric { mean: 12.0 });
+        let mut dc = DecodeConfig::new(ArrivalPattern::Poisson { rps }, mix);
+        dc.duration_s = duration_s;
+        dc.seed = 7;
+        dc.threads = 1;
+        dc
+    }
+
+    #[test]
+    fn lifecycle_conserves_requests_and_tokens() {
+        let cfg = Config::default();
+        let mut dc = base(250.0, 1.0);
+        dc.stacks = 2;
+        let report = run(&cfg, &dc);
+        let t = &report.total;
+        assert!(t.submitted > 0);
+        assert_eq!(
+            t.completed + t.shed + t.refused_kv,
+            t.submitted,
+            "every request resolves exactly once"
+        );
+        assert!(t.completed > 0);
+        assert!(t.tokens_out >= t.completed, "≥ 1 token per completion");
+        assert!(t.prefill_batches > 0 && t.decode_steps > 0);
+        // First tokens come from prefills, the rest from decode steps.
+        assert_eq!(t.itl_us.count(), t.tokens_out - t.ttft_us.count());
+        // Percentiles ordered on every reported histogram.
+        for h in [&t.ttft_us, &t.tpot_us, &t.itl_us, &t.e2e_us] {
+            assert!(h.percentile(50.0) <= h.percentile(99.0));
+        }
+        assert!(t.peak_kv_bytes > 0.0);
+        assert!(t.kv_used_kib.count() > 0, "occupancy sampled per step");
+        assert!(report.tokens_per_s() > 0.0);
+        assert!(report.sm_utilization() > 0.0 && report.sm_utilization() <= 1.0);
+        // Both stacks saw work.
+        assert!(report.stacks.iter().all(|s| s.telemetry.completed > 0));
+    }
+
+    #[test]
+    fn byte_identical_across_runs_and_thread_counts() {
+        let cfg = Config::default();
+        let mut dc = base(200.0, 0.8);
+        dc.stacks = 2;
+        dc.threads = 1;
+        let a = run(&cfg, &dc).to_json(&dc).pretty();
+        let b = run(&cfg, &dc).to_json(&dc).pretty();
+        assert_eq!(a, b, "same config+seed must reproduce");
+        dc.threads = 4;
+        let c = run(&cfg, &dc).to_json(&dc).pretty();
+        assert_eq!(a, c, "thread count must not change output");
+    }
+
+    #[test]
+    fn continuous_batching_beats_one_at_a_time() {
+        // The acceptance regression: on the same seeded trace, the
+        // continuous batch (shared per-step weight streams) must beat
+        // serving one generation at a time on token throughput.
+        let cfg = Config::default();
+        let mk = || {
+            let mix = RequestMix::single(ModelId::BertBase)
+                .with_output(OutputLenDist::Fixed { tokens: 32 });
+            let mut dc = DecodeConfig::new(ArrivalPattern::Poisson { rps: 900.0 }, mix);
+            dc.mix.seqs = vec![(64, 1.0)];
+            dc.duration_s = 1.0;
+            dc.seed = 11;
+            dc.threads = 1;
+            dc
+        };
+        let mut cont = mk();
+        cont.max_running = 8;
+        let mut serial = mk();
+        serial.max_running = 1;
+        let rc = run(&cfg, &cont);
+        let rs = run(&cfg, &serial);
+        assert!(rc.total.completed > 0 && rs.total.completed > 0);
+        assert!(
+            rc.tokens_per_s() > rs.tokens_per_s() * 1.2,
+            "continuous {} tok/s must beat serial {} tok/s",
+            rc.tokens_per_s(),
+            rs.tokens_per_s()
+        );
+        assert!(
+            rc.total.completed >= rs.total.completed,
+            "continuous serves at least as many requests ({} vs {})",
+            rc.total.completed,
+            rs.total.completed
+        );
+    }
+
+    #[test]
+    fn kv_budget_refuses_oversized_and_bounds_concurrency() {
+        let cfg = Config::default();
+        // Budget below every request's peak: all refused, none served.
+        let mut dc = base(100.0, 0.5);
+        dc.mix.seqs = vec![(256, 1.0)];
+        dc.mix.output = Some(OutputLenDist::Fixed { tokens: 64 });
+        dc.kv.capacity_bytes = 4.0 * 1024.0 * 1024.0;
+        let starved = run(&cfg, &dc);
+        assert!(starved.total.submitted > 0);
+        assert_eq!(starved.total.refused_kv, starved.total.submitted);
+        assert_eq!(starved.total.completed, 0);
+
+        // Ample budget: nothing refused.
+        dc.kv.capacity_bytes = 1024.0 * 1024.0 * 1024.0;
+        let fed = run(&cfg, &dc);
+        assert_eq!(fed.total.refused_kv, 0);
+        assert!(fed.total.completed > 0);
+        assert!(fed.total.peak_kv_bytes > starved.total.peak_kv_bytes);
+    }
+
+    #[test]
+    fn thermal_controller_throttles_hot_decode_load() {
+        let cfg = Config::default();
+        let mut dc = base(1200.0, 0.6);
+        dc.mix.output = Some(OutputLenDist::Fixed { tokens: 8 });
+        dc.throttle.enabled = false;
+        let hot = run(&cfg, &dc);
+        let idle = crate::traffic::AdmissionController::new(
+            &cfg,
+            dc.throttle,
+            dc.max_prefill_batch,
+        )
+        .idle_reram_c();
+        assert!(
+            hot.reram_peak_c > idle + 1.0,
+            "sustained decode load must heat the ReRAM tier: {} vs idle {idle}",
+            hot.reram_peak_c
+        );
+
+        dc.throttle.enabled = true;
+        dc.throttle.ceiling_c = idle + 0.4 * (hot.reram_peak_c - idle);
+        let cool = run(&cfg, &dc);
+        assert!(cool.throttle_events > 0, "the controller must have acted");
+        assert!(cool.total.shed > 0, "deferred load ages out under a ceiling");
+        assert!(cool.total.completed > 0, "but it still serves");
+        // The running decode batch is committed work the controller
+        // cannot defer, so (unlike the one-shot loadtest) the ceiling is
+        // not a hard bound on the recorded peak — but throttled
+        // admission must never run hotter, and it trades throughput.
+        assert!(
+            cool.reram_peak_c <= hot.reram_peak_c + 1e-9,
+            "throttling must not raise the peak ({} vs {})",
+            cool.reram_peak_c,
+            hot.reram_peak_c
+        );
+        assert!(
+            cool.total.completed < hot.total.completed,
+            "the throttle trades served load for temperature ({} vs {})",
+            cool.total.completed,
+            hot.total.completed
+        );
+    }
+
+    #[test]
+    fn empty_stream_serializes_cleanly() {
+        let cfg = Config::default();
+        let dc = base(0.0, 0.5);
+        let report = run(&cfg, &dc);
+        assert_eq!(report.total.submitted, 0);
+        assert_eq!(report.tokens_per_s(), 0.0);
+        let doc = report.to_json(&dc);
+        assert_eq!(doc.at(&["requests", "completed"]), Some(&Json::Num(0.0)));
+        assert_eq!(doc.at(&["bench"]).and_then(Json::as_str), Some("decode_steady"));
+    }
+}

@@ -1,0 +1,240 @@
+//! Decode-step timing: [`crate::model::DecodeWorkload`] costs → seconds
+//! on the two tier resources, with the batch-amortization structure that
+//! makes continuous batching pay.
+//!
+//! Roofline per block, mirroring `perf::timing`'s rates:
+//!
+//! * **Projections** (QKV/output, GEMV): the weight panels stream from
+//!   MC L2 *once per step* regardless of batch size — only activations
+//!   scale with B. This shared-weight term is the entire economic case
+//!   for batching decode steps.
+//! * **Attention**: per cached context entry — K/V rows stream per
+//!   request, so the term scales with Σ context over the batch, not B.
+//! * **FF** (ReRAM tier): weights resident in the crossbars, so the
+//!   GEMV is pure crossbar throughput + TSV activation traffic.
+//!
+//! Everything is a pure function of config + batch composition: no
+//! clocks, no randomness — the decode bench's byte-identical contract
+//! rests on this module.
+
+use std::collections::HashMap;
+
+use crate::config::Config;
+use crate::model::{ArchVariant, DecodeWorkload, ModelId};
+use crate::perf::timing;
+use crate::reram::FfMapping;
+
+/// One (model, variant) slice of a decode step: `b` requests whose
+/// self-/cross-attention context lengths sum to the given totals.
+#[derive(Debug, Clone, Copy)]
+pub struct StepGroup {
+    pub model: ModelId,
+    pub variant: ArchVariant,
+    pub b: usize,
+    pub sum_self_ctx: usize,
+    pub sum_cross_ctx: usize,
+}
+
+/// What one decode step costs across every group.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepCost {
+    /// SM-tier busy seconds.
+    pub mha_s: f64,
+    /// ReRAM-tier busy seconds.
+    pub ff_s: f64,
+    /// Wall-clock seconds the step occupies (MHA ∥ FF for
+    /// parallel-attention variants, serial otherwise).
+    pub wall_s: f64,
+    /// SM-side FLOPs (projections + attention + element-wise).
+    pub sm_flops: f64,
+    /// ReRAM crossbar ops.
+    pub ff_ops: f64,
+    /// Bytes streamed through MC L2 (weights + activations).
+    pub l2_bytes: f64,
+    /// KV-cache bytes read (the DRAM-side residency traffic).
+    pub kv_read_bytes: f64,
+}
+
+#[derive(Debug, Clone)]
+struct DecodeEntry {
+    dw: DecodeWorkload,
+    ff_throughput_ops: f64,
+    active_frac: f64,
+}
+
+/// Per-(model, variant) decode tables + the step-time evaluator.
+#[derive(Debug, Clone)]
+pub struct DecodeEngine<'a> {
+    pub cfg: &'a Config,
+    entries: HashMap<(ModelId, ArchVariant), DecodeEntry>,
+}
+
+impl<'a> DecodeEngine<'a> {
+    /// Build tables for every key the request stream will touch.
+    pub fn build(cfg: &'a Config, keys: &[(ModelId, ArchVariant)]) -> DecodeEngine<'a> {
+        let mut entries = HashMap::new();
+        for &(model, variant) in keys {
+            entries.entry((model, variant)).or_insert_with(|| {
+                let dw = DecodeWorkload::build(model, variant);
+                let ff_map = FfMapping::map(cfg, dw.dims.d_model, dw.dims.d_ff);
+                DecodeEntry {
+                    dw,
+                    ff_throughput_ops: ff_map.throughput_ops(cfg),
+                    active_frac: ff_map.active_frac,
+                }
+            });
+        }
+        DecodeEngine { cfg, entries }
+    }
+
+    fn entry(&self, model: ModelId, variant: ArchVariant) -> &DecodeEntry {
+        self.entries
+            .get(&(model, variant))
+            .unwrap_or_else(|| panic!("decode table missing for {model} {variant}"))
+    }
+
+    pub fn workload(&self, model: ModelId, variant: ArchVariant) -> &DecodeWorkload {
+        &self.entry(model, variant).dw
+    }
+
+    /// Fraction of ReRAM tiles the model's FF mapping keeps active (the
+    /// thermal model's `reram_active_frac` input).
+    pub fn active_frac(&self, model: ModelId, variant: ArchVariant) -> f64 {
+        self.entry(model, variant).active_frac
+    }
+
+    /// Cost of one decode step over the given groups. Groups are
+    /// processed serially through the tiers; within a group the batch
+    /// shares one weight stream.
+    pub fn step_cost(&self, groups: &[StepGroup]) -> StepCost {
+        let cfg = self.cfg;
+        let gemm = timing::sm_tier_gemm_flops(cfg);
+        let vecf = timing::sm_tier_vector_flops(cfg);
+        let l2 = timing::l2_stream_bw(cfg);
+        let tsv_bw = timing::tsv_stream_bw(cfg);
+
+        let mut total = StepCost::default();
+        for g in groups {
+            let e = self.entry(g.model, g.variant);
+            let dw = &e.dw;
+            let b = g.b as f64;
+            let blocks = dw.step_blocks as f64;
+            let ctx = (g.sum_self_ctx + g.sum_cross_ctx) as f64;
+
+            // Projections: weights once, activations per token.
+            let t_gemv = (b * dw.gemv_flops_tok / gemm)
+                .max((dw.gemv_weight_bytes + b * dw.gemv_act_bytes_tok) / l2);
+            // Attention: scales with total cached context, not batch.
+            let t_attn = (ctx * dw.attn_flops_per_ctx / gemm)
+                .max(ctx * dw.attn_bytes_per_ctx / l2);
+            let t_vec = b * dw.vec_flops_tok / vecf;
+            let mha = blocks * (t_gemv + t_attn + t_vec);
+
+            // FF GEMV: resident crossbars + TSV activation stream.
+            let t_ff = (b * dw.ff_flops_tok / e.ff_throughput_ops)
+                .max(b * dw.ff_act_bytes_tok / tsv_bw);
+            let ff = blocks * t_ff;
+
+            total.mha_s += mha;
+            total.ff_s += ff;
+            total.wall_s += if dw.variant.mha_ff_parallel() { mha.max(ff) } else { mha + ff };
+            total.sm_flops +=
+                blocks * (b * (dw.gemv_flops_tok + dw.vec_flops_tok) + ctx * dw.attn_flops_per_ctx);
+            total.ff_ops += blocks * b * dw.ff_flops_tok;
+            total.l2_bytes +=
+                blocks * (dw.gemv_weight_bytes + b * dw.gemv_act_bytes_tok);
+            total.kv_read_bytes += blocks * ctx * dw.attn_bytes_per_ctx;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn group(b: usize, ctx_each: usize) -> StepGroup {
+        StepGroup {
+            model: ModelId::BertBase,
+            variant: ArchVariant::EncoderOnly,
+            b,
+            sum_self_ctx: b * ctx_each,
+            sum_cross_ctx: 0,
+        }
+    }
+
+    fn engine(cfg: &Config) -> DecodeEngine<'_> {
+        DecodeEngine::build(cfg, &[(ModelId::BertBase, ArchVariant::EncoderOnly)])
+    }
+
+    #[test]
+    fn batching_amortizes_weight_streams() {
+        // The decode economics: per-token step time must drop sharply
+        // with batch size because the GEMV weight panels are shared.
+        let cfg = Config::default();
+        let e = engine(&cfg);
+        let one = e.step_cost(&[group(1, 192)]);
+        let eight = e.step_cost(&[group(8, 192)]);
+        assert!(one.wall_s > 0.0 && eight.wall_s > one.wall_s);
+        let per_tok_1 = one.wall_s;
+        let per_tok_8 = eight.wall_s / 8.0;
+        assert!(
+            per_tok_8 < per_tok_1 * 0.5,
+            "per-token {per_tok_8} vs serial {per_tok_1}"
+        );
+    }
+
+    #[test]
+    fn step_time_grows_with_context() {
+        let cfg = Config::default();
+        let e = engine(&cfg);
+        let short = e.step_cost(&[group(4, 64)]);
+        let long = e.step_cost(&[group(4, 2048)]);
+        assert!(long.wall_s > short.wall_s, "KV reads must cost");
+        assert!(long.kv_read_bytes > short.kv_read_bytes);
+        // Busy split covers the wall clock for serial variants.
+        assert!((short.mha_s + short.ff_s - short.wall_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn decode_step_is_memory_bound_not_compute_bound() {
+        // GEMV regime: at B=1 the projection term must sit on the L2
+        // weight-stream roofline, far off the tensor-core peak.
+        let cfg = Config::default();
+        let e = engine(&cfg);
+        let dw = *e.workload(ModelId::BertBase, ArchVariant::EncoderOnly);
+        let sc = e.step_cost(&[group(1, 128)]);
+        let compute_only =
+            dw.step_blocks as f64 * dw.gemv_flops_tok / timing::sm_tier_gemm_flops(&cfg);
+        assert!(
+            sc.mha_s > 5.0 * compute_only,
+            "decode should be weight-stream-bound: {} vs compute {}",
+            sc.mha_s,
+            compute_only
+        );
+    }
+
+    #[test]
+    fn mixed_groups_sum_and_tables_cover_keys() {
+        let cfg = Config::default();
+        let keys = [
+            (ModelId::BertBase, ArchVariant::EncoderOnly),
+            (ModelId::BartBase, ArchVariant::EncoderDecoder),
+        ];
+        let e = DecodeEngine::build(&cfg, &keys);
+        let g1 = group(2, 128);
+        let g2 = StepGroup {
+            model: ModelId::BartBase,
+            variant: ArchVariant::EncoderDecoder,
+            b: 2,
+            sum_self_ctx: 8,
+            sum_cross_ctx: 256,
+        };
+        let both = e.step_cost(&[g1, g2]);
+        let a = e.step_cost(&[g1]);
+        let b = e.step_cost(&[g2]);
+        assert!((both.wall_s - a.wall_s - b.wall_s).abs() < 1e-15);
+        assert!((both.sm_flops - a.sm_flops - b.sm_flops).abs() < 1.0);
+        assert!(e.active_frac(ModelId::BartBase, ArchVariant::EncoderDecoder) > 0.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! KV-cache residency model.
+//!
+//! Each stack owns a bounded cache budget for the K/V tensors of
+//! in-flight generations. The budget models the two places cached
+//! activations can physically live in the HeTraX stack: the SM-MC
+//! tiers' DRAM-side staging (behind the MCs) and the spare SRAM/buffer
+//! capacity of the ReRAM tier — split by `sm_frac`, filled SM-side
+//! first. Admission charges a request's *peak* footprint (its cache at
+//! EOS, [`crate::model::DecodeWorkload::peak_kv_bytes`]) up front, so
+//! an admitted generation can never be evicted mid-flight — refusal
+//! happens at the door, not after tokens have streamed. Actual
+//! occupancy (what telemetry reports) grows token by token and is
+//! released at retirement.
+
+/// Per-stack cache budget.
+#[derive(Debug, Clone, Copy)]
+pub struct KvCacheConfig {
+    /// Total cache bytes per stack.
+    pub capacity_bytes: f64,
+    /// Share of the budget on the SM-MC tiers; the rest sits in the
+    /// ReRAM tier's buffers. Placement is fill-SM-first.
+    pub sm_frac: f64,
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        // 128 MiB split evenly: enough for ~10 concurrent bert-base
+        // generations at mixed prompt lengths — small enough that
+        // sustained load exercises the admission path.
+        KvCacheConfig { capacity_bytes: 128.0 * 1024.0 * 1024.0, sm_frac: 0.5 }
+    }
+}
+
+impl KvCacheConfig {
+    /// Split `bytes` of resident cache across the tiers (fill-SM-first).
+    pub fn split(&self, bytes: f64) -> (f64, f64) {
+        let sm_cap = self.capacity_bytes * self.sm_frac.clamp(0.0, 1.0);
+        let sm = bytes.min(sm_cap);
+        (sm, bytes - sm)
+    }
+}
+
+/// One stack's residency accountant: peak-byte reservations plus actual
+/// occupancy. Pure arithmetic on simulated quantities — deterministic.
+#[derive(Debug, Clone)]
+pub struct KvPool {
+    pub cfg: KvCacheConfig,
+    reserved: f64,
+    used: f64,
+    /// High-water mark of actual occupancy.
+    pub peak_used: f64,
+}
+
+impl KvPool {
+    pub fn new(cfg: KvCacheConfig) -> KvPool {
+        KvPool { cfg, reserved: 0.0, used: 0.0, peak_used: 0.0 }
+    }
+
+    pub fn capacity_bytes(&self) -> f64 {
+        self.cfg.capacity_bytes
+    }
+
+    /// Would an additional `need` bytes of reservation fit right now?
+    pub fn would_fit(&self, need: f64) -> bool {
+        self.reserved + need <= self.cfg.capacity_bytes + 1e-6
+    }
+
+    /// Reserve a request's peak footprint; false when it does not fit.
+    pub fn try_reserve(&mut self, peak: f64) -> bool {
+        if !self.would_fit(peak) {
+            return false;
+        }
+        self.reserved += peak;
+        true
+    }
+
+    /// Account bytes actually written (prefill KV, then one append per
+    /// generated token).
+    pub fn grow(&mut self, bytes: f64) {
+        self.used += bytes;
+        self.peak_used = self.peak_used.max(self.used);
+    }
+
+    /// Release a retired request's reservation and occupancy.
+    pub fn release(&mut self, peak: f64, used: f64) {
+        self.reserved = (self.reserved - peak).max(0.0);
+        self.used = (self.used - used).max(0.0);
+    }
+
+    pub fn reserved_bytes(&self) -> f64 {
+        self.reserved
+    }
+
+    pub fn used_bytes(&self) -> f64 {
+        self.used
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(cap: f64) -> KvPool {
+        KvPool::new(KvCacheConfig { capacity_bytes: cap, sm_frac: 0.5 })
+    }
+
+    #[test]
+    fn reserve_refuse_release_cycle() {
+        let mut p = pool(100.0);
+        assert!(p.try_reserve(60.0));
+        assert!(!p.try_reserve(60.0), "second reservation exceeds capacity");
+        assert!(p.try_reserve(40.0));
+        assert_eq!(p.reserved_bytes(), 100.0);
+        p.grow(30.0);
+        p.grow(20.0);
+        assert_eq!(p.used_bytes(), 50.0);
+        assert_eq!(p.peak_used, 50.0);
+        p.release(60.0, 30.0);
+        assert_eq!(p.reserved_bytes(), 40.0);
+        assert_eq!(p.used_bytes(), 20.0);
+        assert!(p.try_reserve(60.0), "freed reservation is reusable");
+        // Peak is a high-water mark, not current occupancy.
+        assert_eq!(p.peak_used, 50.0);
+    }
+
+    #[test]
+    fn tier_split_fills_sm_first() {
+        let cfg = KvCacheConfig { capacity_bytes: 100.0, sm_frac: 0.25 };
+        assert_eq!(cfg.split(10.0), (10.0, 0.0));
+        assert_eq!(cfg.split(25.0), (25.0, 0.0));
+        assert_eq!(cfg.split(60.0), (25.0, 35.0));
+        let (sm, reram) = cfg.split(100.0);
+        assert_eq!(sm + reram, 100.0);
+    }
+
+    #[test]
+    fn default_budget_admits_several_bert_base_generations() {
+        use crate::model::{ArchVariant, DecodeWorkload, ModelId};
+        let dw = DecodeWorkload::build(ModelId::BertBase, ArchVariant::EncoderOnly);
+        let peak = dw.peak_kv_bytes(256, 64);
+        let mut p = KvPool::new(KvCacheConfig::default());
+        let mut admitted = 0;
+        while p.try_reserve(peak) {
+            admitted += 1;
+        }
+        assert!(admitted >= 4, "default budget too small: {admitted}");
+        assert!(admitted < 64, "default budget should bound concurrency: {admitted}");
+    }
+}

@@ -1,0 +1,47 @@
+//! S12 — Autoregressive decode subsystem: request lifecycles, KV-cache
+//! residency, and continuous batching on top of the serving engine and
+//! traffic stack.
+//!
+//! The serve/loadtest path models a request as one one-shot prefill
+//! batch; real generative traffic is prefill + N decode steps with
+//! per-token occupancy. The decode phase lives in a different regime —
+//! GEMV-shaped projections bound by weight streaming, attention bound
+//! by KV-cache reads that grow with context — which is exactly the
+//! prefill/decode split the heterogeneous-serving literature builds on
+//! (Sharma et al., arXiv:2312.11750; Kim et al., arXiv:2302.14017).
+//!
+//! * [`crate::model::decode`] — per-step cost constants derived from
+//!   the `Workload::build` closed forms at one query position, plus
+//!   KV-footprint accounting.
+//! * [`engine`] — costs → seconds on the two tier resources, with the
+//!   batch-shared weight stream that makes continuous batching pay.
+//! * [`kv`] — per-stack KV-cache residency: peak-footprint reservation
+//!   at admission (refusal at the door, never mid-flight eviction),
+//!   budget split across the SM-MC and ReRAM tiers.
+//! * [`scheduler`] — the continuous-batching loop: prefill-prioritized
+//!   joins, step-level clock, EOS retirement from the generator's
+//!   seeded output lengths, thermal admission via the existing
+//!   [`crate::traffic::AdmissionController`] with the running batch
+//!   priced as un-throttleable background.
+//! * [`telemetry`] — TTFT / TPOT / ITL / e2e histograms, KV occupancy,
+//!   lifecycle counters.
+//! * [`decodetest`] — orchestration (generate → route → serve stacks →
+//!   aggregate) emitting the deterministic `BENCH_decode.json`
+//!   (schema: DESIGN.md §Decode); exposed as `hetrax decodetest`.
+//!
+//! Determinism: same contract as the traffic subsystem — seeded draws
+//! happen before the fan-out, stacks are pure functions of their
+//! shards, folds are in stack order; byte-identical across runs and
+//! `HETRAX_THREADS` values.
+
+pub mod decodetest;
+pub mod engine;
+pub mod kv;
+pub mod scheduler;
+pub mod telemetry;
+
+pub use decodetest::{run, DecodeReport};
+pub use engine::{DecodeEngine, StepCost, StepGroup};
+pub use kv::{KvCacheConfig, KvPool};
+pub use scheduler::{DecodeConfig, DecodeStackOutcome};
+pub use telemetry::DecodeTelemetry;

@@ -1,0 +1,575 @@
+//! Continuous-batching decode scheduler: one stack's request-lifecycle
+//! loop on a step-level simulated clock.
+//!
+//! Lifecycle (DESIGN.md §Decode): `Waiting → Prefilling → Decoding →
+//! Retired`, with two refusal edges — `refused_kv` at ingest (the peak
+//! cache footprint can never fit the stack budget) and `shed` when a
+//! waiting request ages past the queue-wait bound (including thermal
+//! deferrals that never clear).
+//!
+//! Scheduling policy: prefill-prioritized continuous batching. Whenever
+//! the running batch has room and the thermal controller admits, the
+//! head-of-queue run of compatible requests is prefilled as one batch
+//! through [`Engine::serve_batch`] (the §4.2 two-tier pipeline, emitting
+//! each request's first token); otherwise the whole running set advances
+//! one decode step, every request appends one token to its KV cache, and
+//! EOS retirements release their reservations. Tier busy time is
+//! accounted through the same [`ServeState`]/[`Engine::serve_batch`]
+//! horizons the serve path uses; operations issue in decision order
+//! (decode's token-to-token dependency serializes them), while the B
+//! requests of a prefill batch still pipeline across the two tiers
+//! inside `serve_batch`.
+//!
+//! Determinism: the loop reads only simulated quantities — arrivals and
+//! sampled output lengths come pre-drawn from the seeded generator, the
+//! thermal controller is deterministic, and every fold is in a fixed
+//! order. A stack's outcome is a pure function of its shard.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+use crate::config::Config;
+use crate::coordinator::{Batch, Engine, Request, ServeState};
+use crate::decode::engine::{DecodeEngine, StepGroup};
+use crate::decode::kv::{KvCacheConfig, KvPool};
+use crate::decode::telemetry::DecodeTelemetry;
+use crate::model::{ArchVariant, ModelId};
+use crate::power;
+use crate::traffic::admission::{AdmissionController, BatchCost, ThrottleConfig};
+use crate::traffic::generator::{ArrivalPattern, RequestMix};
+use crate::traffic::loadtest::{PhaseInfo, PhaseKey};
+use crate::traffic::router::RoutePolicy;
+
+/// Full parameterization of one decode run (`hetrax decodetest`).
+#[derive(Debug, Clone)]
+pub struct DecodeConfig {
+    pub pattern: ArrivalPattern,
+    /// Must carry an output-length distribution for generation traffic;
+    /// requests with `out_tokens == 0` are clamped to one token.
+    pub mix: RequestMix,
+    pub duration_s: f64,
+    pub stacks: usize,
+    pub policy: RoutePolicy,
+    pub seed: u64,
+    pub kv: KvCacheConfig,
+    /// Continuous-batch capacity: how many generations decode together.
+    /// 1 = one-request-at-a-time serving (the regression baseline).
+    pub max_running: usize,
+    /// Cap on requests prefilled together in one batch.
+    pub max_prefill_batch: usize,
+    /// Thermal admission knobs (ceiling, control window, queue-wait
+    /// bound) — shared with the loadtest controller.
+    pub throttle: ThrottleConfig,
+    /// Worker threads for the stack fan-out (0 = auto, 1 = serial);
+    /// results are identical at any value.
+    pub threads: usize,
+}
+
+impl DecodeConfig {
+    pub fn new(pattern: ArrivalPattern, mix: RequestMix) -> DecodeConfig {
+        DecodeConfig {
+            pattern,
+            mix,
+            duration_s: 1.0,
+            stacks: 1,
+            policy: RoutePolicy::JoinShortestQueue,
+            seed: 0xC0DE,
+            kv: KvCacheConfig::default(),
+            max_running: 8,
+            max_prefill_batch: 4,
+            throttle: ThrottleConfig::default(),
+            threads: 0,
+        }
+    }
+}
+
+/// One stack's results.
+#[derive(Debug, Clone)]
+pub struct DecodeStackOutcome {
+    pub telemetry: DecodeTelemetry,
+    pub peak_c: f64,
+    pub reram_peak_c: f64,
+    pub throttle_events: u64,
+    pub windows: u64,
+}
+
+/// A request mid-generation.
+#[derive(Debug, Clone)]
+struct ActiveGen {
+    model: ModelId,
+    variant: ArchVariant,
+    prompt: usize,
+    out_tokens: usize,
+    arrival_s: f64,
+    /// Output tokens emitted so far (the prefill emits the first).
+    generated: usize,
+    first_token_s: f64,
+    last_token_s: f64,
+    /// Peak-footprint reservation held in the KV pool.
+    peak_kv: f64,
+    /// Bytes actually written so far.
+    used_kv: f64,
+}
+
+fn us(seconds: f64) -> u64 {
+    (seconds.max(0.0) * 1e6).round() as u64
+}
+
+/// Group the running set per (model, variant) in first-seen order.
+fn step_groups(engine: &DecodeEngine, running: &[ActiveGen]) -> Vec<StepGroup> {
+    let mut groups: Vec<StepGroup> = Vec::new();
+    for a in running {
+        let dw = engine.workload(a.model, a.variant);
+        let sctx = dw.self_context(a.prompt, a.generated);
+        let cctx = if dw.cross { a.prompt } else { 0 };
+        match groups
+            .iter_mut()
+            .find(|g| g.model == a.model && g.variant == a.variant)
+        {
+            Some(g) => {
+                g.b += 1;
+                g.sum_self_ctx += sctx;
+                g.sum_cross_ctx += cctx;
+            }
+            None => groups.push(StepGroup {
+                model: a.model,
+                variant: a.variant,
+                b: 1,
+                sum_self_ctx: sctx,
+                sum_cross_ctx: cctx,
+            }),
+        }
+    }
+    groups
+}
+
+/// Steady-state busy seconds one control window of the current decode
+/// batch contributes — the un-throttleable background the admission
+/// controller prices prefills against.
+fn decode_background(
+    engine: &DecodeEngine,
+    running: &[ActiveGen],
+    interval_s: f64,
+) -> BatchCost {
+    if running.is_empty() {
+        return BatchCost::zero();
+    }
+    let groups = step_groups(engine, running);
+    let sc = engine.step_cost(&groups);
+    let total = (sc.mha_s + sc.ff_s).max(1e-12);
+    let frac = groups
+        .iter()
+        .map(|g| engine.active_frac(g.model, g.variant))
+        .fold(0.0f64, f64::max);
+    BatchCost {
+        sm_s: interval_s * sc.mha_s / total,
+        ff_s: interval_s * sc.ff_s / total,
+        active_frac: frac,
+    }
+}
+
+fn retire(tel: &mut DecodeTelemetry, kv: &mut KvPool, a: ActiveGen) {
+    tel.completed += 1;
+    tel.e2e_us.record(us(a.last_token_s - a.arrival_s));
+    if a.out_tokens > 1 {
+        let tpot = (a.last_token_s - a.first_token_s) / (a.out_tokens - 1) as f64;
+        tel.tpot_us.record(us(tpot));
+    }
+    tel.makespan_s = tel.makespan_s.max(a.last_token_s);
+    kv.release(a.peak_kv, a.used_kv);
+}
+
+/// Run one stack's decode loop over its (arrival-sorted) shard.
+pub(crate) fn serve_stack(
+    cfg: &Config,
+    dc: &DecodeConfig,
+    phases: &HashMap<PhaseKey, PhaseInfo>,
+    engine: &DecodeEngine,
+    reqs: &[Request],
+) -> DecodeStackOutcome {
+    let mut tel = DecodeTelemetry::new();
+    tel.submitted = reqs.len() as u64;
+    let mut ctl = AdmissionController::new(cfg, dc.throttle, dc.max_prefill_batch);
+    if reqs.is_empty() {
+        return DecodeStackOutcome {
+            telemetry: tel,
+            peak_c: 0.0,
+            reram_peak_c: 0.0,
+            throttle_events: 0,
+            windows: 0,
+        };
+    }
+
+    let serve_engine = Engine::new(cfg);
+    let mut state = ServeState::new();
+    let mut kv = KvPool::new(dc.kv);
+    let interval = dc.throttle.interval_s.max(1e-6);
+    let wait = dc.throttle.max_queue_wait_s;
+    let max_running = dc.max_running.max(1);
+
+    // Backstop against config pathologies: every iteration either emits
+    // tokens, launches a prefill, or advances the clock by ≥ one
+    // control window, so this cap is far above any legitimate run.
+    let total_tokens: u64 = reqs.iter().map(|r| r.out_tokens.max(1) as u64).sum();
+    let max_ops = 4 * (total_tokens
+        + reqs.len() as u64
+        + ((dc.duration_s + wait) / interval).ceil() as u64)
+        + 1024;
+
+    let mut waiting: VecDeque<Request> = VecDeque::new();
+    let mut running: Vec<ActiveGen> = Vec::new();
+    let mut next = 0usize;
+    let mut t = 0.0f64;
+    // Thermal deferral gate: no prefill attempts before this time.
+    let mut admit_block_until = 0.0f64;
+    // Work already admitted in the current control window (priced as
+    // background so sustained launches accumulate heat).
+    let mut window_cost = BatchCost::zero();
+    let mut window_end = interval;
+    // Decode-phase accumulators for the end-of-run energy model.
+    let mut dec_sm_flops = 0.0f64;
+    let mut dec_ff_ops = 0.0f64;
+    let mut dec_l2_bytes = 0.0f64;
+    let mut dec_kv_bytes = 0.0f64;
+    let mut dec_mha_busy = 0.0f64;
+    let mut dec_ff_busy = 0.0f64;
+    // Simulated control windows elapsed (what `control_windows` reports;
+    // the controller's own counter counts admission *decisions*).
+    let mut sim_windows = 0u64;
+    let mut ops = 0u64;
+
+    loop {
+        // Window bookkeeping on the simulated clock (O(1) even across
+        // long idle jumps; the while is a float-rounding backstop).
+        if t >= window_end {
+            // Close the window's thermal book first: decode-heavy
+            // stretches make no admission calls, so the committed
+            // running batch plus this window's admitted work is
+            // recorded here.
+            let mut closing = decode_background(engine, &running, interval);
+            closing.add(&window_cost);
+            ctl.observe(&closing);
+            let mut k = ((t - window_end) / interval).floor() as u64 + 1;
+            window_end += k as f64 * interval;
+            while t >= window_end {
+                window_end += interval;
+                k += 1;
+            }
+            sim_windows += k;
+            window_cost = BatchCost::zero();
+        }
+
+        // 1. Ingest arrivals due by now; refuse outright what can never
+        //    fit the stack's cache budget.
+        while next < reqs.len() && reqs[next].arrival_s <= t {
+            let r = &reqs[next];
+            let dw = engine.workload(r.model, r.variant);
+            if dw.peak_kv_bytes(r.seq, r.out_tokens.max(1)) > kv.capacity_bytes() {
+                tel.refused_kv += 1;
+            } else {
+                waiting.push_back(r.clone());
+            }
+            next += 1;
+        }
+
+        // 2. Age out waiting requests past the queue bound.
+        let before = waiting.len();
+        waiting.retain(|r| t - r.arrival_s <= wait);
+        tel.shed += (before - waiting.len()) as u64;
+
+        // 3. Try to launch one prefill batch (continuous-batching join).
+        let mut launched = false;
+        let room = max_running.saturating_sub(running.len());
+        if room > 0 && !waiting.is_empty() && t >= admit_block_until {
+            let head = (waiting[0].model, waiting[0].variant);
+            let cap = room.min(dc.max_prefill_batch).min(ctl.batch_cap).max(1);
+            let mut cand = 0usize;
+            let mut kv_need = 0.0f64;
+            for r in waiting.iter() {
+                if cand >= cap || (r.model, r.variant) != head {
+                    break;
+                }
+                let peak = engine
+                    .workload(r.model, r.variant)
+                    .peak_kv_bytes(r.seq, r.out_tokens.max(1));
+                if !kv.would_fit(kv_need + peak) {
+                    break;
+                }
+                kv_need += peak;
+                cand += 1;
+            }
+            if cand > 0 {
+                let batch = Batch {
+                    requests: waiting.iter().take(cand).cloned().collect(),
+                    ready_s: t,
+                };
+                let info = phases[&(head.0, head.1, batch.seq())];
+                let n = cand as f64;
+                let cost = BatchCost {
+                    sm_s: info.mha_s * n,
+                    ff_s: info.ff_s * n,
+                    active_frac: info.active_frac,
+                };
+                let mut background = decode_background(engine, &running, interval);
+                background.add(&window_cost);
+                let (admitted, _deferred) =
+                    ctl.admit_with_background(t, vec![batch], &[cost], background);
+                if let Some(batch) = admitted.into_iter().next() {
+                    let out = serve_engine
+                        .serve_batch(&mut state, &batch)
+                        .expect("prefill batch is non-empty");
+                    window_cost.add(&cost);
+                    tel.prefill_batches += 1;
+                    tel.sm_busy_s += out.sm_busy_s;
+                    tel.reram_busy_s += out.reram_busy_s;
+                    tel.energy_j += out.energy_j;
+                    t = out.finish_s;
+                    for r in waiting.drain(..cand) {
+                        let dw = engine.workload(r.model, r.variant);
+                        let out_tokens = r.out_tokens.max(1);
+                        let peak = dw.peak_kv_bytes(r.seq, out_tokens);
+                        let ok = kv.try_reserve(peak);
+                        debug_assert!(ok, "reservation was pre-checked");
+                        let used = dw.kv_bytes(r.seq, 1);
+                        kv.grow(used);
+                        tel.tokens_out += 1;
+                        tel.ttft_us.record(us(t - r.arrival_s));
+                        let a = ActiveGen {
+                            model: r.model,
+                            variant: r.variant,
+                            prompt: r.seq,
+                            out_tokens,
+                            arrival_s: r.arrival_s,
+                            generated: 1,
+                            first_token_s: t,
+                            last_token_s: t,
+                            peak_kv: peak,
+                            used_kv: used,
+                        };
+                        if a.generated >= a.out_tokens {
+                            retire(&mut tel, &mut kv, a);
+                        } else {
+                            running.push(a);
+                        }
+                    }
+                    tel.peak_running = tel.peak_running.max(running.len() as u64);
+                    tel.peak_kv_bytes = tel.peak_kv_bytes.max(kv.used_bytes());
+                    launched = true;
+                } else {
+                    // Thermally deferred: hold admissions for the rest
+                    // of this control window.
+                    admit_block_until = window_end;
+                }
+            }
+        }
+
+        if !launched && !running.is_empty() {
+            // 4. One decode step over the whole running set.
+            let groups = step_groups(engine, &running);
+            let sc = engine.step_cost(&groups);
+            let start = t;
+            let end = start + sc.wall_s;
+            state.sm_free = state.sm_free.max(start + sc.mha_s);
+            state.reram_free = state.reram_free.max(end);
+            t = end;
+            tel.decode_steps += 1;
+            tel.sm_busy_s += sc.mha_s;
+            tel.reram_busy_s += sc.ff_s;
+            dec_mha_busy += sc.mha_s;
+            dec_ff_busy += sc.ff_s;
+            dec_sm_flops += sc.sm_flops;
+            dec_ff_ops += sc.ff_ops;
+            dec_l2_bytes += sc.l2_bytes;
+            dec_kv_bytes += sc.kv_read_bytes;
+
+            let mut i = 0;
+            while i < running.len() {
+                let a = &mut running[i];
+                a.generated += 1;
+                tel.itl_us.record(us(end - a.last_token_s));
+                a.last_token_s = end;
+                let grow = engine.workload(a.model, a.variant).kv_bytes_per_token();
+                kv.grow(grow);
+                a.used_kv += grow;
+                tel.tokens_out += 1;
+                if a.generated >= a.out_tokens {
+                    let done = running.remove(i);
+                    retire(&mut tel, &mut kv, done);
+                } else {
+                    i += 1;
+                }
+            }
+            tel.kv_used_kib.record((kv.used_bytes() / 1024.0).round() as u64);
+            tel.peak_kv_bytes = tel.peak_kv_bytes.max(kv.used_bytes());
+            launched = true;
+        }
+
+        if !launched {
+            // 5. Idle: advance to the next meaningful instant.
+            if !waiting.is_empty() && t < admit_block_until {
+                t = admit_block_until;
+            } else if waiting.is_empty() && next < reqs.len() {
+                t = reqs[next].arrival_s;
+            } else if waiting.is_empty() {
+                break;
+            } else {
+                // Defensive: waiting head unlaunchable with an empty
+                // pool cannot happen (refusal is checked at ingest),
+                // but never spin — shed it and move on.
+                waiting.pop_front();
+                tel.shed += 1;
+            }
+        }
+
+        ops += 1;
+        if ops >= max_ops {
+            // Conservation even on abort: un-ingested arrivals count as
+            // shed too, so completed + shed + refused_kv == submitted.
+            tel.shed += waiting.len() as u64
+                + running.len() as u64
+                + (reqs.len() - next) as u64;
+            for a in running.drain(..) {
+                kv.release(a.peak_kv, a.used_kv);
+            }
+            waiting.clear();
+            break;
+        }
+    }
+
+    // Decode-phase energy (prefill energy came through serve_batch):
+    // SM + ReRAM dynamic/static over their busy windows, L2 traffic,
+    // and the DRAM-side KV stream.
+    tel.energy_j += power::sm_energy_j(cfg, dec_sm_flops, dec_mha_busy, 1.0)
+        + power::reram_energy_j(cfg, dec_ff_ops, dec_ff_busy)
+        + power::mc_energy_j(cfg, dec_l2_bytes, dec_mha_busy)
+        + power::dram_energy_j(dec_kv_bytes);
+
+    DecodeStackOutcome {
+        telemetry: tel,
+        peak_c: ctl.peak_c,
+        reram_peak_c: ctl.reram_peak_c,
+        throttle_events: ctl.events.len() as u64,
+        windows: sim_windows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::loadtest;
+
+    fn run_one(reqs: Vec<Request>, dc: &DecodeConfig) -> DecodeStackOutcome {
+        let cfg = Config::default();
+        let phases = loadtest::phase_table(&cfg, &reqs, 1);
+        let mut keys: Vec<(ModelId, ArchVariant)> = Vec::new();
+        for r in &reqs {
+            if !keys.contains(&(r.model, r.variant)) {
+                keys.push((r.model, r.variant));
+            }
+        }
+        let engine = DecodeEngine::build(&cfg, &keys);
+        serve_stack(&cfg, dc, &phases, &engine, &reqs)
+    }
+
+    fn gen_req(id: u64, arrival: f64, prompt: usize, out: usize) -> Request {
+        let mut r = Request::synthetic(id, ModelId::BertBase, prompt, arrival);
+        r.out_tokens = out;
+        r
+    }
+
+    fn base_config() -> DecodeConfig {
+        DecodeConfig::new(
+            ArrivalPattern::Poisson { rps: 0.0 },
+            RequestMix::single(ModelId::BertBase),
+        )
+    }
+
+    #[test]
+    fn single_request_lifecycle() {
+        let dc = base_config();
+        let out = run_one(vec![gen_req(0, 0.0, 128, 5)], &dc);
+        let t = &out.telemetry;
+        assert_eq!(t.submitted, 1);
+        assert_eq!(t.completed, 1);
+        assert_eq!(t.shed + t.refused_kv, 0);
+        assert_eq!(t.tokens_out, 5);
+        assert_eq!(t.prefill_batches, 1);
+        assert_eq!(t.decode_steps, 4, "first token from prefill, 4 stepped");
+        assert_eq!(t.itl_us.count(), 4);
+        assert_eq!(t.ttft_us.count(), 1);
+        assert_eq!(t.tpot_us.count(), 1);
+        assert!(t.ttft_us.max() > 0, "prefill takes simulated time");
+        assert!(t.makespan_s > 0.0);
+        assert!(t.peak_kv_bytes > 0.0);
+        assert!(t.sm_busy_s > 0.0 && t.reram_busy_s > 0.0);
+        assert!(t.energy_j > 0.0);
+    }
+
+    #[test]
+    fn one_token_request_retires_at_prefill() {
+        let dc = base_config();
+        let out = run_one(vec![gen_req(0, 0.0, 64, 1)], &dc);
+        let t = &out.telemetry;
+        assert_eq!(t.completed, 1);
+        assert_eq!(t.tokens_out, 1);
+        assert_eq!(t.decode_steps, 0);
+        assert_eq!(t.itl_us.count(), 0);
+        assert_eq!(t.tpot_us.count(), 0, "TPOT undefined for 1-token outputs");
+        assert_eq!(t.e2e_us.count(), 1);
+    }
+
+    #[test]
+    fn later_arrival_joins_running_batch() {
+        // Second request arrives mid-generation of the first: it must
+        // join (peak_running = 2) rather than wait for completion.
+        let dc = base_config();
+        let out = run_one(
+            vec![gen_req(0, 0.0, 128, 200), gen_req(1, 0.002, 128, 200)],
+            &dc,
+        );
+        let t = &out.telemetry;
+        assert_eq!(t.completed, 2);
+        assert_eq!(t.peak_running, 2, "continuous batching must join");
+        assert_eq!(t.tokens_out, 400);
+    }
+
+    #[test]
+    fn serial_mode_never_overlaps_requests() {
+        let mut dc = base_config();
+        dc.max_running = 1;
+        let out = run_one(
+            vec![gen_req(0, 0.0, 128, 50), gen_req(1, 0.0, 128, 50)],
+            &dc,
+        );
+        let t = &out.telemetry;
+        assert_eq!(t.completed, 2);
+        assert_eq!(t.peak_running, 1);
+        assert_eq!(t.prefill_batches, 2, "one at a time");
+    }
+
+    #[test]
+    fn kv_refusal_at_ingest_and_pressure_queues() {
+        // Budget below one request's peak: refused at the door.
+        let mut dc = base_config();
+        dc.kv.capacity_bytes = 1024.0 * 1024.0; // 1 MiB ≪ bert-base peak
+        let out = run_one(vec![gen_req(0, 0.0, 256, 64)], &dc);
+        assert_eq!(out.telemetry.refused_kv, 1);
+        assert_eq!(out.telemetry.completed, 0);
+
+        // Budget for ~one concurrent request: the second must wait for
+        // the first to release, not run alongside it.
+        let mut dc = base_config();
+        let dw = crate::model::DecodeWorkload::build(
+            ModelId::BertBase,
+            ArchVariant::EncoderOnly,
+        );
+        dc.kv.capacity_bytes = dw.peak_kv_bytes(128, 40) * 1.5;
+        let out = run_one(
+            vec![gen_req(0, 0.0, 128, 40), gen_req(1, 0.0, 128, 40)],
+            &dc,
+        );
+        let t = &out.telemetry;
+        assert_eq!(t.completed, 2);
+        assert_eq!(t.peak_running, 1, "KV pressure serializes");
+    }
+}

@@ -1,0 +1,153 @@
+//! Streaming decode telemetry: the generation-serving metrics
+//! (TTFT / TPOT / ITL) on log-scale histograms in integer microseconds,
+//! KV-cache occupancy in KiB, plus lifecycle counters. Everything is
+//! simulated-clock data; stacks merge in stack order, so aggregates are
+//! deterministic (the same discipline as `traffic::telemetry`).
+
+use crate::util::stats::LogHistogram;
+
+/// One stack's decode recorder.
+#[derive(Debug, Clone)]
+pub struct DecodeTelemetry {
+    /// Time to first token: request arrival → end of its prefill (µs).
+    pub ttft_us: LogHistogram,
+    /// Per-request mean time per output token after the first (µs);
+    /// recorded at retirement for requests with ≥ 2 output tokens.
+    pub tpot_us: LogHistogram,
+    /// Inter-token latency: gap between consecutive tokens of a request
+    /// (µs), recorded at every decode step for every running request.
+    pub itl_us: LogHistogram,
+    /// End-to-end latency: arrival → last token (µs).
+    pub e2e_us: LogHistogram,
+    /// KV-cache occupancy (KiB), sampled after every decode step.
+    pub kv_used_kib: LogHistogram,
+    pub submitted: u64,
+    pub completed: u64,
+    /// Aged out of the waiting queue (or aborted at the loop backstop).
+    pub shed: u64,
+    /// Refused at ingest: peak KV footprint exceeds the stack budget.
+    pub refused_kv: u64,
+    /// Output tokens emitted (first tokens + decode-step tokens).
+    pub tokens_out: u64,
+    pub prefill_batches: u64,
+    pub decode_steps: u64,
+    /// Largest concurrent running-batch size observed.
+    pub peak_running: u64,
+    /// High-water KV occupancy (bytes).
+    pub peak_kv_bytes: f64,
+    /// Latest token emission time.
+    pub makespan_s: f64,
+    pub sm_busy_s: f64,
+    pub reram_busy_s: f64,
+    pub energy_j: f64,
+}
+
+impl Default for DecodeTelemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DecodeTelemetry {
+    pub fn new() -> DecodeTelemetry {
+        DecodeTelemetry {
+            ttft_us: LogHistogram::new(),
+            tpot_us: LogHistogram::new(),
+            itl_us: LogHistogram::new(),
+            e2e_us: LogHistogram::new(),
+            kv_used_kib: LogHistogram::new(),
+            submitted: 0,
+            completed: 0,
+            shed: 0,
+            refused_kv: 0,
+            tokens_out: 0,
+            prefill_batches: 0,
+            decode_steps: 0,
+            peak_running: 0,
+            peak_kv_bytes: 0.0,
+            makespan_s: 0.0,
+            sm_busy_s: 0.0,
+            reram_busy_s: 0.0,
+            energy_j: 0.0,
+        }
+    }
+
+    pub fn sm_utilization(&self) -> f64 {
+        if self.makespan_s > 0.0 { self.sm_busy_s / self.makespan_s } else { 0.0 }
+    }
+
+    pub fn reram_utilization(&self) -> f64 {
+        if self.makespan_s > 0.0 { self.reram_busy_s / self.makespan_s } else { 0.0 }
+    }
+
+    /// Output tokens per second of makespan — the decode serving metric.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.makespan_s > 0.0 { self.tokens_out as f64 / self.makespan_s } else { 0.0 }
+    }
+
+    /// Fold another stack in (stack order for determinism).
+    pub fn merge(&mut self, other: &DecodeTelemetry) {
+        self.ttft_us.merge(&other.ttft_us);
+        self.tpot_us.merge(&other.tpot_us);
+        self.itl_us.merge(&other.itl_us);
+        self.e2e_us.merge(&other.e2e_us);
+        self.kv_used_kib.merge(&other.kv_used_kib);
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.shed += other.shed;
+        self.refused_kv += other.refused_kv;
+        self.tokens_out += other.tokens_out;
+        self.prefill_batches += other.prefill_batches;
+        self.decode_steps += other.decode_steps;
+        self.peak_running = self.peak_running.max(other.peak_running);
+        self.peak_kv_bytes = self.peak_kv_bytes.max(other.peak_kv_bytes);
+        self.makespan_s = self.makespan_s.max(other.makespan_s);
+        self.sm_busy_s += other.sm_busy_s;
+        self.reram_busy_s += other.reram_busy_s;
+        self.energy_j += other.energy_j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_counters_and_maxes_extremes() {
+        let mut a = DecodeTelemetry::new();
+        let mut b = DecodeTelemetry::new();
+        a.submitted = 3;
+        a.completed = 2;
+        a.tokens_out = 40;
+        a.makespan_s = 1.0;
+        a.peak_kv_bytes = 5e6;
+        a.peak_running = 3;
+        a.ttft_us.record(900);
+        b.submitted = 2;
+        b.completed = 2;
+        b.tokens_out = 10;
+        b.makespan_s = 2.5;
+        b.peak_kv_bytes = 2e6;
+        b.peak_running = 7;
+        b.ttft_us.record(1800);
+        b.sm_busy_s = 0.5;
+        a.merge(&b);
+        assert_eq!(a.submitted, 5);
+        assert_eq!(a.completed, 4);
+        assert_eq!(a.tokens_out, 50);
+        assert_eq!(a.makespan_s, 2.5);
+        assert_eq!(a.peak_running, 7);
+        assert_eq!(a.peak_kv_bytes, 5e6);
+        assert_eq!(a.ttft_us.count(), 2);
+        assert!((a.tokens_per_s() - 20.0).abs() < 1e-9);
+        assert!((a.sm_utilization() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_telemetry_guards_division() {
+        let t = DecodeTelemetry::new();
+        assert_eq!(t.tokens_per_s(), 0.0);
+        assert_eq!(t.sm_utilization(), 0.0);
+        assert_eq!(t.reram_utilization(), 0.0);
+    }
+}

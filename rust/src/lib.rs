@@ -16,6 +16,7 @@ pub mod baselines;
 pub mod config;
 pub mod experiments;
 pub mod coordinator;
+pub mod decode;
 pub mod model;
 pub mod noc;
 pub mod optim;

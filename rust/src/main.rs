@@ -28,8 +28,9 @@ use hetrax::model::{ModelId, Workload};
 use hetrax::noc::{traffic, NocSim, Topology};
 use hetrax::optim::{Evaluator, MooStage, ObjectiveSet};
 use hetrax::perf::PerfEstimator;
+use hetrax::decode::{decodetest, DecodeConfig};
 use hetrax::traffic::loadtest::{self, LoadtestConfig};
-use hetrax::traffic::{ArrivalPattern, RequestMix, RoutePolicy};
+use hetrax::traffic::{ArrivalPattern, OutputLenDist, RequestMix, RoutePolicy};
 use hetrax::util::rng::Rng;
 
 /// Tiny argv parser: positional command + `--key value` / `--flag` pairs.
@@ -131,6 +132,7 @@ fn main() -> Result<()> {
         "optimize" => cmd_optimize(&cfg, &args, effort, seed),
         "serve" => cmd_serve(&cfg, &args),
         "loadtest" => cmd_loadtest(&cfg, &args, seed),
+        "decodetest" => cmd_decodetest(&cfg, &args, seed),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -163,6 +165,14 @@ COMMANDS:
                --duration S --stacks N --policy jsq|rr --models a,b
                --batch N --slo S --ceiling C --uncontrolled
                --trace FILE (replay) --threads N --out BENCH_serve.json]
+  decodetest  autoregressive decode run: continuous batching, KV-cache
+              residency, TTFT/TPOT/ITL telemetry
+              [--pattern ... --rps R --duration S --stacks N
+               --policy jsq|rr --models a,b
+               --outlen fixed:N|geometric:MEAN|lognormal:MED:SIGMA
+               --max-running N (1 = one-at-a-time) --prefill-batch N
+               --kv-mib M --kv-sm-frac F --ceiling C --uncontrolled
+               --trace FILE (replay) --threads N --out BENCH_decode.json]
 ";
 
 fn cmd_spec(cfg: &Config) -> Result<()> {
@@ -288,10 +298,10 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
-    let rps = args.get_f64("rps", 200.0)?;
-    let duration = args.get_f64("duration", 2.0)?;
-    let pattern = match args.get("pattern").unwrap_or("poisson") {
+/// Shared `--pattern`/`--rps`/`--burst`/`--period`/`--amplitude`/`--trace`
+/// parsing for the open-loop traffic commands (loadtest, decodetest).
+fn parse_pattern(args: &Args, rps: f64, duration: f64) -> Result<ArrivalPattern> {
+    Ok(match args.get("pattern").unwrap_or("poisson") {
         "poisson" => ArrivalPattern::Poisson { rps },
         "bursty" => ArrivalPattern::Bursty {
             rps,
@@ -314,13 +324,33 @@ fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
                 .map_err(|e| anyhow!("parsing {path}: {e}"))?
         }
         other => bail!("unknown pattern {other:?}"),
-    };
-    let models: Vec<ModelId> = args
-        .get("models")
+    })
+}
+
+fn parse_models(args: &Args) -> Result<Vec<ModelId>> {
+    args.get("models")
         .unwrap_or("bert-base")
         .split(',')
         .map(|s| ModelId::parse(s.trim()).ok_or_else(|| anyhow!("unknown model {s:?}")))
-        .collect::<Result<_>>()?;
+        .collect()
+}
+
+fn write_report(out: &str, doc: &hetrax::util::json::Json) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, doc.pretty()).with_context(|| format!("writing {out}"))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
+    let rps = args.get_f64("rps", 200.0)?;
+    let duration = args.get_f64("duration", 2.0)?;
+    let pattern = parse_pattern(args, rps, duration)?;
+    let models = parse_models(args)?;
     let policy = RoutePolicy::parse(args.get("policy").unwrap_or("jsq"))
         .ok_or_else(|| anyhow!("unknown policy (jsq | rr)"))?;
 
@@ -367,14 +397,88 @@ fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
         report.throttle_events,
         report.windows
     );
-    let out = args.get("out").unwrap_or("BENCH_serve.json");
-    if let Some(dir) = std::path::Path::new(out).parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)?;
-        }
-    }
-    std::fs::write(out, report.to_json(&lt).pretty())
-        .with_context(|| format!("writing {out}"))?;
-    println!("wrote {out}");
-    Ok(())
+    write_report(args.get("out").unwrap_or("BENCH_serve.json"), &report.to_json(&lt))
+}
+
+fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
+    let rps = args.get_f64("rps", 300.0)?;
+    let duration = args.get_f64("duration", 1.0)?;
+    let pattern = parse_pattern(args, rps, duration)?;
+    let models = parse_models(args)?;
+    let policy = RoutePolicy::parse(args.get("policy").unwrap_or("jsq"))
+        .ok_or_else(|| anyhow!("unknown policy (jsq | rr)"))?;
+    let outlen = OutputLenDist::parse(args.get("outlen").unwrap_or("geometric:32"))
+        .map_err(|e| anyhow!(e))?;
+
+    let mut dc = DecodeConfig::new(pattern, RequestMix::models(&models).with_output(outlen));
+    dc.duration_s = duration;
+    dc.stacks = args.get_usize("stacks", 1)?;
+    dc.policy = policy;
+    dc.seed = seed;
+    dc.max_running = args.get_usize("max-running", 8)?;
+    dc.max_prefill_batch = args.get_usize("prefill-batch", 4)?;
+    dc.kv.capacity_bytes = args.get_f64("kv-mib", 128.0)? * 1024.0 * 1024.0;
+    dc.kv.sm_frac = args.get_f64("kv-sm-frac", dc.kv.sm_frac)?;
+    dc.threads = args.get_usize("threads", 0)?;
+    dc.throttle.ceiling_c = args.get_f64("ceiling", dc.throttle.ceiling_c)?;
+    dc.throttle.enabled = !args.has("uncontrolled");
+
+    let report = decodetest::run(cfg, &dc);
+    let t = &report.total;
+    let ms = |us: u64| us as f64 / 1e3;
+    println!(
+        "decodetest {} @ {:.0} rps x {:.1}s over {} stack(s), policy {}, outlen {}",
+        dc.pattern.name(),
+        dc.pattern.nominal_rps(),
+        duration,
+        dc.stacks,
+        dc.policy.name(),
+        dc.mix.output.map(|d| d.describe()).unwrap_or_default()
+    );
+    println!(
+        "  requests:  {} submitted, {} completed, {} shed, {} refused (KV)",
+        t.submitted, t.completed, t.shed, t.refused_kv
+    );
+    println!(
+        "  tokens:    {} generated in {} prefill batches + {} decode steps (peak batch {})",
+        t.tokens_out, t.prefill_batches, t.decode_steps, t.peak_running
+    );
+    println!(
+        "  ttft:      p50 {:.2} ms  p99 {:.2} ms",
+        ms(t.ttft_us.percentile(50.0)),
+        ms(t.ttft_us.percentile(99.0))
+    );
+    println!(
+        "  tpot/itl:  tpot p50 {:.3} ms  itl p50 {:.3} ms  itl p99 {:.3} ms",
+        ms(t.tpot_us.percentile(50.0)),
+        ms(t.itl_us.percentile(50.0)),
+        ms(t.itl_us.percentile(99.0))
+    );
+    println!(
+        "  kv cache:  peak {:.1} MiB of {:.0} MiB, occupancy p50 {} KiB",
+        t.peak_kv_bytes / (1024.0 * 1024.0),
+        dc.kv.capacity_bytes / (1024.0 * 1024.0),
+        t.kv_used_kib.percentile(50.0)
+    );
+    println!(
+        "  serving:   {:.1} req/s, {:.0} tok/s, makespan {:.2} s, energy {:.2} J",
+        report.requests_per_s(),
+        report.tokens_per_s(),
+        t.makespan_s,
+        t.energy_j
+    );
+    println!(
+        "  tiers:     SM util {:.2}, ReRAM util {:.2}",
+        report.sm_utilization(),
+        report.reram_utilization()
+    );
+    println!(
+        "  thermal:   ReRAM peak {:.1} C vs ceiling {:.1} C ({}), {} throttle events / {} windows",
+        report.reram_peak_c,
+        dc.throttle.ceiling_c,
+        if dc.throttle.enabled { "controlled" } else { "uncontrolled" },
+        report.throttle_events,
+        report.windows
+    );
+    write_report(args.get("out").unwrap_or("BENCH_decode.json"), &report.to_json(&dc))
 }

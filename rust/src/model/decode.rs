@@ -1,0 +1,248 @@
+//! Autoregressive decode-step cost model — the GEMV regime.
+//!
+//! Prefill pushes the whole prompt through [`crate::model::Workload`]'s
+//! kernel DAG: batched GEMMs, compute-bound. Every output token after
+//! that re-runs the model for ONE query position, which changes the cost
+//! structure completely: the projections and FF collapse to GEMVs whose
+//! time is dominated by streaming the weight panels, and attention reads
+//! the cached K/V of every prior position — a memory-bound term that
+//! grows linearly with context length. Splitting those two regimes is
+//! the core observation of the heterogeneous-serving line of work
+//! (Sharma et al., arXiv:2312.11750; Kim et al., arXiv:2302.14017).
+//!
+//! [`DecodeWorkload`] derives the per-step, per-block cost constants
+//! from the same [`crate::model::kernels::kernel_cost`] closed forms
+//! `Workload::build` uses (evaluated at seq = 1 for the GEMV-shaped
+//! kernels), plus the per-context-entry attention terms and the
+//! KV-cache footprint accounting the residency model charges against.
+//! Converting costs to seconds lives in `decode::engine` — it needs the
+//! ReRAM mapping and tier rates, which this module deliberately does
+//! not depend on.
+
+use crate::config::specs::ACT_BYTES;
+use crate::model::kernels::{kernel_cost, Kernel};
+use crate::model::zoo::{ArchVariant, ModelDims, ModelId};
+
+/// Per-step decode costs of one (model, variant): everything the decode
+/// engine and the KV residency model need, independent of context
+/// length (context enters through the `*_per_ctx` terms and the
+/// [`DecodeWorkload::kv_bytes`] accounting).
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeWorkload {
+    pub model: ModelId,
+    pub variant: ArchVariant,
+    pub dims: ModelDims,
+    /// Blocks that run per decode step: the decoder stack for
+    /// encoder-decoder models, every layer otherwise. (Encoder-only
+    /// models are served as decoder-style generators — the dims are
+    /// what drive cost; causality does not change the GEMV shapes.)
+    pub step_blocks: usize,
+    /// Does each step include a cross-attention read over the encoder
+    /// output (encoder-decoder only)? Cross K/V are computed once at
+    /// prefill and cached; per step only Q/output projections re-run.
+    pub cross: bool,
+    /// K/V width per position per block: `d_model` for standard
+    /// attention, one head for MQA.
+    pub kv_width: usize,
+    // --- per-block, per-token cost constants (f64 to match KernelCost) ---
+    /// GEMV FLOPs per token: QKV + output projection (+ cross-attention
+    /// Q/output projections when `cross`).
+    pub gemv_flops_tok: f64,
+    /// Weight bytes streamed once per step per block, shared by every
+    /// request in the batch — the term continuous batching amortizes.
+    pub gemv_weight_bytes: f64,
+    /// Activation bytes per token through the projection GEMVs.
+    pub gemv_act_bytes_tok: f64,
+    /// Attention FLOPs per cached context entry per token (QKᵀ + AV +
+    /// softmax): `4·d_model + 5·heads`.
+    pub attn_flops_per_ctx: f64,
+    /// Bytes read per cached context entry (K and V rows + score
+    /// traffic).
+    pub attn_bytes_per_ctx: f64,
+    /// Element-wise (LayerNorm) FLOPs per token.
+    pub vec_flops_tok: f64,
+    /// FF GEMV FLOPs per token (weights stay resident in ReRAM).
+    pub ff_flops_tok: f64,
+    /// FF activation bytes per token over the TSVs.
+    pub ff_act_bytes_tok: f64,
+}
+
+impl DecodeWorkload {
+    /// Derive the decode-step constants for (model, variant).
+    pub fn build(model: ModelId, variant: ArchVariant) -> DecodeWorkload {
+        let dims = model.dims();
+        let cross = variant.has_cross_attention();
+        let step_blocks = if cross {
+            dims.layers - dims.layers / 2 // the decoder stack (Workload::build split)
+        } else {
+            dims.layers
+        };
+        let kv_width = if variant == ArchVariant::Mqa { dims.head_dim() } else { dims.d_model };
+
+        // GEMV-shaped kernels: exactly the Workload::build closed forms
+        // at seq = 1.
+        let qkv = kernel_cost(Kernel::Mha1Qkv, &dims, variant, 1);
+        let proj = kernel_cost(Kernel::Mha4Proj, &dims, variant, 1);
+        let ln = kernel_cost(Kernel::LayerNorm1, &dims, variant, 1);
+        let ff1 = kernel_cost(Kernel::Ff1, &dims, variant, 1);
+        let ff2 = kernel_cost(Kernel::Ff2, &dims, variant, 1);
+
+        let d = dims.d_model as f64;
+        let h = dims.heads as f64;
+        let n_lns = if cross { 3.0 } else { 2.0 };
+
+        let mut gemv_flops_tok = qkv.flops + proj.flops;
+        let mut gemv_weight_bytes = qkv.weight_bytes + proj.weight_bytes;
+        let mut gemv_act_bytes_tok =
+            qkv.act_in_bytes + qkv.act_out_bytes + proj.act_in_bytes + proj.act_out_bytes;
+        if cross {
+            // Cross-attention per step: re-project Q and the output
+            // (K/V of the encoder output are cached at prefill).
+            gemv_flops_tok += 4.0 * d * d;
+            gemv_weight_bytes += 2.0 * d * d * ACT_BYTES;
+            gemv_act_bytes_tok += 4.0 * d * ACT_BYTES;
+        }
+
+        DecodeWorkload {
+            model,
+            variant,
+            dims,
+            step_blocks,
+            cross,
+            kv_width,
+            gemv_flops_tok,
+            gemv_weight_bytes,
+            gemv_act_bytes_tok,
+            // Per context entry: QKᵀ (2·h·hd) + AV (2·h·hd) + softmax
+            // (5·h); h·hd = d_model for every variant (MQA narrows the
+            // cached K/V, not the head count).
+            attn_flops_per_ctx: 4.0 * d + 5.0 * h,
+            // K row + V row reads plus score write/read traffic.
+            attn_bytes_per_ctx: (2.0 * kv_width as f64 + 2.0 * h) * ACT_BYTES,
+            vec_flops_tok: n_lns * ln.flops,
+            ff_flops_tok: ff1.flops + ff2.flops,
+            ff_act_bytes_tok:
+                ff1.act_in_bytes + ff1.act_out_bytes + ff2.act_in_bytes + ff2.act_out_bytes,
+        }
+    }
+
+    /// KV bytes appended per generated token (K + V across the
+    /// decode-active blocks).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        self.step_blocks as f64 * 2.0 * self.kv_width as f64 * ACT_BYTES
+    }
+
+    /// Cross-attention K/V cached once at prefill (encoder-decoder
+    /// only): one entry per prompt position per decoder block.
+    pub fn cross_kv_bytes(&self, prompt: usize) -> f64 {
+        if self.cross {
+            self.step_blocks as f64 * 2.0 * self.kv_width as f64 * ACT_BYTES * prompt as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Resident KV bytes after `generated` output tokens exist. For
+    /// decoder-style generation the self-attention cache also holds the
+    /// prompt; for encoder-decoder the prompt lives in the (fixed)
+    /// cross-attention cache instead.
+    pub fn kv_bytes(&self, prompt: usize, generated: usize) -> f64 {
+        let base = if self.cross { 0 } else { prompt };
+        (base + generated) as f64 * self.kv_bytes_per_token() + self.cross_kv_bytes(prompt)
+    }
+
+    /// The reservation admission charges: the cache footprint at EOS.
+    pub fn peak_kv_bytes(&self, prompt: usize, out_tokens: usize) -> f64 {
+        self.kv_bytes(prompt, out_tokens.max(1))
+    }
+
+    /// Self-attention context length of the step that produces token
+    /// `generated + 1` (the new token attends over everything cached
+    /// plus itself).
+    pub fn self_context(&self, prompt: usize, generated: usize) -> usize {
+        (if self.cross { 0 } else { prompt }) + generated + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::kernels::block_flops;
+
+    #[test]
+    fn decoder_style_uses_all_layers_enc_dec_splits() {
+        let bert = DecodeWorkload::build(ModelId::BertBase, ArchVariant::DecoderOnly);
+        assert_eq!(bert.step_blocks, 12);
+        assert!(!bert.cross);
+        let bart = DecodeWorkload::build(ModelId::BartBase, ArchVariant::EncoderDecoder);
+        assert_eq!(bart.step_blocks, 6);
+        assert!(bart.cross);
+        // Cross-attention adds projection work per step.
+        let plain = DecodeWorkload::build(ModelId::BertBase, ArchVariant::DecoderOnly);
+        assert!(bart.gemv_flops_tok > 0.0 && plain.gemv_flops_tok > 0.0);
+    }
+
+    #[test]
+    fn gemv_costs_match_workload_closed_forms_at_seq_1() {
+        // The decode constants must be exactly the kernel_cost closed
+        // forms Workload::build uses, evaluated at one query position.
+        let dw = DecodeWorkload::build(ModelId::BertLarge, ArchVariant::DecoderOnly);
+        let dims = ModelId::BertLarge.dims();
+        let d = dims.d_model as f64;
+        // QKV (d² + 2·d·d MACs) + proj (d² MACs), 2 FLOPs per MAC.
+        assert!((dw.gemv_flops_tok - (2.0 * 3.0 * d * d + 2.0 * d * d)).abs() < 1.0);
+        assert!((dw.gemv_weight_bytes - 4.0 * d * d * ACT_BYTES).abs() < 1.0);
+        // FF per token is the seq-1 slice of the block's FF cost.
+        let ff_expected = 2.0 * d * dims.d_ff as f64 * 2.0
+            + 8.0 * dims.d_ff as f64
+            + 8.0 * d;
+        assert!((dw.ff_flops_tok - ff_expected).abs() < 1.0);
+        // Everything is a small slice of one full block at moderate seq.
+        let full = block_flops(&dims, ArchVariant::DecoderOnly, 512);
+        assert!(dw.gemv_flops_tok + dw.ff_flops_tok + dw.vec_flops_tok < full);
+    }
+
+    #[test]
+    fn kv_cache_grows_linearly_per_token() {
+        let dw = DecodeWorkload::build(ModelId::BertBase, ArchVariant::DecoderOnly);
+        let a = dw.kv_bytes(128, 10);
+        let b = dw.kv_bytes(128, 11);
+        assert!((b - a - dw.kv_bytes_per_token()).abs() < 1e-9);
+        // bert-base: 12 blocks × 2 × 768 × 2 B = 73 728 B per token.
+        assert!((dw.kv_bytes_per_token() - 73_728.0).abs() < 1e-9);
+        // Peak at EOS covers prompt + all output tokens.
+        let peak = dw.peak_kv_bytes(128, 32);
+        assert!((peak - 160.0 * 73_728.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mqa_shrinks_kv_and_enc_dec_keeps_prompt_in_cross_cache() {
+        let std = DecodeWorkload::build(ModelId::BertLarge, ArchVariant::DecoderOnly);
+        let mqa = DecodeWorkload::build(ModelId::BertLarge, ArchVariant::Mqa);
+        assert!(mqa.kv_bytes_per_token() < std.kv_bytes_per_token() / 8.0);
+        assert!(mqa.attn_bytes_per_ctx < std.attn_bytes_per_ctx);
+
+        let bart = DecodeWorkload::build(ModelId::BartBase, ArchVariant::EncoderDecoder);
+        // Prompt tokens live in the fixed cross cache, not self-attention.
+        assert_eq!(bart.self_context(128, 4), 5);
+        assert!(bart.cross_kv_bytes(128) > 0.0);
+        // Self context for decoder-style includes the prompt.
+        assert_eq!(std.self_context(128, 4), 133);
+        assert_eq!(std.cross_kv_bytes(128), 0.0);
+    }
+
+    #[test]
+    fn costs_positive_for_every_model_variant() {
+        for m in ModelId::ALL {
+            for v in ArchVariant::ALL {
+                let dw = DecodeWorkload::build(m, v);
+                assert!(dw.step_blocks > 0, "{m} {v}");
+                assert!(dw.gemv_flops_tok > 0.0 && dw.gemv_weight_bytes > 0.0);
+                assert!(dw.attn_flops_per_ctx > 0.0 && dw.attn_bytes_per_ctx > 0.0);
+                assert!(dw.ff_flops_tok > 0.0 && dw.vec_flops_tok > 0.0);
+                assert!(dw.kv_bytes_per_token() > 0.0);
+                assert!(dw.peak_kv_bytes(64, 16) > dw.kv_bytes(64, 1) - 1e-9);
+            }
+        }
+    }
+}

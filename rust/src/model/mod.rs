@@ -7,10 +7,12 @@
 //! into the per-layer kernel DAG that the timing model, traffic generator
 //! and coordinator all consume.
 
+pub mod decode;
 pub mod kernels;
 pub mod workload;
 pub mod zoo;
 
+pub use decode::DecodeWorkload;
 pub use kernels::{Kernel, KernelCost};
 pub use workload::{KernelInstance, Workload};
 pub use zoo::{ArchVariant, ModelDims, ModelId};

@@ -201,6 +201,49 @@ mod tests {
     }
 
     #[test]
+    fn parse_covers_every_spelled_name() {
+        // Exhaustive over the literal spellings (a new variant that
+        // forgets its parse arm fails here, not in a CLI run).
+        let models = [
+            ("bert-tiny", ModelId::BertTiny),
+            ("bert-base", ModelId::BertBase),
+            ("bert-large", ModelId::BertLarge),
+            ("bart-base", ModelId::BartBase),
+            ("bart-large", ModelId::BartLarge),
+        ];
+        assert_eq!(models.len(), ModelId::ALL.len());
+        for (s, m) in models {
+            assert_eq!(ModelId::parse(s), Some(m), "{s}");
+            assert_eq!(m.to_string(), s, "Display must round-trip");
+        }
+        let variants = [
+            ("encoder-decoder", ArchVariant::EncoderDecoder),
+            ("encoder-only", ArchVariant::EncoderOnly),
+            ("decoder-only", ArchVariant::DecoderOnly),
+            ("mqa", ArchVariant::Mqa),
+            ("parallel-attention", ArchVariant::ParallelAttention),
+        ];
+        assert_eq!(variants.len(), ArchVariant::ALL.len());
+        for (s, v) in variants {
+            assert_eq!(ArchVariant::parse(s), Some(v), "{s}");
+            assert_eq!(v.name(), s);
+            assert_eq!(v.to_string(), s, "Display must round-trip");
+        }
+        // The documented short alias.
+        assert_eq!(ArchVariant::parse("parallel"), Some(ArchVariant::ParallelAttention));
+    }
+
+    #[test]
+    fn parse_rejects_near_misses() {
+        for bad in ["", "bert", "BERT-BASE", "bert-base ", "bart", "bert-huge"] {
+            assert_eq!(ModelId::parse(bad), None, "{bad:?}");
+        }
+        for bad in ["", "encoder", "decoder", "Encoder-Only", "mha", "parallel-attn"] {
+            assert_eq!(ArchVariant::parse(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
     fn bart_defaults_to_encoder_decoder() {
         assert_eq!(ModelId::BartBase.default_variant(), ArchVariant::EncoderDecoder);
         assert_eq!(ModelId::BertBase.default_variant(), ArchVariant::EncoderOnly);

@@ -48,6 +48,14 @@ pub fn l2_stream_bw(cfg: &Config) -> f64 {
     cfg.mc_count as f64 * specs::MC_L2_BW_BPS
 }
 
+/// Vertical TSV stream bandwidth into the ReRAM tier (B/s): one flit
+/// per pillar per NoC cycle across the 3×3 pillar grid. Shared by the
+/// prefill FF path below and the decode-step engine so the two cost
+/// models can never diverge.
+pub fn tsv_stream_bw(cfg: &Config) -> f64 {
+    9.0 * cfg.flit_bits as f64 / 8.0 * cfg.noc_clock_hz
+}
+
 /// Latency of one kernel instance on HeTraX.
 pub fn hetrax_kernel_time_s(
     cfg: &Config,
@@ -85,8 +93,7 @@ pub fn hetrax_kernel_time_s(
             // Pipelined over the mapped crossbars; activations stream over
             // the TSVs (vertical bandwidth: one flit per pillar per cycle).
             let t_compute = cost.flops / ff_map.throughput_ops(cfg);
-            let tsv_bw = 9.0 * cfg.flit_bits as f64 / 8.0 * cfg.noc_clock_hz;
-            let t_mem = (cost.act_in_bytes + cost.act_out_bytes) / tsv_bw;
+            let t_mem = (cost.act_in_bytes + cost.act_out_bytes) / tsv_stream_bw(cfg);
             t_compute.max(t_mem)
         }
     }

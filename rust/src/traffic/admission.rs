@@ -85,6 +85,19 @@ pub struct BatchCost {
     pub active_frac: f64,
 }
 
+impl BatchCost {
+    pub fn zero() -> BatchCost {
+        BatchCost { sm_s: 0.0, ff_s: 0.0, active_frac: 0.0 }
+    }
+
+    /// Fold another cost in (background accumulation across a window).
+    pub fn add(&mut self, other: &BatchCost) {
+        self.sm_s += other.sm_s;
+        self.ff_s += other.ff_s;
+        self.active_frac = self.active_frac.max(other.active_frac);
+    }
+}
+
 /// The controller. Owns the thermal model and the placement the power
 /// rasterizes onto (PTN-style stack by default, matching `hetrax fig6b`).
 #[derive(Debug, Clone)]
@@ -155,10 +168,21 @@ impl AdmissionController {
         self.predict_reram_c(0.0, 0.0, 0.0)
     }
 
-    fn prefix_cost(costs: &[BatchCost], n: usize) -> (f64, f64, f64) {
-        let mut sm = 0.0;
-        let mut ff = 0.0;
-        let mut frac = 0.0f64;
+    /// Record a window's committed (un-throttleable) load into the peak
+    /// telemetry without an admission decision. The decode scheduler
+    /// closes every control window with this, so generation-heavy
+    /// stretches — many decode steps, no prefill admissions — still
+    /// observe the heat they produce.
+    pub fn observe(&mut self, cost: &BatchCost) {
+        let report = self.predict(cost.sm_s, cost.ff_s, cost.active_frac);
+        self.peak_c = self.peak_c.max(report.peak_c);
+        self.reram_peak_c = self.reram_peak_c.max(report.tier_peak_c[self.reram_tier]);
+    }
+
+    fn prefix_cost(costs: &[BatchCost], n: usize, background: &BatchCost) -> (f64, f64, f64) {
+        let mut sm = background.sm_s;
+        let mut ff = background.ff_s;
+        let mut frac = background.active_frac;
         for c in &costs[..n] {
             sm += c.sm_s;
             ff += c.ff_s;
@@ -178,10 +202,28 @@ impl AdmissionController {
         batches: Vec<Batch>,
         costs: &[BatchCost],
     ) -> (Vec<Batch>, Vec<Batch>) {
+        self.admit_with_background(t_s, batches, costs, BatchCost::zero())
+    }
+
+    /// [`AdmissionController::admit`] with an un-throttleable background
+    /// load added to every prediction — the decode subsystem's running
+    /// continuous batch plus whatever was already admitted this window.
+    /// The prefix bisection stays exact (temperature is affine in the
+    /// busy fractions, so a constant offset preserves monotonicity).
+    /// When the background alone exceeds the ceiling nothing is
+    /// admitted; the background itself cannot be deferred (it is work
+    /// already committed), so the recorded peak tracks it regardless.
+    pub fn admit_with_background(
+        &mut self,
+        t_s: f64,
+        batches: Vec<Batch>,
+        costs: &[BatchCost],
+        background: BatchCost,
+    ) -> (Vec<Batch>, Vec<Batch>) {
         assert_eq!(batches.len(), costs.len());
         self.windows += 1;
         let n = batches.len();
-        let (sm_all, ff_all, frac_all) = Self::prefix_cost(costs, n);
+        let (sm_all, ff_all, frac_all) = Self::prefix_cost(costs, n, &background);
         let offered = self.predict(sm_all, ff_all, frac_all);
         let offered_reram = offered.tier_peak_c[self.reram_tier];
 
@@ -195,7 +237,7 @@ impl AdmissionController {
         // Largest admissible prefix by bisection (prediction is monotone
         // in the prefix).
         let admissible = |ctl: &Self, p: usize| -> bool {
-            let (sm, ff, frac) = Self::prefix_cost(costs, p);
+            let (sm, ff, frac) = Self::prefix_cost(costs, p, &background);
             ctl.predict_reram_c(sm, ff, frac) <= ctl.throttle.ceiling_c
         };
         let keep = if offered_reram <= self.throttle.ceiling_c {
@@ -225,7 +267,7 @@ impl AdmissionController {
         let (admitted_report, admitted_reram) = if keep == n {
             (offered, offered_reram)
         } else {
-            let (sm, ff, frac) = Self::prefix_cost(costs, keep);
+            let (sm, ff, frac) = Self::prefix_cost(costs, keep, &background);
             let report = self.predict(sm, ff, frac);
             let reram = report.tier_peak_c[self.reram_tier];
             (report, reram)
@@ -324,6 +366,47 @@ mod tests {
         assert!(ctl.events[0].offered_reram_c > t.ceiling_c);
         assert!(ctl.reram_peak_c <= t.ceiling_c + 1e-9);
         assert!(ctl.batch_cap < 8, "cap should halve");
+    }
+
+    #[test]
+    fn background_load_tightens_admission() {
+        // A prefill batch that is admissible on an idle stack must be
+        // deferred once a hot decode background occupies the tiers: the
+        // background raises every prefix prediction by the same offset.
+        let cfg = Config::default();
+        let probe = AdmissionController::new(&cfg, ThrottleConfig::default(), 8);
+        let idle = probe.idle_reram_c();
+        // Costs stay below the per-window busy cap so the affine region
+        // (where the background offset is visible) is exercised.
+        let one = BatchCost { sm_s: 0.02, ff_s: 0.008, active_frac: 0.5 };
+        let with_one = probe.predict_reram_c(one.sm_s, one.ff_s, one.active_frac);
+        let bg = BatchCost { sm_s: 0.02, ff_s: 0.008, active_frac: 0.5 };
+        let with_bg =
+            probe.predict_reram_c(bg.sm_s + one.sm_s, bg.ff_s + one.ff_s, 0.5);
+        assert!(idle < with_one && with_one < with_bg);
+
+        // Ceiling between the batch-alone and batch-plus-background peaks.
+        let mut t = ThrottleConfig::default();
+        t.ceiling_c = with_one + 0.25 * (with_bg - with_one);
+        let mut ctl = AdmissionController::new(&cfg, t, 8);
+        let (adm, def) =
+            ctl.admit_with_background(0.0, vec![batch_of(8, 0.0)], &[one], BatchCost::zero());
+        assert_eq!(adm.len(), 1, "admissible without background");
+        assert!(def.is_empty());
+
+        let mut ctl2 = AdmissionController::new(&cfg, t, 8);
+        let (adm, def) =
+            ctl2.admit_with_background(0.0, vec![batch_of(8, 0.0)], &[one], bg);
+        assert!(adm.is_empty(), "background pushes the same batch over");
+        assert_eq!(def.len(), 1);
+        // The committed background is still observed in the peak record.
+        assert!(ctl2.reram_peak_c > idle);
+
+        // BatchCost::add folds busy seconds and maxes the active frac.
+        let mut acc = BatchCost::zero();
+        acc.add(&BatchCost { sm_s: 1.0, ff_s: 0.5, active_frac: 0.2 });
+        acc.add(&BatchCost { sm_s: 0.5, ff_s: 0.25, active_frac: 0.4 });
+        assert_eq!((acc.sm_s, acc.ff_s, acc.active_frac), (1.5, 0.75, 0.4));
     }
 
     #[test]

@@ -18,6 +18,81 @@ pub struct ReplayEvent {
     pub model: ModelId,
     pub variant: ArchVariant,
     pub seq: usize,
+    /// Output tokens to generate (0 = not recorded; the mix's output
+    /// distribution, when set, fills it in at generation time).
+    pub out_tokens: usize,
+}
+
+/// Seeded output-length distribution for autoregressive requests. All
+/// sampling draws from the generator's single `Rng` stream, so a seed
+/// fully determines every request's output length. Samples are ≥ 1
+/// (every generation emits at least the first token).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OutputLenDist {
+    /// Every request generates exactly `tokens`.
+    Fixed { tokens: usize },
+    /// Geometric with the given mean (memoryless EOS per token — the
+    /// classic analytic model of chat-style generation).
+    Geometric { mean: f64 },
+    /// Log-normal discretized to ≥ 1 tokens: `median · exp(sigma · N(0,1))`
+    /// rounded — the heavy-tailed shape production generation traces show.
+    LogNormal { median: f64, sigma: f64 },
+}
+
+impl OutputLenDist {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            OutputLenDist::Fixed { tokens } => tokens.max(1),
+            OutputLenDist::Geometric { mean } => {
+                if mean <= 1.0 {
+                    return 1;
+                }
+                // P(len = k) = p(1-p)^(k-1), mean 1/p.
+                let p = 1.0 / mean;
+                let u = rng.f64();
+                1 + ((1.0 - u).ln() / (1.0 - p).ln()).floor() as usize
+            }
+            OutputLenDist::LogNormal { median, sigma } => {
+                let x = median.max(1.0) * (sigma * rng.gaussian()).exp();
+                (x.round() as usize).max(1)
+            }
+        }
+    }
+
+    /// Stable one-line description (goes into `BENCH_decode.json`).
+    pub fn describe(&self) -> String {
+        match *self {
+            OutputLenDist::Fixed { tokens } => format!("fixed({tokens})"),
+            OutputLenDist::Geometric { mean } => format!("geometric(mean {mean})"),
+            OutputLenDist::LogNormal { median, sigma } => {
+                format!("lognormal(median {median}, sigma {sigma})")
+            }
+        }
+    }
+
+    /// Parse a CLI spec: `fixed:N`, `geometric:MEAN` (alias `geom`), or
+    /// `lognormal:MEDIAN:SIGMA` (alias `lognorm`).
+    pub fn parse(s: &str) -> Result<OutputLenDist, String> {
+        let mut parts = s.split(':');
+        let kind = parts.next().unwrap_or("");
+        let rest: Vec<&str> = parts.collect();
+        let num = |v: &str| -> Result<f64, String> {
+            v.parse::<f64>().map_err(|_| format!("bad number {v:?} in {s:?}"))
+        };
+        match (kind, rest.as_slice()) {
+            ("fixed", [n]) => Ok(OutputLenDist::Fixed {
+                tokens: num(n)?.max(1.0) as usize,
+            }),
+            ("geometric" | "geom", [m]) => Ok(OutputLenDist::Geometric { mean: num(m)? }),
+            ("lognormal" | "lognorm", [med, sig]) => Ok(OutputLenDist::LogNormal {
+                median: num(med)?,
+                sigma: num(sig)?,
+            }),
+            _ => Err(format!(
+                "bad output-length spec {s:?} (fixed:N | geometric:MEAN | lognormal:MEDIAN:SIGMA)"
+            )),
+        }
+    }
 }
 
 /// The arrival process. Rates are requests/second of *simulated* time.
@@ -96,19 +171,25 @@ impl ArrivalPattern {
                 .and_then(Json::as_usize)
                 .filter(|&s| s > 0)
                 .ok_or_else(|| format!("event {i}: bad seq"))?;
-            events.push(ReplayEvent { t_s, model, variant, seq });
+            let out_tokens = e.get("out_tokens").and_then(Json::as_usize).unwrap_or(0);
+            events.push(ReplayEvent { t_s, model, variant, seq, out_tokens });
         }
         events.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).unwrap());
         Ok(ArrivalPattern::Replay { events })
     }
 }
 
-/// Weighted mix over models and sequence lengths. Weights need not sum
-/// to 1 — they are normalized at sampling time.
+/// Weighted mix over models and sequence lengths, plus an optional
+/// output-length distribution for autoregressive traffic. Weights need
+/// not sum to 1 — they are normalized at sampling time.
 #[derive(Debug, Clone)]
 pub struct RequestMix {
     pub models: Vec<(ModelId, f64)>,
     pub seqs: Vec<(usize, f64)>,
+    /// When set, every generated request gets a sampled `out_tokens`
+    /// (one extra rng draw per arrival); when `None` the stream is
+    /// prefill-only and draw order is unchanged.
+    pub output: Option<OutputLenDist>,
 }
 
 impl RequestMix {
@@ -119,7 +200,14 @@ impl RequestMix {
         RequestMix {
             models: vec![(model, 1.0)],
             seqs: vec![(64, 0.2), (128, 0.35), (256, 0.3), (512, 0.15)],
+            output: None,
         }
+    }
+
+    /// Builder: attach an output-length distribution (generation traffic).
+    pub fn with_output(mut self, dist: OutputLenDist) -> RequestMix {
+        self.output = Some(dist);
+        self
     }
 
     /// Uniform mix over several models, default sequence mix.
@@ -165,6 +253,9 @@ fn push_sample(requests: &mut Vec<Request>, rng: &mut Rng, mix: &RequestMix, t: 
     let (model, variant, seq) = mix.sample(rng);
     let mut r = Request::synthetic(0, model, seq, t);
     r.variant = variant;
+    if let Some(dist) = &mix.output {
+        r.out_tokens = dist.sample(rng);
+    }
     requests.push(r);
 }
 
@@ -244,6 +335,13 @@ impl TrafficGen {
                     }
                     let mut r = Request::synthetic(0, e.model, e.seq, e.t_s);
                     r.variant = e.variant;
+                    r.out_tokens = if e.out_tokens > 0 {
+                        e.out_tokens
+                    } else if let Some(dist) = &self.mix.output {
+                        dist.sample(&mut rng)
+                    } else {
+                        0
+                    };
                     requests.push(r);
                 }
             }
@@ -361,6 +459,108 @@ mod tests {
         assert_eq!(reqs[1].model, ModelId::BertTiny);
         assert!(ArrivalPattern::replay_from_json("[{\"t_s\": 1}]").is_err());
         assert!(ArrivalPattern::replay_from_json("7").is_err());
+    }
+
+    #[test]
+    fn output_lengths_seeded_and_deterministic() {
+        let mix = RequestMix::single(ModelId::BertBase)
+            .with_output(OutputLenDist::Geometric { mean: 24.0 });
+        let g = TrafficGen {
+            pattern: ArrivalPattern::Poisson { rps: 400.0 },
+            mix,
+            seed: 13,
+        };
+        let a = g.generate(1.0);
+        let b = g.generate(1.0);
+        assert!(!a.is_empty());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.out_tokens, y.out_tokens);
+            assert!(x.out_tokens >= 1, "generation requests emit ≥ 1 token");
+        }
+        // Different seed produces a different length sequence.
+        let mut g2 = g.clone();
+        g2.seed = 14;
+        let c = g2.generate(1.0);
+        let la: Vec<usize> = a.iter().map(|r| r.out_tokens).collect();
+        let lc: Vec<usize> = c.iter().map(|r| r.out_tokens).collect();
+        assert_ne!(la, lc);
+        // No output dist → out_tokens stays 0 (prefill-only stream).
+        let plain = gen(ArrivalPattern::Poisson { rps: 200.0 }, 13).generate(0.5);
+        assert!(plain.iter().all(|r| r.out_tokens == 0));
+    }
+
+    #[test]
+    fn output_distributions_have_expected_shape() {
+        let mut rng = Rng::new(99);
+        // Fixed: constant, floored at 1.
+        let f = OutputLenDist::Fixed { tokens: 17 };
+        assert!((0..100).all(|_| f.sample(&mut rng) == 17));
+        assert_eq!(OutputLenDist::Fixed { tokens: 0 }.sample(&mut rng), 1);
+        // Geometric: empirical mean near nominal, support ≥ 1.
+        let geo = OutputLenDist::Geometric { mean: 32.0 };
+        let n = 20_000;
+        let mut sum = 0usize;
+        let mut min = usize::MAX;
+        for _ in 0..n {
+            let k = geo.sample(&mut rng);
+            sum += k;
+            min = min.min(k);
+        }
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 32.0).abs() < 1.5, "geometric mean {mean}");
+        assert_eq!(min, 1, "geometric mass at 1");
+        assert_eq!(OutputLenDist::Geometric { mean: 0.5 }.sample(&mut rng), 1);
+        // LogNormal: empirical median near nominal, all ≥ 1.
+        let ln = OutputLenDist::LogNormal { median: 24.0, sigma: 0.8 };
+        let mut xs: Vec<usize> = (0..n).map(|_| ln.sample(&mut rng)).collect();
+        xs.sort_unstable();
+        assert!(xs[0] >= 1);
+        let med = xs[n / 2] as f64;
+        assert!((med - 24.0).abs() < 3.0, "lognormal median {med}");
+        // Heavy tail: p99 well above the median.
+        assert!(xs[n * 99 / 100] as f64 > 2.0 * med);
+    }
+
+    #[test]
+    fn output_dist_parse_roundtrip_and_rejects() {
+        assert_eq!(
+            OutputLenDist::parse("fixed:8"),
+            Ok(OutputLenDist::Fixed { tokens: 8 })
+        );
+        assert_eq!(
+            OutputLenDist::parse("geometric:32"),
+            Ok(OutputLenDist::Geometric { mean: 32.0 })
+        );
+        assert_eq!(
+            OutputLenDist::parse("geom:4.5"),
+            Ok(OutputLenDist::Geometric { mean: 4.5 })
+        );
+        assert_eq!(
+            OutputLenDist::parse("lognormal:24:0.8"),
+            Ok(OutputLenDist::LogNormal { median: 24.0, sigma: 0.8 })
+        );
+        assert!(OutputLenDist::parse("uniform:3").is_err());
+        assert!(OutputLenDist::parse("fixed").is_err());
+        assert!(OutputLenDist::parse("geometric:abc").is_err());
+        assert_eq!(
+            OutputLenDist::Fixed { tokens: 8 }.describe(),
+            "fixed(8)"
+        );
+    }
+
+    #[test]
+    fn replay_out_tokens_field_wins_over_mix() {
+        let text = r#"[
+            {"t_s": 0.1, "model": "bert-tiny", "seq": 64, "out_tokens": 7},
+            {"t_s": 0.2, "model": "bert-tiny", "seq": 64}
+        ]"#;
+        let p = ArrivalPattern::replay_from_json(text).unwrap();
+        let mix = RequestMix::single(ModelId::BertTiny)
+            .with_output(OutputLenDist::Fixed { tokens: 3 });
+        let g = TrafficGen { pattern: p, mix, seed: 0 };
+        let reqs = g.generate(1.0);
+        assert_eq!(reqs[0].out_tokens, 7, "recorded length wins");
+        assert_eq!(reqs[1].out_tokens, 3, "missing length sampled from mix");
     }
 
     #[test]

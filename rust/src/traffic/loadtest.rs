@@ -58,14 +58,16 @@ impl LoadtestConfig {
     }
 }
 
-type PhaseKey = (ModelId, ArchVariant, usize);
+/// Phase-table key: one distinct (model, variant, padded seq).
+pub(crate) type PhaseKey = (ModelId, ArchVariant, usize);
 
-/// Cached per-(model, variant, seq) service demand.
+/// Cached per-(model, variant, seq) service demand (shared with the
+/// decode subsystem, which prices prefill batches from the same table).
 #[derive(Debug, Clone, Copy)]
-struct PhaseInfo {
-    mha_s: f64,
-    ff_s: f64,
-    active_frac: f64,
+pub(crate) struct PhaseInfo {
+    pub(crate) mha_s: f64,
+    pub(crate) ff_s: f64,
+    pub(crate) active_frac: f64,
 }
 
 /// One stack's results: telemetry plus the admission controller's
@@ -225,7 +227,7 @@ impl LoadtestReport {
 /// Evaluate the phase table for every distinct (model, variant, seq) in
 /// the stream: dedupe in first-seen order, evaluate on the pool, fold
 /// serially (the DESIGN.md §Perf discipline).
-fn phase_table(
+pub(crate) fn phase_table(
     cfg: &Config,
     requests: &[Request],
     threads: usize,

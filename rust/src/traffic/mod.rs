@@ -37,8 +37,8 @@ pub mod loadtest;
 pub mod router;
 pub mod telemetry;
 
-pub use admission::{AdmissionController, ThrottleConfig, ThrottleEvent};
-pub use generator::{ArrivalPattern, ReplayEvent, RequestMix, TrafficGen};
+pub use admission::{AdmissionController, BatchCost, ThrottleConfig, ThrottleEvent};
+pub use generator::{ArrivalPattern, OutputLenDist, ReplayEvent, RequestMix, TrafficGen};
 pub use loadtest::{LoadtestConfig, LoadtestReport, StackOutcome};
 pub use router::{RoutePolicy, StackRouter};
 pub use telemetry::StackTelemetry;

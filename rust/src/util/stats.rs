@@ -461,6 +461,67 @@ mod tests {
     }
 
     #[test]
+    fn log_histogram_empty_percentile_sweep() {
+        // Every percentile of an empty histogram is 0 — callers
+        // serialize reports for empty runs without special-casing.
+        let h = LogHistogram::new();
+        for p in [0.0, 1.0, 25.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            assert_eq!(h.percentile(p), 0, "p{p}");
+        }
+        assert!(h.is_empty());
+        assert_eq!((h.count(), h.min(), h.max()), (0, 0, 0));
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn log_histogram_single_sample_is_every_percentile() {
+        // One sample: every percentile must return exactly that value
+        // (midpoint representatives clamp to the tracked min/max).
+        for v in [0u64, 1, 127, 128, 777, 1 << 20] {
+            let mut h = LogHistogram::new();
+            h.record(v);
+            for p in [0.0, 10.0, 50.0, 99.0, 99.9, 100.0] {
+                assert_eq!(h.percentile(p), v, "value {v} p{p}");
+            }
+            assert_eq!(h.min(), v);
+            assert_eq!(h.max(), v);
+            assert_eq!(h.mean(), v as f64);
+        }
+    }
+
+    #[test]
+    fn log_histogram_merge_then_percentile_matches_percentile_u64() {
+        // Record a stream across three shards, merge, and check the
+        // merged percentiles against the exact rank statistic on the
+        // raw samples — the multi-stack aggregation contract.
+        let mut rng = crate::util::rng::Rng::new(17);
+        let xs: Vec<u64> = (0..9_000).map(|_| rng.below(1 << 16) as u64 + 1).collect();
+        let mut shards = [LogHistogram::new(), LogHistogram::new(), LogHistogram::new()];
+        for (i, &x) in xs.iter().enumerate() {
+            shards[i % 3].record(x);
+        }
+        let mut merged = LogHistogram::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(merged.count(), xs.len() as u64);
+        for p in [1.0, 10.0, 50.0, 90.0, 99.0, 99.9] {
+            let exact = percentile_u64(&xs, p);
+            let got = merged.percentile(p) as f64;
+            assert!(
+                (got - exact).abs() <= exact * 0.02 + 2.0,
+                "p{p}: merged {got} vs exact {exact}"
+            );
+        }
+        // Merging an empty histogram is the identity.
+        let before: Vec<u64> = [5.0, 50.0, 95.0].iter().map(|&p| merged.percentile(p)).collect();
+        merged.merge(&LogHistogram::new());
+        let after: Vec<u64> = [5.0, 50.0, 95.0].iter().map(|&p| merged.percentile(p)).collect();
+        assert_eq!(before, after);
+        assert_eq!(merged.count(), xs.len() as u64);
+    }
+
+    #[test]
     fn log_histogram_merge_equals_combined_recording() {
         let mut rng = crate::util::rng::Rng::new(9);
         let xs: Vec<u64> = (0..5000).map(|_| rng.below(1 << 20) as u64).collect();
