@@ -1,0 +1,131 @@
+//! Chunked-prefill + KV-aware-routing smoke bench. Two seeded
+//! comparisons through the full decode subsystem, both on the canonical
+//! scenarios exported by `decode::decodetest` (the same ones the crate's
+//! tests assert, so bench and tests can never drift apart):
+//!
+//! 1. **Chunking** — the long-prompt-heavy bursty trace served unchunked
+//!    and with a 64-token prefill budget; asserts the tentpole
+//!    acceptance (p99 ITL strictly lower at equal offered load, tokens
+//!    within 5%) and the byte-identical contract across thread counts.
+//! 2. **Routing** — the skewed two-class replay mix over two stacks
+//!    under static `jsq` vs KV-occupancy-aware `kv-aware` routing.
+//!
+//! Emits `BENCH_chunked.json` (path overridable via `BENCH_CHUNKED_JSON`;
+//! schema: DESIGN.md §Bench-Schemas) for the serving-QoS trajectory
+//! across commits.
+
+use hetrax::config::Config;
+use hetrax::decode::{decodetest, DecodeReport};
+use hetrax::traffic::RoutePolicy;
+use hetrax::util::bench::Bencher;
+use hetrax::util::json::Json;
+use hetrax::util::pool;
+
+fn itl_p99_ms(r: &DecodeReport) -> f64 {
+    r.total.itl_us.percentile(99.0) as f64 / 1e3
+}
+
+fn summary(r: &DecodeReport) -> Json {
+    let mut j = Json::obj();
+    j.set("completed", r.total.completed)
+        .set("tokens", r.total.tokens_out)
+        .set("prefill_chunks", r.total.prefill_chunks)
+        .set("itl_p99_ms", itl_p99_ms(r))
+        .set("ttft_p99_ms", r.total.ttft_us.percentile(99.0) as f64 / 1e3)
+        .set("makespan_s", r.total.makespan_s);
+    j
+}
+
+fn main() {
+    let cfg = Config::default();
+    let auto = pool::resolve_threads(0);
+
+    let b = Bencher::quick();
+    let t_plain = b.time("decode run, unchunked (threads=1)", || {
+        decodetest::run(&cfg, &decodetest::chunked_itl_scenario(0, 1))
+    });
+    let t_chunked = b.time("decode run, 64-token chunks (threads=1)", || {
+        decodetest::run(&cfg, &decodetest::chunked_itl_scenario(64, 1))
+    });
+
+    // One report per config (runs are byte-identical by the determinism
+    // contract, so the timed runs above need no separate re-runs).
+    let dc = decodetest::chunked_itl_scenario(64, 1);
+    let chunked = decodetest::run(&cfg, &dc);
+    let plain = decodetest::run(&cfg, &decodetest::chunked_itl_scenario(0, 1));
+
+    // Determinism contract: identical JSON at any thread count, with
+    // chunking enabled.
+    let dc_par = decodetest::chunked_itl_scenario(64, auto);
+    let parallel = decodetest::run(&cfg, &dc_par);
+    assert_eq!(
+        chunked.to_json(&dc).pretty(),
+        parallel.to_json(&dc_par).pretty(),
+        "chunked output must not depend on threads"
+    );
+
+    // Tentpole acceptance: chunking strictly bounds p99 ITL at equal
+    // offered load, within 5% of the unchunked token volume.
+    assert!(chunked.total.prefill_chunks > 0, "the 512-token prompts must chunk");
+    assert!(
+        itl_p99_ms(&chunked) < itl_p99_ms(&plain),
+        "chunked p99 ITL {:.3} ms must beat unchunked {:.3} ms",
+        itl_p99_ms(&chunked),
+        itl_p99_ms(&plain)
+    );
+    let (a, b_tok) = (chunked.total.tokens_out as f64, plain.total.tokens_out as f64);
+    assert!(
+        (a - b_tok).abs() <= 0.05 * b_tok.max(1.0),
+        "chunked tokens {a} vs unchunked {b_tok} drifted past 5%"
+    );
+
+    // Routing comparison on the skewed mix.
+    let jsq = decodetest::run(
+        &cfg,
+        &decodetest::skewed_routing_scenario(RoutePolicy::JoinShortestQueue),
+    );
+    let aware =
+        decodetest::run(&cfg, &decodetest::skewed_routing_scenario(RoutePolicy::KvAware));
+    assert_eq!(jsq.total.completed, aware.total.completed, "both serve the mix");
+    assert!(
+        aware.total.ttft_us.percentile(99.0) < jsq.total.ttft_us.percentile(99.0),
+        "kv-aware p99 TTFT must beat jsq on the skewed mix"
+    );
+
+    println!(
+        "\n  unchunked: itl p99 {:.3} ms | chunked: itl p99 {:.3} ms ({} chunks)",
+        itl_p99_ms(&plain),
+        itl_p99_ms(&chunked),
+        chunked.total.prefill_chunks
+    );
+    println!(
+        "  routing ttft p99: jsq {:.2} ms vs kv-aware {:.2} ms",
+        jsq.total.ttft_us.percentile(99.0) as f64 / 1e3,
+        aware.total.ttft_us.percentile(99.0) as f64 / 1e3
+    );
+
+    let mut routing = Json::obj();
+    routing
+        .set("jsq", summary(&jsq))
+        .set("kv_aware", summary(&aware));
+    let mut doc = Json::obj();
+    doc.set("bench", "decode_chunked")
+        .set("chunk_tokens", dc.chunk_tokens)
+        .set("rps", dc.pattern.nominal_rps())
+        .set("duration_s", dc.duration_s)
+        .set("seed", dc.seed)
+        .set("unchunked", summary(&plain))
+        .set("chunked", summary(&chunked))
+        .set(
+            "itl_p99_improvement",
+            itl_p99_ms(&plain) / itl_p99_ms(&chunked).max(1e-9),
+        )
+        .set("routing", routing)
+        .set("run_median_s", t_plain.median_s())
+        .set("run_median_chunked_s", t_chunked.median_s())
+        .set("bench_threads", auto);
+    let out =
+        std::env::var("BENCH_CHUNKED_JSON").unwrap_or_else(|_| "BENCH_chunked.json".into());
+    std::fs::write(&out, doc.pretty()).expect("write bench json");
+    println!("wrote {out}");
+}

@@ -5,7 +5,8 @@
 //! contract across thread counts, and asserting the continuous-batching
 //! throughput win over one-request-at-a-time serving on the same seeded
 //! trace. Emits `BENCH_decode.json` (path overridable via
-//! `BENCH_DECODE_JSON`) for the CI decode trajectory.
+//! `BENCH_DECODE_JSON`; schema: DESIGN.md §Bench-Schemas) for the CI
+//! decode trajectory.
 use hetrax::config::Config;
 use hetrax::decode::{decodetest, DecodeConfig};
 use hetrax::model::ModelId;

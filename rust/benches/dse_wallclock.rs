@@ -2,7 +2,8 @@
 //! pre-parallel-engine path) vs the worker-pool fan-out, plus the seeded
 //! determinism contract: both must produce byte-identical Pareto
 //! archives. Emits `BENCH_dse.json` (path overridable via
-//! `BENCH_DSE_JSON`) for the CI perf trajectory.
+//! `BENCH_DSE_JSON`; schema: DESIGN.md §Bench-Schemas) for the CI perf
+//! trajectory.
 use hetrax::config::Config;
 use hetrax::model::{ArchVariant, ModelId, Workload};
 use hetrax::optim::{DseResult, Evaluator, MooStage, ObjectiveSet};

@@ -4,7 +4,8 @@
 //! Reports the fast-lane gain directly: "rebuild `NocSim` per run" is the
 //! pre-fast-lane sweep shape, "reused instance" is the `reset()` lane
 //! sweeps use now (DESIGN.md §Perf). Emits `BENCH_noc.json` (path
-//! overridable via `BENCH_NOC_JSON`) for the CI perf trajectory.
+//! overridable via `BENCH_NOC_JSON`; schema: DESIGN.md §Bench-Schemas)
+//! for the CI perf trajectory.
 use hetrax::arch::Placement;
 use hetrax::config::Config;
 use hetrax::noc::{traffic, NocSim, Topology};

@@ -2,8 +2,8 @@
 //! whole traffic subsystem (generate → route → admission-controlled
 //! serve), timing the end-to-end wall clock and asserting the
 //! byte-identical-output contract across thread counts. Emits
-//! `BENCH_serve.json` (path overridable via `BENCH_SERVE_JSON`) for the
-//! CI serve trajectory.
+//! `BENCH_serve.json` (path overridable via `BENCH_SERVE_JSON`; schema:
+//! DESIGN.md §Bench-Schemas) for the CI serve trajectory.
 use hetrax::config::Config;
 use hetrax::model::ModelId;
 use hetrax::traffic::loadtest::{self, LoadtestConfig};

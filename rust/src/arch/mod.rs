@@ -5,6 +5,9 @@
 //! and the set of planar NoC links (bounded by the 3D-mesh port budget).
 //! The ReRAM tier's internal layout is fixed offline (§4.2: unidirectional
 //! FF dataflow ⇒ core placement and inter-core links determined offline).
+//!
+//! Design record: DESIGN.md §Module-Index; `Placement::stable_hash` is
+//! the §Perf evaluation-memo key.
 
 pub mod cores;
 pub mod placement;

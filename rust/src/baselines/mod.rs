@@ -7,6 +7,8 @@
 //! inference; both offload softmax/LayerNorm to a host over an interposer,
 //! which stalls the pipeline; both run HBM compute-in-bank power densities
 //! that violate the 95 °C DRAM limit — §5.3 computes 8 W/mm² for HAIMA).
+//!
+//! Design record: DESIGN.md §Module-Index.
 
 pub mod haima;
 pub mod hbm_thermal;

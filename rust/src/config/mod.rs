@@ -15,6 +15,8 @@
 //! ```
 //!
 //! Unknown keys are an error (catches typos in experiment sweeps).
+//!
+//! Design record: DESIGN.md §Module-Index.
 
 pub mod specs;
 

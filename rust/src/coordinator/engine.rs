@@ -112,6 +112,12 @@ impl<'a> Engine<'a> {
     /// dataflow), and consecutive batches overlap the same way through
     /// the `sm_free`/`reram_free` horizons. Returns `None` for an empty
     /// batch.
+    ///
+    /// This is the single pricing path for every prefill-shaped unit of
+    /// work in the system: the loadtest's windowed batches, the decode
+    /// scheduler's whole-prompt prefills, and — at the chunk's length —
+    /// chunked prefill's per-chunk batches (which add their cross-chunk
+    /// attention surcharge on top; DESIGN.md §Decode).
     pub fn serve_batch(&self, state: &mut ServeState, batch: &Batch) -> Option<BatchOutcome> {
         if batch.requests.is_empty() {
             return None;

@@ -12,6 +12,11 @@
 //! activations through the PJRT executables (bert-tiny encoder blocks)
 //! while the timing model advances the simulated clock. Python is never
 //! involved at request time.
+//!
+//! Design record: DESIGN.md §Module-Index; the incremental
+//! `ServeState`/`serve_batch` horizons this module exposes are the cost
+//! path both §Serve (loadtest) and §Decode (prefills and prefill
+//! chunks) price serving through.
 
 pub mod batcher;
 pub mod engine;

@@ -16,9 +16,11 @@ use crate::decode::engine::{DecodeEngine, StepGroup};
 use crate::decode::scheduler::{self, DecodeConfig, DecodeStackOutcome};
 use crate::decode::telemetry::DecodeTelemetry;
 use crate::model::{ArchVariant, ModelId};
-use crate::traffic::generator::TrafficGen;
+use crate::traffic::generator::{
+    ArrivalPattern, OutputLenDist, ReplayEvent, RequestMix, TrafficGen,
+};
 use crate::traffic::loadtest;
-use crate::traffic::router::StackRouter;
+use crate::traffic::router::{RouteDemand, RoutePolicy, StackRouter};
 use crate::util::json::Json;
 use crate::util::pool;
 
@@ -87,6 +89,7 @@ impl DecodeReport {
         tokens
             .set("generated", t.tokens_out)
             .set("prefill_batches", t.prefill_batches)
+            .set("prefill_chunks", t.prefill_chunks)
             .set("decode_steps", t.decode_steps)
             .set("peak_running", t.peak_running);
 
@@ -154,6 +157,7 @@ impl DecodeReport {
             .set("seed", dc.seed)
             .set("max_running", dc.max_running)
             .set("max_prefill_batch", dc.max_prefill_batch)
+            .set("chunk_tokens", dc.chunk_tokens)
             .set(
                 "output_dist",
                 dc.mix
@@ -186,6 +190,69 @@ impl DecodeReport {
     }
 }
 
+/// Canonical chunked-vs-unchunked QoS scenario: long-prompt-heavy
+/// bursty generation traffic, so on-bursts queue prompts while earlier
+/// requests are mid-generation — the ITL-stall regime chunked prefill
+/// exists for. Shared by the decodetest tests and the `decode_chunked`
+/// bench so both always assert the same traffic. `chunk_tokens = 0` is
+/// the unchunked baseline.
+pub fn chunked_itl_scenario(chunk_tokens: usize, threads: usize) -> DecodeConfig {
+    let mix = RequestMix::single(ModelId::BertBase)
+        .with_output(OutputLenDist::Fixed { tokens: 32 });
+    let pattern = ArrivalPattern::Bursty {
+        rps: 150.0,
+        burst: 6.0,
+        mean_on_s: 0.05,
+        mean_off_s: 0.15,
+    };
+    let mut dc = DecodeConfig::new(pattern, mix);
+    dc.mix.seqs = vec![(64, 0.3), (512, 0.7)];
+    dc.duration_s = 0.8;
+    dc.seed = 7;
+    dc.threads = threads;
+    dc.chunk_tokens = chunk_tokens;
+    dc.kv.capacity_bytes = 1024.0 * 1024.0 * 1024.0;
+    dc
+}
+
+/// Canonical skewed routing scenario (shared by the decodetest tests
+/// and the `decode_chunked` bench): one long generation parking KV and
+/// a running-batch slot on one stack, then a burst of cheap-service,
+/// KV-heavy prompts — bert-base KV is 73 728 B/token, so the long
+/// generation peaks at (64+600)·73 728 ≈ 46.7 MiB and each burst
+/// prompt at (512+4)·73 728 ≈ 36.3 MiB against a 100 MiB budget: a
+/// stack holds two bursts, or the long generation plus one burst,
+/// never three bursts. Service-blind JSQ piles the whole burst onto
+/// the "empty" stack and serializes it on that pool; kv-aware routing
+/// spreads it by headroom.
+pub fn skewed_routing_scenario(policy: RoutePolicy) -> DecodeConfig {
+    let mut events = vec![ReplayEvent {
+        t_s: 0.0,
+        model: ModelId::BertBase,
+        variant: ModelId::BertBase.default_variant(),
+        seq: 64,
+        out_tokens: 600,
+    }];
+    for i in 0..8u64 {
+        events.push(ReplayEvent {
+            t_s: 0.0001 + i as f64 * 0.00005,
+            model: ModelId::BertBase,
+            variant: ModelId::BertBase.default_variant(),
+            seq: 512,
+            out_tokens: 4,
+        });
+    }
+    let mix = RequestMix::single(ModelId::BertBase);
+    let mut dc = DecodeConfig::new(ArrivalPattern::Replay { events }, mix);
+    dc.duration_s = 1.0;
+    dc.stacks = 2;
+    dc.policy = policy;
+    dc.seed = 3;
+    dc.threads = 1;
+    dc.kv.capacity_bytes = 100.0 * 1024.0 * 1024.0;
+    dc
+}
+
 /// Run a full decode test: generate, route, serve every stack (fanned
 /// out over the worker pool), aggregate.
 pub fn run(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
@@ -196,7 +263,8 @@ pub fn run(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
     };
     let requests = generator.generate(dc.duration_s);
     let threads = pool::resolve_threads(dc.threads);
-    let phases = loadtest::phase_table(cfg, &requests, threads);
+    let phases =
+        loadtest::phase_table_with_chunks(cfg, &requests, dc.chunk_tokens, threads);
 
     let mut keys: Vec<(ModelId, ArchVariant)> = Vec::new();
     for r in &requests {
@@ -206,9 +274,13 @@ pub fn run(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
     }
     let engine = DecodeEngine::build(cfg, &keys);
 
-    // JSQ service estimate: prefill + the whole generation at the
-    // request's mid-flight context length.
-    let router = StackRouter::new(dc.stacks, dc.policy);
+    // Routing demand: service estimate (prefill + the whole generation
+    // at the request's mid-flight context length) for jsq, plus the
+    // peak KV reservation and decode-step count the kv-aware policy's
+    // residency model charges (DESIGN.md §Decode).
+    let router = StackRouter::new(dc.stacks, dc.policy)
+        .with_kv(dc.kv)
+        .with_slots(dc.max_running);
     let shards = router.route(&requests, |r: &Request| {
         let info = phases[&(r.model, r.variant, r.seq)];
         let dw = engine.workload(r.model, r.variant);
@@ -220,7 +292,12 @@ pub fn run(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
             sum_self_ctx: dw.self_context(r.seq, out / 2),
             sum_cross_ctx: if dw.cross { r.seq } else { 0 },
         };
-        info.mha_s + info.ff_s + engine.step_cost(&[g]).wall_s * out as f64
+        RouteDemand {
+            service_s: info.mha_s + info.ff_s
+                + engine.step_cost(&[g]).wall_s * out as f64,
+            kv_bytes: dw.peak_kv_bytes(r.seq, out),
+            decode_steps: out as u64,
+        }
     });
 
     let outcomes = pool::par_map_threads(&shards, threads, |shard| {
@@ -252,7 +329,7 @@ pub fn run(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::traffic::{ArrivalPattern, OutputLenDist, RequestMix};
+    use crate::traffic::{ArrivalPattern, OutputLenDist, RequestMix, RoutePolicy};
 
     fn base(rps: f64, duration_s: f64) -> DecodeConfig {
         let mix = RequestMix::single(ModelId::BertBase)
@@ -342,6 +419,147 @@ mod tests {
             "continuous serves at least as many requests ({} vs {})",
             rc.total.completed,
             rs.total.completed
+        );
+    }
+
+    #[test]
+    fn chunking_bounds_p99_itl_at_equal_offered_load() {
+        // The tentpole acceptance: same seed, same offered load, long
+        // prompts in the mix. Chunked prefill must strictly lower the
+        // p99 inter-token latency (no whole-prompt stall can land
+        // between a running request's tokens) while serving essentially
+        // the same token volume.
+        // The shared bursty scenario guarantees the failure mode:
+        // during an on-burst the queue is deep while earlier requests
+        // are mid-generation, so whole-prompt prefill batches (up to
+        // 4 × 512 padded tokens) repeatedly stall the running set —
+        // exactly the gaps p99 ITL captures.
+        let cfg = Config::default();
+        let plain = run(&cfg, &chunked_itl_scenario(0, 1));
+        let chunked = run(&cfg, &chunked_itl_scenario(64, 1));
+        assert!(plain.total.completed > 0 && chunked.total.completed > 0);
+        assert!(chunked.total.prefill_chunks > 0, "512-token prompts must chunk");
+        assert_eq!(plain.total.prefill_chunks, 0);
+        let (p99_plain, p99_chunked) = (
+            plain.total.itl_us.percentile(99.0),
+            chunked.total.itl_us.percentile(99.0),
+        );
+        assert!(
+            p99_chunked < p99_plain,
+            "chunked p99 ITL {p99_chunked} µs must beat unchunked {p99_plain} µs"
+        );
+        // Equal offered load, near-equal goodput: within 5% tokens.
+        let (a, b) = (chunked.total.tokens_out as f64, plain.total.tokens_out as f64);
+        assert!(
+            (a - b).abs() <= 0.05 * b.max(1.0),
+            "chunked tokens {a} vs unchunked {b} drifted past 5%"
+        );
+    }
+
+    #[test]
+    fn chunk_disabled_matches_unbounded_budget() {
+        // chunk_tokens = 0 must be the pre-chunking scheduler bit for
+        // bit — every chunking branch sits behind that gate. Pinning it
+        // from inside one tree: with one-request-at-a-time serving
+        // (never a running set for the chunk/decode alternation to
+        // reorder) an unreachably large budget walks every chunking
+        // gate without changing a single decision, so the runs must
+        // serialize identically (modulo the recorded knob).
+        let cfg = Config::default();
+        let mut dc = base(220.0, 0.8);
+        dc.stacks = 2;
+        dc.max_running = 1;
+        let mut unbounded = dc.clone();
+        unbounded.chunk_tokens = 1 << 20;
+        let mut a = run(&cfg, &dc).to_json(&dc);
+        let mut b = run(&cfg, &unbounded).to_json(&unbounded);
+        a.set("chunk_tokens", 0usize);
+        b.set("chunk_tokens", 0usize);
+        assert_eq!(a.pretty(), b.pretty(), "disabled chunking must not perturb");
+
+        // At full concurrency an unbounded budget still never chunks
+        // and resolves the same request set — only the prefill/decode
+        // interleave order (the alternation chunking adds) may differ.
+        let mut full = base(220.0, 0.8);
+        full.stacks = 2;
+        let mut full_unbounded = full.clone();
+        full_unbounded.chunk_tokens = 1 << 20;
+        let x = run(&cfg, &full);
+        let y = run(&cfg, &full_unbounded);
+        assert_eq!(y.total.prefill_chunks, 0, "nothing exceeds the budget");
+        assert_eq!(x.total.submitted, y.total.submitted);
+        assert_eq!(x.total.refused_kv, y.total.refused_kv);
+        assert_eq!(
+            x.total.completed + x.total.shed,
+            y.total.completed + y.total.shed,
+            "both resolve every request"
+        );
+    }
+
+    #[test]
+    fn chunked_run_is_deterministic_and_thermally_gated() {
+        let cfg = Config::default();
+        let mk = |threads: usize| {
+            let mut dc = base(150.0, 0.6);
+            dc.mix.seqs = vec![(512, 1.0)];
+            dc.mix.output = Some(OutputLenDist::Fixed { tokens: 12 });
+            dc.chunk_tokens = 128;
+            dc.stacks = 2;
+            dc.threads = threads;
+            dc
+        };
+        // Byte-identical across runs and thread counts, chunking on.
+        let dc = mk(1);
+        let a = run(&cfg, &dc).to_json(&dc).pretty();
+        let b = run(&cfg, &dc).to_json(&dc).pretty();
+        assert_eq!(a, b);
+        let dc4 = mk(4);
+        let c = run(&cfg, &dc4).to_json(&dc4).pretty();
+        assert_eq!(a, c, "thread count must not change chunked output");
+
+        // Chunks are gated through the thermal controller: a tight
+        // ceiling must still act on a chunked run, and serving survives.
+        let mut hot = mk(1);
+        hot.throttle.enabled = false;
+        let uncontrolled = run(&cfg, &hot);
+        let idle = crate::traffic::AdmissionController::new(
+            &cfg,
+            hot.throttle,
+            hot.max_prefill_batch,
+        )
+        .idle_reram_c();
+        let mut cool = mk(1);
+        cool.throttle.enabled = true;
+        cool.throttle.ceiling_c =
+            idle + 0.6 * (uncontrolled.reram_peak_c - idle).max(0.5);
+        let throttled = run(&cfg, &cool);
+        assert!(throttled.total.completed > 0, "throttled chunked run still serves");
+        assert!(
+            throttled.reram_peak_c <= uncontrolled.reram_peak_c + 1e-9,
+            "per-chunk gating must never run hotter"
+        );
+    }
+
+    #[test]
+    fn kv_aware_routing_beats_jsq_on_skewed_mix() {
+        // The shared skewed two-class scenario (see
+        // `skewed_routing_scenario`): service-blind JSQ piles the
+        // KV-heavy burst onto the "empty" stack and serializes it on
+        // that stack's pool; kv-aware routing spreads it by headroom.
+        let cfg = Config::default();
+        let jsq = run(&cfg, &skewed_routing_scenario(RoutePolicy::JoinShortestQueue));
+        let kv = run(&cfg, &skewed_routing_scenario(RoutePolicy::KvAware));
+        assert_eq!(jsq.total.submitted, 9);
+        assert_eq!(jsq.total.completed, 9, "nothing sheds at this scale");
+        assert_eq!(kv.total.completed, 9);
+        assert_eq!(kv.total.tokens_out, jsq.total.tokens_out);
+        // Both stacks carry burst work under kv-aware routing.
+        assert!(kv.stacks.iter().all(|s| s.telemetry.completed > 1));
+        assert!(
+            kv.total.ttft_us.percentile(99.0) < jsq.total.ttft_us.percentile(99.0),
+            "kv-aware p99 TTFT {} µs must beat jsq {} µs",
+            kv.total.ttft_us.percentile(99.0),
+            jsq.total.ttft_us.percentile(99.0)
         );
     }
 

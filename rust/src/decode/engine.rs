@@ -103,6 +103,50 @@ impl<'a> DecodeEngine<'a> {
         self.entry(model, variant).active_frac
     }
 
+    /// Attention surcharge for one prefill chunk: `new_tokens` fresh
+    /// query positions attending over `ctx` previously cached prompt
+    /// positions — the cross-chunk term the chunk-sized [`Workload`]
+    /// priced through `Engine::serve_batch` cannot see (its attention
+    /// covers only the chunk itself). GEMM regime: the cached K/V
+    /// panels stream from the residency tier once per chunk and are
+    /// shared by every query in it, so the byte term scales with `ctx`
+    /// alone while the FLOP term scales with `new_tokens × ctx`. Runs
+    /// on the SM tiers (`mha_s`); the ReRAM tier is untouched.
+    ///
+    /// [`Workload`]: crate::model::Workload
+    pub fn chunk_attn_cost(
+        &self,
+        model: ModelId,
+        variant: ArchVariant,
+        new_tokens: usize,
+        ctx: usize,
+    ) -> StepCost {
+        let mut total = StepCost::default();
+        if new_tokens == 0 || ctx == 0 {
+            return total;
+        }
+        let e = self.entry(model, variant);
+        let dw = &e.dw;
+        // The prompt flows through the encoder stack for cross-attention
+        // variants, through every block otherwise.
+        let blocks = if dw.cross {
+            (dw.dims.layers - dw.step_blocks) as f64
+        } else {
+            dw.step_blocks as f64
+        };
+        let flops = blocks * new_tokens as f64 * ctx as f64 * dw.attn_flops_per_ctx;
+        let bytes = blocks * ctx as f64 * dw.attn_bytes_per_ctx;
+        let t = (flops / timing::sm_tier_gemm_flops(self.cfg))
+            .max(bytes / timing::l2_stream_bw(self.cfg));
+        total.mha_s = t;
+        total.wall_s = t;
+        total.sm_flops = flops;
+        // Cached-context reads are DRAM-side KV traffic (step_cost's
+        // convention: `l2_bytes` carries only weight/activation streams).
+        total.kv_read_bytes = bytes;
+        total
+    }
+
     /// Cost of one decode step over the given groups. Groups are
     /// processed serially through the tiers; within a group the batch
     /// shares one weight stream.
@@ -212,6 +256,26 @@ mod tests {
             sc.mha_s,
             compute_only
         );
+    }
+
+    #[test]
+    fn chunk_attn_surcharge_scales_with_context_and_zeroes_out() {
+        let cfg = Config::default();
+        let e = engine(&cfg);
+        let (m, v) = (ModelId::BertBase, ArchVariant::EncoderOnly);
+        // No prior context (the first chunk) and no new tokens are free.
+        assert_eq!(e.chunk_attn_cost(m, v, 64, 0).wall_s, 0.0);
+        assert_eq!(e.chunk_attn_cost(m, v, 0, 64).wall_s, 0.0);
+        // Grows with cached context and with chunk size; touches only
+        // the SM tier and the KV read stream.
+        let a = e.chunk_attn_cost(m, v, 64, 64);
+        let b = e.chunk_attn_cost(m, v, 64, 448);
+        assert!(a.wall_s > 0.0 && b.wall_s > a.wall_s);
+        assert!(b.kv_read_bytes > a.kv_read_bytes);
+        assert!(e.chunk_attn_cost(m, v, 128, 64).sm_flops > a.sm_flops);
+        assert_eq!(a.ff_s, 0.0);
+        assert_eq!(a.ff_ops, 0.0);
+        assert_eq!(a.mha_s, a.wall_s);
     }
 
     #[test]

@@ -10,7 +10,16 @@
 //! an admitted generation can never be evicted mid-flight — refusal
 //! happens at the door, not after tokens have streamed. Actual
 //! occupancy (what telemetry reports) grows token by token and is
-//! released at retirement.
+//! released at retirement. Chunked prefill charges the same peak
+//! reservation at its *first admitted chunk* and grows occupancy chunk
+//! by chunk, so a mid-chunking prompt is as safe from eviction as a
+//! running generation.
+//!
+//! Two consumers share this model: the decode scheduler (the
+//! authoritative accountant) and the KV-occupancy-aware router
+//! ([`crate::traffic::StackRouter`]), which keeps one simulated
+//! [`KvPool`] per stack to route arrivals toward residency headroom.
+//! Accounting rules: DESIGN.md §Decode.
 
 /// Per-stack cache budget.
 #[derive(Debug, Clone, Copy)]
@@ -41,7 +50,9 @@ impl KvCacheConfig {
 }
 
 /// One stack's residency accountant: peak-byte reservations plus actual
-/// occupancy. Pure arithmetic on simulated quantities — deterministic.
+/// occupancy. Pure arithmetic on simulated quantities — deterministic,
+/// which is what lets the router clone the same model for its serial
+/// routing pass without perturbing the byte-identical contract.
 #[derive(Debug, Clone)]
 pub struct KvPool {
     pub cfg: KvCacheConfig,
@@ -72,6 +83,16 @@ impl KvPool {
         }
         self.reserved += peak;
         true
+    }
+
+    /// Charge a reservation even past the budget. The scheduler never
+    /// does this; it exists for the KV-aware router's *model* of a
+    /// stack, which commits queued work to a stack before the stack has
+    /// the headroom to start it — the pool then runs overcommitted
+    /// until the releases it is waiting on happen, and `would_fit`
+    /// correctly reports the stack as saturated in the meantime.
+    pub fn reserve_queued(&mut self, bytes: f64) {
+        self.reserved += bytes;
     }
 
     /// Account bytes actually written (prefill KV, then one append per
@@ -121,6 +142,20 @@ mod tests {
         assert!(p.try_reserve(60.0), "freed reservation is reusable");
         // Peak is a high-water mark, not current occupancy.
         assert_eq!(p.peak_used, 50.0);
+    }
+
+    #[test]
+    fn queued_reservation_overcommits_until_release() {
+        // The router-model path: committing queued work past the budget
+        // must mark the pool saturated until enough releases land.
+        let mut p = pool(100.0);
+        assert!(p.try_reserve(80.0));
+        p.reserve_queued(50.0);
+        assert_eq!(p.reserved_bytes(), 130.0);
+        assert!(!p.would_fit(10.0), "overcommitted pool is saturated");
+        p.release(80.0, 0.0);
+        assert_eq!(p.reserved_bytes(), 50.0);
+        assert!(p.try_reserve(50.0), "headroom returns once releases land");
     }
 
     #[test]

@@ -22,7 +22,9 @@
 //!   joins, step-level clock, EOS retirement from the generator's
 //!   seeded output lengths, thermal admission via the existing
 //!   [`crate::traffic::AdmissionController`] with the running batch
-//!   priced as un-throttleable background.
+//!   priced as un-throttleable background, and chunked prefill
+//!   (`chunk_tokens`) bounding every prefill action so long prompts
+//!   interleave with decode steps instead of stalling them.
 //! * [`telemetry`] — TTFT / TPOT / ITL / e2e histograms, KV occupancy,
 //!   lifecycle counters.
 //! * [`decodetest`] — orchestration (generate → route → serve stacks →

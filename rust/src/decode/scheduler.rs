@@ -20,6 +20,25 @@
 //! requests of a prefill batch still pipeline across the two tiers
 //! inside `serve_batch`.
 //!
+//! Chunked prefill (DESIGN.md §Decode): with `chunk_tokens > 0` every
+//! prefill action is bounded by the token budget — whole-prompt batches
+//! stop accepting members once their summed prompt tokens reach it, and
+//! a single prompt longer than the budget prefills alone, chunk by
+//! chunk. While generations are running, *every* prefill action (chunk
+//! or whole batch) strictly alternates with decode steps, so neither a
+//! long prompt nor a queue of short ones can stack stalls. Each chunk
+//! is priced through the same [`Engine::serve_batch`] path (at the
+//! chunk's length) plus the [`DecodeEngine::chunk_attn_cost`] surcharge
+//! for attending over the already-cached prompt prefix, and is gated
+//! per-chunk through
+//! [`AdmissionController::admit_with_background`]. The worst-case gap
+//! between the running set's tokens — the ITL spike the serving
+//! literature attributes to head-of-line prefills — is therefore
+//! bounded by one budget-sized prefill action plus one decode step.
+//! `chunk_tokens = 0` disables the lane and keeps the original
+//! whole-prompt path bit for bit (every chunking branch sits behind
+//! that gate).
+//!
 //! Determinism: the loop reads only simulated quantities — arrivals and
 //! sampled output lengths come pre-drawn from the seeded generator, the
 //! thermal controller is deterministic, and every fold is in a fixed
@@ -57,6 +76,13 @@ pub struct DecodeConfig {
     pub max_running: usize,
     /// Cap on requests prefilled together in one batch.
     pub max_prefill_batch: usize,
+    /// Chunked-prefill token budget: the most prompt tokens one prefill
+    /// action may process. 0 disables chunking (whole prompts prefill
+    /// in one batch — the pre-chunking behaviour, bit for bit). Prompts
+    /// longer than the budget prefill chunk by chunk, interleaved with
+    /// decode steps, bounding the worst-case inter-token stall of the
+    /// running generations.
+    pub chunk_tokens: usize,
     /// Thermal admission knobs (ceiling, control window, queue-wait
     /// bound) — shared with the loadtest controller.
     pub throttle: ThrottleConfig,
@@ -77,6 +103,7 @@ impl DecodeConfig {
             kv: KvCacheConfig::default(),
             max_running: 8,
             max_prefill_batch: 4,
+            chunk_tokens: 0,
             throttle: ThrottleConfig::default(),
             threads: 0,
         }
@@ -108,6 +135,19 @@ struct ActiveGen {
     /// Peak-footprint reservation held in the KV pool.
     peak_kv: f64,
     /// Bytes actually written so far.
+    used_kv: f64,
+}
+
+/// A prompt mid-chunking: its first chunks are cached, the rest still
+/// to prefill. At most one exists per stack (the chunk lane serves the
+/// head of the queue); the peak reservation is held from the first
+/// admitted chunk, so the prompt can never be evicted between chunks.
+#[derive(Debug, Clone)]
+struct PartialPrefill {
+    req: Request,
+    /// Prompt tokens already prefilled and cached.
+    done: usize,
+    peak_kv: f64,
     used_kv: f64,
 }
 
@@ -208,16 +248,30 @@ pub(crate) fn serve_stack(
     let max_running = dc.max_running.max(1);
 
     // Backstop against config pathologies: every iteration either emits
-    // tokens, launches a prefill, or advances the clock by ≥ one
-    // control window, so this cap is far above any legitimate run.
+    // tokens, serves a prefill chunk, launches a prefill, or advances
+    // the clock by ≥ one control window, so this cap is far above any
+    // legitimate run.
     let total_tokens: u64 = reqs.iter().map(|r| r.out_tokens.max(1) as u64).sum();
+    let total_chunks: u64 = if dc.chunk_tokens > 0 {
+        reqs.iter()
+            .map(|r| ((r.seq + dc.chunk_tokens - 1) / dc.chunk_tokens) as u64)
+            .sum()
+    } else {
+        0
+    };
     let max_ops = 4 * (total_tokens
+        + total_chunks
         + reqs.len() as u64
         + ((dc.duration_s + wait) / interval).ceil() as u64)
         + 1024;
 
     let mut waiting: VecDeque<Request> = VecDeque::new();
     let mut running: Vec<ActiveGen> = Vec::new();
+    // The chunk lane (chunk_tokens > 0 only): at most one prompt
+    // mid-chunking, and an alternation flag forcing one decode step
+    // between consecutive chunks while generations are running.
+    let mut partial: Option<PartialPrefill> = None;
+    let mut chunk_turn = true;
     let mut next = 0usize;
     let mut t = 0.0f64;
     // Thermal deferral gate: no prefill attempts before this time.
@@ -277,16 +331,155 @@ pub(crate) fn serve_stack(
         waiting.retain(|r| t - r.arrival_s <= wait);
         tel.shed += (before - waiting.len()) as u64;
 
-        // 3. Try to launch one prefill batch (continuous-batching join).
+        // 3. Advance prefill work. The chunk lane (chunking only) takes
+        //    precedence: it continues the in-flight partial prompt, or
+        //    promotes the head of the queue when its prompt exceeds the
+        //    budget. Otherwise one whole prefill batch may launch —
+        //    token-budget-capped when chunking is on, exactly the
+        //    pre-chunking path when it is off.
         let mut launched = false;
+        let chunking = dc.chunk_tokens > 0;
+        if chunking && t >= admit_block_until && (running.is_empty() || chunk_turn) {
+            // Pick the chunk job: the partial already holding its
+            // reservation, else the un-popped queue head (it stays
+            // ageable in `waiting` until its first chunk is admitted).
+            let job: Option<(Request, usize, f64, f64)> = match partial.take() {
+                Some(p) => Some((p.req, p.done, p.peak_kv, p.used_kv)),
+                None if running.len() < max_running
+                    && !waiting.is_empty()
+                    && waiting[0].seq > dc.chunk_tokens =>
+                {
+                    let r = &waiting[0];
+                    let peak = engine
+                        .workload(r.model, r.variant)
+                        .peak_kv_bytes(r.seq, r.out_tokens.max(1));
+                    if kv.would_fit(peak) {
+                        Some((r.clone(), 0, peak, 0.0))
+                    } else {
+                        None
+                    }
+                }
+                None => None,
+            };
+            if let Some((req, mut done, peak_kv, mut used_kv)) = job {
+                let c = dc.chunk_tokens.min(req.seq - done);
+                let mut chunk_req = req.clone();
+                chunk_req.seq = c;
+                let batch = Batch { requests: vec![chunk_req], ready_s: t };
+                let info = phases[&(req.model, req.variant, c)];
+                let surcharge =
+                    engine.chunk_attn_cost(req.model, req.variant, c, done);
+                let cost = BatchCost {
+                    sm_s: info.mha_s + surcharge.mha_s,
+                    ff_s: info.ff_s,
+                    active_frac: info.active_frac,
+                };
+                let mut background = decode_background(engine, &running, interval);
+                background.add(&window_cost);
+                let (admitted, _deferred) =
+                    ctl.admit_with_background(t, vec![batch], &[cost], background);
+                if let Some(batch) = admitted.into_iter().next() {
+                    if done == 0 {
+                        // First chunk: the prompt commits — leave the
+                        // queue, hold the peak reservation to EOS.
+                        waiting.pop_front();
+                        let ok = kv.try_reserve(peak_kv);
+                        debug_assert!(ok, "reservation was pre-checked");
+                    }
+                    let out = serve_engine
+                        .serve_batch(&mut state, &batch)
+                        .expect("chunk batch is non-empty");
+                    // The prior-prefix attention runs on the SM tiers
+                    // right after the chunk's own phases.
+                    let end = out.finish_s + surcharge.mha_s;
+                    state.sm_free = state.sm_free.max(end);
+                    t = end;
+                    window_cost.add(&cost);
+                    tel.prefill_chunks += 1;
+                    tel.sm_busy_s += out.sm_busy_s + surcharge.mha_s;
+                    tel.reram_busy_s += out.reram_busy_s;
+                    tel.energy_j += out.energy_j;
+                    dec_mha_busy += surcharge.mha_s;
+                    dec_sm_flops += surcharge.sm_flops;
+                    dec_kv_bytes += surcharge.kv_read_bytes;
+                    let dw = engine.workload(req.model, req.variant);
+                    let grow = dw.kv_bytes(done + c, 0) - dw.kv_bytes(done, 0);
+                    kv.grow(grow);
+                    used_kv += grow;
+                    done += c;
+                    if done >= req.seq {
+                        // Prompt complete: the prefill emits the first
+                        // token, exactly like the whole-batch path.
+                        let first = dw.kv_bytes(req.seq, 1) - dw.kv_bytes(req.seq, 0);
+                        kv.grow(first);
+                        used_kv += first;
+                        let out_tokens = req.out_tokens.max(1);
+                        tel.prefill_batches += 1;
+                        tel.tokens_out += 1;
+                        tel.ttft_us.record(us(t - req.arrival_s));
+                        let a = ActiveGen {
+                            model: req.model,
+                            variant: req.variant,
+                            prompt: req.seq,
+                            out_tokens,
+                            arrival_s: req.arrival_s,
+                            generated: 1,
+                            first_token_s: t,
+                            last_token_s: t,
+                            peak_kv,
+                            used_kv,
+                        };
+                        if a.generated >= a.out_tokens {
+                            retire(&mut tel, &mut kv, a);
+                        } else {
+                            running.push(a);
+                        }
+                        tel.peak_running = tel.peak_running.max(running.len() as u64);
+                    } else {
+                        partial = Some(PartialPrefill { req, done, peak_kv, used_kv });
+                    }
+                    tel.peak_kv_bytes = tel.peak_kv_bytes.max(kv.used_bytes());
+                    chunk_turn = false;
+                    launched = true;
+                } else {
+                    // Thermally deferred: hold the chunk lane for the
+                    // rest of this control window; an in-flight partial
+                    // keeps its reservation, an unpromoted head stays
+                    // queued (and ageable).
+                    admit_block_until = window_end;
+                    if done > 0 {
+                        partial = Some(PartialPrefill { req, done, peak_kv, used_kv });
+                    }
+                }
+            }
+        }
+
+        // Whole-batch prefill launch (continuous-batching join). Blocked
+        // while a partial prompt owns the chunk lane; with chunking on,
+        // a long head prompt is chunk-lane work, never a whole batch,
+        // and whole batches obey the same chunk/decode alternation —
+        // otherwise a queue of short prompts would launch budget-sized
+        // batches back to back and stack stalls the budget exists to
+        // bound.
         let room = max_running.saturating_sub(running.len());
-        if room > 0 && !waiting.is_empty() && t >= admit_block_until {
+        if !launched
+            && partial.is_none()
+            && room > 0
+            && !waiting.is_empty()
+            && t >= admit_block_until
+            && (!chunking || waiting[0].seq <= dc.chunk_tokens)
+            && (!chunking || running.is_empty() || chunk_turn)
+        {
             let head = (waiting[0].model, waiting[0].variant);
             let cap = room.min(dc.max_prefill_batch).min(ctl.batch_cap).max(1);
             let mut cand = 0usize;
             let mut kv_need = 0.0f64;
+            let mut tok_need = 0usize;
             for r in waiting.iter() {
                 if cand >= cap || (r.model, r.variant) != head {
+                    break;
+                }
+                if chunking && cand > 0 && tok_need + r.seq > dc.chunk_tokens {
                     break;
                 }
                 let peak = engine
@@ -296,6 +489,7 @@ pub(crate) fn serve_stack(
                     break;
                 }
                 kv_need += peak;
+                tok_need += r.seq;
                 cand += 1;
             }
             if cand > 0 {
@@ -354,6 +548,9 @@ pub(crate) fn serve_stack(
                     }
                     tel.peak_running = tel.peak_running.max(running.len() as u64);
                     tel.peak_kv_bytes = tel.peak_kv_bytes.max(kv.used_bytes());
+                    if chunking {
+                        chunk_turn = false;
+                    }
                     launched = true;
                 } else {
                     // Thermally deferred: hold admissions for the rest
@@ -401,22 +598,29 @@ pub(crate) fn serve_stack(
             }
             tel.kv_used_kib.record((kv.used_bytes() / 1024.0).round() as u64);
             tel.peak_kv_bytes = tel.peak_kv_bytes.max(kv.used_bytes());
+            chunk_turn = true;
             launched = true;
         }
 
         if !launched {
             // 5. Idle: advance to the next meaningful instant.
-            if !waiting.is_empty() && t < admit_block_until {
+            let pending = partial.is_some() || !waiting.is_empty();
+            if pending && t < admit_block_until {
                 t = admit_block_until;
-            } else if waiting.is_empty() && next < reqs.len() {
+            } else if !pending && next < reqs.len() {
                 t = reqs[next].arrival_s;
-            } else if waiting.is_empty() {
+            } else if !pending {
                 break;
             } else {
-                // Defensive: waiting head unlaunchable with an empty
-                // pool cannot happen (refusal is checked at ingest),
-                // but never spin — shed it and move on.
-                waiting.pop_front();
+                // Defensive: pending prefill work unlaunchable with an
+                // empty pool cannot happen (refusal is checked at
+                // ingest, partial reservations are pre-checked), but
+                // never spin — shed it and move on.
+                if let Some(p) = partial.take() {
+                    kv.release(p.peak_kv, p.used_kv);
+                } else {
+                    waiting.pop_front();
+                }
                 tel.shed += 1;
             }
         }
@@ -427,9 +631,13 @@ pub(crate) fn serve_stack(
             // shed too, so completed + shed + refused_kv == submitted.
             tel.shed += waiting.len() as u64
                 + running.len() as u64
+                + partial.is_some() as u64
                 + (reqs.len() - next) as u64;
             for a in running.drain(..) {
                 kv.release(a.peak_kv, a.used_kv);
+            }
+            if let Some(p) = partial.take() {
+                kv.release(p.peak_kv, p.used_kv);
             }
             waiting.clear();
             break;
@@ -460,7 +668,7 @@ mod tests {
 
     fn run_one(reqs: Vec<Request>, dc: &DecodeConfig) -> DecodeStackOutcome {
         let cfg = Config::default();
-        let phases = loadtest::phase_table(&cfg, &reqs, 1);
+        let phases = loadtest::phase_table_with_chunks(&cfg, &reqs, dc.chunk_tokens, 1);
         let mut keys: Vec<(ModelId, ArchVariant)> = Vec::new();
         for r in &reqs {
             if !keys.contains(&(r.model, r.variant)) {
@@ -545,6 +753,73 @@ mod tests {
         assert_eq!(t.completed, 2);
         assert_eq!(t.peak_running, 1);
         assert_eq!(t.prefill_batches, 2, "one at a time");
+    }
+
+    #[test]
+    fn chunked_long_prompt_splits_and_accounts_like_unchunked() {
+        // seq 256 at chunk 64: four chunks, one logical prefill, then
+        // the same decode lifecycle — and the same KV peak — as the
+        // whole-prompt path.
+        let mut dc = base_config();
+        dc.chunk_tokens = 64;
+        let chunked = run_one(vec![gen_req(0, 0.0, 256, 5)], &dc);
+        let t = &chunked.telemetry;
+        assert_eq!(t.completed, 1);
+        assert_eq!(t.prefill_chunks, 4, "256 tokens / 64-token budget");
+        assert_eq!(t.prefill_batches, 1, "one logical prefill");
+        assert_eq!(t.tokens_out, 5);
+        assert_eq!(t.decode_steps, 4);
+        assert_eq!(t.ttft_us.count(), 1);
+
+        let plain = run_one(vec![gen_req(0, 0.0, 256, 5)], &base_config());
+        assert!(
+            (t.peak_kv_bytes - plain.telemetry.peak_kv_bytes).abs() < 1e-6,
+            "chunked cache growth must land on the same footprint"
+        );
+        assert!(t.ttft_us.max() > 0 && t.sm_busy_s > 0.0 && t.energy_j > 0.0);
+    }
+
+    #[test]
+    fn prompt_shorter_or_equal_to_chunk_never_chunks() {
+        // Shorter than the budget and exactly the budget both take the
+        // whole-batch path: no chunk-lane activity at all.
+        for seq in [64usize, 128] {
+            let mut dc = base_config();
+            dc.chunk_tokens = 128;
+            let out = run_one(vec![gen_req(0, 0.0, seq, 6)], &dc);
+            let plain = run_one(vec![gen_req(0, 0.0, seq, 6)], &base_config());
+            let (a, b) = (&out.telemetry, &plain.telemetry);
+            assert_eq!(a.prefill_chunks, 0, "seq {seq} fits one action");
+            assert_eq!(a.completed, 1);
+            assert_eq!(a.prefill_batches, b.prefill_batches);
+            assert_eq!(a.tokens_out, b.tokens_out);
+            assert_eq!(a.decode_steps, b.decode_steps);
+            assert_eq!(a.ttft_us.max(), b.ttft_us.max(), "identical prefill timing");
+            assert_eq!(a.itl_us.max(), b.itl_us.max());
+        }
+    }
+
+    #[test]
+    fn chunking_interleaves_decode_steps_and_bounds_stalls() {
+        // A generation is mid-flight when a long prompt arrives. The
+        // whole-prompt path stalls it for the full 512-token prefill;
+        // the chunk lane alternates chunk / decode step, so its worst
+        // inter-token gap shrinks.
+        let reqs = || vec![gen_req(0, 0.0, 64, 200), gen_req(1, 0.001, 512, 2)];
+        let plain = run_one(reqs(), &base_config());
+        let mut dc = base_config();
+        dc.chunk_tokens = 64;
+        let chunked = run_one(reqs(), &dc);
+        assert_eq!(plain.telemetry.completed, 2);
+        assert_eq!(chunked.telemetry.completed, 2);
+        assert_eq!(chunked.telemetry.tokens_out, plain.telemetry.tokens_out);
+        assert_eq!(chunked.telemetry.prefill_chunks, 8, "512 / 64");
+        assert!(
+            chunked.telemetry.itl_us.max() < plain.telemetry.itl_us.max(),
+            "chunked worst stall {} µs must beat whole-prompt {} µs",
+            chunked.telemetry.itl_us.max(),
+            plain.telemetry.itl_us.max()
+        );
     }
 
     #[test]

@@ -30,6 +30,9 @@ pub struct DecodeTelemetry {
     /// Output tokens emitted (first tokens + decode-step tokens).
     pub tokens_out: u64,
     pub prefill_batches: u64,
+    /// Prompt chunks served by the chunked-prefill path (0 when
+    /// `chunk_tokens` is disabled or every prompt fits one chunk).
+    pub prefill_chunks: u64,
     pub decode_steps: u64,
     /// Largest concurrent running-batch size observed.
     pub peak_running: u64,
@@ -62,6 +65,7 @@ impl DecodeTelemetry {
             refused_kv: 0,
             tokens_out: 0,
             prefill_batches: 0,
+            prefill_chunks: 0,
             decode_steps: 0,
             peak_running: 0,
             peak_kv_bytes: 0.0,
@@ -98,6 +102,7 @@ impl DecodeTelemetry {
         self.refused_kv += other.refused_kv;
         self.tokens_out += other.tokens_out;
         self.prefill_batches += other.prefill_batches;
+        self.prefill_chunks += other.prefill_chunks;
         self.decode_steps += other.decode_steps;
         self.peak_running = self.peak_running.max(other.peak_running);
         self.peak_kv_bytes = self.peak_kv_bytes.max(other.peak_kv_bytes);

@@ -2,9 +2,9 @@
 //! analysis). Each driver returns a [`Json`](crate::util::json::Json)
 //! document with the figure's rows/series, prints a table, and is reused
 //! verbatim by the corresponding `rust/benches/fig*.rs` bench and the
-//! `hetrax fig*` CLI subcommands. DESIGN.md's experiment index maps each
-//! driver to the paper figure it regenerates; EXPERIMENTS.md records
-//! paper-vs-measured.
+//! `hetrax fig*` CLI subcommands. DESIGN.md §Module-Index maps each
+//! driver to the paper figure it regenerates; the sweeps fan out over
+//! the §Perf worker pool.
 
 pub mod ablations;
 pub mod common;

@@ -162,15 +162,16 @@ COMMANDS:
   serve       coordinator serving demo [--requests N --batch N]
   loadtest    open-loop traffic run with thermal admission control
               [--pattern poisson|bursty|diurnal|replay --rps R
-               --duration S --stacks N --policy jsq|rr --models a,b
+               --duration S --stacks N --policy jsq|rr|kv --models a,b
                --batch N --slo S --ceiling C --uncontrolled
                --trace FILE (replay) --threads N --out BENCH_serve.json]
   decodetest  autoregressive decode run: continuous batching, KV-cache
-              residency, TTFT/TPOT/ITL telemetry
+              residency, chunked prefill, TTFT/TPOT/ITL telemetry
               [--pattern ... --rps R --duration S --stacks N
-               --policy jsq|rr --models a,b
+               --policy jsq|rr|kv --models a,b
                --outlen fixed:N|geometric:MEAN|lognormal:MED:SIGMA
                --max-running N (1 = one-at-a-time) --prefill-batch N
+               --chunk-tokens N (0 = whole-prompt prefills)
                --kv-mib M --kv-sm-frac F --ceiling C --uncontrolled
                --trace FILE (replay) --threads N --out BENCH_decode.json]
 ";
@@ -352,7 +353,7 @@ fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     let pattern = parse_pattern(args, rps, duration)?;
     let models = parse_models(args)?;
     let policy = RoutePolicy::parse(args.get("policy").unwrap_or("jsq"))
-        .ok_or_else(|| anyhow!("unknown policy (jsq | rr)"))?;
+        .ok_or_else(|| anyhow!("unknown policy (jsq | rr | kv)"))?;
 
     let mut lt = LoadtestConfig::new(pattern, RequestMix::models(&models));
     lt.duration_s = duration;
@@ -406,7 +407,7 @@ fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     let pattern = parse_pattern(args, rps, duration)?;
     let models = parse_models(args)?;
     let policy = RoutePolicy::parse(args.get("policy").unwrap_or("jsq"))
-        .ok_or_else(|| anyhow!("unknown policy (jsq | rr)"))?;
+        .ok_or_else(|| anyhow!("unknown policy (jsq | rr | kv)"))?;
     let outlen = OutputLenDist::parse(args.get("outlen").unwrap_or("geometric:32"))
         .map_err(|e| anyhow!(e))?;
 
@@ -417,6 +418,7 @@ fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     dc.seed = seed;
     dc.max_running = args.get_usize("max-running", 8)?;
     dc.max_prefill_batch = args.get_usize("prefill-batch", 4)?;
+    dc.chunk_tokens = args.get_usize("chunk-tokens", 0)?;
     dc.kv.capacity_bytes = args.get_f64("kv-mib", 128.0)? * 1024.0 * 1024.0;
     dc.kv.sm_frac = args.get_f64("kv-sm-frac", dc.kv.sm_frac)?;
     dc.threads = args.get_usize("threads", 0)?;
@@ -440,9 +442,12 @@ fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
         t.submitted, t.completed, t.shed, t.refused_kv
     );
     println!(
-        "  tokens:    {} generated in {} prefill batches + {} decode steps (peak batch {})",
-        t.tokens_out, t.prefill_batches, t.decode_steps, t.peak_running
+        "  tokens:    {} generated in {} prefill batches ({} chunks) + {} decode steps (peak batch {})",
+        t.tokens_out, t.prefill_batches, t.prefill_chunks, t.decode_steps, t.peak_running
     );
+    if dc.chunk_tokens > 0 {
+        println!("  chunking:  {}-token prefill budget", dc.chunk_tokens);
+    }
     println!(
         "  ttft:      p50 {:.2} ms  p99 {:.2} ms",
         ms(t.ttft_us.percentile(50.0)),

@@ -5,7 +5,10 @@
 //! variants (encoder-only, decoder-only, encoder-decoder, MQA, parallel
 //! attention). The [`workload`] module turns (model, variant, seq-len)
 //! into the per-layer kernel DAG that the timing model, traffic generator
-//! and coordinator all consume.
+//! and coordinator all consume; [`decode`] derives the per-step GEMV
+//! constants of DESIGN.md §Decode from the same closed forms.
+//!
+//! Design record: DESIGN.md §Module-Index.
 
 pub mod decode;
 pub mod kernels;

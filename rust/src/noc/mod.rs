@@ -12,6 +12,9 @@
 //!   with finite FIFOs, credit backpressure and round-robin arbitration.
 //!   Used to validate Pareto-optimal designs (§4.4: "Finally, we perform
 //!   cycle-accurate simulations to evaluate the Pareto optimal set").
+//!
+//! The simulator's fast lane (instance reuse, route caching, idle
+//! fast-forward) is recorded in DESIGN.md §Perf.
 
 pub mod sim;
 pub mod topology;

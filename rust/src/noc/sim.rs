@@ -160,11 +160,11 @@ struct InPort {
 
 pub struct NocSim<'a> {
     topo: &'a Topology,
-    /// in_ports[node] = one InPort per incoming link + one injection port
-    /// (index 0 = injection; 1 + incoming-link-ordinal otherwise).
+    /// `in_ports[node]` = one InPort per incoming link + one injection
+    /// port (index 0 = injection; 1 + incoming-link-ordinal otherwise).
     in_ports: Vec<Vec<InPort>>,
     /// For each node, incoming link ids in port order (parallel to
-    /// in_ports[node][1..]); kept for diagnostics/extension hooks.
+    /// `in_ports[node][1..]`); kept for diagnostics/extension hooks.
     #[allow(dead_code)]
     in_link_ids: Vec<Vec<usize>>,
     /// Round-robin pointers, one per directed link (output arbiter).
@@ -184,7 +184,7 @@ pub struct NocSim<'a> {
     /// Flits resident across all in-port FIFOs of each node; nodes with 0
     /// are skipped entirely in the per-cycle scan.
     node_flits: Vec<u32>,
-    /// Flat port indexing: global port id = port_offset[node] + port.
+    /// Flat port indexing: global port id = `port_offset[node]` + port.
     port_offset: Vec<u32>,
     /// Per-link contender list head (global port id; u32::MAX = none).
     link_cand_head: Vec<u32>,

@@ -11,6 +11,10 @@
 //!   from a start state, used to pick promising restarts.
 //! * [`amosa`] — archived multi-objective simulated annealing baseline.
 //! * [`random_search`] — uniform-sampling baseline.
+//!
+//! Parallel evaluation (worker-pool fan-out, evaluation memo) and its
+//! byte-identical-at-any-thread-count contract are recorded in
+//! DESIGN.md §Perf.
 
 pub mod amosa;
 pub mod objectives;

@@ -82,7 +82,7 @@ impl ParetoArchive {
     /// filtered on the worker pool; only survivors take the serial
     /// insert path (whose candidate-vs-candidate interactions are
     /// order-dependent and stay serial). The one removal that breaks
-    /// the argument is a crowding [`prune`]: it can evict the very entry
+    /// the argument is a crowding `prune`: it can evict the very entry
     /// that justified a reject, so the moment one fires the remaining
     /// batch falls back to full serial inserts.
     pub fn offer_batch(&mut self, batch: &[(Placement, Objectives)], threads: usize) {

@@ -1,6 +1,10 @@
 //! S7 — Analytical timing model: kernel → core-mapping → latency, the
 //! §4.2 weight-load overlap schedule, and the end-to-end
 //! latency/energy/EDP estimator that Fig. 6(a–c) are built from.
+//!
+//! Design record: DESIGN.md §Module-Index; the tier rates in [`timing`]
+//! are shared with the §Decode step-cost engine so prefill and decode
+//! can never diverge on bandwidth assumptions.
 
 pub mod estimator;
 pub mod timing;

@@ -6,6 +6,9 @@
 //! Utilizations come from the timing model (perf::estimator), closing the
 //! performance→power→thermal loop the paper's flow uses
 //! (traces → AccelWattch/NeuroSim → HotSpot).
+//!
+//! Design record: DESIGN.md §Module-Index; the §Serve admission
+//! controller prices every control window through these models.
 
 use crate::arch::cores::{kind_of, CoreKind};
 use crate::config::specs;

@@ -2,6 +2,8 @@
 //! (the §5.1 analysis that disqualifies ReRAM for MHA), and the
 //! temperature-dependent conductance error model (Eq. 5 + drift) behind
 //! the Fig. 3/4 PTN optimization.
+//!
+//! Design record: DESIGN.md §Module-Index.
 
 pub mod endurance;
 pub mod mapping;

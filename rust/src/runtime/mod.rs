@@ -8,6 +8,9 @@
 //! Python runs only at `make artifacts` time; this module makes the Rust
 //! binary self-contained afterwards. One `PjRtLoadedExecutable` per model
 //! variant, compiled once and reused across requests.
+//!
+//! Design record: DESIGN.md §Module-Index (layer 2 of the three-layer
+//! stack described at the top of DESIGN.md).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -17,6 +17,9 @@
 //! "HotSpot-lite" step used for the steady-state figures (§5.2/5.3
 //! temperatures); the Eq. 2 column estimate remains available for the
 //! optimizer's objective where speed matters.
+//!
+//! Design record: DESIGN.md §Module-Index; the §Serve admission
+//! controller evaluates this model every control window.
 
 pub mod grid;
 pub mod model;

@@ -18,7 +18,7 @@ use crate::model::{ArchVariant, ModelId, Workload};
 use crate::perf::PerfEstimator;
 use crate::traffic::admission::{AdmissionController, BatchCost, ThrottleConfig};
 use crate::traffic::generator::{ArrivalPattern, RequestMix, TrafficGen};
-use crate::traffic::router::{RoutePolicy, StackRouter};
+use crate::traffic::router::{RouteDemand, RoutePolicy, StackRouter};
 use crate::traffic::telemetry::StackTelemetry;
 use crate::util::json::Json;
 use crate::util::pool;
@@ -232,16 +232,34 @@ pub(crate) fn phase_table(
     requests: &[Request],
     threads: usize,
 ) -> HashMap<PhaseKey, PhaseInfo> {
+    phase_table_with_chunks(cfg, requests, 0, threads)
+}
+
+/// [`phase_table`] extended with the chunk-sized keys chunked prefill
+/// serves through [`Engine::serve_batch`]: for every stream seq longer
+/// than `chunk_tokens`, the full-chunk size and the tail-chunk
+/// remainder. `chunk_tokens = 0` adds nothing.
+pub(crate) fn phase_table_with_chunks(
+    cfg: &Config,
+    requests: &[Request],
+    chunk_tokens: usize,
+    threads: usize,
+) -> HashMap<PhaseKey, PhaseInfo> {
     let mut keys: Vec<PhaseKey> = Vec::new();
-    let mut table: HashMap<PhaseKey, PhaseInfo> = HashMap::new();
-    for r in requests {
-        let k = (r.model, r.variant, r.seq);
-        if !table.contains_key(&k) {
-            table.insert(
-                k,
-                PhaseInfo { mha_s: 0.0, ff_s: 0.0, active_frac: 0.0 },
-            );
+    let mut seen: std::collections::HashSet<PhaseKey> = std::collections::HashSet::new();
+    let mut push = |k: PhaseKey| {
+        if seen.insert(k) {
             keys.push(k);
+        }
+    };
+    for r in requests {
+        push((r.model, r.variant, r.seq));
+        if chunk_tokens > 0 && r.seq > chunk_tokens {
+            push((r.model, r.variant, chunk_tokens));
+            let tail = r.seq % chunk_tokens;
+            if tail > 0 {
+                push((r.model, r.variant, tail));
+            }
         }
     }
     let infos = pool::par_map_threads(&keys, threads, |&(model, variant, seq)| {
@@ -250,10 +268,7 @@ pub(crate) fn phase_table(
         let est = PerfEstimator::new(cfg).estimate(&w);
         PhaseInfo { mha_s, ff_s, active_frac: est.activity.reram_active_frac }
     });
-    for (k, info) in keys.into_iter().zip(infos) {
-        table.insert(k, info);
-    }
-    table
+    keys.into_iter().zip(infos).collect()
 }
 
 /// One stack's windowed serve loop: move arrivals into the backlog, shed
@@ -376,10 +391,14 @@ pub fn run(cfg: &Config, lt: &LoadtestConfig) -> LoadtestReport {
     let threads = pool::resolve_threads(lt.threads);
     let phases = phase_table(cfg, &requests, threads);
 
-    let router = StackRouter::new(lt.stacks, lt.policy);
+    // Loadtest demands carry no residency footprint, and each stack's
+    // windowed serve loop is effectively serial — so `kv-aware` is run
+    // with one slot, where it provably reproduces JSQ order instead of
+    // degenerating to an all-on-stack-0 tie-break.
+    let router = StackRouter::new(lt.stacks, lt.policy).with_slots(1);
     let shards = router.route(&requests, |r| {
         let info = phases[&(r.model, r.variant, r.seq)];
-        info.mha_s + info.ff_s
+        RouteDemand::service(info.mha_s + info.ff_s)
     });
 
     let outcomes = pool::par_map_threads(&shards, threads, |shard| {
@@ -455,7 +474,11 @@ mod tests {
     #[test]
     fn policies_and_patterns_all_run() {
         let cfg = Config::default();
-        for policy in [RoutePolicy::RoundRobin, RoutePolicy::JoinShortestQueue] {
+        for policy in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::JoinShortestQueue,
+            RoutePolicy::KvAware,
+        ] {
             for pattern in [
                 ArrivalPattern::Poisson { rps: 150.0 },
                 ArrivalPattern::Bursty {

@@ -30,6 +30,10 @@
 //! drawn from one seeded stream before the fan-out; per-stack serving is
 //! a pure function of its shard; results fold in stack order. A seeded
 //! loadtest is byte-identical across runs and thread counts.
+//!
+//! Design record: DESIGN.md §Serve (generator contracts, telemetry,
+//! throttle invariants, router policies; the KV-occupancy-aware policy
+//! is specified in §Decode).
 
 pub mod admission;
 pub mod generator;
@@ -40,5 +44,5 @@ pub mod telemetry;
 pub use admission::{AdmissionController, BatchCost, ThrottleConfig, ThrottleEvent};
 pub use generator::{ArrivalPattern, OutputLenDist, ReplayEvent, RequestMix, TrafficGen};
 pub use loadtest::{LoadtestConfig, LoadtestReport, StackOutcome};
-pub use router::{RoutePolicy, StackRouter};
+pub use router::{RouteDemand, RoutePolicy, StackRouter};
 pub use telemetry::StackTelemetry;

@@ -1,6 +1,11 @@
 //! Shared utilities: deterministic PRNG, statistics, JSON, HTX tensor IO,
-//! and the bench harness. All self-contained — the offline environment
-//! provides no rand/serde/criterion.
+//! the scoped-thread worker pool, and the bench harness. All
+//! self-contained — the offline environment provides no
+//! rand/serde/criterion.
+//!
+//! Design record: DESIGN.md §Module-Index; the pool's input-order
+//! determinism contract and the `LogHistogram` percentiles are
+//! specified in §Perf and §Serve respectively.
 
 pub mod bench;
 pub mod json;
