@@ -1,0 +1,117 @@
+//! Cluster routing bench: the retired pre-pass KV-aware baseline vs
+//! live routing through the cluster co-simulation core, on the shared
+//! two-wave skewed replay mix
+//! (`decodetest::cluster_routing_scenario`) — the scenario where the
+//! pre-pass model's *estimated* releases and the stacks' *actual*
+//! completions disagree, so reacting to live state is worth real p99
+//! TTFT.
+//!
+//! Asserts the tentpole acceptance: live-kv or live-latency p99 TTFT ≤
+//! pre-pass-kv at token parity, and byte-identical output across runs
+//! and thread counts. Emits `BENCH_cluster.json` (path overridable via
+//! `BENCH_CLUSTER_JSON`; schema: DESIGN.md §Bench-Schemas) for the
+//! cluster-routing trajectory across commits.
+
+use hetrax::config::Config;
+use hetrax::decode::{decodetest, DecodeReport};
+use hetrax::traffic::RoutePolicy;
+use hetrax::util::bench::Bencher;
+use hetrax::util::json::Json;
+use hetrax::util::pool;
+
+fn ttft_p99_ms(r: &DecodeReport) -> f64 {
+    r.total.ttft_us.percentile(99.0) as f64 / 1e3
+}
+
+fn summary(r: &DecodeReport) -> Json {
+    let mut j = Json::obj();
+    j.set("completed", r.total.completed)
+        .set("tokens", r.total.tokens_out)
+        .set("ttft_p99_ms", ttft_p99_ms(r))
+        .set("ttft_max_ms", r.total.ttft_us.max() as f64 / 1e3)
+        .set("itl_p99_ms", r.total.itl_us.percentile(99.0) as f64 / 1e3)
+        .set("makespan_s", r.total.makespan_s);
+    j
+}
+
+fn main() {
+    let cfg = Config::default();
+    let auto = pool::resolve_threads(0);
+
+    let b = Bencher::quick();
+    let t_prepass = b.time("pre-pass-kv assignment + lockstep serve", || {
+        decodetest::run_prepass_kv(
+            &cfg,
+            &decodetest::cluster_routing_scenario(&cfg, RoutePolicy::KvAware),
+        )
+    });
+    let t_live = b.time("live-kv lockstep serve", || {
+        decodetest::run(&cfg, &decodetest::cluster_routing_scenario(&cfg, RoutePolicy::KvAware))
+    });
+
+    let dc_kv = decodetest::cluster_routing_scenario(&cfg, RoutePolicy::KvAware);
+    let prepass = decodetest::run_prepass_kv(&cfg, &dc_kv);
+    let live_kv = decodetest::run(&cfg, &dc_kv);
+    let dc_lat = decodetest::cluster_routing_scenario(&cfg, RoutePolicy::LatencyAware);
+    let live_latency = decodetest::run(&cfg, &dc_lat);
+
+    // Determinism contract: byte-identical JSON across repeated runs
+    // and across thread counts (HETRAX_THREADS aside, the knob below is
+    // the same lever).
+    let again = decodetest::run(&cfg, &dc_kv);
+    assert_eq!(
+        live_kv.to_json(&dc_kv).pretty(),
+        again.to_json(&dc_kv).pretty(),
+        "same config+seed must reproduce byte-identically"
+    );
+    let mut dc_par = decodetest::cluster_routing_scenario(&cfg, RoutePolicy::KvAware);
+    dc_par.threads = auto;
+    let parallel = decodetest::run(&cfg, &dc_par);
+    assert_eq!(
+        live_kv.to_json(&dc_kv).pretty(),
+        parallel.to_json(&dc_par).pretty(),
+        "thread count must not change cluster output"
+    );
+
+    // Token parity: every mode serves the same stream to completion.
+    assert_eq!(prepass.total.completed, live_kv.total.completed);
+    assert_eq!(prepass.total.tokens_out, live_kv.total.tokens_out, "token parity");
+    assert_eq!(prepass.total.tokens_out, live_latency.total.tokens_out, "token parity");
+
+    // The acceptance: live routing wins or ties the pre-pass fiction.
+    let best_live = ttft_p99_ms(&live_kv).min(ttft_p99_ms(&live_latency));
+    assert!(
+        best_live <= ttft_p99_ms(&prepass),
+        "live routing (kv {:.3} ms / latency {:.3} ms) must win or tie pre-pass-kv {:.3} ms",
+        ttft_p99_ms(&live_kv),
+        ttft_p99_ms(&live_latency),
+        ttft_p99_ms(&prepass)
+    );
+
+    println!(
+        "\n  p99 TTFT: pre-pass-kv {:.3} ms | live-kv {:.3} ms | live-latency {:.3} ms",
+        ttft_p99_ms(&prepass),
+        ttft_p99_ms(&live_kv),
+        ttft_p99_ms(&live_latency)
+    );
+
+    let mut doc = Json::obj();
+    doc.set("bench", "cluster_routing")
+        .set("stacks", dc_kv.stacks)
+        .set("seed", dc_kv.seed)
+        .set("requests", prepass.total.submitted)
+        .set("prepass_kv", summary(&prepass))
+        .set("live_kv", summary(&live_kv))
+        .set("live_latency", summary(&live_latency))
+        .set(
+            "ttft_p99_improvement",
+            ttft_p99_ms(&prepass) / best_live.max(1e-9),
+        )
+        .set("run_median_prepass_s", t_prepass.median_s())
+        .set("run_median_live_s", t_live.median_s())
+        .set("bench_threads", auto);
+    let out =
+        std::env::var("BENCH_CLUSTER_JSON").unwrap_or_else(|_| "BENCH_cluster.json".into());
+    std::fs::write(&out, doc.pretty()).expect("write bench json");
+    println!("wrote {out}");
+}

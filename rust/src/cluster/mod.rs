@@ -1,0 +1,284 @@
+//! S13 — Cluster co-simulation core: lockstep virtual time across
+//! stacks, with routing as a *live* decision at every arrival.
+//!
+//! The pre-refactor scale-out routed with a serial pre-pass fiction: the
+//! router assigned every request before any stack simulated, against a
+//! hand-maintained shadow model of backlog and KV state, so routing
+//! could never react to what actually happened on a stack. This module
+//! replaces that with a deterministic event loop that owns the shared
+//! arrival stream and steps all N stacks in lockstep virtual time: at
+//! each request's arrival instant every stack is advanced to that
+//! instant, a [`StackSnapshot`] of each stack's *actual* state — queue
+//! depth, [`KvPool`](crate::decode::KvPool) occupancy, running-batch
+//! horizon, ReRAM temperature from the admission controller, rolling
+//! TTFT/ITL — is taken, and the pure routing policy
+//! ([`crate::traffic::StackRouter::choose`]) picks the stack.
+//!
+//! **Event ordering rule.** Events are totally ordered by
+//! `(virtual_time, stack_idx, seq_no)` and never by thread schedule:
+//! arrivals are consumed in stream order (the generator emits them
+//! sorted by arrival time with ties in draw order — the `seq_no`), and
+//! at each arrival instant stacks are advanced and snapshotted in
+//! ascending stack index. A stack only ever sees an arrival pushed to
+//! it once its own clock has been advanced to (but not past) the
+//! arrival instant, so per-stack decisions are causal: they depend only
+//! on arrivals at or before the stack's clock, exactly as the
+//! pre-refactor per-shard loops behaved. The loop itself is serial —
+//! per-event work is far too small to amortize a fan-out — so the
+//! byte-identical-across-`HETRAX_THREADS` contract is structural; the
+//! worker pool still parallelizes the phase-table construction, which
+//! dominates setup cost.
+//!
+//! **Equivalence pins** (asserted by tests in `decode::decodetest`,
+//! `traffic::loadtest` and here): a single-stack cluster run is
+//! byte-identical to pushing the whole stream into one stack up front
+//! (the pre-refactor serial path), and live `jsq` reproduces the
+//! retired pre-pass JSQ assignment exactly — the stack-owned
+//! [`StackSnapshot::horizon_s`] ledger folds `max(horizon, t) +
+//! est_service` on every accepted request, the same arithmetic the
+//! pre-pass router ran, now fed by the actual assignment sequence.
+//!
+//! The retired pre-pass KV/slot residency model survives only as
+//! [`prepass`], the reference baseline the `cluster_routing` bench
+//! compares live routing against. Design record: DESIGN.md §Cluster.
+
+pub mod prepass;
+
+use crate::coordinator::Request;
+use crate::traffic::router::StackRouter;
+
+/// Smoothing factor for the rolling TTFT/ITL telemetry the `latency`
+/// policy consumes: each new sample moves the estimate 20 % of the way,
+/// so the signal tracks the last ~10 completions without a window
+/// buffer. Seeded runs stay deterministic — the fold is per-stack and
+/// in completion order.
+pub const EWMA_ALPHA: f64 = 0.2;
+
+/// The rolling-telemetry fold every stack uses: seed on the first
+/// sample, blend by [`EWMA_ALPHA`] afterwards. One implementation so
+/// the latency policy's inputs cannot drift between stack kinds.
+pub fn ewma(prev_s: f64, sample_s: f64, is_first: bool) -> f64 {
+    if is_first {
+        sample_s
+    } else {
+        prev_s * (1.0 - EWMA_ALPHA) + sample_s * EWMA_ALPHA
+    }
+}
+
+/// One stack's live state at an arrival instant — the telemetry
+/// interface routing policies decide over. All quantities are
+/// simulated-clock data the stack maintains itself; units are seconds
+/// and bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct StackSnapshot {
+    /// Stack index (ties in every policy break toward the lowest).
+    pub stack: usize,
+    /// The stack's estimated completion of all accepted work: a ledger
+    /// folding `max(horizon, arrival) + est_service` per accepted
+    /// request. For `jsq` this is the whole signal — and the fold is
+    /// arithmetically the retired pre-pass JSQ horizon, which is why
+    /// live JSQ reproduces the pre-pass order exactly.
+    pub horizon_s: f64,
+    /// Requests accepted but not yet running (waiting queue plus
+    /// arrivals the stack's clock has not reached yet).
+    pub queue_depth: usize,
+    /// Generations currently in the running batch.
+    pub running: usize,
+    /// Continuous-batching slots (`max_running`; 1 for the one-shot
+    /// loadtest stacks, whose serving is window-serial).
+    pub slots: usize,
+    /// Output tokens still owed across running + queued work.
+    pub outstanding_steps: u64,
+    /// KV bytes committed: the pool's actual reservations (running +
+    /// mid-chunking work) plus the peak footprints of queued requests
+    /// that will reserve when they launch. ∞-capacity stacks (loadtest)
+    /// report 0.
+    pub kv_committed_bytes: f64,
+    /// The stack's cache budget ([`f64::INFINITY`] when the stack holds
+    /// no KV state).
+    pub kv_capacity_bytes: f64,
+    /// Last control-window ReRAM-tier temperature the stack's admission
+    /// controller evaluated (°C; 0 before the first window closes).
+    pub reram_c: f64,
+    /// Rolling first-token latency ([`EWMA_ALPHA`] EWMA, seconds; the
+    /// loadtest stacks report rolling request latency here).
+    pub ewma_ttft_s: f64,
+    /// Rolling inter-token latency (EWMA, seconds; 0 for one-shot
+    /// stacks).
+    pub ewma_itl_s: f64,
+}
+
+/// A resumable per-stack engine the cluster stepper drives. Implemented
+/// by [`crate::decode::scheduler::DecodeStack`] and the loadtest's
+/// windowed serve stack.
+pub trait ClusterStack {
+    /// Advance the stack's virtual clock strictly up to `deadline_s`,
+    /// executing every decision whose instant falls before it. Actions
+    /// are atomic: one started before the deadline may finish past it
+    /// (the clock overshoots), exactly as the pre-refactor serial loops
+    /// behaved. Decisions at exactly `deadline_s` are deferred until
+    /// after the arrival at that instant has been routed.
+    fn step_until(&mut self, deadline_s: f64);
+
+    /// Report live state for a routing decision (taken after
+    /// [`ClusterStack::step_until`] at the arrival instant, before
+    /// [`ClusterStack::push`]).
+    fn snapshot(&self, stack: usize) -> StackSnapshot;
+
+    /// Accept a routed request. The request's `arrival_s` is at or
+    /// after every previously pushed arrival (stream order).
+    fn push(&mut self, req: Request);
+}
+
+/// Drive the shared arrival stream through the stacks in lockstep
+/// virtual time, routing each request live at its arrival instant.
+/// Returns the assignment (stack index per request, in stream order).
+///
+/// `pinned` replays a fixed assignment instead of consulting the
+/// policy — how the `cluster_routing` bench serves the retired
+/// pre-pass baseline through the same stepper. `need_kv_bytes` is the
+/// request's peak KV reservation (0 for one-shot prefill traffic),
+/// consumed by the `kv-aware` policy's saturation test.
+///
+/// The caller finishes the stacks afterwards (running each to
+/// completion and extracting its outcome) — finishing is a concrete
+/// per-subsystem operation, not part of the stepping trait.
+pub fn drive<S, F>(
+    stacks: &mut [S],
+    requests: &[Request],
+    router: &StackRouter,
+    pinned: Option<&[usize]>,
+    mut need_kv_bytes: F,
+) -> Vec<usize>
+where
+    S: ClusterStack,
+    F: FnMut(&Request) -> f64,
+{
+    assert!(!stacks.is_empty(), "cluster needs at least one stack");
+    if let Some(a) = pinned {
+        assert_eq!(a.len(), requests.len(), "pinned assignment must cover the stream");
+    }
+    // Pinned replay and round-robin never read the snapshots; skip
+    // building them (they walk per-stack queues) on those paths.
+    let reads_snaps =
+        pinned.is_none() && router.policy != crate::traffic::router::RoutePolicy::RoundRobin;
+    let mut assignment = Vec::with_capacity(requests.len());
+    let mut snaps: Vec<StackSnapshot> = Vec::with_capacity(stacks.len());
+    let mut prev_t = f64::NEG_INFINITY;
+    for (seq_no, r) in requests.iter().enumerate() {
+        let t = r.arrival_s;
+        debug_assert!(t >= prev_t, "arrival stream must be sorted");
+        prev_t = t;
+        // (virtual_time, stack_idx, seq_no): advance every stack to this
+        // instant in index order, snapshot in index order, then route.
+        for s in stacks.iter_mut() {
+            s.step_until(t);
+        }
+        if reads_snaps {
+            snaps.clear();
+            for (i, s) in stacks.iter().enumerate() {
+                snaps.push(s.snapshot(i));
+            }
+        }
+        let pick = match pinned {
+            Some(a) => a[seq_no].min(stacks.len() - 1),
+            None => router.choose(seq_no as u64, t, &snaps, need_kv_bytes(r)),
+        };
+        stacks[pick].push(r.clone());
+        assignment.push(pick);
+    }
+    assignment
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelId;
+    use crate::traffic::router::RoutePolicy;
+
+    /// A transparent stack for stepping-contract tests: records the
+    /// deadlines and pushes it sees.
+    struct Probe {
+        deadlines: Vec<f64>,
+        pushed: Vec<u64>,
+        horizon_s: f64,
+    }
+
+    impl Probe {
+        fn new() -> Probe {
+            Probe { deadlines: Vec::new(), pushed: Vec::new(), horizon_s: 0.0 }
+        }
+    }
+
+    impl ClusterStack for Probe {
+        fn step_until(&mut self, deadline_s: f64) {
+            self.deadlines.push(deadline_s);
+        }
+
+        fn snapshot(&self, stack: usize) -> StackSnapshot {
+            StackSnapshot {
+                stack,
+                horizon_s: self.horizon_s,
+                queue_depth: self.pushed.len(),
+                running: 0,
+                slots: 1,
+                outstanding_steps: 0,
+                kv_committed_bytes: 0.0,
+                kv_capacity_bytes: f64::INFINITY,
+                reram_c: 0.0,
+                ewma_ttft_s: 0.0,
+                ewma_itl_s: 0.0,
+            }
+        }
+
+        fn push(&mut self, req: Request) {
+            self.pushed.push(req.id);
+            self.horizon_s = self.horizon_s.max(req.arrival_s) + 1.0;
+        }
+    }
+
+    fn stream(n: u64, gap: f64) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request::synthetic(i, ModelId::BertBase, 128, i as f64 * gap))
+            .collect()
+    }
+
+    #[test]
+    fn every_stack_steps_to_every_arrival_in_order() {
+        let mut stacks = vec![Probe::new(), Probe::new(), Probe::new()];
+        let reqs = stream(5, 0.5);
+        let router = StackRouter::new(3, RoutePolicy::RoundRobin);
+        let assignment = drive(&mut stacks, &reqs, &router, None, |_| 0.0);
+        assert_eq!(assignment, vec![0, 1, 2, 0, 1]);
+        let expected: Vec<f64> = (0..5).map(|i| i as f64 * 0.5).collect();
+        for s in &stacks {
+            assert_eq!(s.deadlines, expected, "lockstep: every stack sees every instant");
+        }
+        assert_eq!(stacks[0].pushed, vec![0, 3]);
+        assert_eq!(stacks[2].pushed, vec![2]);
+    }
+
+    #[test]
+    fn pinned_assignment_overrides_policy_and_clamps() {
+        let mut stacks = vec![Probe::new(), Probe::new()];
+        let reqs = stream(4, 0.1);
+        let router = StackRouter::new(2, RoutePolicy::JoinShortestQueue);
+        let pin = vec![1usize, 1, 0, 9]; // 9 clamps to the last stack
+        let got = drive(&mut stacks, &reqs, &router, Some(&pin), |_| 0.0);
+        assert_eq!(got, vec![1, 1, 0, 1]);
+        assert_eq!(stacks[1].pushed, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn live_jsq_fold_matches_prepass_reference() {
+        // The equivalence pin at the stepper level: the horizon ledger
+        // (max(h, t) + est per accepted request) makes live JSQ
+        // arithmetically the pre-pass fold.
+        let reqs = stream(23, 0.3);
+        let router = StackRouter::new(3, RoutePolicy::JoinShortestQueue);
+        let mut stacks = vec![Probe::new(), Probe::new(), Probe::new()];
+        let live = drive(&mut stacks, &reqs, &router, None, |_| 0.0);
+        let prepass = prepass::assign_jsq(&reqs, 3, |_| 1.0);
+        assert_eq!(live, prepass);
+    }
+}

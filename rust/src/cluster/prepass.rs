@@ -1,0 +1,276 @@
+//! The retired serial pre-pass routing models, kept **only** as the
+//! reference baseline the `cluster_routing` bench and the equivalence
+//! tests compare live routing against.
+//!
+//! Until the cluster core landed, `traffic::router::StackRouter`
+//! assigned every request before any stack simulated, against these
+//! shadow models: a serial busy-until horizon for JSQ and a simulated
+//! [`KvPool`]/slot residency model for the KV-aware policy. Both are
+//! *fictions* — they estimate releases instead of observing them — and
+//! the live path obsoletes them everywhere except here, where the
+//! fiction **is the point**: the bench runs the pre-pass assignment
+//! through the same lockstep stepper to quantify what reacting to
+//! actual stack state buys, and the JSQ fold doubles as the oracle the
+//! live-JSQ equivalence pin asserts against. Nothing on the serving
+//! path calls this module.
+
+use crate::coordinator::Request;
+use crate::decode::kv::{KvCacheConfig, KvPool};
+
+/// Per-request demand estimate the pre-pass models consume (what the
+/// deleted `RouteDemand` carried).
+#[derive(Debug, Clone, Copy)]
+pub struct Demand {
+    /// Estimated seconds of service (prefill plus, for generation
+    /// traffic, the whole decode phase).
+    pub service_s: f64,
+    /// Peak KV reservation held from admission to retirement; 0 for
+    /// one-shot prefill traffic.
+    pub kv_bytes: f64,
+    /// Decode steps the request holds a running-batch slot for.
+    pub decode_steps: u64,
+}
+
+/// The retired pre-pass JSQ fold: each stack tracks a busy-until
+/// horizon advanced by `max(horizon, arrival) + service`; every arrival
+/// goes to the stack with the least backlog, ties to the lowest index.
+/// Returns the assignment in stream order.
+pub fn assign_jsq(
+    requests: &[Request],
+    stacks: usize,
+    mut service_s: impl FnMut(&Request) -> f64,
+) -> Vec<usize> {
+    let stacks = stacks.max(1);
+    let mut busy_until = vec![0.0f64; stacks];
+    let mut assignment = Vec::with_capacity(requests.len());
+    for r in requests {
+        let t = r.arrival_s;
+        let mut best = 0usize;
+        let mut best_backlog = f64::INFINITY;
+        for (s, &until) in busy_until.iter().enumerate() {
+            let backlog = (until - t).max(0.0);
+            if backlog < best_backlog {
+                best = s;
+                best_backlog = backlog;
+            }
+        }
+        busy_until[best] = busy_until[best].max(t) + service_s(r);
+        assignment.push(best);
+    }
+    assignment
+}
+
+/// One routed request still resident in a stack's simulated model.
+#[derive(Debug, Clone, Copy)]
+struct Inflight {
+    /// Estimated completion time: reservation and batch slot free here.
+    release_s: f64,
+    kv_bytes: f64,
+    decode_steps: u64,
+}
+
+/// The retired KV-aware policy's per-stack state: a residency model
+/// mirroring what the stack's scheduler *would* hold if every estimate
+/// were exact. Routed requests overlap up to `slots`; the binding
+/// resource is KV headroom, released at *estimated* completions —
+/// never at actual ones, which is exactly the blindness the live path
+/// removes.
+#[derive(Debug, Clone)]
+struct StackModel {
+    pool: KvPool,
+    inflight: Vec<Inflight>,
+}
+
+impl StackModel {
+    fn new(kv: KvCacheConfig) -> StackModel {
+        StackModel { pool: KvPool::new(kv), inflight: Vec::new() }
+    }
+
+    /// Release every routed request whose estimated completion is ≤ `t`.
+    fn drain_until(&mut self, t: f64) {
+        let pool = &mut self.pool;
+        self.inflight.retain(|f| {
+            if f.release_s <= t {
+                pool.release(f.kv_bytes, 0.0);
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    /// Seconds until a continuous-batching slot frees.
+    fn slot_wait(&self, slots: usize, t: f64) -> f64 {
+        if self.inflight.len() < slots.max(1) {
+            return 0.0;
+        }
+        let mut releases: Vec<f64> = self.inflight.iter().map(|f| f.release_s).collect();
+        releases.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let k = self.inflight.len() + 1 - slots.max(1);
+        (releases[k - 1] - t).max(0.0)
+    }
+
+    /// Seconds until the pool could take `need` more reservation bytes,
+    /// assuming in-flight work releases on its estimated schedule. 0
+    /// when it fits now or `need` alone exceeds the whole budget.
+    fn kv_wait(&self, need: f64, t: f64) -> f64 {
+        if need <= 0.0 || need > self.pool.capacity_bytes() || self.pool.would_fit(need) {
+            return 0.0;
+        }
+        let mut releases: Vec<(f64, f64)> =
+            self.inflight.iter().map(|f| (f.release_s, f.kv_bytes)).collect();
+        releases.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut freed = 0.0;
+        for (release_s, bytes) in releases {
+            freed += bytes;
+            if self.pool.reserved_bytes() - freed + need
+                <= self.pool.capacity_bytes() + 1e-6
+            {
+                return (release_s - t).max(0.0);
+            }
+        }
+        // Unreachable when the reservations are consistent; never panic
+        // on routing.
+        0.0
+    }
+
+    fn outstanding_steps(&self) -> u64 {
+        self.inflight.iter().map(|f| f.decode_steps).sum()
+    }
+
+    /// Commit a request: charged now (the pool runs overcommitted while
+    /// queued work waits for estimated releases), released at its
+    /// estimated completion.
+    fn commit(&mut self, t: f64, slots: usize, d: &Demand) {
+        let wait = self.slot_wait(slots, t).max(self.kv_wait(d.kv_bytes, t));
+        let kv = if d.kv_bytes > 0.0 && d.kv_bytes <= self.pool.capacity_bytes() {
+            self.pool.reserve_queued(d.kv_bytes);
+            d.kv_bytes
+        } else {
+            // Oversized (refused at ingest on every stack): route it,
+            // charge nothing.
+            0.0
+        };
+        self.inflight.push(Inflight {
+            release_s: t + wait + d.service_s,
+            kv_bytes: kv,
+            decode_steps: d.decode_steps,
+        });
+    }
+}
+
+/// The retired pre-pass KV-aware assignment: stacks whose simulated
+/// pool takes the reservation now outrank KV-saturated ones; within a
+/// class, earliest estimated effective start (slot wait vs KV wait),
+/// then fewer outstanding decode steps, then lowest index.
+pub fn assign_kv(
+    requests: &[Request],
+    stacks: usize,
+    kv: KvCacheConfig,
+    slots: usize,
+    mut demand: impl FnMut(&Request) -> Demand,
+) -> Vec<usize> {
+    let stacks = stacks.max(1);
+    let mut models: Vec<StackModel> = (0..stacks).map(|_| StackModel::new(kv)).collect();
+    let mut assignment = Vec::with_capacity(requests.len());
+    for r in requests {
+        let t = r.arrival_s;
+        let d = demand(r);
+        for m in models.iter_mut() {
+            m.drain_until(t);
+        }
+        let mut best = 0usize;
+        let mut best_key = (2u8, f64::INFINITY, u64::MAX);
+        for (s, m) in models.iter().enumerate() {
+            let kv_wait = m.kv_wait(d.kv_bytes, t);
+            let key = (
+                (kv_wait > 0.0) as u8,
+                m.slot_wait(slots, t).max(kv_wait),
+                m.outstanding_steps(),
+            );
+            if key < best_key {
+                best = s;
+                best_key = key;
+            }
+        }
+        models[best].commit(t, slots, &d);
+        assignment.push(best);
+    }
+    assignment
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelId;
+
+    fn stream(n: u64, gap: f64) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request::synthetic(i, ModelId::BertBase, 128, i as f64 * gap))
+            .collect()
+    }
+
+    #[test]
+    fn jsq_prefers_idle_stack_and_decays() {
+        // Expensive first request occupies stack 0; the burst that
+        // follows lands on stack 1 until backlogs equalize; a far-future
+        // arrival sees both idle again and ties to stack 0.
+        let mut reqs = stream(3, 0.0);
+        let mut late = Request::synthetic(9, ModelId::BertBase, 128, 100.0);
+        late.seq = 128;
+        reqs.push(late);
+        let got = assign_jsq(&reqs, 2, |r| if r.id == 0 { 10.0 } else { 1.0 });
+        assert_eq!(got, vec![0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn kv_model_spreads_heavy_reservations_and_releases_on_schedule() {
+        // The retired model's behaviour, pinned so the bench baseline
+        // cannot drift: a stack holds two 40-byte reservations of a
+        // 100-byte budget, then the class test pushes the burst tail to
+        // the stack with headroom; after the estimated releases pass, a
+        // late identical wave routes like the first.
+        let kv = KvCacheConfig { capacity_bytes: 100.0, sm_frac: 0.5 };
+        let mut reqs = stream(1, 0.0);
+        for i in 1..=4u64 {
+            reqs.push(Request::synthetic(i, ModelId::BertBase, 512, 0.001 * i as f64));
+        }
+        let demand = |r: &Request| {
+            if r.id == 0 {
+                Demand { service_s: 10.0, kv_bytes: 10.0, decode_steps: 100 }
+            } else {
+                Demand { service_s: 1.0, kv_bytes: 40.0, decode_steps: 4 }
+            }
+        };
+        let got = assign_kv(&reqs, 2, kv, 8, demand);
+        assert_eq!(got, vec![0, 1, 1, 0, 0], "burst spreads by headroom");
+
+        let mut waves: Vec<Request> = Vec::new();
+        for i in 0..3u64 {
+            waves.push(Request::synthetic(i, ModelId::BertBase, 128, 0.0));
+        }
+        for i in 3..6u64 {
+            waves.push(Request::synthetic(i, ModelId::BertBase, 128, 100.0));
+        }
+        let got = assign_kv(&waves, 2, kv, 8, |_| Demand {
+            service_s: 1.0,
+            kv_bytes: 60.0,
+            decode_steps: 8,
+        });
+        assert_eq!(got, vec![0, 1, 0, 0, 1, 0], "late wave repeats the first");
+    }
+
+    #[test]
+    fn kv_with_one_slot_and_no_kv_degenerates_to_jsq() {
+        let reqs = stream(17, 0.004);
+        let service = |r: &Request| 0.01 + r.id as f64 * 1e-4;
+        let j = assign_jsq(&reqs, 3, service);
+        let kv = KvCacheConfig { capacity_bytes: 1e9, sm_frac: 0.5 };
+        let k = assign_kv(&reqs, 3, kv, 1, |r| Demand {
+            service_s: service(r),
+            kv_bytes: 0.0,
+            decode_steps: 0,
+        });
+        assert_eq!(j, k);
+    }
+}

@@ -1,26 +1,33 @@
 //! Decode-run orchestration: generate a seeded arrival stream with
-//! sampled output lengths, shard it across stacks, run each stack's
-//! continuous-batching loop (fanned out over `util::pool`), and
+//! sampled output lengths, drive it through the cluster co-simulation
+//! core (`crate::cluster`) — all stacks stepped in lockstep virtual
+//! time, every arrival routed live over their actual state — and
 //! aggregate into the deterministic `BENCH_decode.json` document.
 //!
 //! Determinism contract (the same one `traffic::loadtest` keeps): every
-//! random draw happens in the seeded generator before the fan-out;
-//! routing is one serial pass; each stack's loop is a pure function of
-//! its shard; aggregation folds in stack order. A seeded decode run is
-//! byte-identical across runs and thread counts — asserted by tests
-//! here and by the `decode_steady` bench.
+//! random draw happens in the seeded generator before serving starts;
+//! the cluster event loop is ordered by `(virtual_time, stack_idx,
+//! seq_no)` and serial by construction; each stack's loop is a pure
+//! function of its push/step sequence; aggregation folds in stack
+//! order. A seeded decode run is byte-identical across runs and thread
+//! counts — asserted by tests here and by the `decode_steady` bench —
+//! and a single-stack run is byte-identical to the pre-cluster serial
+//! path (`single_stack_cluster_matches_serial_path`).
 
+use crate::cluster::{self, prepass};
 use crate::config::Config;
 use crate::coordinator::Request;
-use crate::decode::engine::{DecodeEngine, StepGroup};
-use crate::decode::scheduler::{self, DecodeConfig, DecodeStackOutcome};
+use crate::decode::engine::DecodeEngine;
+use crate::decode::scheduler::{
+    self, DecodeConfig, DecodeStack, DecodeStackOutcome,
+};
 use crate::decode::telemetry::DecodeTelemetry;
-use crate::model::{ArchVariant, ModelId};
+use crate::model::ModelId;
 use crate::traffic::generator::{
     ArrivalPattern, OutputLenDist, ReplayEvent, RequestMix, TrafficGen,
 };
-use crate::traffic::loadtest;
-use crate::traffic::router::{RouteDemand, RoutePolicy, StackRouter};
+use crate::traffic::phases;
+use crate::traffic::router::{RoutePolicy, StackRouter};
 use crate::util::json::Json;
 use crate::util::pool;
 
@@ -253,57 +260,85 @@ pub fn skewed_routing_scenario(policy: RoutePolicy) -> DecodeConfig {
     dc
 }
 
-/// Run a full decode test: generate, route, serve every stack (fanned
-/// out over the worker pool), aggregate.
-pub fn run(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
-    let generator = TrafficGen {
-        pattern: dc.pattern.clone(),
-        mix: dc.mix.clone(),
-        seed: dc.seed,
+/// The `cluster_routing` bench scenario: the skewed two-class mix plus
+/// a second wave timed inside the window where the retired pre-pass
+/// model's *estimated* releases and the stacks' *actual* completions
+/// disagree. Wave A (two 512-token, 4-token-output prompts at ≈ t = 0)
+/// serializes its prefills on stack 1, so it actually completes around
+/// `2 P` (P = one 512-token prefill); the pre-pass model books each
+/// release at `arrival + P + 4 steps` ≈ `P`. Wave B lands at `1.5 P` —
+/// after the pre-pass fiction thinks stack 1 is drained, before it
+/// actually is — so pre-pass-kv piles wave B onto the still-busy stack
+/// while live routing sees the real residency and spreads it. The
+/// timing is derived from the config's own phase table, so the window
+/// tracks model recalibrations.
+pub fn cluster_routing_scenario(cfg: &Config, policy: RoutePolicy) -> DecodeConfig {
+    let model = ModelId::BertBase;
+    let variant = model.default_variant();
+    // Derive wave B's instant from the config's own estimates so the
+    // window survives model recalibration. Lower bound: the pre-pass
+    // model books each wave-A release at `arrival + est_service`
+    // (prefill + 4 decode steps). Upper bound: wave A *actually*
+    // serializes its two prefills on one stack, so nothing releases
+    // before the second prefill ends at `0.0001 + 2 P`. Wave B lands at
+    // the midpoint: after the fiction drains, before reality does.
+    let mut probe = Request::synthetic(0, model, 512, 0.0);
+    probe.out_tokens = 4;
+    let table = phases::phase_table(cfg, std::slice::from_ref(&probe), 1);
+    let engine = DecodeEngine::build(cfg, &[(model, variant)]);
+    let info = table[&(model, variant, 512)];
+    let p = info.mha_s + info.ff_s;
+    let est_release = 0.00015 + scheduler::est_service_s(&engine, &table, &probe);
+    let actual_floor = 0.0001 + 2.0 * p;
+    let t_b = if actual_floor > est_release {
+        0.5 * (est_release + actual_floor)
+    } else {
+        // Degenerate calibration (decode steps rival the prefill):
+        // land just past the estimated release.
+        est_release + 0.25 * p
     };
-    let requests = generator.generate(dc.duration_s);
-    let threads = pool::resolve_threads(dc.threads);
-    let phases =
-        loadtest::phase_table_with_chunks(cfg, &requests, dc.chunk_tokens, threads);
 
-    let mut keys: Vec<(ModelId, ArchVariant)> = Vec::new();
-    for r in &requests {
-        if !keys.contains(&(r.model, r.variant)) {
-            keys.push((r.model, r.variant));
-        }
+    let mut events = vec![ReplayEvent {
+        t_s: 0.0,
+        model,
+        variant,
+        seq: 64,
+        out_tokens: 600,
+    }];
+    for i in 0..2u64 {
+        events.push(ReplayEvent {
+            t_s: 0.0001 + i as f64 * 0.00005,
+            model,
+            variant,
+            seq: 512,
+            out_tokens: 4,
+        });
     }
-    let engine = DecodeEngine::build(cfg, &keys);
+    for i in 0..2u64 {
+        events.push(ReplayEvent {
+            t_s: t_b + i as f64 * 0.00005,
+            model,
+            variant,
+            seq: 512,
+            out_tokens: 4,
+        });
+    }
+    let mix = RequestMix::single(model);
+    let mut dc = DecodeConfig::new(ArrivalPattern::Replay { events }, mix);
+    // Keep the window open past wave B even if a recalibration makes
+    // the 512-token prefill (and hence t_b) much slower — a truncated
+    // replay would silently drop the wave the scenario exists for.
+    dc.duration_s = (4.0 * t_b).max(1.0);
+    dc.stacks = 2;
+    dc.policy = policy;
+    dc.seed = 3;
+    dc.threads = 1;
+    dc.kv.capacity_bytes = 100.0 * 1024.0 * 1024.0;
+    dc
+}
 
-    // Routing demand: service estimate (prefill + the whole generation
-    // at the request's mid-flight context length) for jsq, plus the
-    // peak KV reservation and decode-step count the kv-aware policy's
-    // residency model charges (DESIGN.md §Decode).
-    let router = StackRouter::new(dc.stacks, dc.policy)
-        .with_kv(dc.kv)
-        .with_slots(dc.max_running);
-    let shards = router.route(&requests, |r: &Request| {
-        let info = phases[&(r.model, r.variant, r.seq)];
-        let dw = engine.workload(r.model, r.variant);
-        let out = r.out_tokens.max(1);
-        let g = StepGroup {
-            model: r.model,
-            variant: r.variant,
-            b: 1,
-            sum_self_ctx: dw.self_context(r.seq, out / 2),
-            sum_cross_ctx: if dw.cross { r.seq } else { 0 },
-        };
-        RouteDemand {
-            service_s: info.mha_s + info.ff_s
-                + engine.step_cost(&[g]).wall_s * out as f64,
-            kv_bytes: dw.peak_kv_bytes(r.seq, out),
-            decode_steps: out as u64,
-        }
-    });
-
-    let outcomes = pool::par_map_threads(&shards, threads, |shard| {
-        scheduler::serve_stack(cfg, dc, &phases, &engine, shard)
-    });
-
+fn aggregate(dc: &DecodeConfig, outcomes: Vec<DecodeStackOutcome>) -> DecodeReport {
+    debug_assert_eq!(outcomes.len(), dc.stacks.max(1));
     let mut total = DecodeTelemetry::new();
     let mut peak_c = 0.0f64;
     let mut reram_peak_c = 0.0f64;
@@ -324,6 +359,72 @@ pub fn run(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
         throttle_events,
         windows,
     }
+}
+
+/// How a run routes: live policy decisions at each arrival, or the
+/// retired pre-pass KV-aware assignment replayed through the stepper.
+enum RouteMode {
+    Live,
+    PrepassKv,
+}
+
+fn run_inner(cfg: &Config, dc: &DecodeConfig, mode: RouteMode) -> DecodeReport {
+    let generator = TrafficGen {
+        pattern: dc.pattern.clone(),
+        mix: dc.mix.clone(),
+        seed: dc.seed,
+    };
+    let requests = generator.generate(dc.duration_s);
+    let threads = pool::resolve_threads(dc.threads);
+    let table = phases::phase_table_with_chunks(cfg, &requests, dc.chunk_tokens, threads);
+    let keys = phases::decode_keys(&requests);
+    let engine = DecodeEngine::build(cfg, &keys);
+
+    let pinned: Option<Vec<usize>> = match mode {
+        RouteMode::Live => None,
+        RouteMode::PrepassKv => Some(prepass::assign_kv(
+            &requests,
+            dc.stacks,
+            dc.kv,
+            dc.max_running,
+            |r| prepass::Demand {
+                service_s: scheduler::est_service_s(&engine, &table, r),
+                kv_bytes: engine
+                    .workload(r.model, r.variant)
+                    .peak_kv_bytes(r.seq, r.out_tokens.max(1)),
+                decode_steps: r.out_tokens.max(1) as u64,
+            },
+        )),
+    };
+
+    let router = StackRouter::new(dc.stacks, dc.policy);
+    let mut stacks: Vec<DecodeStack> = (0..router.stacks)
+        .map(|_| DecodeStack::new(cfg, dc, &table, &engine))
+        .collect();
+    cluster::drive(&mut stacks, &requests, &router, pinned.as_deref(), |r| {
+        engine
+            .workload(r.model, r.variant)
+            .peak_kv_bytes(r.seq, r.out_tokens.max(1))
+    });
+    let outcomes: Vec<DecodeStackOutcome> =
+        stacks.into_iter().map(DecodeStack::finish).collect();
+    aggregate(dc, outcomes)
+}
+
+/// Run a full decode test: generate, then drive the stream through the
+/// cluster stepper with live routing and aggregate the per-stack
+/// outcomes.
+pub fn run(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
+    run_inner(cfg, dc, RouteMode::Live)
+}
+
+/// Serve the stream with the **retired pre-pass KV-aware assignment**
+/// ([`prepass::assign_kv`]) replayed through the same cluster stepper —
+/// the baseline the `cluster_routing` bench compares live routing
+/// against. `dc.policy` is ignored for routing (the assignment is
+/// pinned) but still recorded in the report.
+pub fn run_prepass_kv(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
+    run_inner(cfg, dc, RouteMode::PrepassKv)
 }
 
 #[cfg(test)]
@@ -386,6 +487,70 @@ mod tests {
     }
 
     #[test]
+    fn single_stack_cluster_matches_serial_path() {
+        // The refactor's equivalence pin: one stack driven through the
+        // cluster stepper (arrivals pushed at their instants) must be
+        // byte-identical to the pre-cluster serial path — the whole
+        // stream pushed up front and run to completion.
+        let cfg = Config::default();
+        let dc = base(300.0, 0.8);
+        let report = run(&cfg, &dc);
+        assert!(report.total.completed > 0);
+
+        let generator = TrafficGen {
+            pattern: dc.pattern.clone(),
+            mix: dc.mix.clone(),
+            seed: dc.seed,
+        };
+        let requests = generator.generate(dc.duration_s);
+        let table =
+            phases::phase_table_with_chunks(&cfg, &requests, dc.chunk_tokens, 1);
+        let keys = phases::decode_keys(&requests);
+        let engine = DecodeEngine::build(&cfg, &keys);
+        let outcome = scheduler::serve_stack(&cfg, &dc, &table, &engine, &requests);
+        let serial = aggregate(&dc, vec![outcome]);
+        assert_eq!(
+            report.to_json(&dc).pretty(),
+            serial.to_json(&dc).pretty(),
+            "cluster stepping must not perturb the single-stack path"
+        );
+    }
+
+    #[test]
+    fn live_jsq_reproduces_prepass_jsq_at_serial_slots() {
+        // The tentpole equivalence pin on the decode path: with serial
+        // stacks (slots = 1) and zero KV demand in the estimate, the
+        // live horizon ledger reproduces the pre-pass fold exactly.
+        // (The assignment equality holds at any slot count — the ledger
+        // is the same arithmetic — but the ISSUE pins this regime.)
+        let cfg = Config::default();
+        let mut dc = base(400.0, 0.6);
+        dc.stacks = 3;
+        dc.max_running = 1;
+        let generator = TrafficGen {
+            pattern: dc.pattern.clone(),
+            mix: dc.mix.clone(),
+            seed: dc.seed,
+        };
+        let requests = generator.generate(dc.duration_s);
+        assert!(requests.len() > 30);
+        let table = phases::phase_table_with_chunks(&cfg, &requests, 0, 1);
+        let keys = phases::decode_keys(&requests);
+        let engine = DecodeEngine::build(&cfg, &keys);
+
+        let router = StackRouter::new(3, RoutePolicy::JoinShortestQueue);
+        let mut stacks: Vec<DecodeStack> = (0..3)
+            .map(|_| DecodeStack::new(&cfg, &dc, &table, &engine))
+            .collect();
+        let live = cluster::drive(&mut stacks, &requests, &router, None, |_| 0.0);
+
+        let pre = prepass::assign_jsq(&requests, 3, |r| {
+            scheduler::est_service_s(&engine, &table, r)
+        });
+        assert_eq!(live, pre, "live JSQ must reproduce the pre-pass order");
+    }
+
+    #[test]
     fn continuous_batching_beats_one_at_a_time() {
         // The acceptance regression: on the same seeded trace, the
         // continuous batch (shared per-step weight streams) must beat
@@ -424,16 +589,15 @@ mod tests {
 
     #[test]
     fn chunking_bounds_p99_itl_at_equal_offered_load() {
-        // The tentpole acceptance: same seed, same offered load, long
-        // prompts in the mix. Chunked prefill must strictly lower the
-        // p99 inter-token latency (no whole-prompt stall can land
-        // between a running request's tokens) while serving essentially
-        // the same token volume.
-        // The shared bursty scenario guarantees the failure mode:
-        // during an on-burst the queue is deep while earlier requests
-        // are mid-generation, so whole-prompt prefill batches (up to
-        // 4 × 512 padded tokens) repeatedly stall the running set —
-        // exactly the gaps p99 ITL captures.
+        // Same seed, same offered load, long prompts in the mix.
+        // Chunked prefill must strictly lower the p99 inter-token
+        // latency (no whole-prompt stall can land between a running
+        // request's tokens) while serving essentially the same token
+        // volume. The shared bursty scenario guarantees the failure
+        // mode: during an on-burst the queue is deep while earlier
+        // requests are mid-generation, so whole-prompt prefill batches
+        // (up to 4 × 512 padded tokens) repeatedly stall the running
+        // set — exactly the gaps p99 ITL captures.
         let cfg = Config::default();
         let plain = run(&cfg, &chunked_itl_scenario(0, 1));
         let chunked = run(&cfg, &chunked_itl_scenario(64, 1));
@@ -545,7 +709,8 @@ mod tests {
         // The shared skewed two-class scenario (see
         // `skewed_routing_scenario`): service-blind JSQ piles the
         // KV-heavy burst onto the "empty" stack and serializes it on
-        // that stack's pool; kv-aware routing spreads it by headroom.
+        // that stack's pool; live kv-aware routing spreads it by actual
+        // headroom.
         let cfg = Config::default();
         let jsq = run(&cfg, &skewed_routing_scenario(RoutePolicy::JoinShortestQueue));
         let kv = run(&cfg, &skewed_routing_scenario(RoutePolicy::KvAware));
@@ -560,6 +725,34 @@ mod tests {
             "kv-aware p99 TTFT {} µs must beat jsq {} µs",
             kv.total.ttft_us.percentile(99.0),
             jsq.total.ttft_us.percentile(99.0)
+        );
+    }
+
+    #[test]
+    fn live_routing_wins_or_ties_prepass_on_cluster_scenario() {
+        // The cluster_routing bench's acceptance, pinned as a test:
+        // live-kv or live-latency p99 TTFT ≤ the retired pre-pass-kv
+        // baseline on the two-wave skewed mix, at token parity.
+        let cfg = Config::default();
+        let pre = run_prepass_kv(
+            &cfg,
+            &cluster_routing_scenario(&cfg, RoutePolicy::KvAware),
+        );
+        let live_kv = run(&cfg, &cluster_routing_scenario(&cfg, RoutePolicy::KvAware));
+        let live_lat =
+            run(&cfg, &cluster_routing_scenario(&cfg, RoutePolicy::LatencyAware));
+        assert_eq!(pre.total.submitted, 5);
+        assert_eq!(pre.total.completed, 5);
+        assert_eq!(live_kv.total.tokens_out, pre.total.tokens_out, "token parity");
+        assert_eq!(live_lat.total.tokens_out, pre.total.tokens_out, "token parity");
+        let p99 = |r: &DecodeReport| r.total.ttft_us.percentile(99.0);
+        let best_live = p99(&live_kv).min(p99(&live_lat));
+        assert!(
+            best_live <= p99(&pre),
+            "live routing (kv {} µs / latency {} µs) must win or tie pre-pass {} µs",
+            p99(&live_kv),
+            p99(&live_lat),
+            p99(&pre)
         );
     }
 
@@ -638,4 +831,23 @@ mod tests {
         assert_eq!(doc.at(&["requests", "completed"]), Some(&Json::Num(0.0)));
         assert_eq!(doc.at(&["bench"]).and_then(Json::as_str), Some("decode_steady"));
     }
+
+    #[test]
+    fn all_policies_serve_generation_traffic() {
+        let cfg = Config::default();
+        for policy in RoutePolicy::all() {
+            let mut dc = base(250.0, 0.5);
+            dc.stacks = 2;
+            dc.policy = policy;
+            let report = run(&cfg, &dc);
+            assert_eq!(
+                report.total.completed + report.total.shed + report.total.refused_kv,
+                report.total.submitted,
+                "{} conserves",
+                policy.name()
+            );
+            assert!(report.total.completed > 0, "{} serves", policy.name());
+        }
+    }
+
 }

@@ -16,10 +16,12 @@
 //! running generation.
 //!
 //! Two consumers share this model: the decode scheduler (the
-//! authoritative accountant) and the KV-occupancy-aware router
-//! ([`crate::traffic::StackRouter`]), which keeps one simulated
-//! [`KvPool`] per stack to route arrivals toward residency headroom.
-//! Accounting rules: DESIGN.md §Decode.
+//! authoritative accountant, whose *actual* reservations feed the live
+//! `kv_committed_bytes` routing signal in
+//! [`crate::cluster::StackSnapshot`]) and the retired pre-pass
+//! residency model in [`crate::cluster::prepass`], kept only as the
+//! `cluster_routing` bench baseline. Accounting rules: DESIGN.md
+//! §Decode.
 
 /// Per-stack cache budget.
 #[derive(Debug, Clone, Copy)]
@@ -51,8 +53,9 @@ impl KvCacheConfig {
 
 /// One stack's residency accountant: peak-byte reservations plus actual
 /// occupancy. Pure arithmetic on simulated quantities — deterministic,
-/// which is what lets the router clone the same model for its serial
-/// routing pass without perturbing the byte-identical contract.
+/// which is what keeps both its consumers (the scheduler's live
+/// accounting and the pre-pass bench baseline) inside the
+/// byte-identical contract.
 #[derive(Debug, Clone)]
 pub struct KvPool {
     pub cfg: KvCacheConfig,
@@ -86,11 +89,12 @@ impl KvPool {
     }
 
     /// Charge a reservation even past the budget. The scheduler never
-    /// does this; it exists for the KV-aware router's *model* of a
-    /// stack, which commits queued work to a stack before the stack has
-    /// the headroom to start it — the pool then runs overcommitted
-    /// until the releases it is waiting on happen, and `would_fit`
-    /// correctly reports the stack as saturated in the meantime.
+    /// does this; it exists for the retired pre-pass residency model
+    /// ([`crate::cluster::prepass`], the bench baseline), which commits
+    /// queued work to a stack before the stack has the headroom to
+    /// start it — the pool then runs overcommitted until the releases
+    /// it is waiting on happen, and `would_fit` correctly reports the
+    /// stack as saturated in the meantime.
     pub fn reserve_queued(&mut self, bytes: f64) {
         self.reserved += bytes;
     }

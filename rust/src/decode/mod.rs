@@ -24,17 +24,23 @@
 //!   [`crate::traffic::AdmissionController`] with the running batch
 //!   priced as un-throttleable background, and chunked prefill
 //!   (`chunk_tokens`) bounding every prefill action so long prompts
-//!   interleave with decode steps instead of stalling them.
+//!   interleave with decode steps instead of stalling them. The loop
+//!   is packaged as the resumable [`scheduler::DecodeStack`] —
+//!   `step_until(t)` advances a stack to an arrival instant without
+//!   finishing its run — so the cluster co-simulation core
+//!   (`crate::cluster`) can interleave all stacks in lockstep virtual
+//!   time and route every arrival against live state.
 //! * [`telemetry`] — TTFT / TPOT / ITL / e2e histograms, KV occupancy,
 //!   lifecycle counters.
-//! * [`decodetest`] — orchestration (generate → route → serve stacks →
-//!   aggregate) emitting the deterministic `BENCH_decode.json`
+//! * [`decodetest`] — orchestration (generate → cluster-driven lockstep
+//!   serve → aggregate) emitting the deterministic `BENCH_decode.json`
 //!   (schema: DESIGN.md §Decode); exposed as `hetrax decodetest`.
 //!
 //! Determinism: same contract as the traffic subsystem — seeded draws
-//! happen before the fan-out, stacks are pure functions of their
-//! shards, folds are in stack order; byte-identical across runs and
-//! `HETRAX_THREADS` values.
+//! happen before serving, the cluster event loop is ordered by
+//! `(virtual_time, stack_idx, seq_no)`, stacks are pure functions of
+//! their push/step sequences, folds are in stack order; byte-identical
+//! across runs and `HETRAX_THREADS` values.
 
 pub mod decodetest;
 pub mod engine;
@@ -45,5 +51,5 @@ pub mod telemetry;
 pub use decodetest::{run, DecodeReport};
 pub use engine::{DecodeEngine, StepCost, StepGroup};
 pub use kv::{KvCacheConfig, KvPool};
-pub use scheduler::{DecodeConfig, DecodeStackOutcome};
+pub use scheduler::{DecodeConfig, DecodeStack, DecodeStackOutcome};
 pub use telemetry::DecodeTelemetry;

@@ -1,5 +1,6 @@
 //! Continuous-batching decode scheduler: one stack's request-lifecycle
-//! loop on a step-level simulated clock.
+//! loop on a step-level simulated clock, exposed as a *resumable*
+//! engine ([`DecodeStack`]) the cluster co-simulation core drives.
 //!
 //! Lifecycle (DESIGN.md §Decode): `Waiting → Prefilling → Decoding →
 //! Retired`, with two refusal edges — `refused_kv` at ingest (the peak
@@ -39,14 +40,34 @@
 //! whole-prompt path bit for bit (every chunking branch sits behind
 //! that gate).
 //!
+//! **Resumable stepping** (DESIGN.md §Cluster): the loop's whole state
+//! lives in [`DecodeStack`]. [`ClusterStack::step_until`] executes
+//! every decision whose instant falls strictly before a deadline
+//! (actions are atomic — one started before the deadline may finish
+//! past it, exactly as the pre-cluster serial loop behaved);
+//! [`ClusterStack::push`] appends a routed arrival;
+//! [`DecodeStack::finish`] runs to completion and extracts the outcome.
+//! Because per-stack decisions only ever read arrivals at or before the
+//! stack's clock, pushing the whole stream up front (`serve_stack`) and
+//! interleaving pushes with deadline stepping (the cluster) produce
+//! byte-identical outcomes — the
+//! refactor's equivalence pin. The stack also maintains the live
+//! telemetry routing consumes ([`StackSnapshot`]): the horizon ledger
+//! (`max(horizon, arrival) + est_service` per accepted request — the
+//! retired pre-pass JSQ arithmetic, which is why live JSQ reproduces
+//! it), committed KV bytes (actual pool reservations plus queued
+//! peaks), and rolling TTFT/ITL EWMAs.
+//!
 //! Determinism: the loop reads only simulated quantities — arrivals and
 //! sampled output lengths come pre-drawn from the seeded generator, the
 //! thermal controller is deterministic, and every fold is in a fixed
-//! order. A stack's outcome is a pure function of its shard.
+//! order. A stack's outcome is a pure function of its push/step
+//! sequence.
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
 
+use crate::cluster::{self, ClusterStack, StackSnapshot};
 use crate::config::Config;
 use crate::coordinator::{Batch, Engine, Request, ServeState};
 use crate::decode::engine::{DecodeEngine, StepGroup};
@@ -56,7 +77,7 @@ use crate::model::{ArchVariant, ModelId};
 use crate::power;
 use crate::traffic::admission::{AdmissionController, BatchCost, ThrottleConfig};
 use crate::traffic::generator::{ArrivalPattern, RequestMix};
-use crate::traffic::loadtest::{PhaseInfo, PhaseKey};
+use crate::traffic::phases::{PhaseInfo, PhaseKey};
 use crate::traffic::router::RoutePolicy;
 
 /// Full parameterization of one decode run (`hetrax decodetest`).
@@ -86,8 +107,9 @@ pub struct DecodeConfig {
     /// Thermal admission knobs (ceiling, control window, queue-wait
     /// bound) — shared with the loadtest controller.
     pub throttle: ThrottleConfig,
-    /// Worker threads for the stack fan-out (0 = auto, 1 = serial);
-    /// results are identical at any value.
+    /// Worker threads for the phase-table fan-out (0 = auto, 1 =
+    /// serial); results are identical at any value. Stack stepping is
+    /// serial — the cluster event loop's determinism is structural.
     pub threads: usize,
 }
 
@@ -219,117 +241,256 @@ fn retire(tel: &mut DecodeTelemetry, kv: &mut KvPool, a: ActiveGen) {
     kv.release(a.peak_kv, a.used_kv);
 }
 
-/// Run one stack's decode loop over its (arrival-sorted) shard.
-pub(crate) fn serve_stack(
-    cfg: &Config,
-    dc: &DecodeConfig,
-    phases: &HashMap<PhaseKey, PhaseInfo>,
+/// The routing-time service estimate for one generation request:
+/// prefill (both phases) plus the whole decode phase priced at the
+/// request's mid-flight context length. This is the demand the stacks'
+/// horizon ledgers fold — and the same formula the retired pre-pass
+/// router consumed, which the live-JSQ equivalence pin rests on.
+pub fn est_service_s(
     engine: &DecodeEngine,
-    reqs: &[Request],
-) -> DecodeStackOutcome {
-    let mut tel = DecodeTelemetry::new();
-    tel.submitted = reqs.len() as u64;
-    let mut ctl = AdmissionController::new(cfg, dc.throttle, dc.max_prefill_batch);
-    if reqs.is_empty() {
-        return DecodeStackOutcome {
-            telemetry: tel,
-            peak_c: 0.0,
-            reram_peak_c: 0.0,
-            throttle_events: 0,
-            windows: 0,
-        };
+    phases: &HashMap<PhaseKey, PhaseInfo>,
+    r: &Request,
+) -> f64 {
+    let info = phases[&(r.model, r.variant, r.seq)];
+    let dw = engine.workload(r.model, r.variant);
+    let out = r.out_tokens.max(1);
+    let g = StepGroup {
+        model: r.model,
+        variant: r.variant,
+        b: 1,
+        sum_self_ctx: dw.self_context(r.seq, out / 2),
+        sum_cross_ctx: if dw.cross { r.seq } else { 0 },
+    };
+    info.mha_s + info.ff_s + engine.step_cost(&[g]).wall_s * out as f64
+}
+
+/// Outcome of one scheduling decision ([`DecodeStack::advance`]).
+enum Advance {
+    /// Something happened (an action ran or the clock moved); keep
+    /// stepping.
+    Progress,
+    /// Stepping must pause: the deadline was reached, or (with no
+    /// deadline) the stack is drained, or the op backstop aborted it.
+    Stop,
+}
+
+/// One stack's resumable continuous-batching engine. Construct with
+/// [`DecodeStack::new`], feed arrivals with [`ClusterStack::push`],
+/// advance with [`ClusterStack::step_until`], and run out the clock
+/// with [`DecodeStack::finish`].
+pub struct DecodeStack<'a> {
+    cfg: &'a Config,
+    dc: &'a DecodeConfig,
+    phases: &'a HashMap<PhaseKey, PhaseInfo>,
+    engine: &'a DecodeEngine<'a>,
+    serve_engine: Engine<'a>,
+    state: ServeState,
+    kv: KvPool,
+    ctl: AdmissionController,
+    tel: DecodeTelemetry,
+    interval: f64,
+    wait: f64,
+    max_running: usize,
+    /// Routed arrivals the clock has not reached yet (stream order).
+    pending: VecDeque<Request>,
+    waiting: VecDeque<Request>,
+    running: Vec<ActiveGen>,
+    /// The chunk lane (chunk_tokens > 0 only): at most one prompt
+    /// mid-chunking, and an alternation flag forcing one decode step
+    /// between consecutive chunks while generations are running.
+    partial: Option<PartialPrefill>,
+    chunk_turn: bool,
+    t: f64,
+    /// Thermal deferral gate: no prefill attempts before this time.
+    admit_block_until: f64,
+    /// Work already admitted in the current control window (priced as
+    /// background so sustained launches accumulate heat).
+    window_cost: BatchCost,
+    window_end: f64,
+    // Decode-phase accumulators for the end-of-run energy model.
+    dec_sm_flops: f64,
+    dec_ff_ops: f64,
+    dec_l2_bytes: f64,
+    dec_kv_bytes: f64,
+    dec_mha_busy: f64,
+    dec_ff_busy: f64,
+    /// Simulated control windows elapsed (what `control_windows`
+    /// reports; the controller's own counter counts admission
+    /// *decisions*).
+    sim_windows: u64,
+    ops: u64,
+    /// Grows with every push so the abort backstop covers exactly the
+    /// accepted work (the pre-cluster loop computed it from its whole
+    /// shard up front).
+    ops_budget: u64,
+    done: bool,
+    /// Commitment ledger: estimated completion of all accepted work.
+    horizon_s: f64,
+    /// Peak KV bytes of accepted-but-unlaunched requests — added on
+    /// push, moved into the pool at launch, dropped on shed. Committed
+    /// bytes = pool reservations + this.
+    pending_kv_bytes: f64,
+    ewma_ttft_s: f64,
+    ewma_itl_s: f64,
+}
+
+impl<'a> DecodeStack<'a> {
+    pub fn new(
+        cfg: &'a Config,
+        dc: &'a DecodeConfig,
+        phases: &'a HashMap<PhaseKey, PhaseInfo>,
+        engine: &'a DecodeEngine<'a>,
+    ) -> DecodeStack<'a> {
+        let interval = dc.throttle.interval_s.max(1e-6);
+        let wait = dc.throttle.max_queue_wait_s;
+        // Backstop against config pathologies: every iteration either
+        // emits tokens, serves a prefill chunk, launches a prefill, or
+        // advances the clock, so the budget (grown per accepted
+        // request) sits far above any legitimate run.
+        let ops_budget =
+            4 * ((dc.duration_s + wait) / interval).ceil() as u64 + 1024;
+        DecodeStack {
+            cfg,
+            dc,
+            phases,
+            engine,
+            serve_engine: Engine::new(cfg),
+            state: ServeState::new(),
+            kv: KvPool::new(dc.kv),
+            ctl: AdmissionController::new(cfg, dc.throttle, dc.max_prefill_batch),
+            tel: DecodeTelemetry::new(),
+            interval,
+            wait,
+            max_running: dc.max_running.max(1),
+            pending: VecDeque::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            partial: None,
+            chunk_turn: true,
+            t: 0.0,
+            admit_block_until: 0.0,
+            window_cost: BatchCost::zero(),
+            window_end: interval,
+            dec_sm_flops: 0.0,
+            dec_ff_ops: 0.0,
+            dec_l2_bytes: 0.0,
+            dec_kv_bytes: 0.0,
+            dec_mha_busy: 0.0,
+            dec_ff_busy: 0.0,
+            sim_windows: 0,
+            ops: 0,
+            ops_budget,
+            done: false,
+            horizon_s: 0.0,
+            pending_kv_bytes: 0.0,
+            ewma_ttft_s: 0.0,
+            ewma_itl_s: 0.0,
+        }
     }
 
-    let serve_engine = Engine::new(cfg);
-    let mut state = ServeState::new();
-    let mut kv = KvPool::new(dc.kv);
-    let interval = dc.throttle.interval_s.max(1e-6);
-    let wait = dc.throttle.max_queue_wait_s;
-    let max_running = dc.max_running.max(1);
+    fn peak_kv_of(&self, r: &Request) -> f64 {
+        self.engine
+            .workload(r.model, r.variant)
+            .peak_kv_bytes(r.seq, r.out_tokens.max(1))
+    }
 
-    // Backstop against config pathologies: every iteration either emits
-    // tokens, serves a prefill chunk, launches a prefill, or advances
-    // the clock by ≥ one control window, so this cap is far above any
-    // legitimate run.
-    let total_tokens: u64 = reqs.iter().map(|r| r.out_tokens.max(1) as u64).sum();
-    let total_chunks: u64 = if dc.chunk_tokens > 0 {
-        reqs.iter()
-            .map(|r| ((r.seq + dc.chunk_tokens - 1) / dc.chunk_tokens) as u64)
-            .sum()
-    } else {
-        0
-    };
-    let max_ops = 4 * (total_tokens
-        + total_chunks
-        + reqs.len() as u64
-        + ((dc.duration_s + wait) / interval).ceil() as u64)
-        + 1024;
+    fn record_ttft(&mut self, sample_s: f64) {
+        self.tel.ttft_us.record(us(sample_s));
+        self.ewma_ttft_s =
+            cluster::ewma(self.ewma_ttft_s, sample_s, self.tel.ttft_us.count() == 1);
+    }
 
-    let mut waiting: VecDeque<Request> = VecDeque::new();
-    let mut running: Vec<ActiveGen> = Vec::new();
-    // The chunk lane (chunk_tokens > 0 only): at most one prompt
-    // mid-chunking, and an alternation flag forcing one decode step
-    // between consecutive chunks while generations are running.
-    let mut partial: Option<PartialPrefill> = None;
-    let mut chunk_turn = true;
-    let mut next = 0usize;
-    let mut t = 0.0f64;
-    // Thermal deferral gate: no prefill attempts before this time.
-    let mut admit_block_until = 0.0f64;
-    // Work already admitted in the current control window (priced as
-    // background so sustained launches accumulate heat).
-    let mut window_cost = BatchCost::zero();
-    let mut window_end = interval;
-    // Decode-phase accumulators for the end-of-run energy model.
-    let mut dec_sm_flops = 0.0f64;
-    let mut dec_ff_ops = 0.0f64;
-    let mut dec_l2_bytes = 0.0f64;
-    let mut dec_kv_bytes = 0.0f64;
-    let mut dec_mha_busy = 0.0f64;
-    let mut dec_ff_busy = 0.0f64;
-    // Simulated control windows elapsed (what `control_windows` reports;
-    // the controller's own counter counts admission *decisions*).
-    let mut sim_windows = 0u64;
-    let mut ops = 0u64;
+    fn record_itl(&mut self, sample_s: f64) {
+        self.tel.itl_us.record(us(sample_s));
+        self.ewma_itl_s =
+            cluster::ewma(self.ewma_itl_s, sample_s, self.tel.itl_us.count() == 1);
+    }
 
-    loop {
+    /// Run the stack to completion and extract its outcome. (The
+    /// cluster calls this once the arrival stream is exhausted.)
+    pub fn finish(mut self) -> DecodeStackOutcome {
+        while !self.done {
+            if let Advance::Stop = self.advance(None) {
+                break;
+            }
+        }
+        // Decode-phase energy (prefill energy came through
+        // serve_batch): SM + ReRAM dynamic/static over their busy
+        // windows, L2 traffic, and the DRAM-side KV stream. Skipped for
+        // a stack that never saw a request, as the pre-cluster path
+        // returned before the fold.
+        if self.tel.submitted > 0 {
+            self.tel.energy_j +=
+                power::sm_energy_j(self.cfg, self.dec_sm_flops, self.dec_mha_busy, 1.0)
+                    + power::reram_energy_j(self.cfg, self.dec_ff_ops, self.dec_ff_busy)
+                    + power::mc_energy_j(self.cfg, self.dec_l2_bytes, self.dec_mha_busy)
+                    + power::dram_energy_j(self.dec_kv_bytes);
+        }
+        DecodeStackOutcome {
+            telemetry: self.tel,
+            peak_c: self.ctl.peak_c,
+            reram_peak_c: self.ctl.reram_peak_c,
+            throttle_events: self.ctl.events.len() as u64,
+            windows: self.sim_windows,
+        }
+    }
+
+    /// One scheduling decision at the current clock. With a deadline,
+    /// idle jumps clamp to it (the cluster regains control there);
+    /// without one, a fully drained stack marks itself done.
+    fn advance(&mut self, deadline: Option<f64>) -> Advance {
         // Window bookkeeping on the simulated clock (O(1) even across
         // long idle jumps; the while is a float-rounding backstop).
-        if t >= window_end {
+        if self.t >= self.window_end {
             // Close the window's thermal book first: decode-heavy
             // stretches make no admission calls, so the committed
             // running batch plus this window's admitted work is
             // recorded here.
-            let mut closing = decode_background(engine, &running, interval);
-            closing.add(&window_cost);
-            ctl.observe(&closing);
-            let mut k = ((t - window_end) / interval).floor() as u64 + 1;
-            window_end += k as f64 * interval;
-            while t >= window_end {
-                window_end += interval;
+            let mut closing = decode_background(self.engine, &self.running, self.interval);
+            closing.add(&self.window_cost);
+            self.ctl.observe(&closing);
+            let mut k = ((self.t - self.window_end) / self.interval).floor() as u64 + 1;
+            self.window_end += k as f64 * self.interval;
+            while self.t >= self.window_end {
+                self.window_end += self.interval;
                 k += 1;
             }
-            sim_windows += k;
-            window_cost = BatchCost::zero();
+            self.sim_windows += k;
+            self.window_cost = BatchCost::zero();
         }
 
         // 1. Ingest arrivals due by now; refuse outright what can never
         //    fit the stack's cache budget.
-        while next < reqs.len() && reqs[next].arrival_s <= t {
-            let r = &reqs[next];
-            let dw = engine.workload(r.model, r.variant);
-            if dw.peak_kv_bytes(r.seq, r.out_tokens.max(1)) > kv.capacity_bytes() {
-                tel.refused_kv += 1;
-            } else {
-                waiting.push_back(r.clone());
+        while let Some(front) = self.pending.front() {
+            if front.arrival_s > self.t {
+                break;
             }
-            next += 1;
+            let r = self.pending.pop_front().expect("front just checked");
+            if self.peak_kv_of(&r) > self.kv.capacity_bytes() {
+                self.tel.refused_kv += 1;
+            } else {
+                self.waiting.push_back(r);
+            }
         }
 
-        // 2. Age out waiting requests past the queue bound.
-        let before = waiting.len();
-        waiting.retain(|r| t - r.arrival_s <= wait);
-        tel.shed += (before - waiting.len()) as u64;
+        // 2. Age out waiting requests past the queue bound (their
+        //    ledgered peaks leave the committed total with them).
+        let before = self.waiting.len();
+        let (t, wait) = (self.t, self.wait);
+        let engine = self.engine;
+        let mut shed_kv = 0.0f64;
+        self.waiting.retain(|r| {
+            if t - r.arrival_s <= wait {
+                true
+            } else {
+                shed_kv += engine
+                    .workload(r.model, r.variant)
+                    .peak_kv_bytes(r.seq, r.out_tokens.max(1));
+                false
+            }
+        });
+        self.tel.shed += (before - self.waiting.len()) as u64;
+        self.pending_kv_bytes = (self.pending_kv_bytes - shed_kv).max(0.0);
 
         // 3. Advance prefill work. The chunk lane (chunking only) takes
         //    precedence: it continues the in-flight partial prompt, or
@@ -338,22 +499,23 @@ pub(crate) fn serve_stack(
         //    token-budget-capped when chunking is on, exactly the
         //    pre-chunking path when it is off.
         let mut launched = false;
-        let chunking = dc.chunk_tokens > 0;
-        if chunking && t >= admit_block_until && (running.is_empty() || chunk_turn) {
+        let chunking = self.dc.chunk_tokens > 0;
+        if chunking
+            && self.t >= self.admit_block_until
+            && (self.running.is_empty() || self.chunk_turn)
+        {
             // Pick the chunk job: the partial already holding its
             // reservation, else the un-popped queue head (it stays
             // ageable in `waiting` until its first chunk is admitted).
-            let job: Option<(Request, usize, f64, f64)> = match partial.take() {
+            let job: Option<(Request, usize, f64, f64)> = match self.partial.take() {
                 Some(p) => Some((p.req, p.done, p.peak_kv, p.used_kv)),
-                None if running.len() < max_running
-                    && !waiting.is_empty()
-                    && waiting[0].seq > dc.chunk_tokens =>
+                None if self.running.len() < self.max_running
+                    && !self.waiting.is_empty()
+                    && self.waiting[0].seq > self.dc.chunk_tokens =>
                 {
-                    let r = &waiting[0];
-                    let peak = engine
-                        .workload(r.model, r.variant)
-                        .peak_kv_bytes(r.seq, r.out_tokens.max(1));
-                    if kv.would_fit(peak) {
+                    let r = &self.waiting[0];
+                    let peak = self.peak_kv_of(r);
+                    if self.kv.would_fit(peak) {
                         Some((r.clone(), 0, peak, 0.0))
                     } else {
                         None
@@ -362,61 +524,70 @@ pub(crate) fn serve_stack(
                 None => None,
             };
             if let Some((req, mut done, peak_kv, mut used_kv)) = job {
-                let c = dc.chunk_tokens.min(req.seq - done);
+                let c = self.dc.chunk_tokens.min(req.seq - done);
                 let mut chunk_req = req.clone();
                 chunk_req.seq = c;
-                let batch = Batch { requests: vec![chunk_req], ready_s: t };
-                let info = phases[&(req.model, req.variant, c)];
+                let batch = Batch { requests: vec![chunk_req], ready_s: self.t };
+                let info = self.phases[&(req.model, req.variant, c)];
                 let surcharge =
-                    engine.chunk_attn_cost(req.model, req.variant, c, done);
+                    self.engine.chunk_attn_cost(req.model, req.variant, c, done);
                 let cost = BatchCost {
                     sm_s: info.mha_s + surcharge.mha_s,
                     ff_s: info.ff_s,
                     active_frac: info.active_frac,
                 };
-                let mut background = decode_background(engine, &running, interval);
-                background.add(&window_cost);
-                let (admitted, _deferred) =
-                    ctl.admit_with_background(t, vec![batch], &[cost], background);
+                let mut background =
+                    decode_background(self.engine, &self.running, self.interval);
+                background.add(&self.window_cost);
+                let (admitted, _deferred) = self.ctl.admit_with_background(
+                    self.t,
+                    vec![batch],
+                    &[cost],
+                    background,
+                );
                 if let Some(batch) = admitted.into_iter().next() {
                     if done == 0 {
                         // First chunk: the prompt commits — leave the
                         // queue, hold the peak reservation to EOS.
-                        waiting.pop_front();
-                        let ok = kv.try_reserve(peak_kv);
+                        self.waiting.pop_front();
+                        self.pending_kv_bytes =
+                            (self.pending_kv_bytes - peak_kv).max(0.0);
+                        let ok = self.kv.try_reserve(peak_kv);
                         debug_assert!(ok, "reservation was pre-checked");
                     }
-                    let out = serve_engine
-                        .serve_batch(&mut state, &batch)
+                    let out = self
+                        .serve_engine
+                        .serve_batch(&mut self.state, &batch)
                         .expect("chunk batch is non-empty");
                     // The prior-prefix attention runs on the SM tiers
                     // right after the chunk's own phases.
                     let end = out.finish_s + surcharge.mha_s;
-                    state.sm_free = state.sm_free.max(end);
-                    t = end;
-                    window_cost.add(&cost);
-                    tel.prefill_chunks += 1;
-                    tel.sm_busy_s += out.sm_busy_s + surcharge.mha_s;
-                    tel.reram_busy_s += out.reram_busy_s;
-                    tel.energy_j += out.energy_j;
-                    dec_mha_busy += surcharge.mha_s;
-                    dec_sm_flops += surcharge.sm_flops;
-                    dec_kv_bytes += surcharge.kv_read_bytes;
-                    let dw = engine.workload(req.model, req.variant);
+                    self.state.sm_free = self.state.sm_free.max(end);
+                    self.t = end;
+                    self.window_cost.add(&cost);
+                    self.tel.prefill_chunks += 1;
+                    self.tel.sm_busy_s += out.sm_busy_s + surcharge.mha_s;
+                    self.tel.reram_busy_s += out.reram_busy_s;
+                    self.tel.energy_j += out.energy_j;
+                    self.dec_mha_busy += surcharge.mha_s;
+                    self.dec_sm_flops += surcharge.sm_flops;
+                    self.dec_kv_bytes += surcharge.kv_read_bytes;
+                    let dw = self.engine.workload(req.model, req.variant);
                     let grow = dw.kv_bytes(done + c, 0) - dw.kv_bytes(done, 0);
-                    kv.grow(grow);
+                    self.kv.grow(grow);
                     used_kv += grow;
                     done += c;
                     if done >= req.seq {
                         // Prompt complete: the prefill emits the first
                         // token, exactly like the whole-batch path.
                         let first = dw.kv_bytes(req.seq, 1) - dw.kv_bytes(req.seq, 0);
-                        kv.grow(first);
+                        self.kv.grow(first);
                         used_kv += first;
                         let out_tokens = req.out_tokens.max(1);
-                        tel.prefill_batches += 1;
-                        tel.tokens_out += 1;
-                        tel.ttft_us.record(us(t - req.arrival_s));
+                        self.tel.prefill_batches += 1;
+                        self.tel.tokens_out += 1;
+                        let sample = self.t - req.arrival_s;
+                        self.record_ttft(sample);
                         let a = ActiveGen {
                             model: req.model,
                             variant: req.variant,
@@ -424,31 +595,35 @@ pub(crate) fn serve_stack(
                             out_tokens,
                             arrival_s: req.arrival_s,
                             generated: 1,
-                            first_token_s: t,
-                            last_token_s: t,
+                            first_token_s: self.t,
+                            last_token_s: self.t,
                             peak_kv,
                             used_kv,
                         };
                         if a.generated >= a.out_tokens {
-                            retire(&mut tel, &mut kv, a);
+                            retire(&mut self.tel, &mut self.kv, a);
                         } else {
-                            running.push(a);
+                            self.running.push(a);
                         }
-                        tel.peak_running = tel.peak_running.max(running.len() as u64);
+                        self.tel.peak_running =
+                            self.tel.peak_running.max(self.running.len() as u64);
                     } else {
-                        partial = Some(PartialPrefill { req, done, peak_kv, used_kv });
+                        self.partial =
+                            Some(PartialPrefill { req, done, peak_kv, used_kv });
                     }
-                    tel.peak_kv_bytes = tel.peak_kv_bytes.max(kv.used_bytes());
-                    chunk_turn = false;
+                    self.tel.peak_kv_bytes =
+                        self.tel.peak_kv_bytes.max(self.kv.used_bytes());
+                    self.chunk_turn = false;
                     launched = true;
                 } else {
                     // Thermally deferred: hold the chunk lane for the
                     // rest of this control window; an in-flight partial
                     // keeps its reservation, an unpromoted head stays
                     // queued (and ageable).
-                    admit_block_until = window_end;
+                    self.admit_block_until = self.window_end;
                     if done > 0 {
-                        partial = Some(PartialPrefill { req, done, peak_kv, used_kv });
+                        self.partial =
+                            Some(PartialPrefill { req, done, peak_kv, used_kv });
                     }
                 }
             }
@@ -461,31 +636,35 @@ pub(crate) fn serve_stack(
         // otherwise a queue of short prompts would launch budget-sized
         // batches back to back and stack stalls the budget exists to
         // bound.
-        let room = max_running.saturating_sub(running.len());
+        let room = self.max_running.saturating_sub(self.running.len());
         if !launched
-            && partial.is_none()
+            && self.partial.is_none()
             && room > 0
-            && !waiting.is_empty()
-            && t >= admit_block_until
-            && (!chunking || waiting[0].seq <= dc.chunk_tokens)
-            && (!chunking || running.is_empty() || chunk_turn)
+            && !self.waiting.is_empty()
+            && self.t >= self.admit_block_until
+            && (!chunking || self.waiting[0].seq <= self.dc.chunk_tokens)
+            && (!chunking || self.running.is_empty() || self.chunk_turn)
         {
-            let head = (waiting[0].model, waiting[0].variant);
-            let cap = room.min(dc.max_prefill_batch).min(ctl.batch_cap).max(1);
+            let head = (self.waiting[0].model, self.waiting[0].variant);
+            let cap = room
+                .min(self.dc.max_prefill_batch)
+                .min(self.ctl.batch_cap)
+                .max(1);
             let mut cand = 0usize;
             let mut kv_need = 0.0f64;
             let mut tok_need = 0usize;
-            for r in waiting.iter() {
+            for r in self.waiting.iter() {
                 if cand >= cap || (r.model, r.variant) != head {
                     break;
                 }
-                if chunking && cand > 0 && tok_need + r.seq > dc.chunk_tokens {
+                if chunking && cand > 0 && tok_need + r.seq > self.dc.chunk_tokens {
                     break;
                 }
-                let peak = engine
+                let peak = self
+                    .engine
                     .workload(r.model, r.variant)
                     .peak_kv_bytes(r.seq, r.out_tokens.max(1));
-                if !kv.would_fit(kv_need + peak) {
+                if !self.kv.would_fit(kv_need + peak) {
                     break;
                 }
                 kv_need += peak;
@@ -494,40 +673,49 @@ pub(crate) fn serve_stack(
             }
             if cand > 0 {
                 let batch = Batch {
-                    requests: waiting.iter().take(cand).cloned().collect(),
-                    ready_s: t,
+                    requests: self.waiting.iter().take(cand).cloned().collect(),
+                    ready_s: self.t,
                 };
-                let info = phases[&(head.0, head.1, batch.seq())];
+                let info = self.phases[&(head.0, head.1, batch.seq())];
                 let n = cand as f64;
                 let cost = BatchCost {
                     sm_s: info.mha_s * n,
                     ff_s: info.ff_s * n,
                     active_frac: info.active_frac,
                 };
-                let mut background = decode_background(engine, &running, interval);
-                background.add(&window_cost);
-                let (admitted, _deferred) =
-                    ctl.admit_with_background(t, vec![batch], &[cost], background);
+                let mut background =
+                    decode_background(self.engine, &self.running, self.interval);
+                background.add(&self.window_cost);
+                let (admitted, _deferred) = self.ctl.admit_with_background(
+                    self.t,
+                    vec![batch],
+                    &[cost],
+                    background,
+                );
                 if let Some(batch) = admitted.into_iter().next() {
-                    let out = serve_engine
-                        .serve_batch(&mut state, &batch)
+                    let out = self
+                        .serve_engine
+                        .serve_batch(&mut self.state, &batch)
                         .expect("prefill batch is non-empty");
-                    window_cost.add(&cost);
-                    tel.prefill_batches += 1;
-                    tel.sm_busy_s += out.sm_busy_s;
-                    tel.reram_busy_s += out.reram_busy_s;
-                    tel.energy_j += out.energy_j;
-                    t = out.finish_s;
-                    for r in waiting.drain(..cand) {
-                        let dw = engine.workload(r.model, r.variant);
+                    self.window_cost.add(&cost);
+                    self.tel.prefill_batches += 1;
+                    self.tel.sm_busy_s += out.sm_busy_s;
+                    self.tel.reram_busy_s += out.reram_busy_s;
+                    self.tel.energy_j += out.energy_j;
+                    self.t = out.finish_s;
+                    for r in self.waiting.drain(..cand).collect::<Vec<_>>() {
+                        let dw = self.engine.workload(r.model, r.variant);
                         let out_tokens = r.out_tokens.max(1);
                         let peak = dw.peak_kv_bytes(r.seq, out_tokens);
-                        let ok = kv.try_reserve(peak);
+                        self.pending_kv_bytes =
+                            (self.pending_kv_bytes - peak).max(0.0);
+                        let ok = self.kv.try_reserve(peak);
                         debug_assert!(ok, "reservation was pre-checked");
                         let used = dw.kv_bytes(r.seq, 1);
-                        kv.grow(used);
-                        tel.tokens_out += 1;
-                        tel.ttft_us.record(us(t - r.arrival_s));
+                        self.kv.grow(used);
+                        self.tel.tokens_out += 1;
+                        let sample = self.t - r.arrival_s;
+                        self.record_ttft(sample);
                         let a = ActiveGen {
                             model: r.model,
                             variant: r.variant,
@@ -535,148 +723,262 @@ pub(crate) fn serve_stack(
                             out_tokens,
                             arrival_s: r.arrival_s,
                             generated: 1,
-                            first_token_s: t,
-                            last_token_s: t,
+                            first_token_s: self.t,
+                            last_token_s: self.t,
                             peak_kv: peak,
                             used_kv: used,
                         };
                         if a.generated >= a.out_tokens {
-                            retire(&mut tel, &mut kv, a);
+                            retire(&mut self.tel, &mut self.kv, a);
                         } else {
-                            running.push(a);
+                            self.running.push(a);
                         }
                     }
-                    tel.peak_running = tel.peak_running.max(running.len() as u64);
-                    tel.peak_kv_bytes = tel.peak_kv_bytes.max(kv.used_bytes());
+                    self.tel.peak_running =
+                        self.tel.peak_running.max(self.running.len() as u64);
+                    self.tel.peak_kv_bytes =
+                        self.tel.peak_kv_bytes.max(self.kv.used_bytes());
                     if chunking {
-                        chunk_turn = false;
+                        self.chunk_turn = false;
                     }
                     launched = true;
                 } else {
                     // Thermally deferred: hold admissions for the rest
                     // of this control window.
-                    admit_block_until = window_end;
+                    self.admit_block_until = self.window_end;
                 }
             }
         }
 
-        if !launched && !running.is_empty() {
+        if !launched && !self.running.is_empty() {
             // 4. One decode step over the whole running set.
-            let groups = step_groups(engine, &running);
-            let sc = engine.step_cost(&groups);
-            let start = t;
+            let groups = step_groups(self.engine, &self.running);
+            let sc = self.engine.step_cost(&groups);
+            let start = self.t;
             let end = start + sc.wall_s;
-            state.sm_free = state.sm_free.max(start + sc.mha_s);
-            state.reram_free = state.reram_free.max(end);
-            t = end;
-            tel.decode_steps += 1;
-            tel.sm_busy_s += sc.mha_s;
-            tel.reram_busy_s += sc.ff_s;
-            dec_mha_busy += sc.mha_s;
-            dec_ff_busy += sc.ff_s;
-            dec_sm_flops += sc.sm_flops;
-            dec_ff_ops += sc.ff_ops;
-            dec_l2_bytes += sc.l2_bytes;
-            dec_kv_bytes += sc.kv_read_bytes;
+            self.state.sm_free = self.state.sm_free.max(start + sc.mha_s);
+            self.state.reram_free = self.state.reram_free.max(end);
+            self.t = end;
+            self.tel.decode_steps += 1;
+            self.tel.sm_busy_s += sc.mha_s;
+            self.tel.reram_busy_s += sc.ff_s;
+            self.dec_mha_busy += sc.mha_s;
+            self.dec_ff_busy += sc.ff_s;
+            self.dec_sm_flops += sc.sm_flops;
+            self.dec_ff_ops += sc.ff_ops;
+            self.dec_l2_bytes += sc.l2_bytes;
+            self.dec_kv_bytes += sc.kv_read_bytes;
 
             let mut i = 0;
-            while i < running.len() {
-                let a = &mut running[i];
-                a.generated += 1;
-                tel.itl_us.record(us(end - a.last_token_s));
-                a.last_token_s = end;
-                let grow = engine.workload(a.model, a.variant).kv_bytes_per_token();
-                kv.grow(grow);
-                a.used_kv += grow;
-                tel.tokens_out += 1;
-                if a.generated >= a.out_tokens {
-                    let done = running.remove(i);
-                    retire(&mut tel, &mut kv, done);
+            while i < self.running.len() {
+                let (gap, model, variant) = {
+                    let a = &mut self.running[i];
+                    a.generated += 1;
+                    let gap = end - a.last_token_s;
+                    a.last_token_s = end;
+                    (gap, a.model, a.variant)
+                };
+                self.record_itl(gap);
+                let grow = self.engine.workload(model, variant).kv_bytes_per_token();
+                self.kv.grow(grow);
+                self.running[i].used_kv += grow;
+                self.tel.tokens_out += 1;
+                if self.running[i].generated >= self.running[i].out_tokens {
+                    let done = self.running.remove(i);
+                    retire(&mut self.tel, &mut self.kv, done);
                 } else {
                     i += 1;
                 }
             }
-            tel.kv_used_kib.record((kv.used_bytes() / 1024.0).round() as u64);
-            tel.peak_kv_bytes = tel.peak_kv_bytes.max(kv.used_bytes());
-            chunk_turn = true;
+            self.tel
+                .kv_used_kib
+                .record((self.kv.used_bytes() / 1024.0).round() as u64);
+            self.tel.peak_kv_bytes = self.tel.peak_kv_bytes.max(self.kv.used_bytes());
+            self.chunk_turn = true;
             launched = true;
         }
 
         if !launched {
-            // 5. Idle: advance to the next meaningful instant.
-            let pending = partial.is_some() || !waiting.is_empty();
-            if pending && t < admit_block_until {
-                t = admit_block_until;
-            } else if !pending && next < reqs.len() {
-                t = reqs[next].arrival_s;
-            } else if !pending {
-                break;
+            // 5. Idle: advance to the next meaningful instant (clamped
+            //    to the cluster's deadline, where control returns so an
+            //    arrival at that instant is visible before the next
+            //    decision — exactly the pre-cluster ingest order).
+            let pending_work = self.partial.is_some() || !self.waiting.is_empty();
+            if pending_work && self.t < self.admit_block_until {
+                match deadline {
+                    Some(d) if self.admit_block_until > d => {
+                        self.t = d;
+                        return Advance::Stop;
+                    }
+                    _ => self.t = self.admit_block_until,
+                }
+            } else if !pending_work && !self.pending.is_empty() {
+                // Jump to the next routed arrival (it is strictly ahead
+                // of the clock — ingest above drained everything due),
+                // clamped to the deadline: the trait contract promises
+                // never to advance past it, even for a caller that
+                // pushes arrivals further ahead than the cluster does.
+                let next_arrival = self.pending.front().expect("non-empty").arrival_s;
+                match deadline {
+                    Some(d) if next_arrival > d => {
+                        self.t = self.t.max(d);
+                        return Advance::Stop;
+                    }
+                    _ => self.t = next_arrival,
+                }
+            } else if !pending_work {
+                match deadline {
+                    Some(d) => {
+                        self.t = self.t.max(d);
+                        return Advance::Stop;
+                    }
+                    None => {
+                        self.done = true;
+                        return Advance::Stop;
+                    }
+                }
             } else {
                 // Defensive: pending prefill work unlaunchable with an
                 // empty pool cannot happen (refusal is checked at
                 // ingest, partial reservations are pre-checked), but
                 // never spin — shed it and move on.
-                if let Some(p) = partial.take() {
-                    kv.release(p.peak_kv, p.used_kv);
-                } else {
-                    waiting.pop_front();
+                if let Some(p) = self.partial.take() {
+                    self.kv.release(p.peak_kv, p.used_kv);
+                } else if let Some(r) = self.waiting.pop_front() {
+                    let peak = self.peak_kv_of(&r);
+                    self.pending_kv_bytes = (self.pending_kv_bytes - peak).max(0.0);
                 }
-                tel.shed += 1;
+                self.tel.shed += 1;
             }
         }
 
-        ops += 1;
-        if ops >= max_ops {
+        self.ops += 1;
+        if self.ops >= self.ops_budget {
             // Conservation even on abort: un-ingested arrivals count as
             // shed too, so completed + shed + refused_kv == submitted.
-            tel.shed += waiting.len() as u64
-                + running.len() as u64
-                + partial.is_some() as u64
-                + (reqs.len() - next) as u64;
-            for a in running.drain(..) {
-                kv.release(a.peak_kv, a.used_kv);
+            self.tel.shed += self.waiting.len() as u64
+                + self.running.len() as u64
+                + self.partial.is_some() as u64
+                + self.pending.len() as u64;
+            for a in self.running.drain(..) {
+                self.kv.release(a.peak_kv, a.used_kv);
             }
-            if let Some(p) = partial.take() {
-                kv.release(p.peak_kv, p.used_kv);
+            if let Some(p) = self.partial.take() {
+                self.kv.release(p.peak_kv, p.used_kv);
             }
-            waiting.clear();
-            break;
+            self.waiting.clear();
+            self.pending.clear();
+            self.pending_kv_bytes = 0.0;
+            self.done = true;
+            return Advance::Stop;
+        }
+        Advance::Progress
+    }
+}
+
+impl ClusterStack for DecodeStack<'_> {
+    fn step_until(&mut self, deadline_s: f64) {
+        // Strict `<`: a decision at exactly the deadline waits for the
+        // arrival at that instant to be routed first.
+        while !self.done && self.t < deadline_s {
+            if let Advance::Stop = self.advance(Some(deadline_s)) {
+                break;
+            }
         }
     }
 
-    // Decode-phase energy (prefill energy came through serve_batch):
-    // SM + ReRAM dynamic/static over their busy windows, L2 traffic,
-    // and the DRAM-side KV stream.
-    tel.energy_j += power::sm_energy_j(cfg, dec_sm_flops, dec_mha_busy, 1.0)
-        + power::reram_energy_j(cfg, dec_ff_ops, dec_ff_busy)
-        + power::mc_energy_j(cfg, dec_l2_bytes, dec_mha_busy)
-        + power::dram_energy_j(dec_kv_bytes);
-
-    DecodeStackOutcome {
-        telemetry: tel,
-        peak_c: ctl.peak_c,
-        reram_peak_c: ctl.reram_peak_c,
-        throttle_events: ctl.events.len() as u64,
-        windows: sim_windows,
+    fn snapshot(&self, stack: usize) -> StackSnapshot {
+        let queued_steps: u64 = self
+            .waiting
+            .iter()
+            .chain(self.pending.iter())
+            .map(|r| r.out_tokens.max(1) as u64)
+            .sum();
+        let partial_steps = self
+            .partial
+            .as_ref()
+            .map(|p| p.req.out_tokens.max(1) as u64)
+            .unwrap_or(0);
+        let running_steps: u64 = self
+            .running
+            .iter()
+            .map(|a| (a.out_tokens - a.generated) as u64)
+            .sum();
+        StackSnapshot {
+            stack,
+            horizon_s: self.horizon_s,
+            queue_depth: self.waiting.len()
+                + self.pending.len()
+                + self.partial.is_some() as usize,
+            running: self.running.len(),
+            slots: self.max_running,
+            outstanding_steps: running_steps + queued_steps + partial_steps,
+            kv_committed_bytes: self.kv.reserved_bytes() + self.pending_kv_bytes,
+            kv_capacity_bytes: self.kv.capacity_bytes(),
+            reram_c: self.ctl.last_reram_c,
+            ewma_ttft_s: self.ewma_ttft_s,
+            ewma_itl_s: self.ewma_itl_s,
+        }
     }
+
+    fn push(&mut self, req: Request) {
+        self.tel.submitted += 1;
+        if self.done {
+            // The ops backstop already aborted this stack: it will
+            // never serve again, so count the arrival as shed on the
+            // spot — conservation (completed + shed + refused_kv ==
+            // submitted) survives even the pathological abort path.
+            self.tel.shed += 1;
+            return;
+        }
+        let est = est_service_s(self.engine, self.phases, &req);
+        self.horizon_s = self.horizon_s.max(req.arrival_s) + est;
+        let peak = self.peak_kv_of(&req);
+        if peak <= self.kv.capacity_bytes() {
+            // Oversized requests are refused at ingest and never charge
+            // the committed ledger — the same convention the policies
+            // use.
+            self.pending_kv_bytes += peak;
+        }
+        let chunks = if self.dc.chunk_tokens > 0 {
+            req.seq.div_ceil(self.dc.chunk_tokens) as u64
+        } else {
+            0
+        };
+        self.ops_budget += 4 * (req.out_tokens.max(1) as u64 + chunks + 1);
+        self.pending.push_back(req);
+    }
+}
+
+/// Run one stack's decode loop over a complete (arrival-sorted) shard:
+/// the pre-cluster serial path, kept as the equivalence oracle and for
+/// single-shard callers. Byte-identical to driving the same shard
+/// through the cluster stepper (pinned by tests in `decodetest`).
+pub(crate) fn serve_stack(
+    cfg: &Config,
+    dc: &DecodeConfig,
+    phases: &HashMap<PhaseKey, PhaseInfo>,
+    engine: &DecodeEngine,
+    reqs: &[Request],
+) -> DecodeStackOutcome {
+    let mut stack = DecodeStack::new(cfg, dc, phases, engine);
+    for r in reqs {
+        stack.push(r.clone());
+    }
+    stack.finish()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::traffic::loadtest;
+    use crate::traffic::phases;
 
     fn run_one(reqs: Vec<Request>, dc: &DecodeConfig) -> DecodeStackOutcome {
         let cfg = Config::default();
-        let phases = loadtest::phase_table_with_chunks(&cfg, &reqs, dc.chunk_tokens, 1);
-        let mut keys: Vec<(ModelId, ArchVariant)> = Vec::new();
-        for r in &reqs {
-            if !keys.contains(&(r.model, r.variant)) {
-                keys.push((r.model, r.variant));
-            }
-        }
+        let table = phases::phase_table_with_chunks(&cfg, &reqs, dc.chunk_tokens, 1);
+        let keys = phases::decode_keys(&reqs);
         let engine = DecodeEngine::build(&cfg, &keys);
-        serve_stack(&cfg, dc, &phases, &engine, &reqs)
+        serve_stack(&cfg, dc, &table, &engine, &reqs)
     }
 
     fn gen_req(id: u64, arrival: f64, prompt: usize, out: usize) -> Request {
@@ -753,6 +1055,79 @@ mod tests {
         assert_eq!(t.completed, 2);
         assert_eq!(t.peak_running, 1);
         assert_eq!(t.prefill_batches, 2, "one at a time");
+    }
+
+    #[test]
+    fn step_until_is_equivalent_to_upfront_pushes() {
+        // The resumable surface's contract in isolation: pushing at
+        // arrival instants with deadline stepping in between must land
+        // on the same outcome as pushing the whole shard up front.
+        let cfg = Config::default();
+        let dc = base_config();
+        let reqs = vec![
+            gen_req(0, 0.0, 128, 30),
+            gen_req(1, 0.004, 64, 8),
+            gen_req(2, 0.011, 128, 3),
+            gen_req(3, 0.25, 64, 5),
+        ];
+        let table = phases::phase_table_with_chunks(&cfg, &reqs, dc.chunk_tokens, 1);
+        let keys = phases::decode_keys(&reqs);
+        let engine = DecodeEngine::build(&cfg, &keys);
+
+        let upfront = serve_stack(&cfg, &dc, &table, &engine, &reqs);
+
+        let mut stepped = DecodeStack::new(&cfg, &dc, &table, &engine);
+        for r in &reqs {
+            stepped.step_until(r.arrival_s);
+            stepped.push(r.clone());
+        }
+        let stepped = stepped.finish();
+
+        let (a, b) = (&upfront.telemetry, &stepped.telemetry);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.tokens_out, b.tokens_out);
+        assert_eq!(a.decode_steps, b.decode_steps);
+        assert_eq!(a.prefill_batches, b.prefill_batches);
+        assert_eq!(a.ttft_us.percentile(99.0), b.ttft_us.percentile(99.0));
+        assert_eq!(a.itl_us.percentile(99.0), b.itl_us.percentile(99.0));
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(upfront.windows, stepped.windows);
+        assert_eq!(upfront.reram_peak_c, stepped.reram_peak_c);
+    }
+
+    #[test]
+    fn snapshot_tracks_ledgers_live() {
+        let cfg = Config::default();
+        let dc = base_config();
+        let reqs = vec![gen_req(0, 0.0, 128, 10), gen_req(1, 0.0, 128, 6)];
+        let table = phases::phase_table_with_chunks(&cfg, &reqs, 0, 1);
+        let keys = phases::decode_keys(&reqs);
+        let engine = DecodeEngine::build(&cfg, &keys);
+        let mut stack = DecodeStack::new(&cfg, &dc, &table, &engine);
+
+        let s0 = stack.snapshot(0);
+        assert_eq!(s0.queue_depth, 0);
+        assert_eq!(s0.kv_committed_bytes, 0.0);
+        assert_eq!(s0.horizon_s, 0.0);
+        assert!(s0.kv_capacity_bytes > 0.0);
+
+        stack.push(reqs[0].clone());
+        let s1 = stack.snapshot(0);
+        assert_eq!(s1.queue_depth, 1);
+        assert!(s1.horizon_s > 0.0, "horizon ledger folds the estimate");
+        assert!(s1.kv_committed_bytes > 0.0, "queued peak is committed");
+        assert_eq!(s1.outstanding_steps, 10);
+
+        stack.push(reqs[1].clone());
+        let s2 = stack.snapshot(0);
+        assert!(s2.horizon_s > s1.horizon_s);
+        assert_eq!(s2.outstanding_steps, 16);
+
+        // Serving moves commitments from the queue ledger into the pool
+        // without losing them, and the EWMAs start tracking.
+        let out = stack.finish();
+        assert_eq!(out.telemetry.completed, 2);
     }
 
     #[test]

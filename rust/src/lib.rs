@@ -13,6 +13,7 @@
 
 pub mod arch;
 pub mod baselines;
+pub mod cluster;
 pub mod config;
 pub mod experiments;
 pub mod coordinator;

@@ -162,13 +162,13 @@ COMMANDS:
   serve       coordinator serving demo [--requests N --batch N]
   loadtest    open-loop traffic run with thermal admission control
               [--pattern poisson|bursty|diurnal|replay --rps R
-               --duration S --stacks N --policy jsq|rr|kv --models a,b
+               --duration S --stacks N --policy jsq|rr|kv|latency --models a,b
                --batch N --slo S --ceiling C --uncontrolled
                --trace FILE (replay) --threads N --out BENCH_serve.json]
   decodetest  autoregressive decode run: continuous batching, KV-cache
               residency, chunked prefill, TTFT/TPOT/ITL telemetry
               [--pattern ... --rps R --duration S --stacks N
-               --policy jsq|rr|kv --models a,b
+               --policy jsq|rr|kv|latency --models a,b
                --outlen fixed:N|geometric:MEAN|lognormal:MED:SIGMA
                --max-running N (1 = one-at-a-time) --prefill-batch N
                --chunk-tokens N (0 = whole-prompt prefills)
@@ -299,6 +299,48 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The traffic flags `hetrax loadtest` and `hetrax decodetest` share —
+/// parsed by one helper so the two CLIs cannot drift.
+struct TrafficArgs {
+    pattern: ArrivalPattern,
+    models: Vec<ModelId>,
+    duration: f64,
+    stacks: usize,
+    policy: RoutePolicy,
+    threads: usize,
+    ceiling: Option<f64>,
+    uncontrolled: bool,
+}
+
+/// Parse the shared traffic surface. Unknown or missing `--policy`
+/// values are hard errors (never a silent default); `--policy` absent
+/// entirely falls back to `jsq`.
+fn parse_traffic(args: &Args, default_rps: f64, default_duration: f64) -> Result<TrafficArgs> {
+    let rps = args.get_f64("rps", default_rps)?;
+    let duration = args.get_f64("duration", default_duration)?;
+    let policy = match args.get("policy") {
+        Some(v) => RoutePolicy::parse(v)
+            .ok_or_else(|| anyhow!("unknown policy {v:?} (jsq | rr | kv | latency)"))?,
+        None if args.has("policy") => {
+            bail!("--policy needs a value (jsq | rr | kv | latency)")
+        }
+        None => RoutePolicy::JoinShortestQueue,
+    };
+    Ok(TrafficArgs {
+        pattern: parse_pattern(args, rps, duration)?,
+        models: parse_models(args)?,
+        duration,
+        stacks: args.get_usize("stacks", 1)?,
+        policy,
+        threads: args.get_usize("threads", 0)?,
+        ceiling: match args.get("ceiling") {
+            Some(v) => Some(v.parse().with_context(|| format!("--ceiling {v}"))?),
+            None => None,
+        },
+        uncontrolled: args.has("uncontrolled"),
+    })
+}
+
 /// Shared `--pattern`/`--rps`/`--burst`/`--period`/`--amplitude`/`--trace`
 /// parsing for the open-loop traffic commands (loadtest, decodetest).
 fn parse_pattern(args: &Args, rps: f64, duration: f64) -> Result<ArrivalPattern> {
@@ -348,23 +390,19 @@ fn write_report(out: &str, doc: &hetrax::util::json::Json) -> Result<()> {
 }
 
 fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
-    let rps = args.get_f64("rps", 200.0)?;
-    let duration = args.get_f64("duration", 2.0)?;
-    let pattern = parse_pattern(args, rps, duration)?;
-    let models = parse_models(args)?;
-    let policy = RoutePolicy::parse(args.get("policy").unwrap_or("jsq"))
-        .ok_or_else(|| anyhow!("unknown policy (jsq | rr | kv)"))?;
+    let t = parse_traffic(args, 200.0, 2.0)?;
 
-    let mut lt = LoadtestConfig::new(pattern, RequestMix::models(&models));
-    lt.duration_s = duration;
-    lt.stacks = args.get_usize("stacks", 1)?;
-    lt.policy = policy;
+    let mut lt = LoadtestConfig::new(t.pattern, RequestMix::models(&t.models));
+    lt.duration_s = t.duration;
+    lt.stacks = t.stacks;
+    lt.policy = t.policy;
     lt.seed = seed;
     lt.batcher.max_batch = args.get_usize("batch", 8)?;
     lt.slo_s = args.get_f64("slo", 0.25)?;
-    lt.threads = args.get_usize("threads", 0)?;
-    lt.throttle.ceiling_c = args.get_f64("ceiling", lt.throttle.ceiling_c)?;
-    lt.throttle.enabled = !args.has("uncontrolled");
+    lt.threads = t.threads;
+    lt.throttle.ceiling_c = t.ceiling.unwrap_or(lt.throttle.ceiling_c);
+    lt.throttle.enabled = !t.uncontrolled;
+    let duration = t.duration;
 
     let report = loadtest::run(cfg, &lt);
     let t = &report.total;
@@ -402,28 +440,24 @@ fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
 }
 
 fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
-    let rps = args.get_f64("rps", 300.0)?;
-    let duration = args.get_f64("duration", 1.0)?;
-    let pattern = parse_pattern(args, rps, duration)?;
-    let models = parse_models(args)?;
-    let policy = RoutePolicy::parse(args.get("policy").unwrap_or("jsq"))
-        .ok_or_else(|| anyhow!("unknown policy (jsq | rr | kv)"))?;
+    let ta = parse_traffic(args, 300.0, 1.0)?;
     let outlen = OutputLenDist::parse(args.get("outlen").unwrap_or("geometric:32"))
         .map_err(|e| anyhow!(e))?;
 
-    let mut dc = DecodeConfig::new(pattern, RequestMix::models(&models).with_output(outlen));
-    dc.duration_s = duration;
-    dc.stacks = args.get_usize("stacks", 1)?;
-    dc.policy = policy;
+    let mut dc =
+        DecodeConfig::new(ta.pattern, RequestMix::models(&ta.models).with_output(outlen));
+    dc.duration_s = ta.duration;
+    dc.stacks = ta.stacks;
+    dc.policy = ta.policy;
     dc.seed = seed;
     dc.max_running = args.get_usize("max-running", 8)?;
     dc.max_prefill_batch = args.get_usize("prefill-batch", 4)?;
     dc.chunk_tokens = args.get_usize("chunk-tokens", 0)?;
     dc.kv.capacity_bytes = args.get_f64("kv-mib", 128.0)? * 1024.0 * 1024.0;
     dc.kv.sm_frac = args.get_f64("kv-sm-frac", dc.kv.sm_frac)?;
-    dc.threads = args.get_usize("threads", 0)?;
-    dc.throttle.ceiling_c = args.get_f64("ceiling", dc.throttle.ceiling_c)?;
-    dc.throttle.enabled = !args.has("uncontrolled");
+    dc.threads = ta.threads;
+    dc.throttle.ceiling_c = ta.ceiling.unwrap_or(dc.throttle.ceiling_c);
+    dc.throttle.enabled = !ta.uncontrolled;
 
     let report = decodetest::run(cfg, &dc);
     let t = &report.total;
@@ -432,7 +466,7 @@ fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
         "decodetest {} @ {:.0} rps x {:.1}s over {} stack(s), policy {}, outlen {}",
         dc.pattern.name(),
         dc.pattern.nominal_rps(),
-        duration,
+        dc.duration_s,
         dc.stacks,
         dc.policy.name(),
         dc.mix.output.map(|d| d.describe()).unwrap_or_default()

@@ -204,7 +204,7 @@ mod tests {
         assert!(!flows.is_empty());
         // Some MC→SM, SM→ReRAM, ReRAM→SM flows must exist.
         let has = |pred: &dyn Fn(&Flow) -> bool| flows.iter().any(|f| pred(f));
-        assert!(has(&|f| f.src >= 21 && f.src < 27 && f.dst < 21), "MC→SM");
+        assert!(has(&|f| (21..27).contains(&f.src) && f.dst < 21), "MC→SM");
         assert!(has(&|f| f.src < 21 && f.dst >= 27), "SM→ReRAM");
         assert!(has(&|f| f.src >= 27 && f.dst < 21), "ReRAM→SM");
         // All byte counts positive and finite.
@@ -217,7 +217,7 @@ mod tests {
         let cfg = Config::default();
         let w = Workload::build(ModelId::BertLarge, ArchVariant::EncoderOnly, 512);
         let flows = workload_flows(&cfg, &w);
-        let mc_in: f64 = flows.iter().filter(|f| f.dst >= 21 && f.dst < 27).map(|f| f.bytes).sum();
+        let mc_in: f64 = flows.iter().filter(|f| (21..27).contains(&f.dst)).map(|f| f.bytes).sum();
         let sm_in: f64 = flows.iter().filter(|f| f.dst < 21).map(|f| f.bytes).sum();
         let per_mc = mc_in / 6.0;
         let per_sm = sm_in / 21.0;

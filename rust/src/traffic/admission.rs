@@ -116,6 +116,10 @@ pub struct AdmissionController {
     pub peak_c: f64,
     /// Highest recorded ReRAM-tier window temperature (°C).
     pub reram_peak_c: f64,
+    /// Most recent window's ReRAM-tier temperature (°C; 0 before the
+    /// first window is priced) — the live signal
+    /// [`crate::cluster::StackSnapshot::reram_c`] exposes to routing.
+    pub last_reram_c: f64,
 }
 
 impl AdmissionController {
@@ -137,6 +141,7 @@ impl AdmissionController {
             windows: 0,
             peak_c: 0.0,
             reram_peak_c: 0.0,
+            last_reram_c: 0.0,
         }
     }
 
@@ -176,7 +181,8 @@ impl AdmissionController {
     pub fn observe(&mut self, cost: &BatchCost) {
         let report = self.predict(cost.sm_s, cost.ff_s, cost.active_frac);
         self.peak_c = self.peak_c.max(report.peak_c);
-        self.reram_peak_c = self.reram_peak_c.max(report.tier_peak_c[self.reram_tier]);
+        self.last_reram_c = report.tier_peak_c[self.reram_tier];
+        self.reram_peak_c = self.reram_peak_c.max(self.last_reram_c);
     }
 
     fn prefix_cost(costs: &[BatchCost], n: usize, background: &BatchCost) -> (f64, f64, f64) {
@@ -230,6 +236,7 @@ impl AdmissionController {
         if !self.throttle.enabled {
             // Observe-only: record what the offered load does.
             self.peak_c = self.peak_c.max(offered.peak_c);
+            self.last_reram_c = offered_reram;
             self.reram_peak_c = self.reram_peak_c.max(offered_reram);
             return (batches, Vec::new());
         }
@@ -273,6 +280,7 @@ impl AdmissionController {
             (report, reram)
         };
         self.peak_c = self.peak_c.max(admitted_report.peak_c);
+        self.last_reram_c = admitted_reram;
         self.reram_peak_c = self.reram_peak_c.max(admitted_reram);
 
         let old_cap = self.batch_cap;
@@ -329,15 +337,17 @@ mod tests {
         assert!(hot > idle + 3.0, "saturated {hot} vs idle {idle}");
         // Prediction is monotone in the busy fractions.
         let mid = ctl.predict_reram_c(0.025, 0.01, 0.5);
-        assert!(idle <= mid && mid <= hot);
+        assert!((idle..=hot).contains(&mid));
     }
 
     #[test]
     fn uncontrolled_admits_everything_but_records_peaks() {
         let cfg = Config::default();
-        let mut t = ThrottleConfig::default();
-        t.enabled = false;
-        t.ceiling_c = 0.0; // would reject everything if enabled
+        let t = ThrottleConfig {
+            enabled: false,
+            ceiling_c: 0.0, // would reject everything if enabled
+            ..Default::default()
+        };
         let mut ctl = AdmissionController::new(&cfg, t, 8);
         let (adm, def) = ctl.admit(0.0, vec![batch_of(8, 0.0)], &[saturating_cost()]);
         assert_eq!(adm.len(), 1);
@@ -354,8 +364,7 @@ mod tests {
         let hot = ctl_probe.predict_reram_c(0.10, 0.04, 0.5);
         // Ceiling strictly between idle and the 2-batch offered load,
         // with margin on both sides of the 1-batch prediction.
-        let mut t = ThrottleConfig::default();
-        t.ceiling_c = idle + 0.3 * (hot - idle);
+        let t = ThrottleConfig { ceiling_c: idle + 0.3 * (hot - idle), ..Default::default() };
         let mut ctl = AdmissionController::new(&cfg, t, 8);
         let batches = vec![batch_of(8, 0.0), batch_of(8, 0.0)];
         let costs = [saturating_cost(), saturating_cost()];
@@ -386,8 +395,8 @@ mod tests {
         assert!(idle < with_one && with_one < with_bg);
 
         // Ceiling between the batch-alone and batch-plus-background peaks.
-        let mut t = ThrottleConfig::default();
-        t.ceiling_c = with_one + 0.25 * (with_bg - with_one);
+        let t =
+            ThrottleConfig { ceiling_c: with_one + 0.25 * (with_bg - with_one), ..Default::default() };
         let mut ctl = AdmissionController::new(&cfg, t, 8);
         let (adm, def) =
             ctl.admit_with_background(0.0, vec![batch_of(8, 0.0)], &[one], BatchCost::zero());

@@ -418,7 +418,7 @@ mod tests {
             let lo = start as f64 * 0.1;
             let n = reqs
                 .iter()
-                .filter(|r| r.arrival_s >= lo && r.arrival_s < lo + 0.1)
+                .filter(|r| (lo..lo + 0.1).contains(&r.arrival_s))
                 .count();
             best = best.max(n);
         }
@@ -432,7 +432,7 @@ mod tests {
         let reqs = gen(p, 5).generate(4.0);
         // Trough at t≈0 and t≈4 (sin starts at −π/2), peak at t≈2.
         let count = |lo: f64, hi: f64| {
-            reqs.iter().filter(|r| r.arrival_s >= lo && r.arrival_s < hi).count()
+            reqs.iter().filter(|r| (lo..hi).contains(&r.arrival_s)).count()
         };
         let trough = count(0.0, 0.5) + count(3.5, 4.0);
         let peak = count(1.5, 2.5);

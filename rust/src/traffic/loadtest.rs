@@ -1,24 +1,28 @@
-//! Loadtest orchestration: generate an open-loop arrival stream, shard
-//! it across engine stacks, run each stack's windowed serve loop under
-//! thermally-coupled admission control, and aggregate telemetry into the
-//! deterministic `BENCH_serve.json` document.
+//! Loadtest orchestration: generate an open-loop arrival stream, drive
+//! it through the cluster co-simulation core (`crate::cluster`) — every
+//! arrival routed live over the stacks' actual state — run each stack's
+//! windowed serve loop under thermally-coupled admission control, and
+//! aggregate telemetry into the deterministic `BENCH_serve.json`
+//! document.
 //!
 //! Determinism: arrivals come from one seeded stream; the phase table is
-//! folded in first-seen order; routing is serial; per-stack serving is a
-//! pure function of its shard and fans out over `util::pool` (results in
-//! input order); aggregation folds in stack order. A seeded loadtest is
-//! byte-identical across runs and thread counts — asserted by tests here
-//! and by the `serve_loadtest` bench.
+//! folded in first-seen order (and fans out over `util::pool`); the
+//! cluster event loop is ordered by `(virtual_time, stack_idx, seq_no)`
+//! and serial by construction; aggregation folds in stack order. A
+//! seeded loadtest is byte-identical across runs and thread counts —
+//! asserted by tests here and by the `serve_loadtest` bench. A
+//! single-stack run is byte-identical to the pre-cluster serial path
+//! (pinned by `single_stack_cluster_matches_serial_path`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
+use crate::cluster::{self, ClusterStack, StackSnapshot};
 use crate::config::Config;
 use crate::coordinator::{Batcher, BatcherConfig, Engine, Request, ServeState};
-use crate::model::{ArchVariant, ModelId, Workload};
-use crate::perf::PerfEstimator;
 use crate::traffic::admission::{AdmissionController, BatchCost, ThrottleConfig};
 use crate::traffic::generator::{ArrivalPattern, RequestMix, TrafficGen};
-use crate::traffic::router::{RouteDemand, RoutePolicy, StackRouter};
+use crate::traffic::phases::{phase_table, PhaseInfo, PhaseKey};
+use crate::traffic::router::{RoutePolicy, StackRouter};
 use crate::traffic::telemetry::StackTelemetry;
 use crate::util::json::Json;
 use crate::util::pool;
@@ -36,8 +40,10 @@ pub struct LoadtestConfig {
     pub throttle: ThrottleConfig,
     /// Latency SLO for the goodput numerator (seconds).
     pub slo_s: f64,
-    /// Worker threads for the stack fan-out (0 = auto, 1 = serial);
-    /// results are identical at any value.
+    /// Worker threads for the phase-table fan-out (0 = auto, 1 =
+    /// serial); results are identical at any value. Stack stepping
+    /// itself is serial — the cluster event loop's determinism is
+    /// structural.
     pub threads: usize,
 }
 
@@ -56,18 +62,6 @@ impl LoadtestConfig {
             threads: 0,
         }
     }
-}
-
-/// Phase-table key: one distinct (model, variant, padded seq).
-pub(crate) type PhaseKey = (ModelId, ArchVariant, usize);
-
-/// Cached per-(model, variant, seq) service demand (shared with the
-/// decode subsystem, which prices prefill batches from the same table).
-#[derive(Debug, Clone, Copy)]
-pub(crate) struct PhaseInfo {
-    pub(crate) mha_s: f64,
-    pub(crate) ff_s: f64,
-    pub(crate) active_frac: f64,
 }
 
 /// One stack's results: telemetry plus the admission controller's
@@ -224,97 +218,86 @@ impl LoadtestReport {
     }
 }
 
-/// Evaluate the phase table for every distinct (model, variant, seq) in
-/// the stream: dedupe in first-seen order, evaluate on the pool, fold
-/// serially (the DESIGN.md §Perf discipline).
-pub(crate) fn phase_table(
-    cfg: &Config,
-    requests: &[Request],
-    threads: usize,
-) -> HashMap<PhaseKey, PhaseInfo> {
-    phase_table_with_chunks(cfg, requests, 0, threads)
+/// One stack's resumable windowed serve loop: the cluster stepper
+/// pushes routed arrivals and advances the stack window by window;
+/// each window moves due arrivals into the backlog, sheds aged-out
+/// requests, forms batches under the throttled cap, lets the admission
+/// controller split admit/defer, feeds admitted batches through the
+/// engine's rolling state, and streams telemetry. Processing a window
+/// requires every arrival before its end to have been pushed, which
+/// the cluster's deadline discipline guarantees — so the decisions are
+/// identical to the pre-cluster serial loop over a complete shard.
+pub(crate) struct ServeStack<'a> {
+    lt: &'a LoadtestConfig,
+    phases: &'a HashMap<PhaseKey, PhaseInfo>,
+    engine: Engine<'a>,
+    state: ServeState,
+    ctl: AdmissionController,
+    telemetry: StackTelemetry,
+    /// Routed arrivals the window loop has not reached yet.
+    pending: VecDeque<Request>,
+    backlog: Vec<Request>,
+    t: f64,
+    interval: f64,
+    wait: f64,
+    window_i: u64,
+    max_windows: u64,
+    done: bool,
+    /// Commitment ledger: estimated completion of all accepted work
+    /// (`max(horizon, arrival) + mha + ff` per request) — the live JSQ
+    /// signal, arithmetically the retired pre-pass fold.
+    horizon_s: f64,
+    /// Rolling completion latency ([`cluster::ewma`] fold) for the
+    /// `latency` policy.
+    ewma_latency_s: f64,
 }
 
-/// [`phase_table`] extended with the chunk-sized keys chunked prefill
-/// serves through [`Engine::serve_batch`]: for every stream seq longer
-/// than `chunk_tokens`, the full-chunk size and the tail-chunk
-/// remainder. `chunk_tokens = 0` adds nothing.
-pub(crate) fn phase_table_with_chunks(
-    cfg: &Config,
-    requests: &[Request],
-    chunk_tokens: usize,
-    threads: usize,
-) -> HashMap<PhaseKey, PhaseInfo> {
-    let mut keys: Vec<PhaseKey> = Vec::new();
-    let mut seen: std::collections::HashSet<PhaseKey> = std::collections::HashSet::new();
-    let mut push = |k: PhaseKey| {
-        if seen.insert(k) {
-            keys.push(k);
+impl<'a> ServeStack<'a> {
+    pub(crate) fn new(
+        cfg: &'a Config,
+        lt: &'a LoadtestConfig,
+        phases: &'a HashMap<PhaseKey, PhaseInfo>,
+    ) -> ServeStack<'a> {
+        let interval = lt.throttle.interval_s.max(1e-6);
+        let wait = lt.throttle.max_queue_wait_s;
+        // Arrivals stop at duration_s and deferred requests age out
+        // within `wait`, so the loop terminates on its own; the hard cap
+        // is a backstop against config pathologies.
+        let max_windows = (((lt.duration_s + wait) / interval).ceil() as u64 + 64) * 4;
+        ServeStack {
+            lt,
+            phases,
+            engine: Engine::new(cfg),
+            state: ServeState::new(),
+            ctl: AdmissionController::new(cfg, lt.throttle, lt.batcher.max_batch),
+            telemetry: StackTelemetry::new(),
+            pending: VecDeque::new(),
+            backlog: Vec::new(),
+            t: 0.0,
+            interval,
+            wait,
+            window_i: 0,
+            max_windows,
+            done: false,
+            horizon_s: 0.0,
+            ewma_latency_s: 0.0,
         }
-    };
-    for r in requests {
-        push((r.model, r.variant, r.seq));
-        if chunk_tokens > 0 && r.seq > chunk_tokens {
-            push((r.model, r.variant, chunk_tokens));
-            let tail = r.seq % chunk_tokens;
-            if tail > 0 {
-                push((r.model, r.variant, tail));
+    }
+
+    /// Serve one control window `[t, t + interval)`.
+    fn run_window(&mut self) {
+        let t = self.t;
+        let wend = t + self.interval;
+        while let Some(front) = self.pending.front() {
+            if front.arrival_s >= wend {
+                break;
             }
-        }
-    }
-    let infos = pool::par_map_threads(&keys, threads, |&(model, variant, seq)| {
-        let w = Workload::build(model, variant, seq);
-        let (mha_s, ff_s) = Engine::new(cfg).phase_times(&w);
-        let est = PerfEstimator::new(cfg).estimate(&w);
-        PhaseInfo { mha_s, ff_s, active_frac: est.activity.reram_active_frac }
-    });
-    keys.into_iter().zip(infos).collect()
-}
-
-/// One stack's windowed serve loop: move arrivals into the backlog, shed
-/// aged-out requests, form batches under the throttled cap, let the
-/// admission controller split admit/defer, feed admitted batches through
-/// the engine's rolling state, and stream telemetry.
-fn serve_stack(
-    cfg: &Config,
-    lt: &LoadtestConfig,
-    phases: &HashMap<PhaseKey, PhaseInfo>,
-    reqs: &[Request],
-) -> StackOutcome {
-    let mut telemetry = StackTelemetry::new();
-    telemetry.submitted = reqs.len() as u64;
-    let mut ctl = AdmissionController::new(cfg, lt.throttle, lt.batcher.max_batch);
-    if reqs.is_empty() {
-        return StackOutcome {
-            telemetry,
-            peak_c: 0.0,
-            reram_peak_c: 0.0,
-            throttle_events: 0,
-            windows: 0,
-        };
-    }
-
-    let engine = Engine::new(cfg);
-    let mut state = ServeState::new();
-    let interval = lt.throttle.interval_s.max(1e-6);
-    let wait = lt.throttle.max_queue_wait_s;
-    // Arrivals stop at duration_s and deferred requests age out within
-    // `wait`, so the loop terminates on its own; the hard cap is a
-    // backstop against config pathologies.
-    let max_windows = (((lt.duration_s + wait) / interval).ceil() as u64 + 64) * 4;
-
-    let mut backlog: Vec<Request> = Vec::new();
-    let mut next = 0usize;
-    let mut t = 0.0f64;
-    let mut window_i = 0u64;
-    loop {
-        let wend = t + interval;
-        while next < reqs.len() && reqs[next].arrival_s < wend {
-            backlog.push(reqs[next].clone());
-            next += 1;
+            let r = self.pending.pop_front().expect("front just checked");
+            self.backlog.push(r);
         }
         let mut shed = 0u64;
-        backlog.retain(|r| {
+        let wait = self.wait;
+        self.backlog.retain(|r| {
             if wend - r.arrival_s > wait {
                 shed += 1;
                 false
@@ -322,16 +305,16 @@ fn serve_stack(
                 true
             }
         });
-        telemetry.shed += shed;
-        telemetry.queue_depth.record(backlog.len() as u64);
+        self.telemetry.shed += shed;
+        self.telemetry.queue_depth.record(self.backlog.len() as u64);
 
-        let bc = lt.batcher.with_max_batch(ctl.batch_cap);
-        let batches = Batcher::new(bc).form_batches(std::mem::take(&mut backlog));
+        let bc = self.lt.batcher.with_max_batch(self.ctl.batch_cap);
+        let batches = Batcher::new(bc).form_batches(std::mem::take(&mut self.backlog));
         let costs: Vec<BatchCost> = batches
             .iter()
             .map(|b| {
                 let probe = &b.requests[0];
-                let info = phases[&(probe.model, probe.variant, b.seq())];
+                let info = self.phases[&(probe.model, probe.variant, b.seq())];
                 let n = b.requests.len() as f64;
                 BatchCost {
                     sm_s: info.mha_s * n,
@@ -340,47 +323,102 @@ fn serve_stack(
                 }
             })
             .collect();
-        let (mut admitted, deferred) = ctl.admit(t, batches, &costs);
+        let (mut admitted, deferred) = self.ctl.admit(t, batches, &costs);
         for b in deferred {
-            backlog.extend(b.requests);
+            self.backlog.extend(b.requests);
         }
         for b in &mut admitted {
             // A batch deferred in an earlier window must not start
             // before this window's admission decision.
             b.ready_s = b.ready_s.max(t);
-            let Some(out) = engine.serve_batch(&mut state, b) else { continue };
-            telemetry.batches += 1;
-            telemetry.first_batch_s = telemetry.first_batch_s.min(out.start_s);
-            telemetry.sm_busy_s += out.sm_busy_s;
-            telemetry.reram_busy_s += out.reram_busy_s;
-            telemetry.energy_j += out.energy_j;
+            let Some(out) = self.engine.serve_batch(&mut self.state, b) else { continue };
+            self.telemetry.batches += 1;
+            self.telemetry.first_batch_s = self.telemetry.first_batch_s.min(out.start_s);
+            self.telemetry.sm_busy_s += out.sm_busy_s;
+            self.telemetry.reram_busy_s += out.reram_busy_s;
+            self.telemetry.energy_j += out.energy_j;
             for resp in &out.responses {
-                telemetry.complete(resp.latency_s, resp.finish_s, lt.slo_s);
+                self.telemetry.complete(resp.latency_s, resp.finish_s, self.lt.slo_s);
+                self.ewma_latency_s = cluster::ewma(
+                    self.ewma_latency_s,
+                    resp.latency_s,
+                    self.telemetry.completed == 1,
+                );
             }
         }
 
-        t = wend;
-        window_i += 1;
-        if next >= reqs.len() && backlog.is_empty() {
-            break;
-        }
-        if window_i >= max_windows {
-            telemetry.shed += backlog.len() as u64;
-            break;
+        self.t = wend;
+        self.window_i += 1;
+        if self.window_i >= self.max_windows
+            && !(self.pending.is_empty() && self.backlog.is_empty())
+        {
+            // Backstop: shed whatever is left and stop (pathological
+            // configs only; arrivals still pending are abandoned, as the
+            // pre-cluster loop abandoned its un-ingested shard tail).
+            self.telemetry.shed += self.backlog.len() as u64;
+            self.backlog.clear();
+            self.done = true;
         }
     }
 
-    StackOutcome {
-        telemetry,
-        peak_c: ctl.peak_c,
-        reram_peak_c: ctl.reram_peak_c,
-        throttle_events: ctl.events.len() as u64,
-        windows: ctl.windows,
+    /// Run the stack to completion and extract its outcome.
+    pub(crate) fn finish(mut self) -> StackOutcome {
+        while !self.done && !(self.pending.is_empty() && self.backlog.is_empty()) {
+            self.run_window();
+        }
+        StackOutcome {
+            telemetry: self.telemetry,
+            peak_c: self.ctl.peak_c,
+            reram_peak_c: self.ctl.reram_peak_c,
+            throttle_events: self.ctl.events.len() as u64,
+            windows: self.ctl.windows,
+        }
     }
 }
 
-/// Run a full loadtest: generate, route, serve every stack (fanned out
-/// over the worker pool), aggregate.
+impl ClusterStack for ServeStack<'_> {
+    fn step_until(&mut self, deadline_s: f64) {
+        // Process complete windows only: a window may be served once
+        // every arrival before its end has been pushed, i.e. once its
+        // end is at or before the cluster's current instant.
+        while !self.done && self.t + self.interval <= deadline_s {
+            self.run_window();
+        }
+    }
+
+    fn snapshot(&self, stack: usize) -> StackSnapshot {
+        StackSnapshot {
+            stack,
+            horizon_s: self.horizon_s,
+            queue_depth: self.backlog.len() + self.pending.len(),
+            running: 0,
+            slots: 1,
+            outstanding_steps: 0,
+            kv_committed_bytes: 0.0,
+            kv_capacity_bytes: f64::INFINITY,
+            reram_c: self.ctl.last_reram_c,
+            ewma_ttft_s: self.ewma_latency_s,
+            ewma_itl_s: 0.0,
+        }
+    }
+
+    fn push(&mut self, req: Request) {
+        self.telemetry.submitted += 1;
+        if self.done {
+            // The window backstop already stopped this stack: count the
+            // arrival as shed so conservation survives the abort path.
+            self.telemetry.shed += 1;
+            return;
+        }
+        let info = self.phases[&(req.model, req.variant, req.seq)];
+        self.horizon_s = self.horizon_s.max(req.arrival_s) + info.mha_s + info.ff_s;
+        self.pending.push_back(req);
+    }
+}
+
+/// Run a full loadtest: generate, then drive the stream through the
+/// cluster stepper (live routing at each arrival) and aggregate the
+/// per-stack outcomes.
 pub fn run(cfg: &Config, lt: &LoadtestConfig) -> LoadtestReport {
     let generator = TrafficGen {
         pattern: lt.pattern.clone(),
@@ -391,19 +429,13 @@ pub fn run(cfg: &Config, lt: &LoadtestConfig) -> LoadtestReport {
     let threads = pool::resolve_threads(lt.threads);
     let phases = phase_table(cfg, &requests, threads);
 
-    // Loadtest demands carry no residency footprint, and each stack's
-    // windowed serve loop is effectively serial — so `kv-aware` is run
-    // with one slot, where it provably reproduces JSQ order instead of
-    // degenerating to an all-on-stack-0 tie-break.
-    let router = StackRouter::new(lt.stacks, lt.policy).with_slots(1);
-    let shards = router.route(&requests, |r| {
-        let info = phases[&(r.model, r.variant, r.seq)];
-        RouteDemand::service(info.mha_s + info.ff_s)
-    });
-
-    let outcomes = pool::par_map_threads(&shards, threads, |shard| {
-        serve_stack(cfg, lt, &phases, shard)
-    });
+    let router = StackRouter::new(lt.stacks, lt.policy);
+    let mut stacks: Vec<ServeStack> = (0..router.stacks)
+        .map(|_| ServeStack::new(cfg, lt, &phases))
+        .collect();
+    // One-shot prefill traffic holds no KV residency: need 0 bytes.
+    cluster::drive(&mut stacks, &requests, &router, None, |_| 0.0);
+    let outcomes: Vec<StackOutcome> = stacks.into_iter().map(ServeStack::finish).collect();
 
     let mut total = StackTelemetry::new();
     let mut peak_c = 0.0f64;
@@ -423,6 +455,8 @@ pub fn run(cfg: &Config, lt: &LoadtestConfig) -> LoadtestReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::prepass;
+    use crate::model::ModelId;
 
     fn base(rps: f64, duration_s: f64) -> LoadtestConfig {
         let mut lt = LoadtestConfig::new(
@@ -449,7 +483,7 @@ mod tests {
         let p50 = t.latency_us.percentile(50.0);
         let p99 = t.latency_us.percentile(99.0);
         let p999 = t.latency_us.percentile(99.9);
-        assert!(p50 <= p99 && p99 <= p999, "{p50} {p99} {p999}");
+        assert!((p50..=p999).contains(&p99), "{p50} {p99} {p999}");
         assert!(report.goodput_rps() <= report.throughput_rps() + 1e-9);
         assert!(t.first_batch_s.is_finite());
         assert!(report.sm_utilization() > 0.0 && report.sm_utilization() <= 1.0);
@@ -472,13 +506,89 @@ mod tests {
     }
 
     #[test]
+    fn single_stack_cluster_matches_serial_path() {
+        // The refactor's equivalence pin: driving one stack through the
+        // cluster stepper (arrivals pushed at their instants,
+        // interleaved with step_until) must be byte-identical to the
+        // pre-cluster serial path — the whole stream pushed up front
+        // and the window loop run to completion.
+        let cfg = Config::default();
+        let lt = base(400.0, 0.8);
+        let report = run(&cfg, &lt);
+        assert!(report.total.completed > 0);
+
+        let generator = TrafficGen {
+            pattern: lt.pattern.clone(),
+            mix: lt.mix.clone(),
+            seed: lt.seed,
+        };
+        let requests = generator.generate(lt.duration_s);
+        let phases = phase_table(&cfg, &requests, 1);
+        let mut serial = ServeStack::new(&cfg, &lt, &phases);
+        for r in &requests {
+            serial.push(r.clone());
+        }
+        let o = serial.finish();
+        let mut total = StackTelemetry::new();
+        total.merge(&o.telemetry);
+        let serial_report = LoadtestReport {
+            total,
+            peak_c: o.peak_c,
+            reram_peak_c: o.reram_peak_c,
+            throttle_events: o.throttle_events,
+            windows: o.windows,
+            stacks: vec![o],
+        };
+        assert_eq!(
+            report.to_json(&lt).pretty(),
+            serial_report.to_json(&lt).pretty(),
+            "cluster stepping must not perturb the single-stack path"
+        );
+    }
+
+    #[test]
+    fn live_jsq_reproduces_prepass_jsq_assignment() {
+        // The tentpole equivalence pin: with serial (slots = 1) stacks
+        // and zero KV demand, live JSQ over the stacks' horizon ledgers
+        // must shard exactly like the retired pre-pass fold.
+        let cfg = Config::default();
+        let lt = base(500.0, 0.6);
+        let generator = TrafficGen {
+            pattern: lt.pattern.clone(),
+            mix: lt.mix.clone(),
+            seed: lt.seed,
+        };
+        let requests = generator.generate(lt.duration_s);
+        assert!(requests.len() > 50, "need a non-trivial stream");
+        let phases = phase_table(&cfg, &requests, 1);
+
+        let router = StackRouter::new(3, RoutePolicy::JoinShortestQueue);
+        let mut stacks: Vec<ServeStack> = (0..3)
+            .map(|_| ServeStack::new(&cfg, &lt, &phases))
+            .collect();
+        let live = cluster::drive(&mut stacks, &requests, &router, None, |_| 0.0);
+
+        let prepass = prepass::assign_jsq(&requests, 3, |r| {
+            let info = phases[&(r.model, r.variant, r.seq)];
+            info.mha_s + info.ff_s
+        });
+        assert_eq!(live, prepass, "live JSQ must reproduce the pre-pass order");
+
+        // And the kv policy degenerates to jsq on zero-KV serial
+        // stacks: with no residency demand the saturation class and
+        // step counts collapse, leaving the same backlog ordering.
+        let kv_router = StackRouter::new(3, RoutePolicy::KvAware);
+        let mut kv_stacks: Vec<ServeStack> = (0..3)
+            .map(|_| ServeStack::new(&cfg, &lt, &phases))
+            .collect();
+        let kv_live = cluster::drive(&mut kv_stacks, &requests, &kv_router, None, |_| 0.0);
+        assert_eq!(kv_live, prepass, "zero-KV kv-aware must equal jsq");
+    }
+
+    #[test]
     fn policies_and_patterns_all_run() {
         let cfg = Config::default();
-        for policy in [
-            RoutePolicy::RoundRobin,
-            RoutePolicy::JoinShortestQueue,
-            RoutePolicy::KvAware,
-        ] {
+        for policy in RoutePolicy::all() {
             for pattern in [
                 ArrivalPattern::Poisson { rps: 150.0 },
                 ArrivalPattern::Bursty {

@@ -18,31 +18,39 @@
 //!   when the ReRAM tier would cross the configured ceiling — the
 //!   paper's thermal-feasibility claim demonstrated under load, not
 //!   just at a single operating point.
-//! * [`router`] — multi-stack scale-out: a [`router::StackRouter`]
-//!   shards one request stream across N independent engine stacks
-//!   (join-shortest-queue or round-robin), the same tiered dataflow
-//!   scaled out across packages as in the related chiplet work.
-//! * [`loadtest`] — the orchestration: generate → route → per-stack
-//!   windowed serve with admission control (fanned out over
-//!   `util::pool`), aggregated into a deterministic `BENCH_serve.json`.
+//! * [`router`] — multi-stack routing policies (round-robin, jsq,
+//!   kv-aware, latency-aware): pure decisions over live
+//!   [`crate::cluster::StackSnapshot`]s, made by the cluster
+//!   co-simulation core at each arrival instant — the same tiered
+//!   dataflow scaled out across packages as in the related chiplet
+//!   work, with cluster-level load balance treated as first-class.
+//! * [`phases`] — the shared per-(model, variant, seq) service table
+//!   both serving CLIs price prefill work from (single implementation,
+//!   so `loadtest` and `decodetest` cannot drift).
+//! * [`loadtest`] — the orchestration: generate → lockstep
+//!   cluster-driven serve with live routing and admission control,
+//!   aggregated into a deterministic `BENCH_serve.json`.
 //!
 //! Determinism contract (same as DESIGN.md §Perf): all randomness is
-//! drawn from one seeded stream before the fan-out; per-stack serving is
-//! a pure function of its shard; results fold in stack order. A seeded
-//! loadtest is byte-identical across runs and thread counts.
+//! drawn from one seeded stream before serving; the cluster event loop
+//! is ordered by `(virtual_time, stack_idx, seq_no)`; each stack is a
+//! pure function of its push/step sequence; results fold in stack
+//! order. A seeded loadtest is byte-identical across runs and thread
+//! counts.
 //!
 //! Design record: DESIGN.md §Serve (generator contracts, telemetry,
-//! throttle invariants, router policies; the KV-occupancy-aware policy
-//! is specified in §Decode).
+//! throttle invariants) and §Cluster (event ordering, snapshot fields,
+//! policy semantics on live state).
 
 pub mod admission;
 pub mod generator;
 pub mod loadtest;
+pub mod phases;
 pub mod router;
 pub mod telemetry;
 
 pub use admission::{AdmissionController, BatchCost, ThrottleConfig, ThrottleEvent};
 pub use generator::{ArrivalPattern, OutputLenDist, ReplayEvent, RequestMix, TrafficGen};
 pub use loadtest::{LoadtestConfig, LoadtestReport, StackOutcome};
-pub use router::{RouteDemand, RoutePolicy, StackRouter};
+pub use router::{RoutePolicy, StackRouter};
 pub use telemetry::StackTelemetry;

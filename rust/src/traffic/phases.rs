@@ -1,0 +1,89 @@
+//! Shared phase-table construction for the serving CLIs.
+//!
+//! Both `hetrax loadtest` (`traffic::loadtest`) and `hetrax decodetest`
+//! (`decode::decodetest`) price prefill work from the same cached
+//! per-(model, variant, seq) service table; this module is the single
+//! implementation so the two paths cannot drift. Dedupe is in
+//! first-seen order, evaluation fans out over `util::pool`, and the
+//! fold back into the map is serial — the DESIGN.md §Perf discipline
+//! that keeps seeded runs byte-identical at any thread count.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::config::Config;
+use crate::coordinator::{Engine, Request};
+use crate::model::{ArchVariant, ModelId, Workload};
+use crate::perf::PerfEstimator;
+use crate::util::pool;
+
+/// Phase-table key: one distinct (model, variant, padded seq).
+pub type PhaseKey = (ModelId, ArchVariant, usize);
+
+/// Cached per-(model, variant, seq) service demand.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseInfo {
+    /// SM-tier (MHA) busy seconds for one request at this seq.
+    pub mha_s: f64,
+    /// ReRAM-tier (FF) busy seconds for one request at this seq.
+    pub ff_s: f64,
+    /// Fraction of ReRAM tiles the model keeps active.
+    pub active_frac: f64,
+}
+
+/// Evaluate the phase table for every distinct (model, variant, seq) in
+/// the stream.
+pub fn phase_table(
+    cfg: &Config,
+    requests: &[Request],
+    threads: usize,
+) -> HashMap<PhaseKey, PhaseInfo> {
+    phase_table_with_chunks(cfg, requests, 0, threads)
+}
+
+/// [`phase_table`] extended with the chunk-sized keys chunked prefill
+/// serves through [`Engine::serve_batch`]: for every stream seq longer
+/// than `chunk_tokens`, the full-chunk size and the tail-chunk
+/// remainder. `chunk_tokens = 0` adds nothing.
+pub fn phase_table_with_chunks(
+    cfg: &Config,
+    requests: &[Request],
+    chunk_tokens: usize,
+    threads: usize,
+) -> HashMap<PhaseKey, PhaseInfo> {
+    let mut keys: Vec<PhaseKey> = Vec::new();
+    let mut seen: HashSet<PhaseKey> = HashSet::new();
+    let mut push = |k: PhaseKey| {
+        if seen.insert(k) {
+            keys.push(k);
+        }
+    };
+    for r in requests {
+        push((r.model, r.variant, r.seq));
+        if chunk_tokens > 0 && r.seq > chunk_tokens {
+            push((r.model, r.variant, chunk_tokens));
+            let tail = r.seq % chunk_tokens;
+            if tail > 0 {
+                push((r.model, r.variant, tail));
+            }
+        }
+    }
+    let infos = pool::par_map_threads(&keys, threads, |&(model, variant, seq)| {
+        let w = Workload::build(model, variant, seq);
+        let (mha_s, ff_s) = Engine::new(cfg).phase_times(&w);
+        let est = PerfEstimator::new(cfg).estimate(&w);
+        PhaseInfo { mha_s, ff_s, active_frac: est.activity.reram_active_frac }
+    });
+    keys.into_iter().zip(infos).collect()
+}
+
+/// The distinct (model, variant) pairs of a stream in first-seen order —
+/// what [`crate::decode::DecodeEngine::build`] needs its tables for.
+pub(crate) fn decode_keys(requests: &[Request]) -> Vec<(ModelId, ArchVariant)> {
+    let mut keys: Vec<(ModelId, ArchVariant)> = Vec::new();
+    for r in requests {
+        if !keys.contains(&(r.model, r.variant)) {
+            keys.push((r.model, r.variant));
+        }
+    }
+    keys
+}

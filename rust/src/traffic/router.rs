@@ -1,42 +1,47 @@
-//! Multi-stack scale-out: shard one arrival stream across N independent
-//! engine stacks — the tiered dataflow scaled out across packages, as in
-//! the related chiplet work. Design notes: DESIGN.md §Serve (router
-//! policies) and §Decode (KV-occupancy-aware routing).
+//! Multi-stack routing policies: pure decisions over live
+//! [`StackSnapshot`]s, one arrival at a time.
 //!
-//! Routing is a serial pass over the arrival-ordered stream (ties broken
-//! by lowest stack index), so a given stream always shards identically;
-//! the expensive per-stack serving fans out afterwards. The `kv-aware`
-//! policy keeps a simulated residency model per stack (a
-//! [`KvPool`](crate::decode::kv::KvPool) charged with each routed
-//! request's peak reservation until its estimated completion), so the
-//! decision uses the same live signals the decode scheduler acts on —
-//! KV occupancy and outstanding decode steps — while the pass itself
-//! stays serial and deterministic.
+//! Until the cluster co-simulation core (`crate::cluster`) landed, this
+//! module *simulated* the stacks it routed over — a serial pre-pass
+//! with a shadow `KvPool`/slot residency model. That model is retired
+//! (it survives only as [`crate::cluster::prepass`], the bench
+//! baseline); routing is now a live decision the cluster stepper makes
+//! at each request's arrival instant, over the stacks' actual state.
+//! [`StackRouter::choose`] is a pure function of `(seq_no, now,
+//! snapshots, kv need)` — it holds no state between calls, so a given
+//! snapshot sequence always routes identically. Policy semantics:
+//! DESIGN.md §Cluster.
 
-use crate::coordinator::Request;
-use crate::decode::kv::{KvCacheConfig, KvPool};
+use crate::cluster::StackSnapshot;
 
 /// Request-to-stack dispatch policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutePolicy {
     /// Cycle through stacks in arrival order.
     RoundRobin,
-    /// Join-shortest-queue on estimated outstanding work: each stack
-    /// tracks a busy-until horizon advanced by the request's estimated
-    /// service demand; arrivals go to the stack with the least backlog.
+    /// Join-shortest-queue on the stacks' own commitment ledgers: each
+    /// snapshot's [`StackSnapshot::horizon_s`] estimates when the stack
+    /// finishes everything it has accepted; arrivals go to the least
+    /// backlog, ties to the lowest index. The ledger fold is
+    /// arithmetically the retired pre-pass JSQ horizon, so live JSQ
+    /// reproduces the pre-pass assignment exactly (pinned by tests).
     JoinShortestQueue,
-    /// KV-occupancy-aware join-shortest-queue for decode traffic. Decode
-    /// stacks serve their running set *concurrently* (continuous
-    /// batching up to [`StackRouter::slots`]), so the scarce resource is
-    /// KV headroom, not serial service time: any stack whose pool can
-    /// hold the request's peak reservation right now outranks every
-    /// KV-saturated stack. Within a class, stacks order by earliest
-    /// effective start (slot wait vs wait for KV headroom), ties on
-    /// fewer outstanding decode steps, then lowest index. Sheds load
-    /// away from KV-saturated stacks that plain JSQ (blind to
-    /// residency) keeps filling; with `slots = 1` and no KV demand it
-    /// reproduces JSQ order exactly.
+    /// KV-occupancy-aware routing on *actual* residency: any stack
+    /// whose committed KV bytes (pool reservations plus queued peaks)
+    /// leave room for the request's peak reservation outranks every
+    /// saturated stack; within a class, fewer outstanding decode steps
+    /// (the live proxy for who frees residency soonest), then least
+    /// backlog horizon, then lowest index. Unlike the retired pre-pass
+    /// model, commitments here release when the stack *actually*
+    /// retires work — the policy reacts to mis-estimates instead of
+    /// compounding them.
     KvAware,
+    /// Latency-aware routing fed by live telemetry: least backlog
+    /// horizon *plus* the stack's rolling TTFT and ITL EWMAs, so a
+    /// stack that has recently been slow to first token (deep prefill
+    /// queues, thermal deferrals) is penalized beyond what its ledger
+    /// admits. With no completions observed yet it reduces to `jsq`.
+    LatencyAware,
 }
 
 impl RoutePolicy {
@@ -45,6 +50,7 @@ impl RoutePolicy {
             RoutePolicy::RoundRobin => "round-robin",
             RoutePolicy::JoinShortestQueue => "jsq",
             RoutePolicy::KvAware => "kv-aware",
+            RoutePolicy::LatencyAware => "latency",
         }
     }
 
@@ -53,408 +59,196 @@ impl RoutePolicy {
             "round-robin" | "rr" => RoutePolicy::RoundRobin,
             "jsq" | "join-shortest-queue" => RoutePolicy::JoinShortestQueue,
             "kv" | "kv-aware" => RoutePolicy::KvAware,
+            "latency" | "latency-aware" => RoutePolicy::LatencyAware,
             _ => return None,
         })
     }
-}
 
-/// Per-request demand estimate the routing policies consume. Round-robin
-/// ignores it entirely; `jsq` reads only `service_s`; `kv-aware` uses
-/// all three fields.
-#[derive(Debug, Clone, Copy)]
-pub struct RouteDemand {
-    /// Estimated seconds of service the request will occupy its stack
-    /// (prefill plus, for generation traffic, the whole decode phase).
-    pub service_s: f64,
-    /// Peak KV-cache reservation the request will hold from admission to
-    /// retirement ([`crate::model::DecodeWorkload::peak_kv_bytes`]);
-    /// 0 for one-shot prefill traffic.
-    pub kv_bytes: f64,
-    /// Decode steps (output tokens) the request will hold a running-batch
-    /// slot for; 0 for one-shot prefill traffic.
-    pub decode_steps: u64,
-}
-
-impl RouteDemand {
-    /// Prefill-only demand: a service-time estimate with no residency
-    /// footprint (what the loadtest path routes on).
-    pub fn service(service_s: f64) -> RouteDemand {
-        RouteDemand { service_s, kv_bytes: 0.0, decode_steps: 0 }
+    /// Every policy, in the order the CLIs document them.
+    pub fn all() -> [RoutePolicy; 4] {
+        [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::JoinShortestQueue,
+            RoutePolicy::KvAware,
+            RoutePolicy::LatencyAware,
+        ]
     }
 }
 
-/// One routed request still resident in a stack's simulated model.
-#[derive(Debug, Clone, Copy)]
-struct Inflight {
-    /// Estimated completion time: reservation and batch slot free here.
-    release_s: f64,
-    kv_bytes: f64,
-    decode_steps: u64,
-}
-
-/// The `kv-aware` policy's per-stack state: a residency model mirroring
-/// what the stack's scheduler will hold. Unlike JSQ's serial horizon,
-/// routed requests *overlap* (the decode scheduler batches them
-/// continuously up to `slots`), so a stack's service time only gates
-/// once its slots are full — the binding resource is KV headroom.
-#[derive(Debug, Clone)]
-struct StackModel {
-    pool: KvPool,
-    inflight: Vec<Inflight>,
-}
-
-impl StackModel {
-    fn new(kv: KvCacheConfig) -> StackModel {
-        StackModel { pool: KvPool::new(kv), inflight: Vec::new() }
-    }
-
-    /// Release every routed request whose estimated completion is ≤ `t`.
-    fn drain_until(&mut self, t: f64) {
-        let pool = &mut self.pool;
-        self.inflight.retain(|f| {
-            if f.release_s <= t {
-                pool.release(f.kv_bytes, 0.0);
-                false
-            } else {
-                true
-            }
-        });
-    }
-
-    /// Seconds until a continuous-batching slot frees: 0 while fewer
-    /// than `slots` requests are resident, else the time until enough
-    /// in-flight completions drop the count below `slots`.
-    fn slot_wait(&self, slots: usize, t: f64) -> f64 {
-        if self.inflight.len() < slots.max(1) {
-            return 0.0;
-        }
-        let mut releases: Vec<f64> = self.inflight.iter().map(|f| f.release_s).collect();
-        releases.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let k = self.inflight.len() + 1 - slots.max(1);
-        (releases[k - 1] - t).max(0.0)
-    }
-
-    /// Seconds until the pool could take an additional `need` bytes of
-    /// reservation, assuming in-flight work releases on schedule. 0 when
-    /// it fits now or when `need` alone exceeds the whole budget (such a
-    /// request is refused at ingest on every stack — other terms decide).
-    fn kv_wait(&self, need: f64, t: f64) -> f64 {
-        if need <= 0.0 || need > self.pool.capacity_bytes() || self.pool.would_fit(need) {
-            return 0.0;
-        }
-        let mut releases: Vec<(f64, f64)> =
-            self.inflight.iter().map(|f| (f.release_s, f.kv_bytes)).collect();
-        releases.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let mut freed = 0.0;
-        for (release_s, bytes) in releases {
-            freed += bytes;
-            if self.pool.reserved_bytes() - freed + need
-                <= self.pool.capacity_bytes() + 1e-6
-            {
-                return (release_s - t).max(0.0);
-            }
-        }
-        // Unreachable when the reservations are consistent (draining
-        // everything always frees enough), but never panic on routing.
-        0.0
-    }
-
-    fn outstanding_steps(&self) -> u64 {
-        self.inflight.iter().map(|f| f.decode_steps).sum()
-    }
-
-    /// Commit a request: it starts once a slot and KV headroom are both
-    /// available, holds its reservation while it runs, and releases at
-    /// its estimated completion. The reservation is charged *now* even
-    /// when the request must queue for headroom
-    /// ([`KvPool::reserve_queued`] — the pool runs overcommitted until
-    /// the releases it is waiting on pass), so later arrivals never see
-    /// headroom that only exists in the future; resident work is only
-    /// ever released when simulated time actually reaches it
-    /// (`drain_until` at the next arrival).
-    fn commit(&mut self, t: f64, slots: usize, d: &RouteDemand) {
-        let wait = self.slot_wait(slots, t).max(self.kv_wait(d.kv_bytes, t));
-        let kv = if d.kv_bytes > 0.0 && d.kv_bytes <= self.pool.capacity_bytes() {
-            self.pool.reserve_queued(d.kv_bytes);
-            d.kv_bytes
-        } else {
-            // Oversized (refused at ingest on every stack): route it,
-            // charge nothing.
-            0.0
-        };
-        self.inflight.push(Inflight {
-            release_s: t + wait + d.service_s,
-            kv_bytes: kv,
-            decode_steps: d.decode_steps,
-        });
-    }
-}
-
-/// Shards a request stream across `stacks` engine instances.
+/// Routes one arrival stream across `stacks` engine instances — a pure
+/// policy; the stacks themselves live in the cluster stepper.
 #[derive(Debug, Clone, Copy)]
 pub struct StackRouter {
     pub stacks: usize,
     pub policy: RoutePolicy,
-    /// Per-stack cache budget the `kv-aware` policy models residency
-    /// against — set it to the budget the stacks actually serve with
-    /// ([`StackRouter::with_kv`]); the other policies never read it.
-    pub kv: KvCacheConfig,
-    /// Continuous-batching slots per stack the `kv-aware` policy models
-    /// (the decode scheduler's `max_running`): routed requests overlap
-    /// up to this concurrency, so service time only gates a stack once
-    /// its slots fill. `1` means strictly serial service — on demands
-    /// with no KV bytes that provably reproduces plain JSQ order.
-    pub slots: usize,
 }
 
 impl StackRouter {
     pub fn new(stacks: usize, policy: RoutePolicy) -> StackRouter {
-        StackRouter {
-            stacks: stacks.max(1),
-            policy,
-            kv: KvCacheConfig::default(),
-            slots: 8,
-        }
+        StackRouter { stacks: stacks.max(1), policy }
     }
 
-    /// Builder: the per-stack KV budget the `kv-aware` policy mirrors.
-    pub fn with_kv(mut self, kv: KvCacheConfig) -> StackRouter {
-        self.kv = kv;
-        self
-    }
-
-    /// Builder: the per-stack concurrency the `kv-aware` policy assumes
-    /// (the decode scheduler's `max_running`; floored at 1).
-    pub fn with_slots(mut self, slots: usize) -> StackRouter {
-        self.slots = slots.max(1);
-        self
-    }
-
-    /// Split `requests` (sorted by arrival) into one sub-stream per
-    /// stack, preserving arrival order within each. `demand` estimates a
-    /// request's load ([`RouteDemand`]); round-robin never calls it.
-    pub fn route(
+    /// Pick the stack for the arrival at `now_s`. `seq_no` is the
+    /// request's position in the stream (round-robin's only input —
+    /// `snaps` may be empty for it); every other policy requires the
+    /// live snapshots in stack order. `need_kv_bytes` is the request's
+    /// peak KV reservation (0 for one-shot prefill traffic).
+    pub fn choose(
         &self,
-        requests: &[Request],
-        mut demand: impl FnMut(&Request) -> RouteDemand,
-    ) -> Vec<Vec<Request>> {
-        let mut shards: Vec<Vec<Request>> = vec![Vec::new(); self.stacks];
+        seq_no: u64,
+        now_s: f64,
+        snaps: &[StackSnapshot],
+        need_kv_bytes: f64,
+    ) -> usize {
+        debug_assert!(
+            self.policy == RoutePolicy::RoundRobin || snaps.len() == self.stacks,
+            "snapshot-reading policies need one snapshot per stack"
+        );
+        let backlog = |s: &StackSnapshot| (s.horizon_s - now_s).max(0.0);
         match self.policy {
-            RoutePolicy::RoundRobin => {
-                for (i, r) in requests.iter().enumerate() {
-                    shards[i % self.stacks].push(r.clone());
-                }
-            }
+            RoutePolicy::RoundRobin => (seq_no % self.stacks as u64) as usize,
             RoutePolicy::JoinShortestQueue => {
-                let mut busy_until = vec![0.0f64; self.stacks];
-                for r in requests {
-                    let t = r.arrival_s;
-                    let mut best = 0usize;
-                    let mut best_backlog = f64::INFINITY;
-                    for (s, &until) in busy_until.iter().enumerate() {
-                        let backlog = (until - t).max(0.0);
-                        if backlog < best_backlog {
-                            best = s;
-                            best_backlog = backlog;
-                        }
-                    }
-                    busy_until[best] = busy_until[best].max(t) + demand(r).service_s;
-                    shards[best].push(r.clone());
-                }
+                argmin(snaps, |s| (backlog(s), 0u64, 0.0))
             }
-            RoutePolicy::KvAware => {
-                let mut models: Vec<StackModel> =
-                    (0..self.stacks).map(|_| StackModel::new(self.kv)).collect();
-                for r in requests {
-                    let t = r.arrival_s;
-                    let d = demand(r);
-                    for m in models.iter_mut() {
-                        m.drain_until(t);
-                    }
-                    // Class 0: the pool takes the reservation right
-                    // now. Class 1: KV-saturated (headroom only after
-                    // releases). Within a class: earliest effective
-                    // start (slot wait vs KV wait, whichever is later),
-                    // then fewer outstanding decode steps, then the
-                    // lowest index.
-                    let mut best = 0usize;
-                    let mut best_key = (2u8, f64::INFINITY, u64::MAX);
-                    for (s, m) in models.iter().enumerate() {
-                        let kv_wait = m.kv_wait(d.kv_bytes, t);
-                        let key = (
-                            (kv_wait > 0.0) as u8,
-                            m.slot_wait(self.slots, t).max(kv_wait),
-                            m.outstanding_steps(),
-                        );
-                        if key < best_key {
-                            best = s;
-                            best_key = key;
-                        }
-                    }
-                    models[best].commit(t, self.slots, &d);
-                    shards[best].push(r.clone());
-                }
-            }
+            RoutePolicy::KvAware => argmin(snaps, |s| {
+                // Saturated when the committed bytes cannot take the
+                // reservation. Oversized requests (need > every
+                // capacity) are refused at ingest on every stack, so
+                // they class as fits-everywhere and the other terms
+                // decide — mirroring the retired model's convention.
+                let saturated = need_kv_bytes > 0.0
+                    && need_kv_bytes <= s.kv_capacity_bytes
+                    && s.kv_committed_bytes + need_kv_bytes
+                        > s.kv_capacity_bytes + 1e-6;
+                (
+                    (saturated as u64) as f64,
+                    s.outstanding_steps,
+                    backlog(s),
+                )
+            }),
+            RoutePolicy::LatencyAware => argmin(snaps, |s| {
+                (backlog(s) + s.ewma_ttft_s + s.ewma_itl_s, s.queue_depth as u64, 0.0)
+            }),
         }
-        shards
     }
+}
+
+/// Lowest key wins; ties break to the lowest stack index (strict `<`
+/// while scanning ascending indices).
+fn argmin(snaps: &[StackSnapshot], key: impl Fn(&StackSnapshot) -> (f64, u64, f64)) -> usize {
+    let mut best = 0usize;
+    let mut best_key = (f64::INFINITY, u64::MAX, f64::INFINITY);
+    for (i, s) in snaps.iter().enumerate() {
+        let k = key(s);
+        if k.0 < best_key.0
+            || (k.0 == best_key.0 && k.1 < best_key.1)
+            || (k.0 == best_key.0 && k.1 == best_key.1 && k.2 < best_key.2)
+        {
+            best = i;
+            best_key = k;
+        }
+    }
+    best
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::ModelId;
 
-    fn stream(n: u64, gap: f64) -> Vec<Request> {
-        (0..n)
-            .map(|i| Request::synthetic(i, ModelId::BertBase, 128, i as f64 * gap))
-            .collect()
-    }
-
-    fn ids(shard: &[Request]) -> Vec<u64> {
-        shard.iter().map(|r| r.id).collect()
-    }
-
-    #[test]
-    fn round_robin_spreads_evenly() {
-        let router = StackRouter::new(4, RoutePolicy::RoundRobin);
-        let shards = router.route(&stream(10, 0.01), |_| RouteDemand::service(1.0));
-        assert_eq!(shards.len(), 4);
-        let sizes: Vec<usize> = shards.iter().map(Vec::len).collect();
-        assert_eq!(sizes, vec![3, 3, 2, 2]);
-        // Arrival order preserved within a shard.
-        assert_eq!(ids(&shards[0]), vec![0, 4, 8]);
+    fn snap(stack: usize) -> StackSnapshot {
+        StackSnapshot {
+            stack,
+            horizon_s: 0.0,
+            queue_depth: 0,
+            running: 0,
+            slots: 8,
+            outstanding_steps: 0,
+            kv_committed_bytes: 0.0,
+            kv_capacity_bytes: 100.0,
+            reram_c: 0.0,
+            ewma_ttft_s: 0.0,
+            ewma_itl_s: 0.0,
+        }
     }
 
     #[test]
-    fn jsq_prefers_idle_stack() {
+    fn round_robin_cycles_by_seq_no() {
+        let router = StackRouter::new(3, RoutePolicy::RoundRobin);
+        let snaps: Vec<StackSnapshot> = (0..3).map(snap).collect();
+        let picks: Vec<usize> =
+            (0..7).map(|i| router.choose(i, 0.0, &snaps, 0.0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn jsq_reads_the_horizon_ledger_and_decays_with_time() {
         let router = StackRouter::new(2, RoutePolicy::JoinShortestQueue);
-        // Expensive first request occupies stack 0; the burst that
-        // follows must land on stack 1 until backlogs equalize.
-        let reqs = stream(3, 0.0);
-        let shards = router.route(&reqs, |r| {
-            RouteDemand::service(if r.id == 0 { 10.0 } else { 1.0 })
-        });
-        assert_eq!(ids(&shards[0]), vec![0]);
-        assert_eq!(ids(&shards[1]), vec![1, 2]);
+        let mut snaps: Vec<StackSnapshot> = (0..2).map(snap).collect();
+        snaps[0].horizon_s = 10.0;
+        snaps[1].horizon_s = 2.0;
+        assert_eq!(router.choose(0, 0.0, &snaps, 0.0), 1);
+        // Far enough in the future both backlogs are 0: ties to stack 0.
+        assert_eq!(router.choose(1, 100.0, &snaps, 0.0), 0);
     }
 
     #[test]
-    fn jsq_backlog_decays_with_time() {
-        let router = StackRouter::new(2, RoutePolicy::JoinShortestQueue);
-        // Two heavy requests at t=0 occupy both stacks; a request far in
-        // the future sees both idle again and ties break to stack 0.
-        let mut reqs = stream(2, 0.0);
-        let mut late = Request::synthetic(9, ModelId::BertBase, 128, 100.0);
-        late.seq = 128;
-        reqs.push(late);
-        let shards = router.route(&reqs, |_| RouteDemand::service(5.0));
-        assert_eq!(ids(&shards[0]), vec![0, 9]);
-        assert_eq!(ids(&shards[1]), vec![1]);
+    fn kv_aware_prefers_headroom_over_shorter_backlog() {
+        // Stack 1 is emptier by horizon but its pool cannot take the
+        // reservation; the saturation class dominates.
+        let router = StackRouter::new(2, RoutePolicy::KvAware);
+        let mut snaps: Vec<StackSnapshot> = (0..2).map(snap).collect();
+        snaps[0].horizon_s = 50.0;
+        snaps[0].kv_committed_bytes = 40.0;
+        snaps[1].horizon_s = 1.0;
+        snaps[1].kv_committed_bytes = 80.0;
+        assert_eq!(router.choose(0, 0.0, &snaps, 30.0), 0, "headroom wins");
+        // With no KV demand the class collapses and steps/backlog decide.
+        snaps[0].outstanding_steps = 600;
+        snaps[1].outstanding_steps = 4;
+        assert_eq!(router.choose(1, 0.0, &snaps, 0.0), 1);
+        // Oversized demand classes as fits-everywhere on both.
+        assert_eq!(router.choose(2, 0.0, &snaps, 1e9), 1);
     }
 
     #[test]
-    fn kv_aware_spreads_heavy_reservations_jsq_colocates() {
-        // One long-service request parks on stack 0; a burst of
-        // cheap-service, KV-heavy requests follows. JSQ (service-blind
-        // to residency) sends the whole burst to the emptier stack 1,
-        // saturating its pool; kv-aware spreads the burst by headroom.
-        let kv = KvCacheConfig { capacity_bytes: 100.0, sm_frac: 0.5 };
-        let mut reqs = stream(1, 0.0); // id 0: the long-running request
-        for i in 1..=4u64 {
-            reqs.push(Request::synthetic(i, ModelId::BertBase, 512, 0.001 * i as f64));
-        }
-        let demand = |r: &Request| {
-            if r.id == 0 {
-                RouteDemand { service_s: 10.0, kv_bytes: 10.0, decode_steps: 100 }
-            } else {
-                // Each holds 40% of a stack's budget for 1 s.
-                RouteDemand { service_s: 1.0, kv_bytes: 40.0, decode_steps: 4 }
-            }
-        };
-
-        let jsq = StackRouter::new(2, RoutePolicy::JoinShortestQueue).with_kv(kv);
-        let j = jsq.route(&reqs, demand);
-        assert_eq!(ids(&j[1]), vec![1, 2, 3, 4], "jsq piles the burst on stack 1");
-
-        let aware = StackRouter::new(2, RoutePolicy::KvAware).with_kv(kv);
-        let a = aware.route(&reqs, demand);
-        // Stack 1 takes two (80/100 used), then the pool would overflow:
-        // requests 3 and 4 see an earlier effective start on stack 0
-        // (KV headroom) than waiting a second for stack 1 to release.
-        assert_eq!(ids(&a[1]), vec![1, 2]);
-        assert_eq!(ids(&a[0]), vec![0, 3, 4]);
+    fn kv_aware_breaks_saturated_ties_by_outstanding_steps() {
+        let router = StackRouter::new(2, RoutePolicy::KvAware);
+        let mut snaps: Vec<StackSnapshot> = (0..2).map(snap).collect();
+        snaps[0].kv_committed_bytes = 90.0;
+        snaps[0].outstanding_steps = 600;
+        snaps[1].kv_committed_bytes = 90.0;
+        snaps[1].outstanding_steps = 8;
+        assert_eq!(router.choose(0, 0.0, &snaps, 30.0), 1, "fewest steps owed");
     }
 
     #[test]
-    fn kv_aware_with_one_slot_degenerates_to_jsq() {
-        // Serial service (slots = 1) and no KV demand: the slot wait IS
-        // the jsq backlog, so the shards must match exactly.
-        let reqs = stream(17, 0.004);
-        let demand = |r: &Request| RouteDemand::service(0.01 + r.id as f64 * 1e-4);
-        let j = StackRouter::new(3, RoutePolicy::JoinShortestQueue).route(&reqs, demand);
-        let a = StackRouter::new(3, RoutePolicy::KvAware)
-            .with_slots(1)
-            .route(&reqs, demand);
-        for (js, as_) in j.iter().zip(&a) {
-            assert_eq!(ids(js), ids(as_));
-        }
+    fn latency_policy_penalizes_slow_stacks_and_reduces_to_jsq() {
+        let router = StackRouter::new(2, RoutePolicy::LatencyAware);
+        let mut snaps: Vec<StackSnapshot> = (0..2).map(snap).collect();
+        snaps[0].horizon_s = 0.010;
+        snaps[1].horizon_s = 0.012;
+        // No telemetry yet: pure backlog, i.e. jsq.
+        assert_eq!(router.choose(0, 0.0, &snaps, 0.0), 0);
+        // Stack 0 has been slow to first token recently: penalized past
+        // its ledger advantage.
+        snaps[0].ewma_ttft_s = 0.050;
+        assert_eq!(router.choose(1, 0.0, &snaps, 0.0), 1);
     }
 
     #[test]
-    fn kv_aware_releases_on_schedule() {
-        // After the first wave's estimated completion, its reservations
-        // are gone: a late identical wave routes exactly like the first.
-        let kv = KvCacheConfig { capacity_bytes: 100.0, sm_frac: 0.5 };
-        let mut reqs: Vec<Request> = Vec::new();
-        for i in 0..3u64 {
-            reqs.push(Request::synthetic(i, ModelId::BertBase, 128, 0.0));
-        }
-        for i in 3..6u64 {
-            reqs.push(Request::synthetic(i, ModelId::BertBase, 128, 100.0));
-        }
-        let router = StackRouter::new(2, RoutePolicy::KvAware).with_kv(kv);
-        let shards = router.route(&reqs, |_| RouteDemand {
-            service_s: 1.0,
-            kv_bytes: 60.0,
-            decode_steps: 8,
-        });
-        // Wave 1: stack 0, stack 1 (KV headroom), then stack 0 again
-        // (its release is the earliest KV wait). Wave 2 repeats it.
-        assert_eq!(ids(&shards[0]), vec![0, 2, 3, 5]);
-        assert_eq!(ids(&shards[1]), vec![1, 4]);
-    }
-
-    #[test]
-    fn conserves_requests() {
-        for policy in [
-            RoutePolicy::RoundRobin,
-            RoutePolicy::JoinShortestQueue,
-            RoutePolicy::KvAware,
-        ] {
-            let reqs = stream(23, 0.003);
-            let shards = StackRouter::new(3, policy).route(&reqs, |_| RouteDemand {
-                service_s: 0.01,
-                kv_bytes: 1e6,
-                decode_steps: 4,
-            });
-            let mut got: Vec<u64> = shards.iter().flatten().map(|r| r.id).collect();
-            got.sort_unstable();
-            assert_eq!(got, (0..23).collect::<Vec<_>>(), "{}", policy.name());
-        }
-    }
-
-    #[test]
-    fn parse_roundtrip() {
-        for p in [
-            RoutePolicy::RoundRobin,
-            RoutePolicy::JoinShortestQueue,
-            RoutePolicy::KvAware,
-        ] {
+    fn parse_roundtrip_and_rejection() {
+        for p in RoutePolicy::all() {
             assert_eq!(RoutePolicy::parse(p.name()), Some(p));
         }
         assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(
+            RoutePolicy::parse("join-shortest-queue"),
+            Some(RoutePolicy::JoinShortestQueue)
+        );
         assert_eq!(RoutePolicy::parse("kv"), Some(RoutePolicy::KvAware));
-        assert_eq!(RoutePolicy::parse("nope"), None);
+        assert_eq!(RoutePolicy::parse("latency-aware"), Some(RoutePolicy::LatencyAware));
+        for bad in ["nope", "", "JSQ", "kv_aware", "latencyaware", "least-loaded"] {
+            assert_eq!(RoutePolicy::parse(bad), None, "{bad:?} must be rejected");
+        }
     }
 }
