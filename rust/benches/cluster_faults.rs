@@ -1,0 +1,100 @@
+//! Cluster fault-injection bench: the canonical failover scenario
+//! (`decodetest::faulted_cluster_scenario`) — one stack crashed
+//! mid-wave, one thermally quarantined — served through the seeded
+//! fault layer on the cluster co-simulation core.
+//!
+//! Asserts the tentpole acceptance: exact request conservation with
+//! retries double-entry accounted, ≥ 99% of retryable requests
+//! completed despite the faults, byte-identical output across runs and
+//! thread counts for the fixed fault seed, and an *empty*
+//! `FaultSchedule` reproducing the plain cluster path bit-identically.
+//! Emits `BENCH_faults.json` (path overridable via
+//! `BENCH_FAULTS_JSON`; schema: DESIGN.md §Bench-Schemas) for the
+//! failover trajectory across commits.
+
+use hetrax::cluster::{FaultSchedule, HealthState};
+use hetrax::config::Config;
+use hetrax::decode::decodetest;
+use hetrax::traffic::RoutePolicy;
+use hetrax::util::bench::Bencher;
+use hetrax::util::pool;
+
+fn main() {
+    let cfg = Config::default();
+    let auto = pool::resolve_threads(0);
+
+    let (dc, schedule) = decodetest::faulted_cluster_scenario(RoutePolicy::KvAware);
+
+    let b = Bencher::quick();
+    let t_faulted = b.time("faulted lockstep serve + failover", || {
+        decodetest::run_with_faults(&cfg, &dc, &schedule)
+    });
+
+    let (report, outcome) = decodetest::run_with_faults(&cfg, &dc, &schedule);
+
+    // Conservation: every delivery attempt and every surrendered request
+    // is accounted — retries are double-entry (shed on the dying stack,
+    // re-submitted on the failover target).
+    let t = &report.total;
+    assert!(
+        outcome.conserved(t.submitted, t.completed, t.shed, t.refused_kv),
+        "request conservation violated: {}",
+        outcome.to_json().pretty()
+    );
+
+    // The faults actually fired: a crash and a thermal quarantine.
+    assert_eq!(outcome.crashes, 1, "the scheduled crash must apply");
+    assert_eq!(outcome.final_health[0], HealthState::Dead);
+    assert!(outcome.thermal_trips >= 1, "the thermal rule must trip");
+    assert!(outcome.surrendered > 0 && outcome.requeued > 0);
+
+    // The acceptance: failover completes ≥ 99% of retryable requests.
+    let rate = outcome.retryable_completion_rate(t.completed);
+    assert!(
+        rate >= 0.99,
+        "failover must complete >= 99% of retryable requests (got {rate:.4})"
+    );
+
+    // Determinism contract: byte-identical across repeated runs and
+    // across thread counts for the same fault seed.
+    let doc_of = |threads: usize| {
+        let mut dcx = dc.clone();
+        dcx.threads = threads;
+        let (r, o) = decodetest::run_with_faults(&cfg, &dcx, &schedule);
+        format!("{}\n{}", r.to_json(&dcx).pretty(), o.to_json().pretty())
+    };
+    let canonical = doc_of(dc.threads);
+    assert_eq!(canonical, doc_of(dc.threads), "same seed must reproduce byte-identically");
+    assert_eq!(canonical, doc_of(auto), "thread count must not change faulted output");
+
+    // Empty schedule ≡ the plain cluster path, bit for bit.
+    let plain = decodetest::run(&cfg, &dc);
+    let (unfaulted, o0) = decodetest::run_with_faults(&cfg, &dc, &FaultSchedule::empty());
+    assert_eq!(
+        plain.to_json(&dc).pretty(),
+        unfaulted.to_json(&dc).pretty(),
+        "empty FaultSchedule must be bit-identical to the plain cluster path"
+    );
+    assert_eq!(o0.requeued + o0.failed + o0.surrendered, 0);
+
+    println!(
+        "\n  failover: {} retryable, {} completed ({:.2}% within deadline), \
+         {} requeued, {} failed",
+        outcome.retryable(),
+        t.completed,
+        rate * 100.0,
+        outcome.requeued,
+        outcome.failed
+    );
+
+    let mut doc = report.to_json(&dc);
+    doc.set("bench", "cluster_faults")
+        .set("fault_schedule", schedule.to_json())
+        .set("faults", outcome.to_json())
+        .set("retryable_completion_rate", rate)
+        .set("run_median_faulted_s", t_faulted.median_s())
+        .set("bench_threads", auto);
+    let out = std::env::var("BENCH_FAULTS_JSON").unwrap_or_else(|_| "BENCH_faults.json".into());
+    std::fs::write(&out, doc.pretty()).expect("write bench json");
+    println!("wrote {out}");
+}

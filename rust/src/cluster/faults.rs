@@ -1,0 +1,1243 @@
+//! Deterministic fault injection and failover over the cluster core.
+//!
+//! [`drive_faulty`] is the fault-aware sibling of [`crate::cluster::drive`]:
+//! the same `(virtual_time, stack_idx, seq_no)` lockstep loop, with fault and
+//! lifecycle events merged into the arrival stream as first-class events. A
+//! [`FaultSchedule`] (seeded generator or JSON replay) injects permanent stack
+//! crashes, transient stall windows, thermal-trip quarantines driven by the
+//! live Eq. 2–4 ReRAM temperature crossing an emergency ceiling, and
+//! endurance-driven wear-out from cumulative write counts
+//! (`reram/endurance.rs` supplies the writes-per-completion coupling).
+//!
+//! Every stack carries a [`HealthState`] machine — `Healthy → Degraded →
+//! Quarantined → Dead`, with seeded recovery for transient faults — surfaced
+//! through [`StackSnapshot::health`]; routing masks non-routable stacks via
+//! [`StackRouter::choose_masked`]. When a stack dies its in-flight work is
+//! surrendered ([`ClusterStack::fail`] releases KV reservations and sheds
+//! locally), then each surrendered request is re-enqueued into the shared
+//! arrival stream with exponential backoff and seeded jitter — a full prefill
+//! recompute on the new stack — or failed permanently once its retry budget
+//! or per-request deadline is exhausted.
+//!
+//! **Ordering.** At equal virtual time, fault/lifecycle events (class 0, in
+//! creation order) precede arrivals (class 1, in stream order): a crash at
+//! `t` kills the stack before the arrival at `t` routes. Retries join class 1
+//! with sequence numbers continuing past the original stream, so a fixed
+//! schedule replays byte-identically across runs and thread counts. An empty
+//! schedule draws no randomness, masks nothing and fires no events, making
+//! [`drive_faulty`] bit-identical to [`crate::cluster::drive`] (pinned by
+//! tests here and in `decode::decodetest`).
+//!
+//! **Conservation.** With `surrendered` requests double-entry accounted
+//! (shed on the dying stack, re-submitted on the failover target), the loop
+//! preserves `arrived + surrendered == completed + shed + refused + failed`
+//! and `arrived + requeued == pushes + no_route` —
+//! [`FaultOutcome::conserved`] checks both. Design record: DESIGN.md §Faults.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::cluster::{ClusterStack, StackSnapshot};
+use crate::coordinator::Request;
+use crate::traffic::router::{RoutePolicy, StackRouter};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// One stack's health, as the fault layer tracks it and as surfaced through
+/// [`StackSnapshot::health`]. Stacks self-report `Healthy`; the fault driver
+/// overlays the actual state after snapshotting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Fully serving.
+    Healthy,
+    /// Serving, but one thermal trip away from `Dead` (a stack that already
+    /// failed one seeded recovery draw).
+    Degraded,
+    /// Masked from routing (stall window or thermal emergency) but still
+    /// draining accepted work; may recover.
+    Quarantined,
+    /// Permanently failed (crash or wear-out); in-flight work surrendered.
+    Dead,
+}
+
+impl HealthState {
+    /// Whether the router may send new arrivals to this stack.
+    pub fn routable(self) -> bool {
+        matches!(self, HealthState::Healthy | HealthState::Degraded)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Quarantined => "quarantined",
+            HealthState::Dead => "dead",
+        }
+    }
+}
+
+/// A scheduled fault against one stack.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Permanent failure: the stack surrenders in-flight work and never
+    /// serves again.
+    Crash,
+    /// Transient stall: the stack is quarantined (masked from routing, still
+    /// draining) for `duration_s`, then draws seeded recovery.
+    Stall {
+        duration_s: f64,
+    },
+}
+
+/// One scheduled fault event, delivered at `t_s` before any arrival at the
+/// same instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub t_s: f64,
+    pub stack: usize,
+    pub kind: FaultKind,
+}
+
+/// Thermal-trip rule: when a routable stack's live control-window ReRAM
+/// temperature ([`StackSnapshot::reram_c`]) exceeds the emergency ceiling at
+/// an arrival instant, it is quarantined and its admission controller enters
+/// emergency mode; recovery is re-checked against the live signal every
+/// `cooldown_s`. A `Degraded` stack that trips dies instead.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThermalRule {
+    /// Emergency ceiling (°C). Must be > 0 — the signal reads 0 until the
+    /// stack's first control window closes.
+    pub emergency_ceiling_c: f64,
+    /// Interval between recovery re-checks after a trip (seconds).
+    pub cooldown_s: f64,
+    /// Restrict the rule to one stack (`None` = all stacks).
+    pub stack: Option<usize>,
+}
+
+/// Endurance-driven wear-out: a stack dies permanently once its cumulative
+/// ReRAM row writes (completions × `writes_per_completion`, the coupling
+/// computed from `reram::endurance` for the traffic mix) exceed
+/// `write_budget`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WearRule {
+    /// Total row-write budget before the stack wears out.
+    pub write_budget: f64,
+    /// Row writes charged per completed request — see
+    /// [`crate::reram::endurance::row_writes_per_inference`].
+    pub writes_per_completion: f64,
+}
+
+/// Retry/backoff policy for surrendered and unroutable requests: bounded
+/// attempts with exponential backoff, seeded jitter, and a per-request
+/// deadline measured from the original arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Maximum re-enqueues per request; exhausting it fails the request.
+    pub max_retries: u32,
+    /// First backoff (seconds); attempt `k` waits `base · 2^k`.
+    pub base_backoff_s: f64,
+    /// Backoff cap (seconds).
+    pub max_backoff_s: f64,
+    /// Jitter as a fraction of the backoff: the wait is scaled by a seeded
+    /// uniform draw in `[1 − f, 1 + f]`.
+    pub jitter_frac: f64,
+    /// Per-request deadline (seconds past the original arrival); a retry
+    /// that would land past it fails instead.
+    pub deadline_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 3,
+            base_backoff_s: 0.010,
+            max_backoff_s: 0.250,
+            jitter_frac: 0.5,
+            deadline_s: 5.0,
+        }
+    }
+}
+
+/// A complete, replayable fault scenario: scheduled events, live-signal
+/// rules, retry policy, and the seed every stochastic draw (jitter, recovery)
+/// comes from. Serializes to/from JSON for replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSchedule {
+    /// Scheduled crash/stall events (any order; delivery is by `(t_s, creation order)`).
+    pub events: Vec<FaultEvent>,
+    pub thermal: Option<ThermalRule>,
+    pub wear: Option<WearRule>,
+    pub retry: RetryPolicy,
+    /// Probability a recovery draw restores `Healthy`; failure leaves the
+    /// stack `Degraded`.
+    pub recover_p: f64,
+    /// Seed for all fault-layer randomness, drawn in deterministic event
+    /// order. Keep below 2⁵³ so JSON replay round-trips exactly.
+    pub seed: u64,
+}
+
+impl FaultSchedule {
+    /// The no-fault schedule: [`drive_faulty`] under it is bit-identical to
+    /// [`crate::cluster::drive`].
+    pub fn empty() -> FaultSchedule {
+        FaultSchedule {
+            events: Vec::new(),
+            thermal: None,
+            wear: None,
+            retry: RetryPolicy::default(),
+            recover_p: 0.5,
+            seed: 0,
+        }
+    }
+
+    /// True when no fault can ever fire (the bit-identical fast-path
+    /// precondition; the driver does not special-case it — equivalence is
+    /// structural).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.thermal.is_none() && self.wear.is_none()
+    }
+
+    /// Seeded random scenario over `stacks` stacks and a `duration_s` run —
+    /// the chaos-test generator. Every field derives from `seed` alone.
+    pub fn generate(seed: u64, stacks: usize, duration_s: f64) -> FaultSchedule {
+        let mut rng = Rng::new(seed);
+        let n = stacks.max(1);
+        let mut events = Vec::new();
+        for _ in 0..rng.below(2 * n + 1) {
+            let t_s = rng.f64() * duration_s;
+            let stack = rng.below(n);
+            let kind = if rng.chance(0.5) {
+                FaultKind::Crash
+            } else {
+                FaultKind::Stall { duration_s: (0.05 + 0.25 * rng.f64()) * duration_s }
+            };
+            events.push(FaultEvent { t_s, stack, kind });
+        }
+        events.sort_by(|a, b| a.t_s.total_cmp(&b.t_s).then(a.stack.cmp(&b.stack)));
+        let thermal = rng.chance(0.25).then(|| ThermalRule {
+            emergency_ceiling_c: 20.0 + 60.0 * rng.f64(),
+            cooldown_s: (0.1 + 0.4 * rng.f64()) * duration_s,
+            stack: rng.chance(0.5).then(|| rng.below(n)),
+        });
+        let wear = rng.chance(0.25).then(|| WearRule {
+            write_budget: 1.0 + 50.0 * rng.f64(),
+            writes_per_completion: 1.0,
+        });
+        let retry = RetryPolicy {
+            max_retries: rng.below(5) as u32,
+            base_backoff_s: 0.002 + 0.010 * rng.f64(),
+            max_backoff_s: 0.05 + 0.10 * rng.f64(),
+            jitter_frac: 0.5 * rng.f64(),
+            deadline_s: (2.0 + 8.0 * rng.f64()) * duration_s,
+        };
+        FaultSchedule {
+            events,
+            thermal,
+            wear,
+            retry,
+            recover_p: rng.f64(),
+            // 53 bits so the seed survives the JSON f64 round-trip exactly.
+            seed: rng.next_u64() >> 11,
+        }
+    }
+
+    /// Serialize for replay (`hetrax faulttest --schedule FILE`). Schema:
+    /// DESIGN.md §Faults.
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut j = Json::obj();
+                j.set("t_s", e.t_s).set("stack", e.stack);
+                match e.kind {
+                    FaultKind::Crash => {
+                        j.set("kind", "crash");
+                    }
+                    FaultKind::Stall { duration_s } => {
+                        j.set("kind", "stall").set("duration_s", duration_s);
+                    }
+                }
+                j
+            })
+            .collect();
+        let mut retry = Json::obj();
+        retry
+            .set("max_retries", self.retry.max_retries as u64)
+            .set("base_backoff_s", self.retry.base_backoff_s)
+            .set("max_backoff_s", self.retry.max_backoff_s)
+            .set("jitter_frac", self.retry.jitter_frac)
+            .set("deadline_s", self.retry.deadline_s);
+        let mut doc = Json::obj();
+        doc.set("seed", self.seed)
+            .set("recover_p", self.recover_p)
+            .set("events", events)
+            .set("retry", retry);
+        if let Some(t) = &self.thermal {
+            let mut j = Json::obj();
+            j.set("emergency_ceiling_c", t.emergency_ceiling_c)
+                .set("cooldown_s", t.cooldown_s);
+            if let Some(s) = t.stack {
+                j.set("stack", s);
+            }
+            doc.set("thermal", j);
+        }
+        if let Some(w) = &self.wear {
+            let mut j = Json::obj();
+            j.set("write_budget", w.write_budget)
+                .set("writes_per_completion", w.writes_per_completion);
+            doc.set("wear", j);
+        }
+        doc
+    }
+
+    /// Parse a replay document produced by [`FaultSchedule::to_json`] (or
+    /// written by hand; `retry` fields default individually).
+    pub fn from_json(j: &Json) -> Result<FaultSchedule, String> {
+        let f = |v: Option<&Json>| v.and_then(|x| x.as_f64());
+        let seed = f(j.get("seed")).ok_or("fault schedule missing seed")? as u64;
+        let recover_p = f(j.get("recover_p")).unwrap_or(0.5);
+        let mut events = Vec::new();
+        if let Some(arr) = j.get("events").and_then(|v| v.as_arr()) {
+            for e in arr {
+                let t_s = f(e.get("t_s")).ok_or("fault event missing t_s")?;
+                let stack =
+                    e.get("stack").and_then(|v| v.as_usize()).ok_or("fault event missing stack")?;
+                let kind = match e.get("kind").and_then(|v| v.as_str()) {
+                    Some("crash") => FaultKind::Crash,
+                    Some("stall") => FaultKind::Stall {
+                        duration_s: f(e.get("duration_s"))
+                            .ok_or("stall event missing duration_s")?,
+                    },
+                    other => return Err(format!("unknown fault kind {other:?}")),
+                };
+                events.push(FaultEvent { t_s, stack, kind });
+            }
+        }
+        let live = |v: Option<&Json>| v.filter(|x| !matches!(x, Json::Null));
+        let thermal = match live(j.get("thermal")) {
+            None => None,
+            Some(t) => Some(ThermalRule {
+                emergency_ceiling_c: f(t.get("emergency_ceiling_c"))
+                    .ok_or("thermal rule missing emergency_ceiling_c")?,
+                cooldown_s: f(t.get("cooldown_s")).ok_or("thermal rule missing cooldown_s")?,
+                stack: t.get("stack").and_then(|v| v.as_usize()),
+            }),
+        };
+        let wear = match live(j.get("wear")) {
+            None => None,
+            Some(w) => Some(WearRule {
+                write_budget: f(w.get("write_budget")).ok_or("wear rule missing write_budget")?,
+                writes_per_completion: f(w.get("writes_per_completion"))
+                    .ok_or("wear rule missing writes_per_completion")?,
+            }),
+        };
+        let d = RetryPolicy::default();
+        let r = j.get("retry");
+        let rf = |k: &str| r.and_then(|x| x.get(k)).and_then(|v| v.as_f64());
+        let retry = RetryPolicy {
+            max_retries: rf("max_retries").map_or(d.max_retries, |v| v as u32),
+            base_backoff_s: rf("base_backoff_s").unwrap_or(d.base_backoff_s),
+            max_backoff_s: rf("max_backoff_s").unwrap_or(d.max_backoff_s),
+            jitter_frac: rf("jitter_frac").unwrap_or(d.jitter_frac),
+            deadline_s: rf("deadline_s").unwrap_or(d.deadline_s),
+        };
+        Ok(FaultSchedule { events, thermal, wear, retry, recover_p, seed })
+    }
+
+    /// Parse a replay document from its JSON text.
+    pub fn from_text(text: &str) -> Result<FaultSchedule, String> {
+        FaultSchedule::from_json(&json::parse(text)?)
+    }
+}
+
+/// Everything the fault layer counted: conservation ledger, per-kind
+/// injection counts, the health transition log, and (filled by the caller
+/// after `finish()`) end-of-run KV pool state for leak checks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultOutcome {
+    /// Original requests in the stream.
+    pub arrived: u64,
+    /// Delivery attempts accepted by a stack (`Σ` per-stack submitted).
+    pub pushes: u64,
+    /// Retry re-enqueues (each adds one delivery attempt).
+    pub requeued: u64,
+    /// Delivery attempts that found no routable stack.
+    pub no_route: u64,
+    /// Requests surrendered by dying stacks (each was shed locally and then
+    /// retried or failed — the double-entry).
+    pub surrendered: u64,
+    /// Requests permanently failed (retry budget or deadline exhausted).
+    pub failed: u64,
+    /// Applied crash events (events against already-dead stacks don't count).
+    pub crashes: u64,
+    /// Applied stall events.
+    pub stalls: u64,
+    /// Thermal trips (quarantines, plus Degraded-stack deaths).
+    pub thermal_trips: u64,
+    /// Stacks killed by the wear rule.
+    pub wear_deaths: u64,
+    /// Recovery draws that restored `Healthy`.
+    pub recoveries: u64,
+    /// Recovery draws that left the stack `Degraded`.
+    pub degradations: u64,
+    /// `(t_s, stack, new state)` in delivery order.
+    pub transitions: Vec<(f64, usize, HealthState)>,
+    /// Health per stack when the event stream drained.
+    pub final_health: Vec<HealthState>,
+    /// `Σ` KvPool reserved bytes after `finish()` (caller-filled; 0 until then).
+    pub kv_reserved_end_bytes: f64,
+    /// `Σ` KvPool used bytes after `finish()` (caller-filled).
+    pub kv_used_end_bytes: f64,
+}
+
+impl FaultOutcome {
+    fn new(stacks: usize, arrived: u64) -> FaultOutcome {
+        FaultOutcome {
+            arrived,
+            pushes: 0,
+            requeued: 0,
+            no_route: 0,
+            surrendered: 0,
+            failed: 0,
+            crashes: 0,
+            stalls: 0,
+            thermal_trips: 0,
+            wear_deaths: 0,
+            recoveries: 0,
+            degradations: 0,
+            transitions: Vec::new(),
+            final_health: vec![HealthState::Healthy; stacks],
+            kv_reserved_end_bytes: 0.0,
+            kv_used_end_bytes: 0.0,
+        }
+    }
+
+    /// Requests that stayed retryable (never exhausted their budget).
+    pub fn retryable(&self) -> u64 {
+        self.arrived.saturating_sub(self.failed)
+    }
+
+    /// Fraction of retryable requests that completed — the bench's failover
+    /// acceptance metric (1.0 when nothing was retryable).
+    pub fn retryable_completion_rate(&self, completed: u64) -> f64 {
+        let r = self.retryable();
+        if r == 0 { 1.0 } else { completed as f64 / r as f64 }
+    }
+
+    /// The two conservation identities, checked against the post-`finish()`
+    /// stack totals: every delivery attempt is a push or a no-route, and
+    /// every original request terminates exactly once
+    /// (`arrived + surrendered == completed + shed + refused + failed`).
+    pub fn conserved(&self, submitted: u64, completed: u64, shed: u64, refused: u64) -> bool {
+        self.arrived + self.requeued == self.pushes + self.no_route
+            && self.pushes == submitted
+            && self.arrived + self.surrendered == completed + shed + refused + self.failed
+    }
+
+    /// Serialize for `BENCH_faults.json` / `hetrax faulttest` (schema:
+    /// DESIGN.md §Bench-Schemas).
+    pub fn to_json(&self) -> Json {
+        let transitions: Vec<Json> = self
+            .transitions
+            .iter()
+            .map(|&(t_s, stack, state)| {
+                let mut j = Json::obj();
+                j.set("t_s", t_s).set("stack", stack).set("state", state.name());
+                j
+            })
+            .collect();
+        let final_health: Vec<Json> =
+            self.final_health.iter().map(|h| Json::from(h.name())).collect();
+        let mut doc = Json::obj();
+        doc.set("arrived", self.arrived)
+            .set("pushes", self.pushes)
+            .set("requeued", self.requeued)
+            .set("no_route", self.no_route)
+            .set("surrendered", self.surrendered)
+            .set("failed", self.failed)
+            .set("crashes", self.crashes)
+            .set("stalls", self.stalls)
+            .set("thermal_trips", self.thermal_trips)
+            .set("wear_deaths", self.wear_deaths)
+            .set("recoveries", self.recoveries)
+            .set("degradations", self.degradations)
+            .set("transitions", transitions)
+            .set("final_health", final_health)
+            .set("kv_reserved_end_bytes", self.kv_reserved_end_bytes)
+            .set("kv_used_end_bytes", self.kv_used_end_bytes);
+        doc
+    }
+}
+
+/// Why a stack is quarantined — a stall's end event must not lift a thermal
+/// quarantine and vice versa.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Cause {
+    Stall,
+    Thermal,
+}
+
+#[derive(Debug, Clone)]
+enum Payload {
+    Fault(FaultKind, usize),
+    StallEnd(usize),
+    ThermalRecover(usize),
+    Arrival(Request),
+}
+
+/// Heap event, totally ordered by `(t, class, seq)`: class 0 is
+/// fault/lifecycle (seq = creation order), class 1 is arrivals (seq = stream
+/// order, retries numbered past the originals).
+#[derive(Debug, Clone)]
+struct Ev {
+    t: f64,
+    class: u8,
+    seq: u64,
+    payload: Payload,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Ev) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Ev {}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Ev) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Ev) -> std::cmp::Ordering {
+        self.t
+            .total_cmp(&other.t)
+            .then(self.class.cmp(&other.class))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Per-request retry ledger (lookup-only map — iteration order never
+/// observed, so determinism holds).
+struct ReqMeta {
+    attempts: u32,
+    deadline_s: f64,
+}
+
+struct Driver<'a, S: ClusterStack, F: FnMut(&Request) -> f64> {
+    stacks: &'a mut [S],
+    router: &'a StackRouter,
+    schedule: &'a FaultSchedule,
+    need_kv_bytes: F,
+    rng: Rng,
+    health: Vec<HealthState>,
+    cause: Vec<Option<Cause>>,
+    stall_until: Vec<f64>,
+    heap: BinaryHeap<Reverse<Ev>>,
+    fault_seq: u64,
+    arr_seq: u64,
+    /// Arrival-class events still in the heap; recovery re-checks stop
+    /// rescheduling once nothing remains to route (termination bound).
+    arrivals_outstanding: u64,
+    meta: HashMap<u64, ReqMeta>,
+    reads_snaps: bool,
+    snaps: Vec<StackSnapshot>,
+    out: FaultOutcome,
+}
+
+impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
+    fn step_all(&mut self, t: f64) {
+        for s in self.stacks.iter_mut() {
+            s.step_until(t);
+        }
+    }
+
+    fn snap_all(&mut self) {
+        self.snaps.clear();
+        for (i, s) in self.stacks.iter().enumerate() {
+            let mut snap = s.snapshot(i);
+            snap.health = self.health[i];
+            self.snaps.push(snap);
+        }
+    }
+
+    /// Retry a surrendered/unroutable request with exponential backoff and
+    /// seeded jitter, or fail it permanently when its budget or deadline is
+    /// exhausted.
+    fn retry_or_fail(&mut self, now: f64, mut req: Request) {
+        let retry = &self.schedule.retry;
+        let m = self
+            .meta
+            .get_mut(&req.id)
+            .expect("surrendered request was never delivered");
+        if m.attempts >= retry.max_retries {
+            self.out.failed += 1;
+            return;
+        }
+        let backoff = (retry.base_backoff_s * 2f64.powi(m.attempts as i32))
+            .min(retry.max_backoff_s)
+            .max(0.0);
+        let jitter = 1.0 + retry.jitter_frac * (2.0 * self.rng.f64() - 1.0);
+        let t_retry = now + (backoff * jitter).max(0.0);
+        if t_retry > m.deadline_s {
+            self.out.failed += 1;
+            return;
+        }
+        m.attempts += 1;
+        req.arrival_s = t_retry;
+        // The failover target re-runs the whole prefill: recovery carries a
+        // full recompute cost, not a cache handoff.
+        req.input = None;
+        self.heap.push(Reverse(Ev {
+            t: t_retry,
+            class: 1,
+            seq: self.arr_seq,
+            payload: Payload::Arrival(req),
+        }));
+        self.arr_seq += 1;
+        self.arrivals_outstanding += 1;
+        self.out.requeued += 1;
+    }
+
+    /// Kill stack `i` at `t` (caller has stepped all stacks to `t`):
+    /// surrender in-flight work, mark `Dead`, retry or fail each request.
+    fn kill(&mut self, t: f64, i: usize) {
+        let surrendered = self.stacks[i].fail(t);
+        self.out.surrendered += surrendered.len() as u64;
+        self.health[i] = HealthState::Dead;
+        self.cause[i] = None;
+        self.out.transitions.push((t, i, HealthState::Dead));
+        for req in surrendered {
+            self.retry_or_fail(t, req);
+        }
+    }
+
+    fn on_fault(&mut self, t: f64, stack: usize, kind: FaultKind) {
+        let i = stack.min(self.stacks.len() - 1);
+        if self.health[i] == HealthState::Dead {
+            return;
+        }
+        match kind {
+            FaultKind::Crash => {
+                self.step_all(t);
+                self.out.crashes += 1;
+                self.kill(t, i);
+            }
+            FaultKind::Stall { duration_s } => {
+                self.out.stalls += 1;
+                self.stall_until[i] = self.stall_until[i].max(t + duration_s.max(0.0));
+                if self.health[i].routable() {
+                    self.health[i] = HealthState::Quarantined;
+                    self.cause[i] = Some(Cause::Stall);
+                    self.out.transitions.push((t, i, HealthState::Quarantined));
+                }
+                self.heap.push(Reverse(Ev {
+                    t: self.stall_until[i],
+                    class: 0,
+                    seq: self.fault_seq,
+                    payload: Payload::StallEnd(i),
+                }));
+                self.fault_seq += 1;
+            }
+        }
+    }
+
+    /// Draw seeded recovery for a quarantined stack: `recover_p` restores
+    /// `Healthy`, the complement leaves it `Degraded`.
+    fn recover_draw(&mut self, t: f64, i: usize) {
+        let state = if self.rng.chance(self.schedule.recover_p) {
+            self.out.recoveries += 1;
+            HealthState::Healthy
+        } else {
+            self.out.degradations += 1;
+            HealthState::Degraded
+        };
+        self.health[i] = state;
+        self.cause[i] = None;
+        self.out.transitions.push((t, i, state));
+    }
+
+    fn on_stall_end(&mut self, t: f64, i: usize) {
+        // Superseded by a longer overlapping stall window.
+        if t < self.stall_until[i] {
+            return;
+        }
+        if self.health[i] == HealthState::Quarantined && self.cause[i] == Some(Cause::Stall) {
+            self.recover_draw(t, i);
+        }
+    }
+
+    fn on_thermal_recover(&mut self, t: f64, i: usize) {
+        if self.health[i] != HealthState::Quarantined || self.cause[i] != Some(Cause::Thermal) {
+            return;
+        }
+        let rule = self.schedule.thermal.expect("thermal recover without a rule");
+        self.step_all(t);
+        let reram_c = self.stacks[i].snapshot(i).reram_c;
+        if reram_c > rule.emergency_ceiling_c {
+            // Still hot: stay quarantined, re-check after another cooldown —
+            // but only while arrivals remain to route (termination bound).
+            if self.arrivals_outstanding > 0 {
+                self.heap.push(Reverse(Ev {
+                    t: t + rule.cooldown_s.max(0.0),
+                    class: 0,
+                    seq: self.fault_seq,
+                    payload: Payload::ThermalRecover(i),
+                }));
+                self.fault_seq += 1;
+            }
+            return;
+        }
+        self.stacks[i].set_emergency(false);
+        self.recover_draw(t, i);
+    }
+
+    /// Evaluate the wear and thermal rules at an arrival instant (stacks
+    /// stepped and snapshotted; wear first, then thermal, each in ascending
+    /// stack index).
+    fn check_rules(&mut self, t: f64) {
+        if let Some(w) = self.schedule.wear {
+            for i in 0..self.stacks.len() {
+                if self.health[i] == HealthState::Dead {
+                    continue;
+                }
+                if self.stacks[i].completed() as f64 * w.writes_per_completion > w.write_budget {
+                    self.out.wear_deaths += 1;
+                    self.kill(t, i);
+                }
+            }
+        }
+        if let Some(rule) = self.schedule.thermal {
+            for i in 0..self.stacks.len() {
+                if !self.health[i].routable() {
+                    continue;
+                }
+                if rule.stack.is_some_and(|s| s != i) {
+                    continue;
+                }
+                if self.snaps[i].reram_c <= rule.emergency_ceiling_c {
+                    continue;
+                }
+                self.out.thermal_trips += 1;
+                if self.health[i] == HealthState::Degraded {
+                    // Second strike: a degraded stack that trips dies.
+                    self.kill(t, i);
+                    continue;
+                }
+                self.health[i] = HealthState::Quarantined;
+                self.cause[i] = Some(Cause::Thermal);
+                self.stacks[i].set_emergency(true);
+                self.out.transitions.push((t, i, HealthState::Quarantined));
+                if self.arrivals_outstanding > 0 {
+                    self.heap.push(Reverse(Ev {
+                        t: t + rule.cooldown_s.max(0.0),
+                        class: 0,
+                        seq: self.fault_seq,
+                        payload: Payload::ThermalRecover(i),
+                    }));
+                    self.fault_seq += 1;
+                }
+            }
+        }
+    }
+
+    fn on_arrival(&mut self, t: f64, seq: u64, req: Request) {
+        let deadline_s = req.arrival_s + self.schedule.retry.deadline_s;
+        self.meta.entry(req.id).or_insert(ReqMeta { attempts: 0, deadline_s });
+        // (virtual_time, stack_idx, seq_no): advance every stack to this
+        // instant in index order, snapshot in index order, then route.
+        self.step_all(t);
+        if self.reads_snaps {
+            self.snap_all();
+        }
+        self.check_rules(t);
+        let routable: Vec<bool> = self.health.iter().map(|h| h.routable()).collect();
+        let need = (self.need_kv_bytes)(&req);
+        match self.router.choose_masked(seq, t, &self.snaps, need, &routable) {
+            Some(pick) => {
+                self.stacks[pick].push(req);
+                self.out.pushes += 1;
+            }
+            None => {
+                self.out.no_route += 1;
+                self.retry_or_fail(t, req);
+            }
+        }
+    }
+
+    fn run(mut self) -> FaultOutcome {
+        let mut prev_t = f64::NEG_INFINITY;
+        while let Some(Reverse(ev)) = self.heap.pop() {
+            debug_assert!(ev.t >= prev_t, "event stream must be monotone");
+            prev_t = ev.t;
+            match ev.payload {
+                Payload::Arrival(req) => {
+                    self.arrivals_outstanding -= 1;
+                    self.on_arrival(ev.t, ev.seq, req);
+                }
+                Payload::Fault(kind, stack) => self.on_fault(ev.t, stack, kind),
+                Payload::StallEnd(i) => self.on_stall_end(ev.t, i),
+                Payload::ThermalRecover(i) => self.on_thermal_recover(ev.t, i),
+            }
+        }
+        self.out.final_health = self.health;
+        self.out
+    }
+}
+
+/// Drive the shared arrival stream through the stacks under a fault
+/// schedule: [`crate::cluster::drive`]'s lockstep loop with fault delivery,
+/// health masking, in-flight recovery and retry/backoff. `requests` must be
+/// sorted by arrival time (same contract as `drive`). Callers finish the
+/// stacks afterwards and check [`FaultOutcome::conserved`] against the
+/// finished totals.
+pub fn drive_faulty<S, F>(
+    stacks: &mut [S],
+    requests: &[Request],
+    router: &StackRouter,
+    schedule: &FaultSchedule,
+    need_kv_bytes: F,
+) -> FaultOutcome
+where
+    S: ClusterStack,
+    F: FnMut(&Request) -> f64,
+{
+    assert!(!stacks.is_empty(), "cluster needs at least one stack");
+    let n = stacks.len();
+    let mut heap = BinaryHeap::with_capacity(requests.len() + schedule.events.len());
+    let mut fault_seq = 0u64;
+    for e in &schedule.events {
+        heap.push(Reverse(Ev {
+            t: e.t_s,
+            class: 0,
+            seq: fault_seq,
+            payload: Payload::Fault(e.kind, e.stack),
+        }));
+        fault_seq += 1;
+    }
+    for (i, r) in requests.iter().enumerate() {
+        heap.push(Reverse(Ev {
+            t: r.arrival_s,
+            class: 1,
+            seq: i as u64,
+            payload: Payload::Arrival(r.clone()),
+        }));
+    }
+    let reads_snaps =
+        router.policy != RoutePolicy::RoundRobin || schedule.thermal.is_some();
+    Driver {
+        stacks,
+        router,
+        schedule,
+        need_kv_bytes,
+        rng: Rng::new(schedule.seed),
+        health: vec![HealthState::Healthy; n],
+        cause: vec![None; n],
+        stall_until: vec![0.0; n],
+        heap,
+        fault_seq,
+        arr_seq: requests.len() as u64,
+        arrivals_outstanding: requests.len() as u64,
+        meta: HashMap::new(),
+        reads_snaps,
+        snaps: Vec::with_capacity(n),
+        out: FaultOutcome::new(n, requests.len() as u64),
+    }
+    .run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::drive;
+    use crate::model::ModelId;
+
+    /// Transparent stack: accepts everything, completes nothing until told,
+    /// surrenders its queue on `fail`.
+    struct Mock {
+        pushed: Vec<Request>,
+        horizon_s: f64,
+        clock_s: f64,
+        completed: u64,
+        reram_c: f64,
+        /// Sensor reads `reram_c` only once the clock reaches this (0 =
+        /// hot from the start).
+        heat_after_s: f64,
+        /// Temperature drops to 0 once the clock passes this (for recovery
+        /// tests); ∞ = never cools.
+        cool_after_s: f64,
+        failed_at: Option<f64>,
+        emergency: bool,
+    }
+
+    impl Mock {
+        fn new() -> Mock {
+            Mock {
+                pushed: Vec::new(),
+                horizon_s: 0.0,
+                clock_s: 0.0,
+                completed: 0,
+                reram_c: 0.0,
+                heat_after_s: 0.0,
+                cool_after_s: f64::INFINITY,
+                failed_at: None,
+                emergency: false,
+            }
+        }
+    }
+
+    impl ClusterStack for Mock {
+        fn step_until(&mut self, deadline_s: f64) {
+            self.clock_s = self.clock_s.max(deadline_s);
+        }
+
+        fn snapshot(&self, stack: usize) -> StackSnapshot {
+            StackSnapshot {
+                stack,
+                horizon_s: self.horizon_s,
+                queue_depth: self.pushed.len(),
+                running: 0,
+                slots: 1,
+                outstanding_steps: 0,
+                kv_committed_bytes: 0.0,
+                kv_capacity_bytes: f64::INFINITY,
+                reram_c: if self.clock_s > self.cool_after_s || self.clock_s < self.heat_after_s {
+                    0.0
+                } else {
+                    self.reram_c
+                },
+                ewma_ttft_s: 0.0,
+                ewma_itl_s: 0.0,
+                health: HealthState::Healthy,
+            }
+        }
+
+        fn push(&mut self, req: Request) {
+            self.horizon_s = self.horizon_s.max(req.arrival_s) + 1.0;
+            self.pushed.push(req);
+        }
+
+        fn fail(&mut self, t_s: f64) -> Vec<Request> {
+            self.failed_at = Some(t_s);
+            std::mem::take(&mut self.pushed)
+        }
+
+        fn completed(&self) -> u64 {
+            self.completed
+        }
+
+        fn set_emergency(&mut self, on: bool) {
+            self.emergency = on;
+        }
+    }
+
+    fn stream(n: u64, gap: f64) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request::synthetic(i, ModelId::BertBase, 128, i as f64 * gap))
+            .collect()
+    }
+
+    fn retry_fast() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 3,
+            base_backoff_s: 0.01,
+            max_backoff_s: 0.08,
+            jitter_frac: 0.0,
+            deadline_s: 100.0,
+        }
+    }
+
+    #[test]
+    fn empty_schedule_matches_drive_exactly() {
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::JoinShortestQueue] {
+            let reqs = stream(17, 0.3);
+            let router = StackRouter::new(3, policy);
+            let mut a = vec![Mock::new(), Mock::new(), Mock::new()];
+            let assignment = drive(&mut a, &reqs, &router, None, |_| 0.0);
+            let mut b = vec![Mock::new(), Mock::new(), Mock::new()];
+            let out = drive_faulty(&mut b, &reqs, &router, &FaultSchedule::empty(), |_| 0.0);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                let ax: Vec<u64> = x.pushed.iter().map(|r| r.id).collect();
+                let bx: Vec<u64> = y.pushed.iter().map(|r| r.id).collect();
+                assert_eq!(ax, bx, "stack {i} push sequence diverged under {policy:?}");
+            }
+            assert_eq!(out.pushes as usize, assignment.len());
+            assert_eq!(out.requeued, 0);
+            assert_eq!(out.failed, 0);
+            assert!(out.transitions.is_empty());
+            assert_eq!(out.arrived + out.requeued, out.pushes + out.no_route);
+        }
+    }
+
+    #[test]
+    fn crash_surrenders_and_retries_on_survivor() {
+        // Two stacks, round-robin; stack 0 crashes after accepting its
+        // second request. Its queue must re-land on stack 1, delayed by the
+        // backoff, and the ledger must balance.
+        let reqs = stream(4, 0.1); // arrivals at 0.0, 0.1, 0.2, 0.3
+        let router = StackRouter::new(2, RoutePolicy::RoundRobin);
+        let mut stacks = vec![Mock::new(), Mock::new()];
+        let schedule = FaultSchedule {
+            events: vec![FaultEvent { t_s: 0.25, stack: 0, kind: FaultKind::Crash }],
+            thermal: None,
+            wear: None,
+            retry: retry_fast(),
+            recover_p: 1.0,
+            seed: 9,
+        };
+        let out = drive_faulty(&mut stacks, &reqs, &router, &schedule, |_| 0.0);
+        assert_eq!(stacks[0].failed_at, Some(0.25));
+        assert_eq!(out.crashes, 1);
+        assert_eq!(out.surrendered, 2, "requests 0 and 2 were on stack 0");
+        assert_eq!(out.requeued, 2);
+        assert_eq!(out.failed, 0);
+        assert_eq!(out.arrived + out.requeued, out.pushes + out.no_route);
+        assert_eq!(out.final_health, vec![HealthState::Dead, HealthState::Healthy]);
+        // Survivor holds arrival 1, then both retries (the 0.01 backoff puts
+        // them at t ≈ 0.26, before the t = 0.3 arrival), then arrival 3.
+        let ids: Vec<u64> = stacks[1].pushed.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 0, 2, 3]);
+        assert!(stacks[1].pushed[1].arrival_s > 0.25, "retry must back off past the crash");
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_requests() {
+        // Both stacks crash before the only arrival: every delivery attempt
+        // finds no routable stack, and after max_retries the request fails.
+        let reqs = stream(1, 0.0);
+        let router = StackRouter::new(2, RoutePolicy::JoinShortestQueue);
+        let mut stacks = vec![Mock::new(), Mock::new()];
+        let schedule = FaultSchedule {
+            events: vec![
+                FaultEvent { t_s: -0.1, stack: 0, kind: FaultKind::Crash },
+                FaultEvent { t_s: -0.1, stack: 1, kind: FaultKind::Crash },
+            ],
+            thermal: None,
+            wear: None,
+            retry: retry_fast(),
+            recover_p: 1.0,
+            seed: 4,
+        };
+        let out = drive_faulty(&mut stacks, &reqs, &router, &schedule, |_| 0.0);
+        assert_eq!(out.no_route, 1 + retry_fast().max_retries as u64);
+        assert_eq!(out.requeued, retry_fast().max_retries as u64);
+        assert_eq!(out.failed, 1);
+        assert_eq!(out.pushes, 0);
+        assert_eq!(out.arrived + out.requeued, out.pushes + out.no_route);
+    }
+
+    #[test]
+    fn deadline_caps_retries_before_budget() {
+        let reqs = stream(1, 0.0);
+        let router = StackRouter::new(1, RoutePolicy::JoinShortestQueue);
+        let mut stacks = vec![Mock::new()];
+        let mut retry = retry_fast();
+        retry.deadline_s = 0.015; // one 0.01 backoff fits, the second won't
+        let schedule = FaultSchedule {
+            events: vec![FaultEvent { t_s: -0.1, stack: 0, kind: FaultKind::Crash }],
+            thermal: None,
+            wear: None,
+            retry,
+            recover_p: 1.0,
+            seed: 4,
+        };
+        let out = drive_faulty(&mut stacks, &reqs, &router, &schedule, |_| 0.0);
+        assert_eq!(out.requeued, 1, "only the first backoff lands inside the deadline");
+        assert_eq!(out.failed, 1);
+    }
+
+    #[test]
+    fn stall_masks_routing_then_recovers() {
+        // Stall stack 0 across the middle arrivals; recover_p = 1 restores
+        // it to Healthy at the window's end.
+        let reqs = stream(6, 0.1);
+        let router = StackRouter::new(2, RoutePolicy::RoundRobin);
+        let mut stacks = vec![Mock::new(), Mock::new()];
+        let schedule = FaultSchedule {
+            events: vec![FaultEvent {
+                t_s: 0.15,
+                stack: 0,
+                kind: FaultKind::Stall { duration_s: 0.2 },
+            }],
+            thermal: None,
+            wear: None,
+            retry: retry_fast(),
+            recover_p: 1.0,
+            seed: 2,
+        };
+        let out = drive_faulty(&mut stacks, &reqs, &router, &schedule, |_| 0.0);
+        assert_eq!(out.stalls, 1);
+        assert_eq!(out.recoveries, 1);
+        assert_eq!(out.failed, 0);
+        assert_eq!(out.final_health, vec![HealthState::Healthy, HealthState::Healthy]);
+        // Arrivals 2 and 3 (t = 0.2, 0.3) fall inside the stall window, so
+        // both go to stack 1; after recovery at 0.35 round-robin resumes.
+        let ids0: Vec<u64> = stacks[0].pushed.iter().map(|r| r.id).collect();
+        let ids1: Vec<u64> = stacks[1].pushed.iter().map(|r| r.id).collect();
+        assert_eq!(ids0, vec![0, 4]);
+        assert_eq!(ids1, vec![1, 2, 3, 5]);
+    }
+
+    #[test]
+    fn failed_recovery_draw_leaves_stack_degraded() {
+        // recover_p = 0 forces the degradation branch.
+        let reqs = stream(4, 0.1);
+        let router = StackRouter::new(2, RoutePolicy::RoundRobin);
+        let mut stacks = vec![Mock::new(), Mock::new()];
+        let schedule = FaultSchedule {
+            events: vec![FaultEvent {
+                t_s: 0.05,
+                stack: 0,
+                kind: FaultKind::Stall { duration_s: 0.1 },
+            }],
+            thermal: None,
+            wear: None,
+            retry: retry_fast(),
+            recover_p: 0.0,
+            seed: 2,
+        };
+        let out = drive_faulty(&mut stacks, &reqs, &router, &schedule, |_| 0.0);
+        assert_eq!(out.degradations, 1);
+        assert_eq!(out.final_health[0], HealthState::Degraded);
+        // Degraded is routable: later arrivals still reach stack 0.
+        assert!(stacks[0].pushed.iter().any(|r| r.arrival_s > 0.15));
+    }
+
+    #[test]
+    fn thermal_trip_quarantines_and_recovers_on_cooling() {
+        // Stack 0 runs hot until t = 0.25, then cools. The first arrival
+        // trips it (emergency mode on); mid-window arrivals route around it;
+        // the post-cooldown re-check restores it.
+        let reqs = stream(6, 0.1);
+        let router = StackRouter::new(2, RoutePolicy::JoinShortestQueue);
+        let mut stacks = vec![Mock::new(), Mock::new()];
+        stacks[0].reram_c = 90.0;
+        stacks[0].cool_after_s = 0.25;
+        let schedule = FaultSchedule {
+            events: Vec::new(),
+            thermal: Some(ThermalRule {
+                emergency_ceiling_c: 70.0,
+                cooldown_s: 0.12,
+                stack: None,
+            }),
+            wear: None,
+            retry: retry_fast(),
+            recover_p: 1.0,
+            seed: 6,
+        };
+        let out = drive_faulty(&mut stacks, &reqs, &router, &schedule, |_| 0.0);
+        assert_eq!(out.thermal_trips, 1);
+        assert_eq!(out.recoveries, 1);
+        assert!(!stacks[0].emergency, "emergency mode must lift on recovery");
+        assert_eq!(out.final_health[0], HealthState::Healthy);
+        // While quarantined (t in [0.0, ~0.24]) everything went to stack 1.
+        assert!(stacks[0].pushed.iter().all(|r| r.arrival_s > 0.24));
+        assert!(!stacks[0].pushed.is_empty(), "recovered stack serves again");
+    }
+
+    #[test]
+    fn degraded_stack_dies_on_thermal_trip() {
+        // Stall + failed recovery leaves stack 0 Degraded while cool; when
+        // its sensor heats up at t = 0.2 the trip is a second strike → Dead,
+        // queue surrendered and retried on the survivor.
+        let reqs = stream(5, 0.1);
+        let router = StackRouter::new(2, RoutePolicy::RoundRobin);
+        let mut stacks = vec![Mock::new(), Mock::new()];
+        stacks[0].reram_c = 90.0;
+        stacks[0].heat_after_s = 0.2;
+        let schedule = FaultSchedule {
+            events: vec![FaultEvent {
+                t_s: 0.01,
+                stack: 0,
+                kind: FaultKind::Stall { duration_s: 0.05 },
+            }],
+            thermal: Some(ThermalRule {
+                emergency_ceiling_c: 70.0,
+                cooldown_s: 0.05,
+                stack: None,
+            }),
+            wear: None,
+            retry: retry_fast(),
+            recover_p: 0.0,
+            seed: 3,
+        };
+        let out = drive_faulty(&mut stacks, &reqs, &router, &schedule, |_| 0.0);
+        assert_eq!(out.degradations, 1);
+        assert_eq!(out.thermal_trips, 1);
+        assert_eq!(out.final_health[0], HealthState::Dead);
+        assert_eq!(stacks[0].failed_at, Some(0.2));
+        assert_eq!(out.surrendered, 1, "arrival 0 was on stack 0");
+        assert_eq!(out.arrived + out.requeued, out.pushes + out.no_route);
+    }
+
+    #[test]
+    fn wear_rule_kills_after_budget() {
+        // Stack 0 reports 10 completions up front; budget 5 with 1 write per
+        // completion kills it at the first arrival.
+        let reqs = stream(4, 0.1);
+        let router = StackRouter::new(2, RoutePolicy::JoinShortestQueue);
+        let mut stacks = vec![Mock::new(), Mock::new()];
+        stacks[0].completed = 10;
+        let schedule = FaultSchedule {
+            events: Vec::new(),
+            thermal: None,
+            wear: Some(WearRule { write_budget: 5.0, writes_per_completion: 1.0 }),
+            retry: retry_fast(),
+            recover_p: 1.0,
+            seed: 5,
+        };
+        let out = drive_faulty(&mut stacks, &reqs, &router, &schedule, |_| 0.0);
+        assert_eq!(out.wear_deaths, 1);
+        assert_eq!(out.final_health[0], HealthState::Dead);
+        assert!(stacks[0].pushed.is_empty());
+        assert_eq!(stacks[1].pushed.len(), 4);
+    }
+
+    #[test]
+    fn fixed_seed_replays_identically() {
+        let schedule = FaultSchedule::generate(0xFA17, 3, 1.0);
+        let run = || {
+            let reqs = stream(20, 0.05);
+            let router = StackRouter::new(3, RoutePolicy::JoinShortestQueue);
+            let mut stacks = vec![Mock::new(), Mock::new(), Mock::new()];
+            let out = drive_faulty(&mut stacks, &reqs, &router, &schedule, |_| 0.0);
+            let pushes: Vec<Vec<u64>> =
+                stacks.iter().map(|s| s.pushed.iter().map(|r| r.id).collect()).collect();
+            (out, pushes)
+        };
+        let (a, pa) = run();
+        let (b, pb) = run();
+        assert_eq!(a, b);
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn schedule_json_roundtrip() {
+        for seed in [0u64, 1, 7, 0xFA17, 12345] {
+            let s = FaultSchedule::generate(seed, 4, 2.0);
+            let text = s.to_json().pretty();
+            let back = FaultSchedule::from_text(&text).expect("replay parse");
+            assert_eq!(s, back, "seed {seed} must round-trip through JSON");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        assert!(FaultSchedule::from_text("{}").is_err(), "missing seed");
+        let bad_kind = r#"{"seed": 1, "events": [{"t_s": 0.1, "stack": 0, "kind": "melt"}]}"#;
+        assert!(FaultSchedule::from_text(bad_kind).is_err());
+        let bad_stall = r#"{"seed": 1, "events": [{"t_s": 0.1, "stack": 0, "kind": "stall"}]}"#;
+        assert!(FaultSchedule::from_text(bad_stall).is_err(), "stall needs duration_s");
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_varies_by_seed() {
+        assert_eq!(FaultSchedule::generate(11, 3, 1.0), FaultSchedule::generate(11, 3, 1.0));
+        let differs = (0..16)
+            .any(|s| FaultSchedule::generate(s, 3, 1.0) != FaultSchedule::generate(s + 100, 3, 1.0));
+        assert!(differs, "seeds must actually vary the schedule");
+    }
+}

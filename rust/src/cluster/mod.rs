@@ -42,7 +42,13 @@
 //! [`prepass`], the reference baseline the `cluster_routing` bench
 //! compares live routing against. Design record: DESIGN.md §Cluster.
 
+pub mod faults;
 pub mod prepass;
+
+pub use faults::{
+    drive_faulty, FaultEvent, FaultKind, FaultOutcome, FaultSchedule, HealthState, RetryPolicy,
+    ThermalRule, WearRule,
+};
 
 use crate::coordinator::Request;
 use crate::traffic::router::StackRouter;
@@ -106,6 +112,11 @@ pub struct StackSnapshot {
     /// Rolling inter-token latency (EWMA, seconds; 0 for one-shot
     /// stacks).
     pub ewma_itl_s: f64,
+    /// Health as the fault layer tracks it. Stacks self-report
+    /// [`HealthState::Healthy`]; [`faults::drive_faulty`] overlays the
+    /// actual state after snapshotting (the fault-free [`drive`] never
+    /// changes it).
+    pub health: HealthState,
 }
 
 /// A resumable per-stack engine the cluster stepper drives. Implemented
@@ -128,6 +139,26 @@ pub trait ClusterStack {
     /// Accept a routed request. The request's `arrival_s` is at or
     /// after every previously pushed arrival (stream order).
     fn push(&mut self, req: Request);
+
+    /// Fail permanently at `t_s` (fault layer: crash or wear-out):
+    /// surrender every request not yet completed — releasing its KV
+    /// reservations and counting it shed locally — and stop serving.
+    /// The fault driver retries or fails each surrendered request.
+    /// Default: nothing to surrender (stateless stacks).
+    fn fail(&mut self, _t_s: f64) -> Vec<Request> {
+        Vec::new()
+    }
+
+    /// Requests completed so far (the wear rule's write-count input).
+    /// Default 0 disables wear coupling for stacks that don't track it.
+    fn completed(&self) -> u64 {
+        0
+    }
+
+    /// Enter/leave thermal emergency mode (fault layer: quarantine
+    /// clamps the stack's admission batch cap to its floor until the
+    /// live temperature recovers). Default: no-op.
+    fn set_emergency(&mut self, _on: bool) {}
 }
 
 /// Drive the shared arrival stream through the stacks in lockstep
@@ -228,6 +259,7 @@ mod tests {
                 reram_c: 0.0,
                 ewma_ttft_s: 0.0,
                 ewma_itl_s: 0.0,
+                health: HealthState::Healthy,
             }
         }
 

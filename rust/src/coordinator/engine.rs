@@ -322,6 +322,25 @@ mod tests {
     }
 
     #[test]
+    fn zero_duration_report_yields_zero_rates_not_nan() {
+        // Every rate/utilization accessor divides by the makespan; an
+        // empty run must report exact 0.0 everywhere (never NaN/inf,
+        // which would leak into BENCH JSON documents downstream).
+        let cfg = Config::default();
+        let report = Engine::new(&cfg).serve(&[]);
+        for v in [
+            report.throughput_rps,
+            report.avg_latency_s,
+            report.p99_latency_s,
+            report.sm_utilization(),
+            report.reram_utilization(),
+        ] {
+            assert_eq!(v, 0.0, "zero-duration accessor must be exactly 0.0");
+            assert!(v.is_finite());
+        }
+    }
+
+    #[test]
     fn incremental_serve_batch_matches_batch_serve() {
         // Feeding batches one at a time through a persistent ServeState
         // must reproduce the one-shot serve() exactly — the contract the

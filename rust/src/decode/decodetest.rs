@@ -14,7 +14,7 @@
 //! and a single-stack run is byte-identical to the pre-cluster serial
 //! path (`single_stack_cluster_matches_serial_path`).
 
-use crate::cluster::{self, prepass};
+use crate::cluster::{self, prepass, FaultOutcome, FaultSchedule};
 use crate::config::Config;
 use crate::coordinator::Request;
 use crate::decode::engine::DecodeEngine;
@@ -337,6 +337,48 @@ pub fn cluster_routing_scenario(cfg: &Config, policy: RoutePolicy) -> DecodeConf
     dc
 }
 
+/// Canonical failover scenario (shared by the decodetest tests and the
+/// `cluster_faults` bench): the skewed burst mix over three stacks plus
+/// a second wave late enough that the stacks' live Eq. 2–4 thermal
+/// signal is non-zero, with a schedule that crashes stack 0 mid-wave
+/// (its in-flight long generation is surrendered and re-prefilled on a
+/// survivor) and thermally quarantines stack 1. The emergency ceiling
+/// sits below the idle ReRAM floor, so stack 1 trips as soon as one of
+/// its control windows has closed — at the latest on the second
+/// wave-two arrival (every stack's clock is stepped past the window
+/// boundary by the first) — making the trip deterministic without
+/// depending on which survivor inherited the crashed work.
+pub fn faulted_cluster_scenario(
+    policy: RoutePolicy,
+) -> (DecodeConfig, FaultSchedule) {
+    let mut dc = skewed_routing_scenario(policy);
+    dc.stacks = 3;
+    if let ArrivalPattern::Replay { events } = &mut dc.pattern {
+        for i in 0..6u64 {
+            events.push(ReplayEvent {
+                t_s: 0.3 + i as f64 * 0.00005,
+                model: ModelId::BertBase,
+                variant: ModelId::BertBase.default_variant(),
+                seq: 512,
+                out_tokens: 4,
+            });
+        }
+    }
+    let mut schedule = FaultSchedule::empty();
+    schedule.events = vec![cluster::FaultEvent {
+        t_s: 0.00025,
+        stack: 0,
+        kind: cluster::FaultKind::Crash,
+    }];
+    schedule.thermal = Some(cluster::ThermalRule {
+        emergency_ceiling_c: 1.0,
+        cooldown_s: 0.05,
+        stack: Some(1),
+    });
+    schedule.seed = 0x5EED;
+    (dc, schedule)
+}
+
 fn aggregate(dc: &DecodeConfig, outcomes: Vec<DecodeStackOutcome>) -> DecodeReport {
     debug_assert_eq!(outcomes.len(), dc.stacks.max(1));
     let mut total = DecodeTelemetry::new();
@@ -368,7 +410,12 @@ enum RouteMode {
     PrepassKv,
 }
 
-fn run_inner(cfg: &Config, dc: &DecodeConfig, mode: RouteMode) -> DecodeReport {
+fn run_inner(
+    cfg: &Config,
+    dc: &DecodeConfig,
+    mode: RouteMode,
+    faults: Option<&FaultSchedule>,
+) -> (DecodeReport, Option<FaultOutcome>) {
     let generator = TrafficGen {
         pattern: dc.pattern.clone(),
         mix: dc.mix.clone(),
@@ -401,21 +448,39 @@ fn run_inner(cfg: &Config, dc: &DecodeConfig, mode: RouteMode) -> DecodeReport {
     let mut stacks: Vec<DecodeStack> = (0..router.stacks)
         .map(|_| DecodeStack::new(cfg, dc, &table, &engine))
         .collect();
-    cluster::drive(&mut stacks, &requests, &router, pinned.as_deref(), |r| {
+    let need = |r: &Request| {
         engine
             .workload(r.model, r.variant)
             .peak_kv_bytes(r.seq, r.out_tokens.max(1))
-    });
+    };
+    let fault_outcome = match faults {
+        None => {
+            cluster::drive(&mut stacks, &requests, &router, pinned.as_deref(), need);
+            None
+        }
+        Some(schedule) => Some(cluster::drive_faulty(
+            &mut stacks,
+            &requests,
+            &router,
+            schedule,
+            need,
+        )),
+    };
     let outcomes: Vec<DecodeStackOutcome> =
         stacks.into_iter().map(DecodeStack::finish).collect();
-    aggregate(dc, outcomes)
+    let fault_outcome = fault_outcome.map(|mut o| {
+        o.kv_reserved_end_bytes = outcomes.iter().map(|s| s.kv_reserved_end_bytes).sum();
+        o.kv_used_end_bytes = outcomes.iter().map(|s| s.kv_used_end_bytes).sum();
+        o
+    });
+    (aggregate(dc, outcomes), fault_outcome)
 }
 
 /// Run a full decode test: generate, then drive the stream through the
 /// cluster stepper with live routing and aggregate the per-stack
 /// outcomes.
 pub fn run(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
-    run_inner(cfg, dc, RouteMode::Live)
+    run_inner(cfg, dc, RouteMode::Live, None).0
 }
 
 /// Serve the stream with the **retired pre-pass KV-aware assignment**
@@ -424,7 +489,23 @@ pub fn run(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
 /// against. `dc.policy` is ignored for routing (the assignment is
 /// pinned) but still recorded in the report.
 pub fn run_prepass_kv(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
-    run_inner(cfg, dc, RouteMode::PrepassKv)
+    run_inner(cfg, dc, RouteMode::PrepassKv, None).0
+}
+
+/// Run a full decode test under a fault schedule: live routing masked by
+/// the health state machine, crashed stacks' work recovered through the
+/// retry/backoff path ([`cluster::drive_faulty`]). The returned
+/// [`FaultOutcome`] carries the failover ledger plus the end-of-run KV
+/// pool residuals (summed over stacks — the leak check). An empty
+/// schedule reproduces [`run`] bit for bit (pinned by tests and by the
+/// `cluster_faults` bench).
+pub fn run_with_faults(
+    cfg: &Config,
+    dc: &DecodeConfig,
+    schedule: &FaultSchedule,
+) -> (DecodeReport, FaultOutcome) {
+    let (report, outcome) = run_inner(cfg, dc, RouteMode::Live, Some(schedule));
+    (report, outcome.expect("a schedule was supplied"))
 }
 
 #[cfg(test)]
@@ -850,4 +931,138 @@ mod tests {
         }
     }
 
+    #[test]
+    fn empty_fault_schedule_is_bit_identical_to_plain_run() {
+        // The tentpole's zero-overhead pin: driving through the fault
+        // layer with nothing scheduled must serialize exactly like the
+        // plain cluster path, for both the masked-RR and the argmin
+        // policies.
+        let cfg = Config::default();
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::KvAware] {
+            let dc = skewed_routing_scenario(policy);
+            let plain = run(&cfg, &dc).to_json(&dc).pretty();
+            let (report, out) = run_with_faults(&cfg, &dc, &FaultSchedule::empty());
+            assert_eq!(
+                plain,
+                report.to_json(&dc).pretty(),
+                "{}: empty schedule must not perturb",
+                policy.name()
+            );
+            let t = &report.total;
+            assert!(out.conserved(t.submitted, t.completed, t.shed, t.refused_kv));
+            assert_eq!(out.requeued + out.failed + out.surrendered, 0);
+            assert!(out.final_health.iter().all(|h| *h == cluster::HealthState::Healthy));
+        }
+    }
+
+    #[test]
+    fn crash_and_thermal_quarantine_fail_over_to_survivors() {
+        // The acceptance scenario: one stack killed mid-wave, one
+        // thermally quarantined on the live signal; failover routing
+        // completes ≥ 99% of retryable requests, conservation holds
+        // exactly, and the whole document is byte-identical across runs
+        // and thread counts.
+        let cfg = Config::default();
+        let (dc, schedule) = faulted_cluster_scenario(RoutePolicy::KvAware);
+        let (report, out) = run_with_faults(&cfg, &dc, &schedule);
+        let t = &report.total;
+        assert!(
+            out.conserved(t.submitted, t.completed, t.shed, t.refused_kv),
+            "conservation: {out:?} vs submitted {} completed {} shed {} refused {}",
+            t.submitted,
+            t.completed,
+            t.shed,
+            t.refused_kv
+        );
+        assert_eq!(out.crashes, 1);
+        assert_eq!(out.final_health[0], cluster::HealthState::Dead);
+        assert!(out.surrendered > 0, "the crash surrendered in-flight work");
+        assert!(out.requeued > 0, "failover re-enqueued the survivors");
+        assert!(out.thermal_trips >= 1, "stack 1 must trip on the live signal");
+        assert_eq!(out.final_health[1], cluster::HealthState::Quarantined);
+        assert!(
+            out.retryable_completion_rate(t.completed) >= 0.99,
+            "failover must complete ≥99% of retryable requests: {} / {}",
+            t.completed,
+            out.retryable()
+        );
+
+        let doc = |threads: usize| {
+            let (mut dcx, s) = faulted_cluster_scenario(RoutePolicy::KvAware);
+            dcx.threads = threads;
+            let (r, o) = run_with_faults(&cfg, &dcx, &s);
+            format!("{}\n{}", r.to_json(&dcx).pretty(), o.to_json().pretty())
+        };
+        let a = doc(1);
+        assert_eq!(a, doc(1), "same seed must reproduce");
+        assert_eq!(a, doc(2), "thread count must not change output");
+        assert_eq!(a, doc(8), "thread count must not change output");
+    }
+
+    #[test]
+    fn all_stacks_dead_leaks_no_kv_bytes() {
+        let cfg = Config::default();
+        let mut dc = base(200.0, 0.4);
+        dc.stacks = 2;
+        let mut schedule = FaultSchedule::empty();
+        schedule.events = vec![
+            cluster::FaultEvent {
+                t_s: 0.05,
+                stack: 0,
+                kind: cluster::FaultKind::Crash,
+            },
+            cluster::FaultEvent {
+                t_s: 0.05,
+                stack: 1,
+                kind: cluster::FaultKind::Crash,
+            },
+        ];
+        let (report, out) = run_with_faults(&cfg, &dc, &schedule);
+        let t = &report.total;
+        assert!(out.conserved(t.submitted, t.completed, t.shed, t.refused_kv));
+        assert!(out.final_health.iter().all(|h| *h == cluster::HealthState::Dead));
+        assert!(out.failed > 0, "post-crash arrivals exhaust their retries");
+        assert!(out.no_route > 0, "nothing is routable after the crashes");
+        assert_eq!(out.kv_reserved_end_bytes, 0.0, "no leaked reservations");
+        assert_eq!(out.kv_used_end_bytes, 0.0, "no leaked cache bytes");
+    }
+
+    #[test]
+    fn chaos_schedules_conserve_and_replay_deterministically() {
+        // The seeded chaos sweep: ~100 generated schedules over a short
+        // stream; every one must keep both conservation identities and
+        // leak nothing, and a sample must replay byte-identically across
+        // thread counts.
+        let cfg = Config::default();
+        for seed in 0..100u64 {
+            let schedule = FaultSchedule::generate(seed, 2, 0.25);
+            let mut dc = base(150.0, 0.25);
+            dc.stacks = 2;
+            let (report, out) = run_with_faults(&cfg, &dc, &schedule);
+            let t = &report.total;
+            assert!(
+                out.conserved(t.submitted, t.completed, t.shed, t.refused_kv),
+                "seed {seed}: {out:?} vs submitted {} completed {} shed {} refused {}",
+                t.submitted,
+                t.completed,
+                t.shed,
+                t.refused_kv
+            );
+            if out.final_health.iter().all(|h| *h == cluster::HealthState::Dead) {
+                assert_eq!(out.kv_reserved_end_bytes, 0.0, "seed {seed} leaked");
+            }
+            if seed % 20 == 0 {
+                let doc = |threads: usize| {
+                    let mut dcx = base(150.0, 0.25);
+                    dcx.stacks = 2;
+                    dcx.threads = threads;
+                    let (r, o) = run_with_faults(&cfg, &dcx, &schedule);
+                    format!("{}\n{}", r.to_json(&dcx).pretty(), o.to_json().pretty())
+                };
+                let a = doc(1);
+                assert_eq!(a, doc(2), "seed {seed}: thread determinism");
+                assert_eq!(a, doc(8), "seed {seed}: thread determinism");
+            }
+        }
+    }
 }

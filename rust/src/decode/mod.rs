@@ -48,7 +48,7 @@ pub mod kv;
 pub mod scheduler;
 pub mod telemetry;
 
-pub use decodetest::{run, DecodeReport};
+pub use decodetest::{run, run_with_faults, DecodeReport};
 pub use engine::{DecodeEngine, StepCost, StepGroup};
 pub use kv::{KvCacheConfig, KvPool};
 pub use scheduler::{DecodeConfig, DecodeStack, DecodeStackOutcome};

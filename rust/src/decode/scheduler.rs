@@ -67,7 +67,7 @@
 use std::collections::HashMap;
 use std::collections::VecDeque;
 
-use crate::cluster::{self, ClusterStack, StackSnapshot};
+use crate::cluster::{self, ClusterStack, HealthState, StackSnapshot};
 use crate::config::Config;
 use crate::coordinator::{Batch, Engine, Request, ServeState};
 use crate::decode::engine::{DecodeEngine, StepGroup};
@@ -140,11 +140,21 @@ pub struct DecodeStackOutcome {
     pub reram_peak_c: f64,
     pub throttle_events: u64,
     pub windows: u64,
+    /// KV pool bytes still reserved when the stack wound down. Zero for
+    /// every healthy run (retirement releases reservations); the fault
+    /// layer's leak check pins it at zero even after [`ClusterStack::fail`].
+    pub kv_reserved_end_bytes: f64,
+    /// KV pool bytes still written when the stack wound down (same
+    /// zero-leak contract as `kv_reserved_end_bytes`).
+    pub kv_used_end_bytes: f64,
 }
 
 /// A request mid-generation.
 #[derive(Debug, Clone)]
 struct ActiveGen {
+    /// Originating request id, kept so [`ClusterStack::fail`] can
+    /// surrender the generation as a re-routable [`Request`].
+    id: u64,
     model: ModelId,
     variant: ArchVariant,
     prompt: usize,
@@ -432,6 +442,8 @@ impl<'a> DecodeStack<'a> {
             reram_peak_c: self.ctl.reram_peak_c,
             throttle_events: self.ctl.events.len() as u64,
             windows: self.sim_windows,
+            kv_reserved_end_bytes: self.kv.reserved_bytes(),
+            kv_used_end_bytes: self.kv.used_bytes(),
         }
     }
 
@@ -589,6 +601,7 @@ impl<'a> DecodeStack<'a> {
                         let sample = self.t - req.arrival_s;
                         self.record_ttft(sample);
                         let a = ActiveGen {
+                            id: req.id,
                             model: req.model,
                             variant: req.variant,
                             prompt: req.seq,
@@ -717,6 +730,7 @@ impl<'a> DecodeStack<'a> {
                         let sample = self.t - r.arrival_s;
                         self.record_ttft(sample);
                         let a = ActiveGen {
+                            id: r.id,
                             model: r.model,
                             variant: r.variant,
                             prompt: r.seq,
@@ -918,6 +932,7 @@ impl ClusterStack for DecodeStack<'_> {
             reram_c: self.ctl.last_reram_c,
             ewma_ttft_s: self.ewma_ttft_s,
             ewma_itl_s: self.ewma_itl_s,
+            health: HealthState::Healthy,
         }
     }
 
@@ -947,6 +962,53 @@ impl ClusterStack for DecodeStack<'_> {
         };
         self.ops_budget += 4 * (req.out_tokens.max(1) as u64 + chunks + 1);
         self.pending.push_back(req);
+    }
+
+    /// Abort the stack for the fault layer: every request it still owns
+    /// — un-ingested, queued, mid-generation, mid-chunking — is counted
+    /// shed here (double-entry: the failover driver re-submits the
+    /// survivors elsewhere) and returned for re-routing with its KV
+    /// reservation released. Mid-flight generations lose their cached
+    /// context, so their surrendered [`Request`] carries `input: None`
+    /// — the retry pays the full prefill-recompute cost.
+    fn fail(&mut self, _t_s: f64) -> Vec<Request> {
+        let mut surrendered: Vec<Request> = Vec::new();
+        surrendered.extend(self.pending.drain(..));
+        surrendered.extend(self.waiting.drain(..));
+        for a in self.running.drain(..) {
+            self.kv.release(a.peak_kv, a.used_kv);
+            surrendered.push(Request {
+                id: a.id,
+                model: a.model,
+                variant: a.variant,
+                seq: a.prompt,
+                arrival_s: a.arrival_s,
+                out_tokens: a.out_tokens,
+                input: None,
+            });
+        }
+        if let Some(p) = self.partial.take() {
+            self.kv.release(p.peak_kv, p.used_kv);
+            let mut req = p.req;
+            req.input = None;
+            surrendered.push(req);
+        }
+        self.tel.shed += surrendered.len() as u64;
+        self.pending_kv_bytes = 0.0;
+        self.done = true;
+        surrendered
+    }
+
+    fn completed(&self) -> u64 {
+        self.tel.completed
+    }
+
+    fn set_emergency(&mut self, on: bool) {
+        if on {
+            self.ctl.enter_emergency();
+        } else {
+            self.ctl.exit_emergency();
+        }
     }
 }
 
@@ -1195,6 +1257,40 @@ mod tests {
             chunked.telemetry.itl_us.max(),
             plain.telemetry.itl_us.max()
         );
+    }
+
+    #[test]
+    fn fail_surrenders_all_work_and_releases_kv() {
+        let cfg = Config::default();
+        let dc = base_config();
+        let reqs = vec![
+            gen_req(0, 0.0, 128, 50),
+            gen_req(1, 0.0, 128, 50),
+            gen_req(2, 0.5, 64, 5),
+        ];
+        let table = phases::phase_table_with_chunks(&cfg, &reqs, dc.chunk_tokens, 1);
+        let keys = phases::decode_keys(&reqs);
+        let engine = DecodeEngine::build(&cfg, &keys);
+        let mut stack = DecodeStack::new(&cfg, &dc, &table, &engine);
+        for r in &reqs {
+            stack.push(r.clone());
+        }
+        // Both t=0 requests prefill into the running set; id 2 stays
+        // un-ingested (arrival 0.5).
+        stack.step_until(0.01);
+        let surrendered = stack.fail(0.01);
+        let ids: Vec<u64> = surrendered.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 0, 1], "pending, then queued, then running");
+        assert!(
+            surrendered.iter().all(|r| r.id == 2 || r.input.is_none()),
+            "mid-flight generations surrender without cached input"
+        );
+        let out = stack.finish();
+        let t = &out.telemetry;
+        assert_eq!(t.completed, 0);
+        assert_eq!(t.completed + t.shed + t.refused_kv, t.submitted);
+        assert_eq!(out.kv_reserved_end_bytes, 0.0, "no leaked reservations");
+        assert_eq!(out.kv_used_end_bytes, 0.0, "no leaked cache bytes");
     }
 
     #[test]

@@ -20,6 +20,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 
 use hetrax::arch::Placement;
+use hetrax::cluster::FaultSchedule;
 use hetrax::config::Config;
 use hetrax::coordinator::{Batcher, BatcherConfig, Engine, Request};
 use hetrax::experiments::common::{self, Effort};
@@ -133,6 +134,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&cfg, &args),
         "loadtest" => cmd_loadtest(&cfg, &args, seed),
         "decodetest" => cmd_decodetest(&cfg, &args, seed),
+        "faulttest" => cmd_faulttest(&cfg, &args, seed),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -174,6 +176,12 @@ COMMANDS:
                --chunk-tokens N (0 = whole-prompt prefills)
                --kv-mib M --kv-sm-frac F --ceiling C --uncontrolled
                --trace FILE (replay) --threads N --out BENCH_decode.json]
+  faulttest   decode run under a deterministic fault schedule: stack
+              crashes, thermal-trip quarantines, stalls, wear-out, and
+              retry/backoff failover (decodetest flags, plus:)
+              [--fault-seed N (generate a schedule)
+               --schedule FILE (JSON replay, overrides --fault-seed)
+               --out BENCH_faults.json]
 ";
 
 fn cmd_spec(cfg: &Config) -> Result<()> {
@@ -318,6 +326,13 @@ struct TrafficArgs {
 fn parse_traffic(args: &Args, default_rps: f64, default_duration: f64) -> Result<TrafficArgs> {
     let rps = args.get_f64("rps", default_rps)?;
     let duration = args.get_f64("duration", default_duration)?;
+    if !duration.is_finite() || duration <= 0.0 {
+        bail!("--duration must be a positive number of seconds (got {duration})");
+    }
+    let stacks = args.get_usize("stacks", 1)?;
+    if stacks == 0 {
+        bail!("--stacks must be at least 1");
+    }
     let policy = match args.get("policy") {
         Some(v) => RoutePolicy::parse(v)
             .ok_or_else(|| anyhow!("unknown policy {v:?} (jsq | rr | kv | latency)"))?,
@@ -326,11 +341,18 @@ fn parse_traffic(args: &Args, default_rps: f64, default_duration: f64) -> Result
         }
         None => RoutePolicy::JoinShortestQueue,
     };
+    let pattern = parse_pattern(args, rps, duration)?;
+    // Replay traces carry their own arrival instants; every generated
+    // pattern needs a positive rate or the run would serve nothing (or
+    // spin on a degenerate process).
+    if !matches!(pattern, ArrivalPattern::Replay { .. }) && (!rps.is_finite() || rps <= 0.0) {
+        bail!("--rps must be a positive arrival rate (got {rps})");
+    }
     Ok(TrafficArgs {
-        pattern: parse_pattern(args, rps, duration)?,
+        pattern,
         models: parse_models(args)?,
         duration,
-        stacks: args.get_usize("stacks", 1)?,
+        stacks,
         policy,
         threads: args.get_usize("threads", 0)?,
         ceiling: match args.get("ceiling") {
@@ -371,11 +393,17 @@ fn parse_pattern(args: &Args, rps: f64, duration: f64) -> Result<ArrivalPattern>
 }
 
 fn parse_models(args: &Args) -> Result<Vec<ModelId>> {
-    args.get("models")
-        .unwrap_or("bert-base")
+    let spec = args.get("models").unwrap_or("bert-base");
+    let models: Vec<ModelId> = spec
         .split(',')
-        .map(|s| ModelId::parse(s.trim()).ok_or_else(|| anyhow!("unknown model {s:?}")))
-        .collect()
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| ModelId::parse(s).ok_or_else(|| anyhow!("unknown model {s:?}")))
+        .collect::<Result<_>>()?;
+    if models.is_empty() {
+        bail!("--models must name at least one model (got {spec:?})");
+    }
+    Ok(models)
 }
 
 fn write_report(out: &str, doc: &hetrax::util::json::Json) -> Result<()> {
@@ -520,4 +548,150 @@ fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
         report.windows
     );
     write_report(args.get("out").unwrap_or("BENCH_decode.json"), &report.to_json(&dc))
+}
+
+fn cmd_faulttest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
+    let ta = parse_traffic(args, 300.0, 1.0)?;
+    let outlen = OutputLenDist::parse(args.get("outlen").unwrap_or("geometric:32"))
+        .map_err(|e| anyhow!(e))?;
+
+    let mut dc =
+        DecodeConfig::new(ta.pattern, RequestMix::models(&ta.models).with_output(outlen));
+    dc.duration_s = ta.duration;
+    dc.stacks = ta.stacks;
+    dc.policy = ta.policy;
+    dc.seed = seed;
+    dc.max_running = args.get_usize("max-running", 8)?;
+    dc.max_prefill_batch = args.get_usize("prefill-batch", 4)?;
+    dc.chunk_tokens = args.get_usize("chunk-tokens", 0)?;
+    dc.kv.capacity_bytes = args.get_f64("kv-mib", 128.0)? * 1024.0 * 1024.0;
+    dc.kv.sm_frac = args.get_f64("kv-sm-frac", dc.kv.sm_frac)?;
+    dc.threads = ta.threads;
+    dc.throttle.ceiling_c = ta.ceiling.unwrap_or(dc.throttle.ceiling_c);
+    dc.throttle.enabled = !ta.uncontrolled;
+
+    let schedule = match args.get("schedule") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}"))?;
+            FaultSchedule::from_text(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?
+        }
+        None => FaultSchedule::generate(
+            args.get_usize("fault-seed", 1)? as u64,
+            dc.stacks,
+            dc.duration_s,
+        ),
+    };
+
+    let (report, outcome) = decodetest::run_with_faults(cfg, &dc, &schedule);
+    let t = &report.total;
+    println!(
+        "faulttest {} @ {:.0} rps x {:.1}s over {} stack(s), policy {}",
+        dc.pattern.name(),
+        dc.pattern.nominal_rps(),
+        dc.duration_s,
+        dc.stacks,
+        dc.policy.name()
+    );
+    println!(
+        "  schedule:  {} events, thermal {}, wear {}, max retries {} (fault seed {})",
+        schedule.events.len(),
+        if schedule.thermal.is_some() { "on" } else { "off" },
+        if schedule.wear.is_some() { "on" } else { "off" },
+        schedule.retry.max_retries,
+        schedule.seed
+    );
+    println!(
+        "  requests:  {} submitted, {} completed, {} shed, {} refused (KV), {} failed",
+        t.submitted, t.completed, t.shed, t.refused_kv, outcome.failed
+    );
+    println!(
+        "  faults:    {} crashes, {} stalls, {} thermal trips, {} wear deaths, {} recoveries",
+        outcome.crashes,
+        outcome.stalls,
+        outcome.thermal_trips,
+        outcome.wear_deaths,
+        outcome.recoveries
+    );
+    println!(
+        "  failover:  {} surrendered, {} requeued, {} no-route; retryable completion {:.3}",
+        outcome.surrendered,
+        outcome.requeued,
+        outcome.no_route,
+        outcome.retryable_completion_rate(t.completed)
+    );
+    println!(
+        "  health:    [{}]",
+        outcome
+            .final_health
+            .iter()
+            .map(|h| h.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    if !outcome.conserved(t.submitted, t.completed, t.shed, t.refused_kv) {
+        bail!("request conservation violated — this is a simulator bug");
+    }
+    let mut doc = report.to_json(&dc);
+    doc.set("bench", "cluster_faults")
+        .set("fault_schedule", schedule.to_json())
+        .set("faults", outcome.to_json());
+    write_report(args.get("out").unwrap_or("BENCH_faults.json"), &doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(flags: &[(&str, Option<&str>)]) -> Args {
+        Args {
+            command: "loadtest".to_string(),
+            flags: flags
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.map(str::to_string)))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn zero_stacks_is_a_clean_error() {
+        let e = parse_traffic(&args(&[("stacks", Some("0"))]), 200.0, 1.0).unwrap_err();
+        assert!(e.to_string().contains("--stacks"), "{e}");
+    }
+
+    #[test]
+    fn zero_rps_is_a_clean_error() {
+        for rps in ["0", "-5", "nan"] {
+            let e = parse_traffic(&args(&[("rps", Some(rps))]), 200.0, 1.0).unwrap_err();
+            assert!(e.to_string().contains("--rps"), "{rps}: {e}");
+        }
+    }
+
+    #[test]
+    fn zero_duration_is_a_clean_error() {
+        for d in ["0", "-1", "inf"] {
+            let e = parse_traffic(&args(&[("duration", Some(d))]), 200.0, 1.0).unwrap_err();
+            assert!(e.to_string().contains("--duration"), "{d}: {e}");
+        }
+    }
+
+    #[test]
+    fn empty_model_mix_is_a_clean_error() {
+        for spec in ["", ",", " , "] {
+            let e = parse_traffic(&args(&[("models", Some(spec))]), 200.0, 1.0).unwrap_err();
+            assert!(e.to_string().contains("--models"), "{spec:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn valid_traffic_args_still_parse() {
+        let t = parse_traffic(
+            &args(&[("stacks", Some("2")), ("rps", Some("100")), ("models", Some("bert-base"))]),
+            200.0,
+            1.0,
+        )
+        .expect("valid flags must parse");
+        assert_eq!(t.stacks, 2);
+        assert_eq!(t.models, vec![ModelId::BertBase]);
+    }
 }

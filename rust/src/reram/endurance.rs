@@ -56,6 +56,16 @@ pub fn mha_row_writes_per_inference(dims: &ModelDims, seq: usize) -> f64 {
     per_head_layer * dims.layers as f64
 }
 
+/// Total ReRAM row writes for one inference at sequence length `seq`:
+/// the MHA dynamic-operand rewrites plus the per-layer FF weight pass.
+///
+/// This is the wear signal the cluster fault layer consumes: a
+/// [`crate::cluster::WearRule`] multiplies it by a stack's completed
+/// inference count and compares against `specs::RERAM_ENDURANCE_MIN`.
+pub fn row_writes_per_inference(dims: &ModelDims, seq: usize) -> f64 {
+    mha_row_writes_per_inference(dims, seq) + ff_row_writes_per_inference(dims)
+}
+
 /// FF row writes per inference (weights rewritten once per layer, §4.2).
 pub fn ff_row_writes_per_inference(dims: &ModelDims) -> f64 {
     let rows = specs::RERAM_XBAR_ROWS as f64;
@@ -116,6 +126,17 @@ mod tests {
         let ff_w = ff_row_writes_per_inference(&dims);
         let ff_inf = t.inferences_to_failure(ff_w, specs::RERAM_ENDURANCE_MIN);
         assert!(ff_inf > 10.0 * inf_min);
+    }
+
+    #[test]
+    fn total_writes_are_the_sum_of_mha_and_ff() {
+        let dims = ModelId::BertLarge.dims();
+        let total = row_writes_per_inference(&dims, 1024);
+        assert_eq!(
+            total,
+            mha_row_writes_per_inference(&dims, 1024) + ff_row_writes_per_inference(&dims)
+        );
+        assert!(total > mha_row_writes_per_inference(&dims, 1024));
     }
 
     #[test]

@@ -120,6 +120,9 @@ pub struct AdmissionController {
     /// first window is priced) — the live signal
     /// [`crate::cluster::StackSnapshot::reram_c`] exposes to routing.
     pub last_reram_c: f64,
+    /// Thermal emergency (fault-layer quarantine): the batch cap is
+    /// clamped to the floor and cannot recover until the emergency lifts.
+    emergency: bool,
 }
 
 impl AdmissionController {
@@ -142,7 +145,27 @@ impl AdmissionController {
             peak_c: 0.0,
             reram_peak_c: 0.0,
             last_reram_c: 0.0,
+            emergency: false,
         }
+    }
+
+    /// Enter thermal emergency mode (the fault layer quarantined this
+    /// stack): clamp the batch cap to the floor immediately and hold it
+    /// there — the ×2 cool-window recovery is gated off until
+    /// [`AdmissionController::exit_emergency`].
+    pub fn enter_emergency(&mut self) {
+        self.emergency = true;
+        self.batch_cap = self.throttle.min_batch;
+    }
+
+    /// Leave emergency mode; the cap recovers organically on cool
+    /// windows, exactly as after an ordinary throttle.
+    pub fn exit_emergency(&mut self) {
+        self.emergency = false;
+    }
+
+    pub fn in_emergency(&self) -> bool {
+        self.emergency
     }
 
     /// Predict the steady-state thermal report for one control window
@@ -286,7 +309,7 @@ impl AdmissionController {
         let old_cap = self.batch_cap;
         if keep < n {
             self.batch_cap = (self.batch_cap / 2).max(self.throttle.min_batch);
-        } else if admitted_reram <= self.throttle.ceiling_c - 2.0 {
+        } else if !self.emergency && admitted_reram <= self.throttle.ceiling_c - 2.0 {
             self.batch_cap = (self.batch_cap * 2).min(self.base_batch);
         }
 
@@ -431,5 +454,23 @@ mod tests {
         ctl.admit(0.05, Vec::new(), &[]);
         ctl.admit(0.10, Vec::new(), &[]);
         assert_eq!(ctl.batch_cap, 8, "cap saturates at the base");
+    }
+
+    #[test]
+    fn emergency_clamps_cap_and_blocks_recovery() {
+        let cfg = Config::default();
+        let mut ctl = AdmissionController::new(&cfg, ThrottleConfig::default(), 8);
+        ctl.enter_emergency();
+        assert!(ctl.in_emergency());
+        assert_eq!(ctl.batch_cap, 1, "cap drops to the floor at once");
+        // Cool idle windows must NOT double the cap while the emergency
+        // holds (exactly the windows that recover it normally).
+        ctl.admit(0.0, Vec::new(), &[]);
+        ctl.admit(0.05, Vec::new(), &[]);
+        assert_eq!(ctl.batch_cap, 1, "recovery is gated off in emergency");
+        ctl.exit_emergency();
+        assert!(!ctl.in_emergency());
+        ctl.admit(0.10, Vec::new(), &[]);
+        assert_eq!(ctl.batch_cap, 2, "organic recovery resumes after exit");
     }
 }

@@ -16,7 +16,7 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::cluster::{self, ClusterStack, StackSnapshot};
+use crate::cluster::{self, ClusterStack, HealthState, StackSnapshot};
 use crate::config::Config;
 use crate::coordinator::{Batcher, BatcherConfig, Engine, Request, ServeState};
 use crate::traffic::admission::{AdmissionController, BatchCost, ThrottleConfig};
@@ -399,6 +399,7 @@ impl ClusterStack for ServeStack<'_> {
             reram_c: self.ctl.last_reram_c,
             ewma_ttft_s: self.ewma_latency_s,
             ewma_itl_s: 0.0,
+            health: HealthState::Healthy,
         }
     }
 
@@ -413,6 +414,31 @@ impl ClusterStack for ServeStack<'_> {
         let info = self.phases[&(req.model, req.variant, req.seq)];
         self.horizon_s = self.horizon_s.max(req.arrival_s) + info.mha_s + info.ff_s;
         self.pending.push_back(req);
+    }
+
+    /// Abort for the fault layer: surrender the un-ingested and backlog
+    /// requests for re-routing, counting each as shed here (the
+    /// failover driver re-submits survivors elsewhere — double-entry).
+    /// Prefill traffic holds no KV residency, so nothing to release.
+    fn fail(&mut self, _t_s: f64) -> Vec<Request> {
+        let mut surrendered: Vec<Request> = Vec::new();
+        surrendered.extend(self.pending.drain(..));
+        surrendered.append(&mut self.backlog);
+        self.telemetry.shed += surrendered.len() as u64;
+        self.done = true;
+        surrendered
+    }
+
+    fn completed(&self) -> u64 {
+        self.telemetry.completed
+    }
+
+    fn set_emergency(&mut self, on: bool) {
+        if on {
+            self.ctl.enter_emergency();
+        } else {
+            self.ctl.exit_emergency();
+        }
     }
 }
 

@@ -104,13 +104,63 @@ impl StackRouter {
             self.policy == RoutePolicy::RoundRobin || snaps.len() == self.stacks,
             "snapshot-reading policies need one snapshot per stack"
         );
-        let backlog = |s: &StackSnapshot| (s.horizon_s - now_s).max(0.0);
         match self.policy {
             RoutePolicy::RoundRobin => (seq_no % self.stacks as u64) as usize,
-            RoutePolicy::JoinShortestQueue => {
-                argmin(snaps, |s| (backlog(s), 0u64, 0.0))
+            _ => argmin(snaps, |s| self.key(s, now_s, need_kv_bytes)),
+        }
+    }
+
+    /// [`StackRouter::choose`] with non-routable stacks masked out (the
+    /// fault layer's entry point: `routable[i]` is false for quarantined
+    /// and dead stacks). Round-robin cycles through the routable index
+    /// list; every other policy runs its argmin over the routable
+    /// snapshots only. Returns `None` when no stack is routable. With
+    /// every stack routable this is exactly [`StackRouter::choose`]
+    /// (pinned by tests) — the empty-schedule equivalence of the fault
+    /// driver depends on it.
+    pub fn choose_masked(
+        &self,
+        seq_no: u64,
+        now_s: f64,
+        snaps: &[StackSnapshot],
+        need_kv_bytes: f64,
+        routable: &[bool],
+    ) -> Option<usize> {
+        debug_assert!(
+            self.policy == RoutePolicy::RoundRobin || snaps.len() == self.stacks,
+            "snapshot-reading policies need one snapshot per stack"
+        );
+        let up = |i: usize| routable.get(i).copied().unwrap_or(true);
+        if self.policy == RoutePolicy::RoundRobin {
+            let live: Vec<usize> = (0..self.stacks).filter(|&i| up(i)).collect();
+            if live.is_empty() {
+                return None;
             }
-            RoutePolicy::KvAware => argmin(snaps, |s| {
+            return Some(live[(seq_no % live.len() as u64) as usize]);
+        }
+        let mut best: Option<usize> = None;
+        let mut best_key = (f64::INFINITY, u64::MAX, f64::INFINITY);
+        for (i, s) in snaps.iter().enumerate() {
+            if !up(i) {
+                continue;
+            }
+            let k = self.key(s, now_s, need_kv_bytes);
+            if best.is_none() || key_lt(k, best_key) {
+                best = Some(i);
+                best_key = k;
+            }
+        }
+        best
+    }
+
+    /// The policy's ranking key for one snapshot (lower wins; see
+    /// [`RoutePolicy`] for semantics). Round-robin never ranks.
+    fn key(&self, s: &StackSnapshot, now_s: f64, need_kv_bytes: f64) -> (f64, u64, f64) {
+        let backlog = (s.horizon_s - now_s).max(0.0);
+        match self.policy {
+            RoutePolicy::RoundRobin => (0.0, 0, 0.0),
+            RoutePolicy::JoinShortestQueue => (backlog, 0u64, 0.0),
+            RoutePolicy::KvAware => {
                 // Saturated when the committed bytes cannot take the
                 // reservation. Oversized requests (need > every
                 // capacity) are refused at ingest on every stack, so
@@ -118,19 +168,20 @@ impl StackRouter {
                 // decide — mirroring the retired model's convention.
                 let saturated = need_kv_bytes > 0.0
                     && need_kv_bytes <= s.kv_capacity_bytes
-                    && s.kv_committed_bytes + need_kv_bytes
-                        > s.kv_capacity_bytes + 1e-6;
-                (
-                    (saturated as u64) as f64,
-                    s.outstanding_steps,
-                    backlog(s),
-                )
-            }),
-            RoutePolicy::LatencyAware => argmin(snaps, |s| {
-                (backlog(s) + s.ewma_ttft_s + s.ewma_itl_s, s.queue_depth as u64, 0.0)
-            }),
+                    && s.kv_committed_bytes + need_kv_bytes > s.kv_capacity_bytes + 1e-6;
+                ((saturated as u64) as f64, s.outstanding_steps, backlog)
+            }
+            RoutePolicy::LatencyAware => {
+                (backlog + s.ewma_ttft_s + s.ewma_itl_s, s.queue_depth as u64, 0.0)
+            }
         }
     }
+}
+
+/// Strict lexicographic `<` on a ranking key (ties never displace an
+/// earlier, lower-index winner).
+fn key_lt(a: (f64, u64, f64), b: (f64, u64, f64)) -> bool {
+    a.0 < b.0 || (a.0 == b.0 && a.1 < b.1) || (a.0 == b.0 && a.1 == b.1 && a.2 < b.2)
 }
 
 /// Lowest key wins; ties break to the lowest stack index (strict `<`
@@ -140,10 +191,7 @@ fn argmin(snaps: &[StackSnapshot], key: impl Fn(&StackSnapshot) -> (f64, u64, f6
     let mut best_key = (f64::INFINITY, u64::MAX, f64::INFINITY);
     for (i, s) in snaps.iter().enumerate() {
         let k = key(s);
-        if k.0 < best_key.0
-            || (k.0 == best_key.0 && k.1 < best_key.1)
-            || (k.0 == best_key.0 && k.1 == best_key.1 && k.2 < best_key.2)
-        {
+        if key_lt(k, best_key) {
             best = i;
             best_key = k;
         }
@@ -168,6 +216,7 @@ mod tests {
             reram_c: 0.0,
             ewma_ttft_s: 0.0,
             ewma_itl_s: 0.0,
+            health: crate::cluster::HealthState::Healthy,
         }
     }
 
@@ -233,6 +282,45 @@ mod tests {
         // its ledger advantage.
         snaps[0].ewma_ttft_s = 0.050;
         assert_eq!(router.choose(1, 0.0, &snaps, 0.0), 1);
+    }
+
+    #[test]
+    fn masked_choice_equals_choose_when_all_routable() {
+        let mut snaps: Vec<StackSnapshot> = (0..3).map(snap).collect();
+        snaps[0].horizon_s = 5.0;
+        snaps[1].horizon_s = 1.0;
+        snaps[2].kv_committed_bytes = 95.0;
+        snaps[2].outstanding_steps = 12;
+        let all = vec![true; 3];
+        for policy in RoutePolicy::all() {
+            let router = StackRouter::new(3, policy);
+            for seq in 0..9u64 {
+                assert_eq!(
+                    router.choose_masked(seq, 0.5, &snaps, 20.0, &all),
+                    Some(router.choose(seq, 0.5, &snaps, 20.0)),
+                    "{policy:?} seq {seq}: mask of all-true must not change the pick"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn masked_round_robin_cycles_the_routable_list() {
+        let router = StackRouter::new(3, RoutePolicy::RoundRobin);
+        let mask = vec![true, false, true]; // stack 1 quarantined
+        let picks: Vec<Option<usize>> =
+            (0..5).map(|i| router.choose_masked(i, 0.0, &[], 0.0, &mask)).collect();
+        assert_eq!(picks, vec![Some(0), Some(2), Some(0), Some(2), Some(0)]);
+    }
+
+    #[test]
+    fn masked_argmin_skips_unroutable_and_empties_to_none() {
+        let router = StackRouter::new(2, RoutePolicy::JoinShortestQueue);
+        let mut snaps: Vec<StackSnapshot> = (0..2).map(snap).collect();
+        snaps[0].horizon_s = 1.0; // would win unmasked
+        snaps[1].horizon_s = 9.0;
+        assert_eq!(router.choose_masked(0, 0.0, &snaps, 0.0, &[false, true]), Some(1));
+        assert_eq!(router.choose_masked(0, 0.0, &snaps, 0.0, &[false, false]), None);
     }
 
     #[test]
