@@ -1,0 +1,203 @@
+//! Fleet serving bench: the same prefill-heavy replay trace served
+//! monolithically (every stack prefills and decodes) vs disaggregated
+//! (prefill-specialized stacks hand their KV to decode stacks over the
+//! interposer, the transfer charged as virtual-time delay).
+//!
+//! Asserts the tentpole acceptance: disaggregation beats the monolithic
+//! fleet on p99 TTFT at exact token parity, zero-cost transfer with a
+//! single decode stack pins completions against the monolithic path,
+//! byte-identical output across runs and thread counts, and a
+//! heterogeneous (mixed-arch) fleet that serves deterministically with
+//! every conservation identity exact. Emits `BENCH_fleet.json` (path
+//! overridable via `BENCH_FLEET_JSON`; schema: DESIGN.md
+//! §Bench-Schemas) for the disaggregation trajectory across commits.
+
+use hetrax::config::Config;
+use hetrax::decode::{decodetest, DecodeConfig};
+use hetrax::fleet::{self, FleetConfig, StackArchId};
+use hetrax::model::ModelId;
+use hetrax::traffic::{ArrivalPattern, ReplayEvent, RequestMix, RoutePolicy};
+use hetrax::util::bench::Bencher;
+use hetrax::util::pool;
+
+/// Prefill-heavy open-loop trace: long prompts at 1 ms spacing, so the
+/// offered work is dominated by 512-token prefills — the regime
+/// prefill/decode disaggregation targets.
+fn trace(n: usize) -> Vec<ReplayEvent> {
+    (0..n)
+        .map(|i| ReplayEvent {
+            t_s: i as f64 * 0.001,
+            model: ModelId::BertBase,
+            variant: ModelId::BertBase.default_variant(),
+            seq: 512,
+            out_tokens: 32,
+        })
+        .collect()
+}
+
+/// Both fleets replay the identical trace with admission control off
+/// and a queue-wait bound far beyond any plausible makespan: every
+/// arrival is served, so the mono/disagg comparison is pure scheduling
+/// (and token parity is exact, not modulo shed requests).
+fn decode_config(stacks: usize, events: &[ReplayEvent]) -> DecodeConfig {
+    let mix = RequestMix::single(ModelId::BertBase);
+    let mut dc = DecodeConfig::new(
+        ArrivalPattern::Replay { events: events.to_vec() },
+        mix,
+    );
+    dc.stacks = stacks;
+    dc.policy = RoutePolicy::KvAware;
+    dc.max_running = 8;
+    dc.threads = 1;
+    dc.kv.capacity_bytes = 1024.0 * 1024.0 * 1024.0;
+    dc.throttle.enabled = false;
+    dc.throttle.max_queue_wait_s = 60.0;
+    dc
+}
+
+fn fleet_config(dc: DecodeConfig, prefill_stacks: usize) -> FleetConfig {
+    FleetConfig {
+        dc,
+        prefill_stacks,
+        transfer_bw_bps: None,
+        crash: None,
+    }
+}
+
+fn main() {
+    let cfg = Config::default();
+    let auto = pool::resolve_threads(0);
+    let events = trace(48);
+
+    // Monolithic fleet: 4 hetrax3d stacks, each serving prefill + decode.
+    let mono_dc = decode_config(4, &events);
+    let b = Bencher::quick();
+    let t_mono = b.time("monolithic 4-stack lockstep serve", || {
+        decodetest::run(&cfg, &mono_dc)
+    });
+    let mono = decodetest::run(&cfg, &mono_dc);
+
+    // Disaggregated fleet over the same trace: 3 prefill + 1 decode,
+    // KV handed off at the modeled interposer bandwidth.
+    let fc = fleet_config(decode_config(4, &events), 3);
+    let t_disagg = b.time("disaggregated 3+1 serve + KV hand-off", || {
+        fleet::run_disaggregated(&cfg, &fc)
+    });
+    let (report, out) = fleet::run_disaggregated(&cfg, &fc);
+    let t = &report.total;
+
+    assert!(
+        out.conserved(t.submitted, t.completed, t.shed, t.refused_kv),
+        "fleet conservation violated: {}",
+        out.to_json().pretty()
+    );
+    assert!(out.delivered > 0, "the trace must exercise KV hand-offs");
+    assert!(
+        out.transferred_kv_bytes > 0.0 && out.transfer_s_total > 0.0,
+        "finite interposer bandwidth must charge wire time"
+    );
+
+    // Token parity: a hand-off moves a request's remaining budget, it
+    // never mints or drops tokens.
+    assert_eq!(
+        mono.total.tokens_out, t.tokens_out,
+        "mono and disaggregated fleets must emit identical token counts"
+    );
+    assert_eq!(
+        out.completed_logical(t.completed),
+        mono.total.completed,
+        "every request must complete end-to-end in both fleets"
+    );
+
+    // The acceptance: dedicating stacks to prefill turns slot turnover
+    // from full-request service time into prefill time, so tail TTFT
+    // drops even though one decode stack absorbs the whole decode load.
+    let mono_ttft_p99 = mono.total.ttft_us.percentile(99.0);
+    let disagg_ttft_p99 = t.ttft_us.percentile(99.0);
+    assert!(
+        disagg_ttft_p99 < mono_ttft_p99,
+        "disaggregation must beat the monolithic fleet on p99 TTFT \
+         (disagg {disagg_ttft_p99} us vs mono {mono_ttft_p99} us)"
+    );
+
+    // Zero-cost transfer + a single decode stack pins the disaggregated
+    // path against the monolithic one at token parity.
+    let zfc = FleetConfig {
+        dc: decode_config(2, &events),
+        prefill_stacks: 1,
+        transfer_bw_bps: Some(f64::INFINITY),
+        crash: None,
+    };
+    let (zr, zo) = fleet::run_disaggregated(&cfg, &zfc);
+    let zmono = decodetest::run(&cfg, &zfc.dc);
+    assert_eq!(zr.total.tokens_out, zmono.total.tokens_out);
+    assert_eq!(zo.completed_logical(zr.total.completed), zmono.total.completed);
+    assert_eq!(zo.transfer_s_total, 0.0, "infinite bandwidth is free");
+
+    // Determinism contract: byte-identical across repeated runs and
+    // across thread counts (phase-table precompute is the only
+    // parallel section; serving is serial lockstep).
+    let doc_of = |base: &FleetConfig, threads: usize| {
+        let mut dcx = base.dc.clone();
+        dcx.threads = threads;
+        let fcx = FleetConfig {
+            dc: dcx,
+            prefill_stacks: base.prefill_stacks,
+            transfer_bw_bps: base.transfer_bw_bps,
+            crash: base.crash,
+        };
+        let (r, o) = fleet::run_disaggregated(&cfg, &fcx);
+        format!("{}\n{}", r.to_json(&fcx.dc).pretty(), o.to_json().pretty())
+    };
+    let canonical = doc_of(&fc, 1);
+    assert_eq!(canonical, doc_of(&fc, 1), "same trace must reproduce byte-identically");
+    assert_eq!(canonical, doc_of(&fc, auto), "thread count must not change fleet output");
+
+    // Heterogeneous fleet: chiplet prefill tier feeding a hetrax3d +
+    // atleus-edge decode pair — conserved and deterministic.
+    let mut het_dc = decode_config(4, &events);
+    het_dc.archs = vec![
+        StackArchId::Chiplet2p5d,
+        StackArchId::Chiplet2p5d,
+        StackArchId::Hetrax3d,
+        StackArchId::AtleusEdge,
+    ];
+    let hfc = fleet_config(het_dc, 2);
+    let (hr, ho) = fleet::run_disaggregated(&cfg, &hfc);
+    let ht = &hr.total;
+    assert!(
+        ho.conserved(ht.submitted, ht.completed, ht.shed, ht.refused_kv),
+        "heterogeneous fleet conservation violated"
+    );
+    assert!(ho.delivered > 0);
+    assert_eq!(doc_of(&hfc, 1), doc_of(&hfc, auto), "mixed archs stay deterministic");
+
+    println!(
+        "\n  ttft p99: mono {:.2} ms vs disagg {:.2} ms ({} hand-offs, {:.2} MiB KV on the wire)",
+        mono_ttft_p99 as f64 / 1e3,
+        disagg_ttft_p99 as f64 / 1e3,
+        out.delivered,
+        out.transferred_kv_bytes / (1024.0 * 1024.0)
+    );
+
+    let mut doc = report.to_json(&fc.dc);
+    doc.set("bench", "fleet_serving")
+        .set("fleet", out.to_json())
+        .set(
+            "per_arch",
+            fleet::per_arch_json(&hr, &fleet::resolve_archs(&hfc.dc.archs, hfc.dc.stacks)),
+        )
+        .set("mono_ttft_p99_us", mono_ttft_p99)
+        .set("disagg_ttft_p99_us", disagg_ttft_p99)
+        .set("mono_itl_p99_us", mono.total.itl_us.percentile(99.0))
+        .set("disagg_itl_p99_us", t.itl_us.percentile(99.0))
+        .set("mono_tokens_per_s", mono.tokens_per_s())
+        .set("disagg_tokens_per_s", report.tokens_per_s())
+        .set("run_median_mono_s", t_mono.median_s())
+        .set("run_median_disagg_s", t_disagg.median_s())
+        .set("bench_threads", auto);
+    let out_path =
+        std::env::var("BENCH_FLEET_JSON").unwrap_or_else(|_| "BENCH_fleet.json".into());
+    std::fs::write(&out_path, doc.pretty()).expect("write bench json");
+    println!("wrote {out_path}");
+}

@@ -912,6 +912,8 @@ mod tests {
                 ewma_ttft_s: 0.0,
                 ewma_itl_s: 0.0,
                 health: HealthState::Healthy,
+                arch: crate::fleet::StackArchId::Hetrax3d,
+                compute_scale: 1.0,
             }
         }
 

@@ -51,6 +51,7 @@ pub use faults::{
 };
 
 use crate::coordinator::Request;
+use crate::fleet::StackArchId;
 use crate::traffic::router::StackRouter;
 
 /// Smoothing factor for the rolling TTFT/ITL telemetry the `latency`
@@ -117,6 +118,18 @@ pub struct StackSnapshot {
     /// actual state after snapshotting (the fault-free [`drive`] never
     /// changes it).
     pub health: HealthState,
+    /// Architecture preset the stack was built from
+    /// ([`crate::fleet::StackArchId`]; `hetrax3d` for every pre-fleet
+    /// path). Policies never branch on the id — capacity enters through
+    /// `compute_scale` — but benches report per-arch rows from it.
+    pub arch: StackArchId,
+    /// SM-tier compute capacity relative to the `hetrax3d` baseline
+    /// (exactly 1.0 for it). Snapshot-reading policies divide their
+    /// work-depth terms (outstanding steps, queue depth) by this, so a
+    /// stack with twice the compute ranks as half as loaded at equal
+    /// depth. Dividing by 1.0 is bitwise-exact, which keeps homogeneous
+    /// fleets byte-identical to the pre-fleet ranking.
+    pub compute_scale: f64,
 }
 
 /// A resumable per-stack engine the cluster stepper drives. Implemented
@@ -260,6 +273,8 @@ mod tests {
                 ewma_ttft_s: 0.0,
                 ewma_itl_s: 0.0,
                 health: HealthState::Healthy,
+                arch: StackArchId::Hetrax3d,
+                compute_scale: 1.0,
             }
         }
 

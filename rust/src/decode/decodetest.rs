@@ -22,6 +22,7 @@ use crate::decode::scheduler::{
     self, DecodeConfig, DecodeStack, DecodeStackOutcome,
 };
 use crate::decode::telemetry::DecodeTelemetry;
+use crate::fleet::{self, StackArchId};
 use crate::model::ModelId;
 use crate::traffic::generator::{
     ArrivalPattern, OutputLenDist, ReplayEvent, RequestMix, TrafficGen,
@@ -160,6 +161,16 @@ impl DecodeReport {
             .set("rps", dc.pattern.nominal_rps())
             .set("duration_s", dc.duration_s)
             .set("stacks", dc.stacks)
+            // Resolved per-stack architectures: an empty `--arch` spec and
+            // an explicit all-hetrax3d spec print identically.
+            .set(
+                "archs",
+                fleet::resolve_archs(&dc.archs, dc.stacks.max(1))
+                    .iter()
+                    .map(|a| a.name())
+                    .collect::<Vec<_>>()
+                    .join(","),
+            )
             .set("policy", dc.policy.name())
             .set("seed", dc.seed)
             .set("max_running", dc.max_running)
@@ -379,7 +390,7 @@ pub fn faulted_cluster_scenario(
     (dc, schedule)
 }
 
-fn aggregate(dc: &DecodeConfig, outcomes: Vec<DecodeStackOutcome>) -> DecodeReport {
+pub(crate) fn aggregate(dc: &DecodeConfig, outcomes: Vec<DecodeStackOutcome>) -> DecodeReport {
     debug_assert_eq!(outcomes.len(), dc.stacks.max(1));
     let mut total = DecodeTelemetry::new();
     let mut peak_c = 0.0f64;
@@ -423,9 +434,31 @@ fn run_inner(
     };
     let requests = generator.generate(dc.duration_s);
     let threads = pool::resolve_threads(dc.threads);
-    let table = phases::phase_table_with_chunks(cfg, &requests, dc.chunk_tokens, threads);
+    // Per-architecture configs, phase tables, and engines — one set per
+    // *distinct* arch, shared by that arch's stacks. A homogeneous
+    // hetrax3d fleet (the default) builds exactly the pre-fleet single
+    // config, so its output stays byte-identical to the old path.
+    let archs = fleet::resolve_archs(&dc.archs, dc.stacks.max(1));
+    let mut distinct: Vec<StackArchId> = Vec::new();
+    for a in &archs {
+        if !distinct.contains(a) {
+            distinct.push(*a);
+        }
+    }
+    let cfgs: Vec<Config> = distinct.iter().map(|a| a.spec().config(cfg)).collect();
     let keys = phases::decode_keys(&requests);
-    let engine = DecodeEngine::build(cfg, &keys);
+    let tables: Vec<_> = cfgs
+        .iter()
+        .map(|c| phases::phase_table_with_chunks(c, &requests, dc.chunk_tokens, threads))
+        .collect();
+    let engines: Vec<DecodeEngine> = cfgs
+        .iter()
+        .map(|c| DecodeEngine::build(c, &keys))
+        .collect();
+    // Routing estimates (prepass + KV sizing) use the first arch's
+    // tables: KV byte geometry is model-, not arch-, dependent.
+    let table = &tables[0];
+    let engine = &engines[0];
 
     let pinned: Option<Vec<usize>> = match mode {
         RouteMode::Live => None,
@@ -435,7 +468,7 @@ fn run_inner(
             dc.kv,
             dc.max_running,
             |r| prepass::Demand {
-                service_s: scheduler::est_service_s(&engine, &table, r),
+                service_s: scheduler::est_service_s(engine, table, r),
                 kv_bytes: engine
                     .workload(r.model, r.variant)
                     .peak_kv_bytes(r.seq, r.out_tokens.max(1)),
@@ -445,8 +478,13 @@ fn run_inner(
     };
 
     let router = StackRouter::new(dc.stacks, dc.policy);
-    let mut stacks: Vec<DecodeStack> = (0..router.stacks)
-        .map(|_| DecodeStack::new(cfg, dc, &table, &engine))
+    debug_assert_eq!(archs.len(), router.stacks);
+    let mut stacks: Vec<DecodeStack> = archs
+        .iter()
+        .map(|a| {
+            let di = distinct.iter().position(|d| d == a).unwrap();
+            DecodeStack::with_arch(&cfgs[di], dc, &tables[di], &engines[di], &a.spec())
+        })
         .collect();
     let need = |r: &Request| {
         engine
@@ -1063,6 +1101,59 @@ mod tests {
                 assert_eq!(a, doc(2), "seed {seed}: thread determinism");
                 assert_eq!(a, doc(8), "seed {seed}: thread determinism");
             }
+        }
+    }
+
+    #[test]
+    fn explicit_hetrax3d_fleet_matches_default_byte_identically() {
+        // Satellite equivalence pin: spelling out `--arch hetrax3d,...`
+        // must reproduce the implicit default bit for bit, for every
+        // capacity-normalized policy. The hetrax3d descriptor applies no
+        // overrides and its compute_scale of 1.0 divides bitwise-exactly,
+        // so the whole fleet layer is an exact no-op here.
+        let cfg = Config::default();
+        for policy in [
+            RoutePolicy::JoinShortestQueue,
+            RoutePolicy::KvAware,
+            RoutePolicy::LatencyAware,
+        ] {
+            let dc = skewed_routing_scenario(policy);
+            let base_report = run(&cfg, &dc);
+            let mut dc2 = dc.clone();
+            dc2.archs = vec![StackArchId::Hetrax3d; dc2.stacks.max(1)];
+            let explicit = run(&cfg, &dc2);
+            assert_eq!(
+                base_report.to_json(&dc).pretty(),
+                explicit.to_json(&dc2).pretty(),
+                "{policy:?}: explicit hetrax3d arch list must be a no-op"
+            );
+        }
+    }
+
+    #[test]
+    fn heterogeneous_cluster_serves_all_policies() {
+        // A mixed fleet (big 2.5D stack + default + edge) must serve the
+        // skewed trace under every live policy with conservation intact —
+        // the capacity-normalized router sees truthful per-arch scales.
+        let cfg = Config::default();
+        for policy in [
+            RoutePolicy::JoinShortestQueue,
+            RoutePolicy::KvAware,
+            RoutePolicy::LatencyAware,
+        ] {
+            let mut dc = cluster_routing_scenario(&cfg, policy);
+            dc.stacks = 3;
+            dc.archs = vec![
+                StackArchId::Chiplet2p5d,
+                StackArchId::Hetrax3d,
+                StackArchId::AtleusEdge,
+            ];
+            let report = run(&cfg, &dc);
+            let t = &report.total;
+            assert_eq!(t.completed + t.shed + t.refused_kv, t.submitted);
+            assert!(t.completed > 0, "{policy:?}: mixed fleet must serve");
+            let a = run(&cfg, &dc).to_json(&dc).pretty();
+            assert_eq!(a, report.to_json(&dc).pretty(), "{policy:?}: determinism");
         }
     }
 }

@@ -51,5 +51,7 @@ pub mod telemetry;
 pub use decodetest::{run, run_with_faults, DecodeReport};
 pub use engine::{DecodeEngine, StepCost, StepGroup};
 pub use kv::{KvCacheConfig, KvPool};
-pub use scheduler::{DecodeConfig, DecodeStack, DecodeStackOutcome};
+pub use scheduler::{
+    Completion, DecodeConfig, DecodeStack, DecodeStackOutcome, KvHandoff,
+};
 pub use telemetry::DecodeTelemetry;

@@ -73,6 +73,7 @@ use crate::coordinator::{Batch, Engine, Request, ServeState};
 use crate::decode::engine::{DecodeEngine, StepGroup};
 use crate::decode::kv::{KvCacheConfig, KvPool};
 use crate::decode::telemetry::DecodeTelemetry;
+use crate::fleet::{self, StackArch, StackArchId};
 use crate::model::{ArchVariant, ModelId};
 use crate::power;
 use crate::traffic::admission::{AdmissionController, BatchCost, ThrottleConfig};
@@ -111,6 +112,11 @@ pub struct DecodeConfig {
     /// serial); results are identical at any value. Stack stepping is
     /// serial — the cluster event loop's determinism is structural.
     pub threads: usize,
+    /// Per-stack architecture presets ([`StackArchId`]): empty means
+    /// every stack is `hetrax3d` (the exact default silicon); a single
+    /// entry broadcasts to all stacks; otherwise the length must equal
+    /// `stacks` (the CLI validates).
+    pub archs: Vec<StackArchId>,
 }
 
 impl DecodeConfig {
@@ -128,6 +134,7 @@ impl DecodeConfig {
             chunk_tokens: 0,
             throttle: ThrottleConfig::default(),
             threads: 0,
+            archs: Vec::new(),
         }
     }
 }
@@ -147,6 +154,53 @@ pub struct DecodeStackOutcome {
     /// KV pool bytes still written when the stack wound down (same
     /// zero-leak contract as `kv_reserved_end_bytes`).
     pub kv_used_end_bytes: f64,
+}
+
+/// One finished request, as logged by a stack with completion
+/// recording on ([`DecodeStack::record_completions`]). The fleet
+/// driver's hand-off source: a prefill-specialized stack serves each
+/// request to its first token (`out_tokens` rewritten to 1), and the
+/// driver turns the logged completion into a [`KvHandoff`] for a
+/// decode-specialized stack.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub model: ModelId,
+    pub variant: ArchVariant,
+    /// Prompt length (the prefilled, cached context).
+    pub prompt: usize,
+    pub arrival_s: f64,
+    pub first_token_s: f64,
+    /// Retirement instant on the serving stack's clock.
+    pub finish_s: f64,
+}
+
+/// A prefilled request arriving at a decode-specialized stack with its
+/// KV cache shipped over the interconnect: the prompt plus first token
+/// are already cached elsewhere and become resident here at `ready_s`
+/// (prefill finish + wire latency). Joining the running set re-reserves
+/// the request's peak KV footprint locally and charges the wire time
+/// into the thermal background ([`DecodeStack::push_handoff`]).
+#[derive(Debug, Clone)]
+pub struct KvHandoff {
+    pub id: u64,
+    pub model: ModelId,
+    pub variant: ArchVariant,
+    /// Prompt length whose cache was transferred.
+    pub prompt: usize,
+    pub arrival_s: f64,
+    /// TTFT already happened on the prefill stack; kept so E2E latency
+    /// and TPOT stay anchored to the true first token.
+    pub first_token_s: f64,
+    /// Instant the transferred cache is fully resident here.
+    pub ready_s: f64,
+    /// Bytes moved over the interconnect (prompt + first token).
+    pub kv_bytes: f64,
+    /// Wire time the transfer occupied (`kv_bytes` / link bandwidth).
+    pub transfer_s: f64,
+    /// The *original* output budget. Always ≥ 2: single-token requests
+    /// retire at prefill and never hand off (the fleet driver filters).
+    pub out_tokens: usize,
 }
 
 /// A request mid-generation.
@@ -240,7 +294,12 @@ fn decode_background(
     }
 }
 
-fn retire(tel: &mut DecodeTelemetry, kv: &mut KvPool, a: ActiveGen) {
+fn retire(
+    tel: &mut DecodeTelemetry,
+    kv: &mut KvPool,
+    log: &mut Option<Vec<Completion>>,
+    a: ActiveGen,
+) {
     tel.completed += 1;
     tel.e2e_us.record(us(a.last_token_s - a.arrival_s));
     if a.out_tokens > 1 {
@@ -249,6 +308,17 @@ fn retire(tel: &mut DecodeTelemetry, kv: &mut KvPool, a: ActiveGen) {
     }
     tel.makespan_s = tel.makespan_s.max(a.last_token_s);
     kv.release(a.peak_kv, a.used_kv);
+    if let Some(log) = log {
+        log.push(Completion {
+            id: a.id,
+            model: a.model,
+            variant: a.variant,
+            prompt: a.prompt,
+            arrival_s: a.arrival_s,
+            first_token_s: a.first_token_s,
+            finish_s: a.last_token_s,
+        });
+    }
 }
 
 /// The routing-time service estimate for one generation request:
@@ -342,6 +412,26 @@ pub struct DecodeStack<'a> {
     pending_kv_bytes: f64,
     ewma_ttft_s: f64,
     ewma_itl_s: f64,
+    /// Which architecture preset this stack models (snapshot metadata —
+    /// the per-arch bench utilization rows key on it).
+    arch_id: StackArchId,
+    /// Relative decode-throughput scale the routing policies normalize
+    /// work terms by (`hetrax3d` = 1.0).
+    compute_scale: f64,
+    /// O(1) mirrors of the walked snapshot ledgers (the ROADMAP-flagged
+    /// hot spot): maintained incrementally at every queue transition,
+    /// pinned against [`DecodeStack::walk_outstanding`] /
+    /// [`DecodeStack::walk_queue_depth`] by `debug_assert` and a test.
+    outstanding: u64,
+    depth: usize,
+    /// Completion log (the fleet hand-off source); `None` — no logging,
+    /// no allocation — outside disaggregated serving.
+    completion_log: Option<Vec<Completion>>,
+    /// Transferred-KV arrivals not yet joined: cache still in flight
+    /// (`ready_s` ahead of the clock) or blocked on slots/pool (FIFO).
+    handoffs: VecDeque<KvHandoff>,
+    /// Total KV bytes received over the interconnect (energy model).
+    xfer_bytes: f64,
 }
 
 impl<'a> DecodeStack<'a> {
@@ -350,6 +440,23 @@ impl<'a> DecodeStack<'a> {
         dc: &'a DecodeConfig,
         phases: &'a HashMap<PhaseKey, PhaseInfo>,
         engine: &'a DecodeEngine<'a>,
+    ) -> DecodeStack<'a> {
+        let arch = StackArch::preset(StackArchId::Hetrax3d);
+        DecodeStack::with_arch(cfg, dc, phases, engine, &arch)
+    }
+
+    /// Construct for an explicit architecture preset. The KV budget and
+    /// thermal ceiling come from the arch's overrides; `cfg`, `phases`
+    /// and `engine` must already be built from
+    /// [`StackArch::config`] so phase costs price the right silicon.
+    /// `hetrax3d` applies no overrides, so `new` (which delegates here)
+    /// stays bit-identical to the pre-fleet constructor.
+    pub fn with_arch(
+        cfg: &'a Config,
+        dc: &'a DecodeConfig,
+        phases: &'a HashMap<PhaseKey, PhaseInfo>,
+        engine: &'a DecodeEngine<'a>,
+        arch: &StackArch,
     ) -> DecodeStack<'a> {
         let interval = dc.throttle.interval_s.max(1e-6);
         let wait = dc.throttle.max_queue_wait_s;
@@ -366,8 +473,8 @@ impl<'a> DecodeStack<'a> {
             engine,
             serve_engine: Engine::new(cfg),
             state: ServeState::new(),
-            kv: KvPool::new(dc.kv),
-            ctl: AdmissionController::new(cfg, dc.throttle, dc.max_prefill_batch),
+            kv: KvPool::new(arch.kv_config(dc.kv)),
+            ctl: AdmissionController::new(cfg, arch.throttle(dc.throttle), dc.max_prefill_batch),
             tel: DecodeTelemetry::new(),
             interval,
             wait,
@@ -395,6 +502,13 @@ impl<'a> DecodeStack<'a> {
             pending_kv_bytes: 0.0,
             ewma_ttft_s: 0.0,
             ewma_itl_s: 0.0,
+            arch_id: arch.id,
+            compute_scale: arch.compute_scale,
+            outstanding: 0,
+            depth: 0,
+            completion_log: None,
+            handoffs: VecDeque::new(),
+            xfer_bytes: 0.0,
         }
     }
 
@@ -416,17 +530,122 @@ impl<'a> DecodeStack<'a> {
             cluster::ewma(self.ewma_itl_s, sample_s, self.tel.itl_us.count() == 1);
     }
 
-    /// Run the stack to completion and extract its outcome. (The
-    /// cluster calls this once the arrival stream is exhausted.)
-    pub fn finish(mut self) -> DecodeStackOutcome {
+    /// Drain the stack: run every remaining decision to quiescence
+    /// without consuming it. The fleet driver uses this to run
+    /// prefill-specialized stacks dry, drain their completion logs into
+    /// hand-offs, and only then fold outcomes with [`DecodeStack::finish`].
+    pub fn run_to_completion(&mut self) {
         while !self.done {
             if let Advance::Stop = self.advance(None) {
                 break;
             }
         }
+    }
+
+    /// Turn the completion log on or off (the fleet driver enables it
+    /// on prefill-specialized stacks). Off by default — no allocation,
+    /// no behaviour change.
+    pub fn record_completions(&mut self, on: bool) {
+        self.completion_log = if on { Some(Vec::new()) } else { None };
+    }
+
+    /// Take every completion logged since the last drain (empty when
+    /// logging is off).
+    pub fn drain_completions(&mut self) -> Vec<Completion> {
+        self.completion_log
+            .as_mut()
+            .map(std::mem::take)
+            .unwrap_or_default()
+    }
+
+    /// Accept a transferred-KV arrival (disaggregated serving): the
+    /// request was prefilled on another stack and its cache is on the
+    /// wire, resident here at `h.ready_s`. Counted `submitted` like any
+    /// routed arrival — the prefill stack's single-token completion is
+    /// the matching exit in its own ledger, so both stacks' double-entry
+    /// identities stay exact. Refused at the door if the peak footprint
+    /// can never fit this pool (a queued-forever hand-off would wedge
+    /// the drain); otherwise it joins the running set through the
+    /// step-2b join lane once resident.
+    pub fn push_handoff(&mut self, h: KvHandoff) {
+        debug_assert!(h.out_tokens > 1, "single-token requests never hand off");
+        self.tel.submitted += 1;
+        if self.done {
+            self.tel.shed += 1;
+            return;
+        }
+        let dw = self.engine.workload(h.model, h.variant);
+        let peak = dw.peak_kv_bytes(h.prompt, h.out_tokens);
+        if peak > self.kv.capacity_bytes() {
+            self.tel.refused_kv += 1;
+            return;
+        }
+        // Horizon ledger: the decode remainder priced at mid-flight
+        // context (the same arithmetic `est_service_s` charges for the
+        // decode phase) plus the wire time.
+        let g = StepGroup {
+            model: h.model,
+            variant: h.variant,
+            b: 1,
+            sum_self_ctx: dw.self_context(h.prompt, h.out_tokens / 2),
+            sum_cross_ctx: if dw.cross { h.prompt } else { 0 },
+        };
+        let est = self.engine.step_cost(&[g]).wall_s * h.out_tokens as f64
+            + h.transfer_s;
+        self.horizon_s = self.horizon_s.max(h.ready_s) + est;
+        self.pending_kv_bytes += peak;
+        self.ops_budget += 4 * (h.out_tokens as u64 + 1);
+        self.outstanding += (h.out_tokens - 1) as u64;
+        self.depth += 1;
+        self.handoffs.push_back(h);
+    }
+
+    /// The walking `outstanding_steps` implementation the O(1) counter
+    /// mirrors — kept as the oracle: `snapshot()` pins the counter
+    /// against it under `debug_assert`, and the counter test walks a
+    /// full lifecycle against it.
+    pub(crate) fn walk_outstanding(&self) -> u64 {
+        let queued: u64 = self
+            .waiting
+            .iter()
+            .chain(self.pending.iter())
+            .map(|r| r.out_tokens.max(1) as u64)
+            .sum();
+        let partial = self
+            .partial
+            .as_ref()
+            .map(|p| p.req.out_tokens.max(1) as u64)
+            .unwrap_or(0);
+        let running: u64 = self
+            .running
+            .iter()
+            .map(|a| (a.out_tokens - a.generated) as u64)
+            .sum();
+        let handoff: u64 = self
+            .handoffs
+            .iter()
+            .map(|h| (h.out_tokens - 1) as u64)
+            .sum();
+        queued + partial + running + handoff
+    }
+
+    /// The walking `queue_depth` implementation (see
+    /// [`DecodeStack::walk_outstanding`]).
+    pub(crate) fn walk_queue_depth(&self) -> usize {
+        self.waiting.len()
+            + self.pending.len()
+            + self.partial.is_some() as usize
+            + self.handoffs.len()
+    }
+
+    /// Run the stack to completion and extract its outcome. (The
+    /// cluster calls this once the arrival stream is exhausted.)
+    pub fn finish(mut self) -> DecodeStackOutcome {
+        self.run_to_completion();
         // Decode-phase energy (prefill energy came through
         // serve_batch): SM + ReRAM dynamic/static over their busy
-        // windows, L2 traffic, and the DRAM-side KV stream. Skipped for
+        // windows, L2 traffic, the DRAM-side KV stream, and the
+        // interconnect flits of any KV transfers received. Skipped for
         // a stack that never saw a request, as the pre-cluster path
         // returned before the fold.
         if self.tel.submitted > 0 {
@@ -434,7 +653,8 @@ impl<'a> DecodeStack<'a> {
                 power::sm_energy_j(self.cfg, self.dec_sm_flops, self.dec_mha_busy, 1.0)
                     + power::reram_energy_j(self.cfg, self.dec_ff_ops, self.dec_ff_busy)
                     + power::mc_energy_j(self.cfg, self.dec_l2_bytes, self.dec_mha_busy)
-                    + power::dram_energy_j(self.dec_kv_bytes);
+                    + power::dram_energy_j(self.dec_kv_bytes)
+                    + fleet::transfer_energy_j(self.xfer_bytes);
         }
         DecodeStackOutcome {
             telemetry: self.tel,
@@ -480,6 +700,8 @@ impl<'a> DecodeStack<'a> {
             let r = self.pending.pop_front().expect("front just checked");
             if self.peak_kv_of(&r) > self.kv.capacity_bytes() {
                 self.tel.refused_kv += 1;
+                self.outstanding -= r.out_tokens.max(1) as u64;
+                self.depth -= 1;
             } else {
                 self.waiting.push_back(r);
             }
@@ -491,6 +713,7 @@ impl<'a> DecodeStack<'a> {
         let (t, wait) = (self.t, self.wait);
         let engine = self.engine;
         let mut shed_kv = 0.0f64;
+        let mut shed_steps = 0u64;
         self.waiting.retain(|r| {
             if t - r.arrival_s <= wait {
                 true
@@ -498,11 +721,61 @@ impl<'a> DecodeStack<'a> {
                 shed_kv += engine
                     .workload(r.model, r.variant)
                     .peak_kv_bytes(r.seq, r.out_tokens.max(1));
+                shed_steps += r.out_tokens.max(1) as u64;
                 false
             }
         });
         self.tel.shed += (before - self.waiting.len()) as u64;
         self.pending_kv_bytes = (self.pending_kv_bytes - shed_kv).max(0.0);
+        self.outstanding -= shed_steps;
+        self.depth -= before - self.waiting.len();
+
+        // 2b. Join transferred-KV hand-offs (disaggregated serving
+        //     only; FIFO). A hand-off joins once its cache is resident
+        //     (`ready_s` reached), a running slot is free, and the pool
+        //     takes its peak reservation. It enters the running set at
+        //     `generated = 1` — the first token was emitted by the
+        //     prefill stack — so the first local decode step's ITL gap
+        //     absorbs queueing plus the wire delay, and the wire time
+        //     is charged into this window's thermal book.
+        while let Some(h) = self.handoffs.front() {
+            if h.ready_s > self.t || self.running.len() >= self.max_running {
+                break;
+            }
+            let dw = self.engine.workload(h.model, h.variant);
+            let peak = dw.peak_kv_bytes(h.prompt, h.out_tokens);
+            if !self.kv.try_reserve(peak) {
+                break;
+            }
+            let h = self.handoffs.pop_front().expect("front just checked");
+            self.pending_kv_bytes = (self.pending_kv_bytes - peak).max(0.0);
+            let used = dw.kv_bytes(h.prompt, 1);
+            self.kv.grow(used);
+            self.xfer_bytes += h.kv_bytes;
+            self.window_cost.add(&BatchCost {
+                sm_s: h.transfer_s,
+                ff_s: 0.0,
+                active_frac: 0.0,
+            });
+            self.depth -= 1;
+            self.running.push(ActiveGen {
+                id: h.id,
+                model: h.model,
+                variant: h.variant,
+                prompt: h.prompt,
+                out_tokens: h.out_tokens,
+                arrival_s: h.arrival_s,
+                generated: 1,
+                first_token_s: h.first_token_s,
+                last_token_s: h.first_token_s,
+                peak_kv: peak,
+                used_kv: used,
+            });
+            self.tel.peak_running =
+                self.tel.peak_running.max(self.running.len() as u64);
+            self.tel.peak_kv_bytes =
+                self.tel.peak_kv_bytes.max(self.kv.used_bytes());
+        }
 
         // 3. Advance prefill work. The chunk lane (chunking only) takes
         //    precedence: it continues the in-flight partial prompt, or
@@ -613,8 +886,18 @@ impl<'a> DecodeStack<'a> {
                             peak_kv,
                             used_kv,
                         };
+                        // The prompt leaves the queue ledgers: its
+                        // queued `out` steps become a running `out - 1`
+                        // remainder (or retire outright at out == 1).
+                        self.outstanding -= 1;
+                        self.depth -= 1;
                         if a.generated >= a.out_tokens {
-                            retire(&mut self.tel, &mut self.kv, a);
+                            retire(
+                                &mut self.tel,
+                                &mut self.kv,
+                                &mut self.completion_log,
+                                a,
+                            );
                         } else {
                             self.running.push(a);
                         }
@@ -742,8 +1025,15 @@ impl<'a> DecodeStack<'a> {
                             peak_kv: peak,
                             used_kv: used,
                         };
+                        self.outstanding -= 1;
+                        self.depth -= 1;
                         if a.generated >= a.out_tokens {
-                            retire(&mut self.tel, &mut self.kv, a);
+                            retire(
+                                &mut self.tel,
+                                &mut self.kv,
+                                &mut self.completion_log,
+                                a,
+                            );
                         } else {
                             self.running.push(a);
                         }
@@ -783,6 +1073,9 @@ impl<'a> DecodeStack<'a> {
             self.dec_l2_bytes += sc.l2_bytes;
             self.dec_kv_bytes += sc.kv_read_bytes;
 
+            // Every running generation's remaining-step count drops by
+            // one; retirements below remove zero-remainder entries.
+            self.outstanding -= self.running.len() as u64;
             let mut i = 0;
             while i < self.running.len() {
                 let (gap, model, variant) = {
@@ -799,7 +1092,7 @@ impl<'a> DecodeStack<'a> {
                 self.tel.tokens_out += 1;
                 if self.running[i].generated >= self.running[i].out_tokens {
                     let done = self.running.remove(i);
-                    retire(&mut self.tel, &mut self.kv, done);
+                    retire(&mut self.tel, &mut self.kv, &mut self.completion_log, done);
                 } else {
                     i += 1;
                 }
@@ -826,19 +1119,34 @@ impl<'a> DecodeStack<'a> {
                     }
                     _ => self.t = self.admit_block_until,
                 }
-            } else if !pending_work && !self.pending.is_empty() {
-                // Jump to the next routed arrival (it is strictly ahead
-                // of the clock — ingest above drained everything due),
+            } else if !pending_work
+                && (!self.pending.is_empty() || !self.handoffs.is_empty())
+            {
+                // Jump to the next routed arrival or hand-off residency
+                // (both strictly ahead of the clock — ingest and the
+                // join lane above drained everything due; a queued
+                // hand-off here is still on the wire, since with the
+                // running set empty nothing blocks a resident one),
                 // clamped to the deadline: the trait contract promises
                 // never to advance past it, even for a caller that
                 // pushes arrivals further ahead than the cluster does.
-                let next_arrival = self.pending.front().expect("non-empty").arrival_s;
+                let next_arrival = self
+                    .pending
+                    .front()
+                    .map(|r| r.arrival_s)
+                    .unwrap_or(f64::INFINITY);
+                let next_ready = self
+                    .handoffs
+                    .front()
+                    .map(|h| h.ready_s)
+                    .unwrap_or(f64::INFINITY);
+                let next = next_arrival.min(next_ready);
                 match deadline {
-                    Some(d) if next_arrival > d => {
+                    Some(d) if next > d => {
                         self.t = self.t.max(d);
                         return Advance::Stop;
                     }
-                    _ => self.t = next_arrival,
+                    _ => self.t = next,
                 }
             } else if !pending_work {
                 match deadline {
@@ -858,9 +1166,13 @@ impl<'a> DecodeStack<'a> {
                 // never spin — shed it and move on.
                 if let Some(p) = self.partial.take() {
                     self.kv.release(p.peak_kv, p.used_kv);
+                    self.outstanding -= p.req.out_tokens.max(1) as u64;
+                    self.depth -= 1;
                 } else if let Some(r) = self.waiting.pop_front() {
                     let peak = self.peak_kv_of(&r);
                     self.pending_kv_bytes = (self.pending_kv_bytes - peak).max(0.0);
+                    self.outstanding -= r.out_tokens.max(1) as u64;
+                    self.depth -= 1;
                 }
                 self.tel.shed += 1;
             }
@@ -873,7 +1185,8 @@ impl<'a> DecodeStack<'a> {
             self.tel.shed += self.waiting.len() as u64
                 + self.running.len() as u64
                 + self.partial.is_some() as u64
-                + self.pending.len() as u64;
+                + self.pending.len() as u64
+                + self.handoffs.len() as u64;
             for a in self.running.drain(..) {
                 self.kv.release(a.peak_kv, a.used_kv);
             }
@@ -882,7 +1195,10 @@ impl<'a> DecodeStack<'a> {
             }
             self.waiting.clear();
             self.pending.clear();
+            self.handoffs.clear();
             self.pending_kv_bytes = 0.0;
+            self.outstanding = 0;
+            self.depth = 0;
             self.done = true;
             return Advance::Stop;
         }
@@ -902,37 +1218,26 @@ impl ClusterStack for DecodeStack<'_> {
     }
 
     fn snapshot(&self, stack: usize) -> StackSnapshot {
-        let queued_steps: u64 = self
-            .waiting
-            .iter()
-            .chain(self.pending.iter())
-            .map(|r| r.out_tokens.max(1) as u64)
-            .sum();
-        let partial_steps = self
-            .partial
-            .as_ref()
-            .map(|p| p.req.out_tokens.max(1) as u64)
-            .unwrap_or(0);
-        let running_steps: u64 = self
-            .running
-            .iter()
-            .map(|a| (a.out_tokens - a.generated) as u64)
-            .sum();
+        // O(1): the incremental counters replace the per-decision queue
+        // walk (the ROADMAP hot spot); the walking oracles stay as the
+        // debug-build invariant.
+        debug_assert_eq!(self.outstanding, self.walk_outstanding());
+        debug_assert_eq!(self.depth, self.walk_queue_depth());
         StackSnapshot {
             stack,
             horizon_s: self.horizon_s,
-            queue_depth: self.waiting.len()
-                + self.pending.len()
-                + self.partial.is_some() as usize,
+            queue_depth: self.depth,
             running: self.running.len(),
             slots: self.max_running,
-            outstanding_steps: running_steps + queued_steps + partial_steps,
+            outstanding_steps: self.outstanding,
             kv_committed_bytes: self.kv.reserved_bytes() + self.pending_kv_bytes,
             kv_capacity_bytes: self.kv.capacity_bytes(),
             reram_c: self.ctl.last_reram_c,
             ewma_ttft_s: self.ewma_ttft_s,
             ewma_itl_s: self.ewma_itl_s,
             health: HealthState::Healthy,
+            arch: self.arch_id,
+            compute_scale: self.compute_scale,
         }
     }
 
@@ -961,6 +1266,11 @@ impl ClusterStack for DecodeStack<'_> {
             0
         };
         self.ops_budget += 4 * (req.out_tokens.max(1) as u64 + chunks + 1);
+        // The counters mirror the walking ledgers exactly: an oversized
+        // request still counts while pending (the walk counts it too);
+        // the refusal at ingest takes it back out.
+        self.outstanding += req.out_tokens.max(1) as u64;
+        self.depth += 1;
         self.pending.push_back(req);
     }
 
@@ -975,6 +1285,20 @@ impl ClusterStack for DecodeStack<'_> {
         let mut surrendered: Vec<Request> = Vec::new();
         surrendered.extend(self.pending.drain(..));
         surrendered.extend(self.waiting.drain(..));
+        // In-flight hand-offs surrender too: their transferred cache
+        // never landed (or dies with the stack), so — like mid-flight
+        // generations — the retry pays the full prefill recompute.
+        for h in self.handoffs.drain(..) {
+            surrendered.push(Request {
+                id: h.id,
+                model: h.model,
+                variant: h.variant,
+                seq: h.prompt,
+                arrival_s: h.arrival_s,
+                out_tokens: h.out_tokens,
+                input: None,
+            });
+        }
         for a in self.running.drain(..) {
             self.kv.release(a.peak_kv, a.used_kv);
             surrendered.push(Request {
@@ -995,6 +1319,8 @@ impl ClusterStack for DecodeStack<'_> {
         }
         self.tel.shed += surrendered.len() as u64;
         self.pending_kv_bytes = 0.0;
+        self.outstanding = 0;
+        self.depth = 0;
         self.done = true;
         surrendered
     }
@@ -1317,5 +1643,93 @@ mod tests {
         let t = &out.telemetry;
         assert_eq!(t.completed, 2);
         assert_eq!(t.peak_running, 1, "KV pressure serializes");
+    }
+
+    #[test]
+    fn incremental_counters_match_walking_oracle() {
+        // Satellite pin: the O(1) outstanding/depth counters must track
+        // the walking implementation through every lifecycle edge —
+        // pending, ingest, chunking, retirement, age-out shedding.
+        let cfg = Config::default();
+        let mut dc = base_config();
+        dc.chunk_tokens = 64;
+        dc.throttle.max_queue_wait_s = 0.002; // force age-out sheds
+        let reqs = vec![
+            gen_req(0, 0.0, 256, 12),
+            gen_req(1, 0.0, 64, 1),
+            gen_req(2, 0.0005, 128, 6),
+            gen_req(3, 0.001, 64, 4),
+            gen_req(4, 0.3, 512, 8),
+        ];
+        let table = phases::phase_table_with_chunks(&cfg, &reqs, dc.chunk_tokens, 1);
+        let keys = phases::decode_keys(&reqs);
+        let engine = DecodeEngine::build(&cfg, &keys);
+        let mut stack = DecodeStack::new(&cfg, &dc, &table, &engine);
+        for r in &reqs {
+            stack.step_until(r.arrival_s);
+            stack.push(r.clone());
+            assert_eq!(stack.outstanding, stack.walk_outstanding());
+            assert_eq!(stack.depth, stack.walk_queue_depth());
+            // A few decisions past the push, invariant checked live.
+            for _ in 0..3 {
+                let _ = stack.advance(Some(r.arrival_s + 0.01));
+                assert_eq!(stack.outstanding, stack.walk_outstanding());
+                assert_eq!(stack.depth, stack.walk_queue_depth());
+            }
+        }
+        stack.run_to_completion();
+        assert_eq!(stack.outstanding, 0, "a drained stack owes no steps");
+        assert_eq!(stack.depth, 0);
+        let out = stack.finish();
+        let t = &out.telemetry;
+        assert_eq!(t.completed + t.shed + t.refused_kv, t.submitted);
+        assert!(t.shed > 0, "the tight wait bound must shed something");
+    }
+
+    #[test]
+    fn handoff_joins_decodes_and_conserves() {
+        // A transferred-KV arrival: no local prefill, no local TTFT —
+        // the generation joins at generated = 1 once the cache is
+        // resident and decodes to EOS, with the pool released at
+        // retirement and the transfer priced into the energy fold.
+        let cfg = Config::default();
+        let dc = base_config();
+        let reqs = vec![gen_req(0, 0.0, 128, 8)];
+        let table = phases::phase_table_with_chunks(&cfg, &reqs, 0, 1);
+        let keys = phases::decode_keys(&reqs);
+        let engine = DecodeEngine::build(&cfg, &keys);
+        let dw = engine.workload(ModelId::BertBase, ArchVariant::EncoderOnly);
+        let kv_bytes = dw.kv_bytes(128, 1);
+        let transfer_s = kv_bytes / crate::fleet::interposer_bw_bps();
+        let mut stack = DecodeStack::new(&cfg, &dc, &table, &engine);
+        stack.push_handoff(KvHandoff {
+            id: 0,
+            model: ModelId::BertBase,
+            variant: ArchVariant::EncoderOnly,
+            prompt: 128,
+            arrival_s: 0.0,
+            first_token_s: 0.004,
+            ready_s: 0.004 + transfer_s,
+            kv_bytes,
+            transfer_s,
+            out_tokens: 8,
+        });
+        assert_eq!(stack.walk_queue_depth(), 1);
+        assert_eq!(stack.walk_outstanding(), 7, "first token already emitted");
+        assert_eq!(stack.outstanding, stack.walk_outstanding());
+        let out = stack.finish();
+        let t = &out.telemetry;
+        assert_eq!(t.submitted, 1);
+        assert_eq!(t.completed, 1);
+        assert_eq!(t.tokens_out, 7, "the first token was emitted remotely");
+        assert_eq!(t.decode_steps, 7);
+        assert_eq!(t.ttft_us.count(), 0, "TTFT belongs to the prefill stack");
+        assert_eq!(t.itl_us.count(), 7);
+        assert_eq!(t.prefill_batches, 0);
+        assert_eq!(t.tpot_us.count(), 1, "TPOT spans the true first token");
+        assert_eq!(out.kv_reserved_end_bytes, 0.0, "no leaked reservations");
+        assert_eq!(out.kv_used_end_bytes, 0.0, "no leaked cache bytes");
+        assert!(t.energy_j > 0.0, "decode + transfer energy folds");
+        assert!(t.makespan_s > 0.004 + transfer_s);
     }
 }

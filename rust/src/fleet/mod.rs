@@ -1,0 +1,941 @@
+//! Heterogeneous fleet serving: first-class stack architectures and
+//! prefill/decode disaggregation with KV transfer over the interconnect.
+//!
+//! HeTraX is one point in a family of heterogeneous transformer
+//! accelerators. This module makes the *stack architecture* a per-stack
+//! config instead of a global constant: a [`StackArch`] descriptor bundles
+//! the tier layout (SM/MC counts and grid), thermal ceiling, KV budget
+//! split, and a relative compute scale, with three presets:
+//!
+//! * [`StackArchId::Hetrax3d`] — today's numbers, the exact default. Its
+//!   descriptor applies **no** overrides: `config()`, `kv_config()` and
+//!   `throttle()` are bitwise no-ops, which is what makes a homogeneous
+//!   fleet byte-identical to the pre-fleet cluster path.
+//! * [`StackArchId::Chiplet2p5d`] — the 2.5D chiplet sibling
+//!   (arxiv 2312.11750): a larger SM tier (40 SM / 8 MC on a 4×4 grid),
+//!   more KV capacity routed over the interposer, but a lower thermal
+//!   ceiling because the interposer spreads less heat than a full 3D
+//!   stack's TSV field.
+//! * [`StackArchId::AtleusEdge`] — the Atleus edge stacks
+//!   (arxiv 2501.09588): small tiers (9 SM / 3 MC on a 2×2 grid), a tight
+//!   ceiling, half the KV budget, and cheap idle (lower per-tile power).
+//!
+//! Snapshots carry the arch id and a `compute_scale` so the `jsq` / `kv` /
+//! `latency` policies normalize queue pressure by capacity instead of
+//! assuming identical stacks (see `traffic::router`). For `hetrax3d` the
+//! scale is exactly 1.0 and the normalizing division is bitwise exact.
+//!
+//! # Disaggregated serving
+//!
+//! [`run_disaggregated`] splits a fleet into prefill-specialized and
+//! decode-specialized stacks. Arrivals route (policy-chosen) to a prefill
+//! stack with their output budget clamped to a single token; when the
+//! prefill completes, its KV cache is handed to a decode stack chosen
+//! KV-aware *at hand-off time* against fresh snapshots. The hand-off is
+//! charged a modeled transfer cost — `kv_bytes / interposer_bw_bps()`,
+//! using the same NoC flit clock the energy model uses — as virtual-time
+//! delay before the first decode step, and the wire time is priced into
+//! the decode stack's thermal background (see
+//! `DecodeStack::push_handoff`). Transfer energy is folded into the
+//! decode stack's energy total via [`transfer_energy_j`].
+//!
+//! Event ordering per arrival time `t` (and at stream end) is fixed and
+//! serial, which makes the whole driver deterministic across runs and
+//! thread counts:
+//!
+//! 1. if a crash is scheduled at `t_c <= t`, crash that stack (step all
+//!    stacks to `t_c`, deliver pre-crash completions, then surrender the
+//!    victim's queue and re-route survivors to the remaining prefill
+//!    stacks);
+//! 2. step every stack to `t` in index order;
+//! 3. drain prefill completion logs in index order;
+//! 4. deliver hand-offs sorted by `(finish_s, id)`, each routed against a
+//!    fresh snapshot of the decode stacks;
+//! 5. route the arrival itself to a prefill stack.
+
+use std::collections::HashMap;
+
+use crate::cluster::{ClusterStack, StackSnapshot};
+use crate::config::{specs, Config};
+use crate::decode::decodetest::{self, DecodeReport};
+use crate::decode::engine::DecodeEngine;
+use crate::decode::kv::KvCacheConfig;
+use crate::decode::scheduler::{
+    Completion, DecodeConfig, DecodeStack, KvHandoff,
+};
+use crate::traffic::admission::ThrottleConfig;
+use crate::traffic::generator::TrafficGen;
+use crate::traffic::phases;
+use crate::traffic::router::{RoutePolicy, StackRouter};
+use crate::util::json::Json;
+
+/// Identifier for a stack architecture preset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StackArchId {
+    /// The HeTraX 3D stack — today's defaults, the exact identity arch.
+    Hetrax3d,
+    /// 2.5D chiplet sibling: larger SM tier, lower thermal ceiling,
+    /// interposer-routed KV.
+    Chiplet2p5d,
+    /// Atleus edge stack: small tiers, tight ceiling, cheap idle.
+    AtleusEdge,
+}
+
+impl StackArchId {
+    /// Canonical CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StackArchId::Hetrax3d => "hetrax3d",
+            StackArchId::Chiplet2p5d => "chiplet2p5d",
+            StackArchId::AtleusEdge => "atleus-edge",
+        }
+    }
+
+    /// Parse a CLI name. Returns `None` for unknown names.
+    pub fn parse(s: &str) -> Option<StackArchId> {
+        match s {
+            "hetrax3d" => Some(StackArchId::Hetrax3d),
+            "chiplet2p5d" => Some(StackArchId::Chiplet2p5d),
+            "atleus-edge" => Some(StackArchId::AtleusEdge),
+            _ => None,
+        }
+    }
+
+    /// All known presets, in CLI-listing order.
+    pub fn all() -> &'static [StackArchId] {
+        &[
+            StackArchId::Hetrax3d,
+            StackArchId::Chiplet2p5d,
+            StackArchId::AtleusEdge,
+        ]
+    }
+
+    /// The full descriptor for this preset.
+    pub fn spec(&self) -> StackArch {
+        StackArch::preset(*self)
+    }
+}
+
+/// Architecture descriptor: how one stack differs from the HeTraX 3D
+/// default. `None` overrides leave the base config untouched, so the
+/// `hetrax3d` preset (all `None`, scales 1.0) is an exact identity —
+/// required for the homogeneous-fleet byte-identity guarantee.
+#[derive(Debug, Clone)]
+pub struct StackArch {
+    /// Which preset this descriptor came from.
+    pub id: StackArchId,
+    /// Relative steady-state decode throughput vs `hetrax3d` (ratio of SM
+    /// counts). Routers divide queue pressure by this; 1.0 divides
+    /// bitwise-exactly.
+    pub compute_scale: f64,
+    /// Multiplier on the KV pool's `capacity_bytes` (1.0 = unchanged).
+    kv_capacity_scale: f64,
+    /// Override for the KV pool's SM-tier fraction, if any.
+    kv_sm_frac: Option<f64>,
+    /// Thermal ceiling override in °C; applied as `min` with the user's
+    /// ceiling so an explicitly tighter `--ceiling` survives.
+    ceiling_c: Option<f64>,
+    sm_mc_grid: Option<usize>,
+    sm_count: Option<usize>,
+    mc_count: Option<usize>,
+    reram_grid: Option<usize>,
+    reram_count: Option<usize>,
+    tile_power_w: Option<f64>,
+}
+
+impl StackArch {
+    /// Build the descriptor for a preset.
+    pub fn preset(id: StackArchId) -> StackArch {
+        match id {
+            StackArchId::Hetrax3d => StackArch {
+                id,
+                compute_scale: 1.0,
+                kv_capacity_scale: 1.0,
+                kv_sm_frac: None,
+                ceiling_c: None,
+                sm_mc_grid: None,
+                sm_count: None,
+                mc_count: None,
+                reram_grid: None,
+                reram_count: None,
+                tile_power_w: None,
+            },
+            // Larger SM tier on an interposer: 40 SM + 8 MC fill three
+            // 4x4 tiers; more KV capacity but a lower ceiling (the
+            // interposer spreads less heat than a 3D TSV field), and a
+            // bigger share of KV parked off the SM tier.
+            StackArchId::Chiplet2p5d => StackArch {
+                id,
+                compute_scale: 40.0 / 21.0,
+                kv_capacity_scale: 1.5,
+                kv_sm_frac: Some(0.25),
+                ceiling_c: Some(52.0),
+                sm_mc_grid: Some(4),
+                sm_count: Some(40),
+                mc_count: Some(8),
+                reram_grid: None,
+                reram_count: None,
+                tile_power_w: None,
+            },
+            // Edge stack: 9 SM + 3 MC on 2x2 tiers, a 2x2 ReRAM tier,
+            // half the KV budget, tight ceiling, cheap idle.
+            StackArchId::AtleusEdge => StackArch {
+                id,
+                compute_scale: 9.0 / 21.0,
+                kv_capacity_scale: 0.5,
+                kv_sm_frac: None,
+                ceiling_c: Some(50.0),
+                sm_mc_grid: Some(2),
+                sm_count: Some(9),
+                mc_count: Some(3),
+                reram_grid: Some(2),
+                reram_count: Some(4),
+                tile_power_w: Some(0.20),
+            },
+        }
+    }
+
+    /// Apply the architecture's tier-layout overrides to a base config.
+    /// For `hetrax3d` this is `base.clone()` exactly.
+    pub fn config(&self, base: &Config) -> Config {
+        let mut cfg = base.clone();
+        if let Some(g) = self.sm_mc_grid {
+            cfg.sm_mc_grid = g;
+        }
+        if let Some(n) = self.sm_count {
+            cfg.sm_count = n;
+        }
+        if let Some(n) = self.mc_count {
+            cfg.mc_count = n;
+        }
+        if let Some(g) = self.reram_grid {
+            cfg.reram_grid = g;
+        }
+        if let Some(n) = self.reram_count {
+            cfg.reram_count = n;
+        }
+        if let Some(w) = self.tile_power_w {
+            cfg.tile_power_w = w;
+        }
+        cfg.validate()
+            .expect("arch preset must produce a valid config");
+        cfg
+    }
+
+    /// Scale the KV pool config. `kv_capacity_scale == 1.0` multiplies
+    /// bitwise-identically, so `hetrax3d` leaves the pool untouched.
+    pub fn kv_config(&self, base: KvCacheConfig) -> KvCacheConfig {
+        let mut kv = base;
+        kv.capacity_bytes *= self.kv_capacity_scale;
+        if let Some(f) = self.kv_sm_frac {
+            kv.sm_frac = f;
+        }
+        kv
+    }
+
+    /// Clamp the throttle ceiling to the architecture's thermal limit.
+    /// Uses `min`, not replacement: an explicitly tighter user ceiling
+    /// survives an arch with a looser one.
+    pub fn throttle(&self, base: ThrottleConfig) -> ThrottleConfig {
+        let mut th = base;
+        if let Some(c) = self.ceiling_c {
+            th.ceiling_c = th.ceiling_c.min(c);
+        }
+        th
+    }
+}
+
+/// Resolve a per-stack arch spec against a fleet size. An empty spec means
+/// "all hetrax3d"; a single entry broadcasts; otherwise the list must
+/// match the stack count (CLI-validated; debug-asserted here) and cycling
+/// keeps release builds total.
+pub fn resolve_archs(archs: &[StackArchId], stacks: usize) -> Vec<StackArchId> {
+    if archs.is_empty() {
+        return vec![StackArchId::Hetrax3d; stacks];
+    }
+    if archs.len() == 1 {
+        return vec![archs[0]; stacks];
+    }
+    debug_assert_eq!(archs.len(), stacks, "arch list must match stack count");
+    archs.iter().copied().cycle().take(stacks).collect()
+}
+
+/// Interposer-class link bandwidth in bytes/s, derived from the NoC flit
+/// width and clock the energy model already uses: one 128-bit flit per
+/// cycle at 1 GHz = 16 GB/s.
+pub fn interposer_bw_bps() -> f64 {
+    specs::NOC_FLIT_BITS as f64 * specs::NOC_CLOCK_HZ / 8.0
+}
+
+/// Energy to move `bytes` across the interposer, in joules: flit count ×
+/// (router energy + per-mm link energy × one tier edge). Zero for
+/// non-positive byte counts, so folding it into an energy total is a
+/// bitwise no-op when nothing was transferred.
+pub fn transfer_energy_j(bytes: f64) -> f64 {
+    if bytes <= 0.0 {
+        return 0.0;
+    }
+    let flits = (bytes * 8.0 / specs::NOC_FLIT_BITS as f64).ceil();
+    let pj_per_flit = specs::NOC_ROUTER_PJ_PER_FLIT
+        + specs::NOC_LINK_PJ_PER_FLIT_PER_MM * specs::TIER_SIZE_MM;
+    flits * pj_per_flit * 1.0e-12
+}
+
+/// Config for a disaggregated fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Base decode config (stacks, policy, traffic, per-stack archs).
+    pub dc: DecodeConfig,
+    /// How many stacks (from index 0) are prefill-specialized. Clamped to
+    /// `[1, stacks - 1]`.
+    pub prefill_stacks: usize,
+    /// KV transfer bandwidth override in bytes/s. `None` uses
+    /// [`interposer_bw_bps`]; `f64::INFINITY` models a free hand-off
+    /// (used by the equivalence tests).
+    pub transfer_bw_bps: Option<f64>,
+    /// Optional `(t_s, stack)` crash injection, for the fault-interplay
+    /// path: the stack dies at `t_s`, surrendering its queue.
+    pub crash: Option<(f64, usize)>,
+}
+
+/// Double-entry ledger for a disaggregated run. Every request and every
+/// hand-off is accounted exactly once; [`FleetOutcome::conserved`] checks
+/// the identities against the merged stack outcomes.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    /// Requests that arrived from the trace.
+    pub arrived: u64,
+    /// Pushes into prefill stacks (arrivals + crash re-queues that found
+    /// a route).
+    pub pushes: u64,
+    /// Arrivals or re-queues that found no live prefill stack.
+    pub no_route: u64,
+    /// Crash survivors successfully re-routed to another prefill stack.
+    pub requeued: u64,
+    /// Requests surrendered by a crashing stack.
+    pub surrendered: u64,
+    /// Stacks crashed.
+    pub crashes: u64,
+    /// Hand-offs delivered to a decode stack.
+    pub delivered: u64,
+    /// Hand-offs with no live decode stack to go to.
+    pub undeliverable: u64,
+    /// Completions observed on prefill stacks (single-token prefills).
+    pub completions_prefill: u64,
+    /// Prefill completions whose original budget exceeded one token and
+    /// therefore needed a hand-off.
+    pub handoff_candidates: u64,
+    /// Total KV bytes shipped across the interconnect.
+    pub transferred_kv_bytes: f64,
+    /// Total wire time charged, in seconds.
+    pub transfer_s_total: f64,
+    /// Resolved per-stack architectures.
+    pub archs: Vec<StackArchId>,
+    /// Resolved prefill stack count.
+    pub prefill_stacks: usize,
+}
+
+impl FleetOutcome {
+    /// Double-entry conservation against the merged stack outcomes:
+    /// everything submitted to a stack was a push or a delivery; every
+    /// submission completed, shed, or was refused; every hand-off
+    /// candidate was delivered or declared undeliverable; every arrival
+    /// or surrendered request was pushed or failed to route.
+    pub fn conserved(
+        &self,
+        submitted: u64,
+        completed: u64,
+        shed: u64,
+        refused: u64,
+    ) -> bool {
+        submitted == self.pushes + self.delivered
+            && completed + shed + refused == submitted
+            && self.handoff_candidates == self.delivered + self.undeliverable
+            && self.arrived + self.surrendered == self.pushes + self.no_route
+    }
+
+    /// Logical end-to-end completions: the merged `completed` counts a
+    /// handed-off request twice (once at prefill, once at decode), so
+    /// subtract the hand-off candidates.
+    pub fn completed_logical(&self, merged_completed: u64) -> u64 {
+        merged_completed - self.handoff_candidates.min(merged_completed)
+    }
+
+    /// Ledger as JSON rows.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("arrived", self.arrived)
+            .set("pushes", self.pushes)
+            .set("no_route", self.no_route)
+            .set("requeued", self.requeued)
+            .set("surrendered", self.surrendered)
+            .set("crashes", self.crashes)
+            .set("prefill_stacks", self.prefill_stacks)
+            .set("completions_prefill", self.completions_prefill)
+            .set("handoff_candidates", self.handoff_candidates)
+            .set("delivered", self.delivered)
+            .set("undeliverable", self.undeliverable)
+            .set(
+                "transferred_kv_mib",
+                self.transferred_kv_bytes / (1024.0 * 1024.0),
+            )
+            .set("transfer_s_total", self.transfer_s_total)
+            .set(
+                "archs",
+                self.archs.iter().map(|a| a.name()).collect::<Vec<_>>(),
+            );
+        j
+    }
+}
+
+/// Per-architecture utilization/throughput rollup from a fleet report:
+/// one row per distinct arch (first-seen order), averaging utilization
+/// and summing completions/tokens/energy over that arch's stacks.
+pub fn per_arch_json(report: &DecodeReport, archs: &[StackArchId]) -> Json {
+    let mut order: Vec<StackArchId> = Vec::new();
+    for a in archs {
+        if !order.contains(a) {
+            order.push(*a);
+        }
+    }
+    let rows = order
+        .iter()
+        .map(|arch| {
+            let group: Vec<usize> = archs
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| *a == *arch)
+                .map(|(i, _)| i)
+                .take(report.stacks.len())
+                .collect();
+            let mut completed = 0u64;
+            let mut tokens = 0u64;
+            let mut sm_busy = 0.0f64;
+            let mut reram_busy = 0.0f64;
+            let mut energy = 0.0f64;
+            for &i in &group {
+                let t = &report.stacks[i].telemetry;
+                completed += t.completed;
+                tokens += t.tokens_out;
+                sm_busy += t.sm_busy_s;
+                reram_busy += t.reram_busy_s;
+                energy += t.energy_j;
+            }
+            let span = report.total.makespan_s * group.len() as f64;
+            let util = |busy: f64| if span > 0.0 { busy / span } else { 0.0 };
+            let mut row = Json::obj();
+            row.set("arch", arch.name())
+                .set("stacks", group.len())
+                .set("completed", completed)
+                .set("tokens", tokens)
+                .set("sm_util", util(sm_busy))
+                .set("reram_util", util(reram_busy))
+                .set("energy_j", energy);
+            row
+        })
+        .collect();
+    Json::Arr(rows)
+}
+
+/// Fresh snapshots of every stack, in index order.
+fn snaps_of(stacks: &[DecodeStack<'_>]) -> Vec<StackSnapshot> {
+    stacks
+        .iter()
+        .enumerate()
+        .map(|(i, s)| s.snapshot(i))
+        .collect()
+}
+
+/// Route a batch of prefill completions to decode stacks. Completions are
+/// sorted by `(finish_s, id)` so delivery order — and therefore the
+/// KV-aware router's view — is deterministic regardless of which stack
+/// finished which prefill.
+#[allow(clippy::too_many_arguments)]
+fn deliver_handoffs(
+    mut completions: Vec<Completion>,
+    orig_out: &HashMap<u64, usize>,
+    stacks: &mut [DecodeStack<'_>],
+    engine: &DecodeEngine<'_>,
+    router: &StackRouter,
+    routable: &[bool],
+    bw: f64,
+    handoff_seq: &mut u64,
+    out: &mut FleetOutcome,
+) {
+    completions.sort_by(|a, b| {
+        a.finish_s
+            .partial_cmp(&b.finish_s)
+            .unwrap()
+            .then(a.id.cmp(&b.id))
+    });
+    for c in completions {
+        out.completions_prefill += 1;
+        let budget = orig_out.get(&c.id).copied().unwrap_or(1);
+        if budget <= 1 {
+            // Single-token request: the prefill emission IS the answer.
+            continue;
+        }
+        out.handoff_candidates += 1;
+        let dw = engine.workload(c.model, c.variant);
+        // The KV produced by the prefill: prompt tokens + the one token
+        // the prefill stack generated.
+        let kv_bytes = dw.kv_bytes(c.prompt, 1);
+        let transfer_s = if bw.is_finite() { kv_bytes / bw } else { 0.0 };
+        let need = dw.peak_kv_bytes(c.prompt, budget);
+        let snaps = snaps_of(stacks);
+        let pick = router.choose_masked(*handoff_seq, c.finish_s, &snaps, need, routable);
+        *handoff_seq += 1;
+        match pick {
+            Some(target) => {
+                stacks[target].push_handoff(KvHandoff {
+                    id: c.id,
+                    model: c.model,
+                    variant: c.variant,
+                    prompt: c.prompt,
+                    arrival_s: c.arrival_s,
+                    first_token_s: c.first_token_s,
+                    ready_s: c.finish_s + transfer_s,
+                    kv_bytes,
+                    transfer_s,
+                    out_tokens: budget,
+                });
+                out.delivered += 1;
+                out.transferred_kv_bytes += kv_bytes;
+                out.transfer_s_total += transfer_s;
+            }
+            None => out.undeliverable += 1,
+        }
+    }
+}
+
+/// Crash one stack at `t_c`: step the fleet to the crash instant, deliver
+/// any completions that beat the crash, then surrender the victim's queue
+/// and re-route survivors to the remaining live prefill stacks at
+/// single-token budget (their original budget is still in `orig_out`, so
+/// a re-run prefill hands off normally).
+#[allow(clippy::too_many_arguments)]
+fn crash_stack(
+    victim: usize,
+    t_c: f64,
+    stacks: &mut [DecodeStack<'_>],
+    alive: &mut [bool],
+    prefill_mask: &[bool],
+    engine: &DecodeEngine<'_>,
+    arrival_router: &StackRouter,
+    handoff_router: &StackRouter,
+    orig_out: &HashMap<u64, usize>,
+    bw: f64,
+    handoff_seq: &mut u64,
+    out: &mut FleetOutcome,
+) {
+    let n = stacks.len();
+    for s in stacks.iter_mut() {
+        s.step_until(t_c);
+    }
+    let mut pre_crash: Vec<Completion> = Vec::new();
+    for i in 0..out.prefill_stacks.min(n) {
+        pre_crash.extend(stacks[i].drain_completions());
+    }
+    // Mark the victim dead BEFORE building the delivery mask: a hand-off
+    // must never land on the stack that is crashing at this instant.
+    alive[victim] = false;
+    out.crashes += 1;
+    let decode_mask: Vec<bool> = (0..n)
+        .map(|i| !prefill_mask[i] && alive[i])
+        .collect();
+    deliver_handoffs(
+        pre_crash, orig_out, stacks, engine, handoff_router, &decode_mask, bw,
+        handoff_seq, out,
+    );
+    let surrendered = stacks[victim].fail(t_c);
+    out.surrendered += surrendered.len() as u64;
+    let route_mask: Vec<bool> = (0..n)
+        .map(|i| prefill_mask[i] && alive[i])
+        .collect();
+    for r in surrendered {
+        let mut retry = r;
+        retry.out_tokens = 1;
+        retry.input = None;
+        let need = engine
+            .workload(retry.model, retry.variant)
+            .peak_kv_bytes(retry.seq, 1);
+        let snaps = snaps_of(stacks);
+        let pick =
+            arrival_router.choose_masked(*handoff_seq, t_c, &snaps, need, &route_mask);
+        *handoff_seq += 1;
+        match pick {
+            Some(target) => {
+                stacks[target].push(retry);
+                out.pushes += 1;
+                out.requeued += 1;
+            }
+            None => out.no_route += 1,
+        }
+    }
+}
+
+/// Run a disaggregated fleet: prefill-specialized stacks serve arrivals at
+/// a single-token budget, hand their KV to decode-specialized stacks over
+/// the interconnect, and the merged report aggregates both halves.
+///
+/// Returns the merged [`DecodeReport`] plus the fleet ledger. See the
+/// module docs for the per-arrival event ordering.
+pub fn run_disaggregated(cfg: &Config, fc: &FleetConfig) -> (DecodeReport, FleetOutcome) {
+    let dc = &fc.dc;
+    assert!(dc.stacks >= 2, "disaggregation needs at least 2 stacks");
+    let n = dc.stacks;
+    let pn = fc.prefill_stacks.clamp(1, n - 1);
+    let bw = fc.transfer_bw_bps.unwrap_or_else(interposer_bw_bps);
+
+    let generator = TrafficGen {
+        pattern: dc.pattern.clone(),
+        mix: dc.mix.clone(),
+        seed: dc.seed,
+    };
+    let requests = generator.generate(dc.duration_s);
+    let threads = crate::util::pool::resolve_threads(dc.threads);
+
+    let archs = resolve_archs(&dc.archs, n);
+    let mut distinct: Vec<StackArchId> = Vec::new();
+    for a in &archs {
+        if !distinct.contains(a) {
+            distinct.push(*a);
+        }
+    }
+    // Per-distinct-arch configs, phase tables, and engines. Declared
+    // before the stacks so the borrows outlive them.
+    let cfgs: Vec<Config> = distinct.iter().map(|a| a.spec().config(cfg)).collect();
+    let keys = phases::decode_keys(&requests);
+    let tables: Vec<_> = cfgs
+        .iter()
+        .map(|c| phases::phase_table_with_chunks(c, &requests, dc.chunk_tokens, threads))
+        .collect();
+    let engines: Vec<DecodeEngine<'_>> = cfgs
+        .iter()
+        .map(|c| DecodeEngine::build(c, &keys))
+        .collect();
+
+    let mut stacks: Vec<DecodeStack<'_>> = archs
+        .iter()
+        .map(|a| {
+            let di = distinct.iter().position(|d| d == a).unwrap();
+            DecodeStack::with_arch(&cfgs[di], dc, &tables[di], &engines[di], &a.spec())
+        })
+        .collect();
+    for s in stacks.iter_mut().take(pn) {
+        s.record_completions(true);
+    }
+
+    let prefill_mask: Vec<bool> = (0..n).map(|i| i < pn).collect();
+    let mut alive = vec![true; n];
+    let arrival_router = StackRouter::new(n, dc.policy);
+    // Hand-offs are always routed KV-aware: the whole point of choosing
+    // the decode target at hand-off time is placing the KV bytes well.
+    let handoff_router = StackRouter::new(n, RoutePolicy::KvAware);
+    // KV byte accounting uses the first engine's workload; the decode
+    // workload's byte geometry is arch-independent (archs change tier
+    // layout and budgets, not the model's KV row size).
+    let account_engine = &engines[0];
+
+    let mut out = FleetOutcome {
+        arrived: 0,
+        pushes: 0,
+        no_route: 0,
+        requeued: 0,
+        surrendered: 0,
+        crashes: 0,
+        delivered: 0,
+        undeliverable: 0,
+        completions_prefill: 0,
+        handoff_candidates: 0,
+        transferred_kv_bytes: 0.0,
+        transfer_s_total: 0.0,
+        archs: archs.clone(),
+        prefill_stacks: pn,
+    };
+    let mut orig_out: HashMap<u64, usize> = HashMap::new();
+    let mut handoff_seq: u64 = 0;
+    let mut crash = fc.crash;
+
+    for (i, req) in requests.iter().enumerate() {
+        let t = req.arrival_s;
+        if let Some((t_c, victim)) = crash {
+            if t_c <= t && victim < n && alive[victim] {
+                crash_stack(
+                    victim, t_c, &mut stacks, &mut alive, &prefill_mask,
+                    account_engine, &arrival_router, &handoff_router, &orig_out,
+                    bw, &mut handoff_seq, &mut out,
+                );
+                crash = None;
+            }
+        }
+        for s in stacks.iter_mut() {
+            s.step_until(t);
+        }
+        let mut done: Vec<Completion> = Vec::new();
+        for s in stacks.iter_mut().take(pn) {
+            done.extend(s.drain_completions());
+        }
+        let decode_mask: Vec<bool> = (0..n)
+            .map(|j| !prefill_mask[j] && alive[j])
+            .collect();
+        deliver_handoffs(
+            done, &orig_out, &mut stacks, account_engine, &handoff_router,
+            &decode_mask, bw, &mut handoff_seq, &mut out,
+        );
+
+        out.arrived += 1;
+        orig_out.insert(req.id, req.out_tokens.max(1));
+        let mut prefill_req = req.clone();
+        prefill_req.out_tokens = 1;
+        let need = account_engine
+            .workload(req.model, req.variant)
+            .peak_kv_bytes(req.seq, 1);
+        let route_mask: Vec<bool> = (0..n)
+            .map(|j| prefill_mask[j] && alive[j])
+            .collect();
+        let snaps = snaps_of(&stacks);
+        let pick = arrival_router.choose_masked(i as u64, t, &snaps, need, &route_mask);
+        match pick {
+            Some(target) => {
+                stacks[target].push(prefill_req);
+                out.pushes += 1;
+            }
+            None => out.no_route += 1,
+        }
+    }
+
+    // Stream over. Fire any still-pending crash, then drain the prefill
+    // side to completion and deliver the final wave of hand-offs.
+    if let Some((t_c, victim)) = crash {
+        if victim < n && alive[victim] {
+            crash_stack(
+                victim, t_c, &mut stacks, &mut alive, &prefill_mask,
+                account_engine, &arrival_router, &handoff_router, &orig_out,
+                bw, &mut handoff_seq, &mut out,
+            );
+        }
+    }
+    for s in stacks.iter_mut().take(pn) {
+        s.run_to_completion();
+    }
+    let mut done: Vec<Completion> = Vec::new();
+    for s in stacks.iter_mut().take(pn) {
+        done.extend(s.drain_completions());
+    }
+    let decode_mask: Vec<bool> = (0..n)
+        .map(|j| !prefill_mask[j] && alive[j])
+        .collect();
+    deliver_handoffs(
+        done, &orig_out, &mut stacks, account_engine, &handoff_router,
+        &decode_mask, bw, &mut handoff_seq, &mut out,
+    );
+
+    let outcomes = stacks.into_iter().map(DecodeStack::finish).collect();
+    let report = decodetest::aggregate(dc, outcomes);
+    (report, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelId;
+    use crate::traffic::generator::{ArrivalPattern, ReplayEvent, RequestMix};
+
+    fn replay(n: usize, out_tokens: usize) -> Vec<ReplayEvent> {
+        (0..n)
+            .map(|i| ReplayEvent {
+                t_s: i as f64 * 0.001,
+                model: ModelId::BertBase,
+                variant: ModelId::BertBase.default_variant(),
+                seq: 512,
+                out_tokens,
+            })
+            .collect()
+    }
+
+    fn fleet_dc(stacks: usize, events: &[ReplayEvent]) -> DecodeConfig {
+        let mix = RequestMix::single(ModelId::BertBase);
+        let mut dc = DecodeConfig::new(
+            ArrivalPattern::Replay { events: events.to_vec() },
+            mix,
+        );
+        dc.stacks = stacks;
+        dc.policy = RoutePolicy::KvAware;
+        dc.max_running = 8;
+        dc.kv.capacity_bytes = 1024.0 * 1024.0 * 1024.0;
+        dc
+    }
+
+    #[test]
+    fn presets_validate_and_hetrax3d_is_identity() {
+        let base = Config::default();
+        for id in StackArchId::all() {
+            let arch = id.spec();
+            // config() panics internally if the preset is inconsistent.
+            let cfg = arch.config(&base);
+            assert!(cfg.sm_mc_tiers == base.sm_mc_tiers, "presets keep 3 tiers");
+        }
+        let identity = StackArchId::Hetrax3d.spec();
+        assert_eq!(identity.config(&base), base);
+        let kv = KvCacheConfig::default();
+        let kv2 = identity.kv_config(kv);
+        assert!(kv2.capacity_bytes == kv.capacity_bytes);
+        assert!(kv2.sm_frac == kv.sm_frac);
+        let th = ThrottleConfig::default();
+        let th2 = identity.throttle(th);
+        assert!(th2.ceiling_c == th.ceiling_c);
+        assert!(identity.compute_scale == 1.0);
+    }
+
+    #[test]
+    fn arch_names_roundtrip_and_reject_junk() {
+        for id in StackArchId::all() {
+            assert_eq!(StackArchId::parse(id.name()), Some(*id));
+        }
+        assert_eq!(StackArchId::parse("tpu"), None);
+        assert_eq!(StackArchId::parse(""), None);
+        assert_eq!(StackArchId::parse("Hetrax3d"), None);
+    }
+
+    #[test]
+    fn transfer_model_matches_noc_constants() {
+        assert!(interposer_bw_bps() == 16.0e9);
+        assert!(transfer_energy_j(0.0) == 0.0);
+        assert!(transfer_energy_j(-5.0) == 0.0);
+        let one_flit = transfer_energy_j(16.0); // 128 bits
+        assert!(one_flit > 0.0);
+        assert!(transfer_energy_j(32.0) > one_flit);
+        // 16 bytes = exactly one flit: router + link across one tier edge.
+        let expected = (4.0 + 12.8 * 10.0) * 1.0e-12;
+        assert!((one_flit - expected).abs() < 1e-18);
+    }
+
+    #[test]
+    fn zero_cost_transfer_pins_disaggregated_against_monolithic() {
+        let events = replay(16, 16);
+        let dc = fleet_dc(2, &events);
+        let cfg = Config::default();
+        let mono = decodetest::run(&cfg, &dc);
+        let fc = FleetConfig {
+            dc: dc.clone(),
+            prefill_stacks: 1,
+            transfer_bw_bps: Some(f64::INFINITY),
+            crash: None,
+        };
+        let (report, out) = run_disaggregated(&cfg, &fc);
+        assert_eq!(out.arrived, 16);
+        assert_eq!(out.no_route, 0);
+        assert_eq!(out.undeliverable, 0);
+        assert_eq!(out.delivered, out.handoff_candidates);
+        assert!(out.conserved(
+            report.total.submitted,
+            report.total.completed,
+            report.total.shed,
+            report.total.refused_kv,
+        ));
+        // Token parity: prefill emits 1 of each request's 16, decode the
+        // other 15 — logically identical to the monolithic run.
+        assert_eq!(report.total.tokens_out, mono.total.tokens_out);
+        assert_eq!(
+            out.completed_logical(report.total.completed),
+            mono.total.completed
+        );
+        assert!(out.transferred_kv_bytes > 0.0);
+        assert!(out.transfer_s_total == 0.0);
+    }
+
+    #[test]
+    fn disaggregated_is_deterministic_across_runs_and_threads() {
+        let events = replay(24, 12);
+        let doc = |threads: usize| {
+            let mut dc = fleet_dc(3, &events);
+            dc.threads = threads;
+            dc.archs = vec![StackArchId::Hetrax3d];
+            let fc = FleetConfig {
+                dc,
+                prefill_stacks: 2,
+                transfer_bw_bps: None,
+                crash: None,
+            };
+            let (report, out) = run_disaggregated(&Config::default(), &fc);
+            format!(
+                "{}\n{}",
+                report.to_json(&fc.dc).pretty(),
+                out.to_json().pretty()
+            )
+        };
+        let a = doc(1);
+        let b = doc(1);
+        let c = doc(4);
+        assert_eq!(a, b, "same-thread reruns must be byte-identical");
+        assert_eq!(a, c, "thread count must not leak into results");
+    }
+
+    #[test]
+    fn heterogeneous_fleet_serves_and_rolls_up_per_arch() {
+        let events = replay(18, 8);
+        let mut dc = fleet_dc(3, &events);
+        dc.archs = vec![
+            StackArchId::Chiplet2p5d,
+            StackArchId::Hetrax3d,
+            StackArchId::Hetrax3d,
+        ];
+        let fc = FleetConfig {
+            dc,
+            prefill_stacks: 1,
+            transfer_bw_bps: None,
+            crash: None,
+        };
+        let (report, out) = run_disaggregated(&Config::default(), &fc);
+        assert!(out.conserved(
+            report.total.submitted,
+            report.total.completed,
+            report.total.shed,
+            report.total.refused_kv,
+        ));
+        assert!(report.total.tokens_out > 0);
+        let rollup = per_arch_json(&report, &out.archs);
+        match &rollup {
+            Json::Arr(rows) => assert_eq!(rows.len(), 2, "two distinct archs"),
+            _ => panic!("per_arch_json must be an array"),
+        }
+        // Determinism holds for heterogeneous fleets too.
+        let (report2, out2) = run_disaggregated(&Config::default(), &fc);
+        assert_eq!(
+            report.to_json(&fc.dc).pretty(),
+            report2.to_json(&fc.dc).pretty()
+        );
+        assert_eq!(out.to_json().pretty(), out2.to_json().pretty());
+    }
+
+    #[test]
+    fn prefill_crash_reroutes_handoffs_and_conserves() {
+        let events = replay(20, 8);
+        let dc = fleet_dc(3, &events);
+        let fc = FleetConfig {
+            dc,
+            prefill_stacks: 2,
+            transfer_bw_bps: None,
+            crash: Some((0.008, 0)),
+        };
+        let (report, out) = run_disaggregated(&Config::default(), &fc);
+        assert_eq!(out.crashes, 1);
+        assert!(out.surrendered > 0, "crash mid-wave must surrender work");
+        assert!(out.requeued > 0 || out.no_route > 0);
+        assert!(out.conserved(
+            report.total.submitted,
+            report.total.completed,
+            report.total.shed,
+            report.total.refused_kv,
+        ));
+        // Survivors re-ran on the other prefill stack and still handed off.
+        assert!(out.delivered > 0);
+        let (report2, out2) = run_disaggregated(&Config::default(), &fc);
+        assert_eq!(
+            report.to_json(&fc.dc).pretty(),
+            report2.to_json(&fc.dc).pretty()
+        );
+        assert_eq!(out.to_json().pretty(), out2.to_json().pretty());
+    }
+}

@@ -18,6 +18,7 @@ pub mod config;
 pub mod experiments;
 pub mod coordinator;
 pub mod decode;
+pub mod fleet;
 pub mod model;
 pub mod noc;
 pub mod optim;

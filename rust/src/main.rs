@@ -30,6 +30,7 @@ use hetrax::noc::{traffic, NocSim, Topology};
 use hetrax::optim::{Evaluator, MooStage, ObjectiveSet};
 use hetrax::perf::PerfEstimator;
 use hetrax::decode::{decodetest, DecodeConfig};
+use hetrax::fleet::{self, FleetConfig, StackArchId};
 use hetrax::traffic::loadtest::{self, LoadtestConfig};
 use hetrax::traffic::{ArrivalPattern, OutputLenDist, RequestMix, RoutePolicy};
 use hetrax::util::rng::Rng;
@@ -165,12 +166,18 @@ COMMANDS:
   loadtest    open-loop traffic run with thermal admission control
               [--pattern poisson|bursty|diurnal|replay --rps R
                --duration S --stacks N --policy jsq|rr|kv|latency --models a,b
+               --arch a,b,... (per-stack architectures; see decodetest)
                --batch N --slo S --ceiling C --uncontrolled
                --trace FILE (replay) --threads N --out BENCH_serve.json]
   decodetest  autoregressive decode run: continuous batching, KV-cache
               residency, chunked prefill, TTFT/TPOT/ITL telemetry
               [--pattern ... --rps R --duration S --stacks N
                --policy jsq|rr|kv|latency --models a,b
+               --arch a,b,... (hetrax3d | chiplet2p5d | atleus-edge;
+                 one name broadcasts, else one per stack)
+               --disaggregate (split the fleet into prefill and decode
+                 stacks with KV hand-off over the interposer; emits
+                 BENCH_fleet.json) --prefill-stacks N (default 1)
                --outlen fixed:N|geometric:MEAN|lognormal:MED:SIGMA
                --max-running N (1 = one-at-a-time) --prefill-batch N
                --chunk-tokens N (0 = whole-prompt prefills)
@@ -178,7 +185,8 @@ COMMANDS:
                --trace FILE (replay) --threads N --out BENCH_decode.json]
   faulttest   decode run under a deterministic fault schedule: stack
               crashes, thermal-trip quarantines, stalls, wear-out, and
-              retry/backoff failover (decodetest flags, plus:)
+              retry/backoff failover (decodetest flags except
+              --disaggregate, plus:)
               [--fault-seed N (generate a schedule)
                --schedule FILE (JSON replay, overrides --fault-seed)
                --out BENCH_faults.json]
@@ -315,6 +323,7 @@ struct TrafficArgs {
     duration: f64,
     stacks: usize,
     policy: RoutePolicy,
+    archs: Vec<StackArchId>,
     threads: usize,
     ceiling: Option<f64>,
     uncontrolled: bool,
@@ -354,6 +363,7 @@ fn parse_traffic(args: &Args, default_rps: f64, default_duration: f64) -> Result
         duration,
         stacks,
         policy,
+        archs: parse_archs(args, stacks)?,
         threads: args.get_usize("threads", 0)?,
         ceiling: match args.get("ceiling") {
             Some(v) => Some(v.parse().with_context(|| format!("--ceiling {v}"))?),
@@ -406,6 +416,83 @@ fn parse_models(args: &Args) -> Result<Vec<ModelId>> {
     Ok(models)
 }
 
+/// Parse `--arch a,b,...` into per-stack architecture ids. Empty (flag
+/// absent) means all-`hetrax3d`; a single name broadcasts to every
+/// stack; otherwise the list must name exactly one arch per stack.
+/// Unknown names are hard errors listing the valid set.
+fn parse_archs(args: &Args, stacks: usize) -> Result<Vec<StackArchId>> {
+    let valid = || {
+        StackArchId::all()
+            .iter()
+            .map(|a| a.name())
+            .collect::<Vec<_>>()
+            .join(" | ")
+    };
+    let spec = match args.get("arch") {
+        Some(v) => v,
+        None if args.has("arch") => bail!("--arch needs a value ({})", valid()),
+        None => return Ok(Vec::new()),
+    };
+    let archs: Vec<StackArchId> = spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            StackArchId::parse(s)
+                .ok_or_else(|| anyhow!("unknown arch {s:?} (valid: {})", valid()))
+        })
+        .collect::<Result<_>>()?;
+    if archs.is_empty() {
+        bail!("--arch must name at least one architecture (got {spec:?})");
+    }
+    if archs.len() != 1 && archs.len() != stacks {
+        bail!(
+            "--arch names {} architectures but --stacks is {stacks} \
+             (give one name to broadcast, or exactly one per stack)",
+            archs.len()
+        );
+    }
+    Ok(archs)
+}
+
+/// Parse `--disaggregate` / `--prefill-stacks` for `hetrax decodetest`.
+/// Returns `Some(prefill_stacks)` when disaggregation is on; the split
+/// must leave at least one prefill stack and one decode stack.
+fn parse_disagg(args: &Args, stacks: usize) -> Result<Option<usize>> {
+    if !args.has("disaggregate") {
+        if args.has("prefill-stacks") {
+            bail!("--prefill-stacks requires --disaggregate");
+        }
+        return Ok(None);
+    }
+    if stacks < 2 {
+        bail!(
+            "--disaggregate needs --stacks >= 2 \
+             (at least one prefill and one decode stack; got {stacks})"
+        );
+    }
+    let prefill = args.get_usize("prefill-stacks", 1)?;
+    if prefill < 1 || prefill >= stacks {
+        bail!(
+            "--prefill-stacks must leave at least one decode stack: \
+             expected 1..={} with --stacks {stacks}, got {prefill}",
+            stacks - 1
+        );
+    }
+    Ok(Some(prefill))
+}
+
+/// The disaggregation flags only make sense for autoregressive decode;
+/// `loadtest` and `faulttest` reject them instead of silently ignoring.
+fn reject_disagg(args: &Args, command: &str) -> Result<()> {
+    for flag in ["disaggregate", "prefill-stacks"] {
+        if args.has(flag) {
+            bail!("--{flag} is only supported by `hetrax decodetest` (not {command})");
+        }
+    }
+    Ok(())
+}
+
 fn write_report(out: &str, doc: &hetrax::util::json::Json) -> Result<()> {
     if let Some(dir) = std::path::Path::new(out).parent() {
         if !dir.as_os_str().is_empty() {
@@ -418,12 +505,14 @@ fn write_report(out: &str, doc: &hetrax::util::json::Json) -> Result<()> {
 }
 
 fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
+    reject_disagg(args, "loadtest")?;
     let t = parse_traffic(args, 200.0, 2.0)?;
 
     let mut lt = LoadtestConfig::new(t.pattern, RequestMix::models(&t.models));
     lt.duration_s = t.duration;
     lt.stacks = t.stacks;
     lt.policy = t.policy;
+    lt.archs = t.archs;
     lt.seed = seed;
     lt.batcher.max_batch = args.get_usize("batch", 8)?;
     lt.slo_s = args.get_f64("slo", 0.25)?;
@@ -471,12 +560,14 @@ fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     let ta = parse_traffic(args, 300.0, 1.0)?;
     let outlen = OutputLenDist::parse(args.get("outlen").unwrap_or("geometric:32"))
         .map_err(|e| anyhow!(e))?;
+    let disagg = parse_disagg(args, ta.stacks)?;
 
     let mut dc =
         DecodeConfig::new(ta.pattern, RequestMix::models(&ta.models).with_output(outlen));
     dc.duration_s = ta.duration;
     dc.stacks = ta.stacks;
     dc.policy = ta.policy;
+    dc.archs = ta.archs;
     dc.seed = seed;
     dc.max_running = args.get_usize("max-running", 8)?;
     dc.max_prefill_batch = args.get_usize("prefill-batch", 4)?;
@@ -486,6 +577,10 @@ fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     dc.threads = ta.threads;
     dc.throttle.ceiling_c = ta.ceiling.unwrap_or(dc.throttle.ceiling_c);
     dc.throttle.enabled = !ta.uncontrolled;
+
+    if let Some(prefill_stacks) = disagg {
+        return cmd_fleet(cfg, args, dc, prefill_stacks);
+    }
 
     let report = decodetest::run(cfg, &dc);
     let t = &report.total;
@@ -550,7 +645,78 @@ fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     write_report(args.get("out").unwrap_or("BENCH_decode.json"), &report.to_json(&dc))
 }
 
+/// `hetrax decodetest --disaggregate`: prefill-specialized stacks hand
+/// finished prompts to decode stacks over the interposer, with the KV
+/// transfer charged as virtual-time delay before the first decode step.
+fn cmd_fleet(cfg: &Config, args: &Args, dc: DecodeConfig, prefill_stacks: usize) -> Result<()> {
+    let fc = FleetConfig {
+        dc,
+        prefill_stacks,
+        transfer_bw_bps: None,
+        crash: None,
+    };
+    let (report, out) = fleet::run_disaggregated(cfg, &fc);
+    let dc = &fc.dc;
+    let t = &report.total;
+    let ms = |us: u64| us as f64 / 1e3;
+    let archs = fleet::resolve_archs(&dc.archs, dc.stacks);
+    println!(
+        "decodetest (disaggregated) {} @ {:.0} rps x {:.1}s over {} prefill + {} decode stack(s), policy {}",
+        dc.pattern.name(),
+        dc.pattern.nominal_rps(),
+        dc.duration_s,
+        fc.prefill_stacks,
+        dc.stacks - fc.prefill_stacks,
+        dc.policy.name()
+    );
+    println!(
+        "  archs:     [{}]",
+        archs.iter().map(|a| a.name()).collect::<Vec<_>>().join(", ")
+    );
+    println!(
+        "  requests:  {} arrived, {} completed end-to-end, {} shed, {} refused (KV)",
+        out.arrived,
+        out.completed_logical(t.completed),
+        t.shed,
+        t.refused_kv
+    );
+    println!(
+        "  hand-offs: {} candidates, {} delivered, {} undeliverable; \
+         {:.2} MiB KV transferred in {:.3} s total",
+        out.handoff_candidates,
+        out.delivered,
+        out.undeliverable,
+        out.transferred_kv_bytes / (1024.0 * 1024.0),
+        out.transfer_s_total
+    );
+    println!(
+        "  ttft:      p50 {:.2} ms  p99 {:.2} ms",
+        ms(t.ttft_us.percentile(50.0)),
+        ms(t.ttft_us.percentile(99.0))
+    );
+    println!(
+        "  itl:       p50 {:.3} ms  p99 {:.3} ms",
+        ms(t.itl_us.percentile(50.0)),
+        ms(t.itl_us.percentile(99.0))
+    );
+    println!(
+        "  serving:   {:.0} tok/s, makespan {:.2} s, energy {:.2} J",
+        report.tokens_per_s(),
+        t.makespan_s,
+        t.energy_j
+    );
+    if !out.conserved(t.submitted, t.completed, t.shed, t.refused_kv) {
+        bail!("fleet conservation violated — this is a simulator bug");
+    }
+    let mut doc = report.to_json(dc);
+    doc.set("bench", "fleet_serving")
+        .set("fleet", out.to_json())
+        .set("per_arch", fleet::per_arch_json(&report, &archs));
+    write_report(args.get("out").unwrap_or("BENCH_fleet.json"), &doc)
+}
+
 fn cmd_faulttest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
+    reject_disagg(args, "faulttest")?;
     let ta = parse_traffic(args, 300.0, 1.0)?;
     let outlen = OutputLenDist::parse(args.get("outlen").unwrap_or("geometric:32"))
         .map_err(|e| anyhow!(e))?;
@@ -560,6 +726,7 @@ fn cmd_faulttest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     dc.duration_s = ta.duration;
     dc.stacks = ta.stacks;
     dc.policy = ta.policy;
+    dc.archs = ta.archs;
     dc.seed = seed;
     dc.max_running = args.get_usize("max-running", 8)?;
     dc.max_prefill_batch = args.get_usize("prefill-batch", 4)?;
@@ -693,5 +860,96 @@ mod tests {
         .expect("valid flags must parse");
         assert_eq!(t.stacks, 2);
         assert_eq!(t.models, vec![ModelId::BertBase]);
+        assert!(t.archs.is_empty(), "no --arch means the hetrax3d default");
+    }
+
+    #[test]
+    fn unknown_arch_is_a_clean_error_listing_the_valid_set() {
+        let e = parse_traffic(&args(&[("arch", Some("tpu"))]), 200.0, 1.0).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("unknown arch"), "{msg}");
+        for name in ["hetrax3d", "chiplet2p5d", "atleus-edge"] {
+            assert!(msg.contains(name), "error must list {name}: {msg}");
+        }
+    }
+
+    #[test]
+    fn arch_list_length_must_match_stack_count() {
+        let e = parse_traffic(
+            &args(&[("stacks", Some("3")), ("arch", Some("hetrax3d,atleus-edge"))]),
+            200.0,
+            1.0,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("--arch"), "{e}");
+        assert!(e.to_string().contains("--stacks is 3"), "{e}");
+    }
+
+    #[test]
+    fn single_arch_broadcasts_and_full_lists_parse() {
+        let t = parse_traffic(
+            &args(&[("stacks", Some("3")), ("arch", Some("chiplet2p5d"))]),
+            200.0,
+            1.0,
+        )
+        .expect("single-name broadcast must parse");
+        assert_eq!(t.archs, vec![StackArchId::Chiplet2p5d]);
+        let t = parse_traffic(
+            &args(&[("stacks", Some("2")), ("arch", Some("hetrax3d, atleus-edge"))]),
+            200.0,
+            1.0,
+        )
+        .expect("one-name-per-stack list must parse");
+        assert_eq!(t.archs, vec![StackArchId::Hetrax3d, StackArchId::AtleusEdge]);
+    }
+
+    #[test]
+    fn disaggregation_needs_at_least_two_stacks() {
+        let e = parse_disagg(&args(&[("disaggregate", None)]), 1).unwrap_err();
+        assert!(e.to_string().contains("--disaggregate"), "{e}");
+        assert!(e.to_string().contains("--stacks >= 2"), "{e}");
+    }
+
+    #[test]
+    fn prefill_split_must_leave_a_decode_stack() {
+        for p in ["0", "4", "7"] {
+            let e = parse_disagg(
+                &args(&[("disaggregate", None), ("prefill-stacks", Some(p))]),
+                4,
+            )
+            .unwrap_err();
+            assert!(e.to_string().contains("--prefill-stacks"), "{p}: {e}");
+        }
+        let ok = parse_disagg(
+            &args(&[("disaggregate", None), ("prefill-stacks", Some("3"))]),
+            4,
+        )
+        .expect("3 prefill of 4 stacks is a valid split");
+        assert_eq!(ok, Some(3));
+        assert_eq!(
+            parse_disagg(&args(&[("disaggregate", None)]), 2).unwrap(),
+            Some(1),
+            "--prefill-stacks defaults to one prefill stack"
+        );
+    }
+
+    #[test]
+    fn prefill_stacks_without_disaggregate_is_a_clean_error() {
+        let e = parse_disagg(&args(&[("prefill-stacks", Some("2"))]), 4).unwrap_err();
+        assert!(e.to_string().contains("--disaggregate"), "{e}");
+        assert_eq!(parse_disagg(&args(&[]), 4).unwrap(), None);
+    }
+
+    #[test]
+    fn loadtest_and_faulttest_reject_disaggregation_flags() {
+        for flag in ["disaggregate", "prefill-stacks"] {
+            for cmd in ["loadtest", "faulttest"] {
+                let e = reject_disagg(&args(&[(flag, None)]), cmd).unwrap_err();
+                assert!(e.to_string().contains(flag), "{cmd}: {e}");
+                assert!(e.to_string().contains("decodetest"), "{cmd}: {e}");
+            }
+        }
+        reject_disagg(&args(&[("stacks", Some("2"))]), "loadtest")
+            .expect("unrelated flags must pass");
     }
 }

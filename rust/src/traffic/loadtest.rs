@@ -19,6 +19,7 @@ use std::collections::{HashMap, VecDeque};
 use crate::cluster::{self, ClusterStack, HealthState, StackSnapshot};
 use crate::config::Config;
 use crate::coordinator::{Batcher, BatcherConfig, Engine, Request, ServeState};
+use crate::fleet::{self, StackArch, StackArchId};
 use crate::traffic::admission::{AdmissionController, BatchCost, ThrottleConfig};
 use crate::traffic::generator::{ArrivalPattern, RequestMix, TrafficGen};
 use crate::traffic::phases::{phase_table, PhaseInfo, PhaseKey};
@@ -45,6 +46,10 @@ pub struct LoadtestConfig {
     /// itself is serial — the cluster event loop's determinism is
     /// structural.
     pub threads: usize,
+    /// Per-stack architectures (see [`crate::fleet`]): empty = all
+    /// hetrax3d (bit-identical to the pre-fleet path), one entry
+    /// broadcasts, otherwise one entry per stack.
+    pub archs: Vec<StackArchId>,
 }
 
 impl LoadtestConfig {
@@ -60,6 +65,7 @@ impl LoadtestConfig {
             throttle: ThrottleConfig::default(),
             slo_s: 0.25,
             threads: 0,
+            archs: Vec::new(),
         }
     }
 }
@@ -184,6 +190,16 @@ impl LoadtestReport {
             .set("rps", lt.pattern.nominal_rps())
             .set("duration_s", lt.duration_s)
             .set("stacks", lt.stacks)
+            // Resolved per-stack architectures: an empty `--arch` spec
+            // and an explicit all-hetrax3d spec print identically.
+            .set(
+                "archs",
+                fleet::resolve_archs(&lt.archs, lt.stacks.max(1))
+                    .iter()
+                    .map(|a| a.name())
+                    .collect::<Vec<_>>()
+                    .join(","),
+            )
             .set("policy", lt.policy.name())
             .set("seed", lt.seed)
             .set("slo_s", lt.slo_s)
@@ -250,6 +266,8 @@ pub(crate) struct ServeStack<'a> {
     /// Rolling completion latency ([`cluster::ewma`] fold) for the
     /// `latency` policy.
     ewma_latency_s: f64,
+    arch_id: StackArchId,
+    compute_scale: f64,
 }
 
 impl<'a> ServeStack<'a> {
@@ -257,6 +275,21 @@ impl<'a> ServeStack<'a> {
         cfg: &'a Config,
         lt: &'a LoadtestConfig,
         phases: &'a HashMap<PhaseKey, PhaseInfo>,
+    ) -> ServeStack<'a> {
+        let arch = StackArch::preset(StackArchId::Hetrax3d);
+        ServeStack::with_arch(cfg, lt, phases, &arch)
+    }
+
+    /// Build a stack of a specific architecture: `cfg` must already be
+    /// the arch-applied config ([`StackArch::config`]), and the arch's
+    /// thermal ceiling clamps the admission controller. For the
+    /// `hetrax3d` preset every input is untouched, which keeps `new`
+    /// (and therefore the pre-fleet path) bit-identical.
+    pub(crate) fn with_arch(
+        cfg: &'a Config,
+        lt: &'a LoadtestConfig,
+        phases: &'a HashMap<PhaseKey, PhaseInfo>,
+        arch: &StackArch,
     ) -> ServeStack<'a> {
         let interval = lt.throttle.interval_s.max(1e-6);
         let wait = lt.throttle.max_queue_wait_s;
@@ -269,7 +302,7 @@ impl<'a> ServeStack<'a> {
             phases,
             engine: Engine::new(cfg),
             state: ServeState::new(),
-            ctl: AdmissionController::new(cfg, lt.throttle, lt.batcher.max_batch),
+            ctl: AdmissionController::new(cfg, arch.throttle(lt.throttle), lt.batcher.max_batch),
             telemetry: StackTelemetry::new(),
             pending: VecDeque::new(),
             backlog: Vec::new(),
@@ -281,6 +314,8 @@ impl<'a> ServeStack<'a> {
             done: false,
             horizon_s: 0.0,
             ewma_latency_s: 0.0,
+            arch_id: arch.id,
+            compute_scale: arch.compute_scale,
         }
     }
 
@@ -400,6 +435,8 @@ impl ClusterStack for ServeStack<'_> {
             ewma_ttft_s: self.ewma_latency_s,
             ewma_itl_s: 0.0,
             health: HealthState::Healthy,
+            arch: self.arch_id,
+            compute_scale: self.compute_scale,
         }
     }
 
@@ -453,11 +490,30 @@ pub fn run(cfg: &Config, lt: &LoadtestConfig) -> LoadtestReport {
     };
     let requests = generator.generate(lt.duration_s);
     let threads = pool::resolve_threads(lt.threads);
-    let phases = phase_table(cfg, &requests, threads);
+    // One config + phase table per *distinct* architecture; a
+    // homogeneous hetrax3d fleet builds exactly the pre-fleet single
+    // table, keeping the default path bit-identical.
+    let archs = fleet::resolve_archs(&lt.archs, lt.stacks.max(1));
+    let mut distinct: Vec<StackArchId> = Vec::new();
+    for a in &archs {
+        if !distinct.contains(a) {
+            distinct.push(*a);
+        }
+    }
+    let cfgs: Vec<Config> = distinct.iter().map(|a| a.spec().config(cfg)).collect();
+    let tables: Vec<_> = cfgs
+        .iter()
+        .map(|c| phase_table(c, &requests, threads))
+        .collect();
 
     let router = StackRouter::new(lt.stacks, lt.policy);
-    let mut stacks: Vec<ServeStack> = (0..router.stacks)
-        .map(|_| ServeStack::new(cfg, lt, &phases))
+    debug_assert_eq!(archs.len(), router.stacks);
+    let mut stacks: Vec<ServeStack> = archs
+        .iter()
+        .map(|a| {
+            let di = distinct.iter().position(|d| d == a).unwrap();
+            ServeStack::with_arch(&cfgs[di], lt, &tables[di], &a.spec())
+        })
         .collect();
     // One-shot prefill traffic holds no KV residency: need 0 bytes.
     cluster::drive(&mut stacks, &requests, &router, None, |_| 0.0);
@@ -686,6 +742,33 @@ mod tests {
         assert!(cool.throttle_events > 0, "the controller must have acted");
         assert!(cool.total.shed > 0, "overload under a ceiling sheds load");
         assert!(cool.total.completed > 0, "but it still serves");
+    }
+
+    #[test]
+    fn explicit_hetrax3d_archs_are_a_byte_identical_no_op() {
+        // Fleet equivalence pin on the serve path: spelling out the
+        // default arch must not move a single byte of BENCH_serve.json.
+        let cfg = Config::default();
+        let mut lt = base(250.0, 1.0);
+        lt.stacks = 2;
+        let a = run(&cfg, &lt).to_json(&lt).pretty();
+        lt.archs = vec![StackArchId::Hetrax3d, StackArchId::Hetrax3d];
+        let b = run(&cfg, &lt).to_json(&lt).pretty();
+        assert_eq!(a, b, "explicit hetrax3d arch list must be a no-op");
+    }
+
+    #[test]
+    fn heterogeneous_serve_fleet_conserves_and_reproduces() {
+        let cfg = Config::default();
+        let mut lt = base(300.0, 0.8);
+        lt.stacks = 2;
+        lt.archs = vec![StackArchId::Chiplet2p5d, StackArchId::AtleusEdge];
+        let report = run(&cfg, &lt);
+        let t = &report.total;
+        assert_eq!(t.completed + t.shed, t.submitted);
+        assert!(t.completed > 0, "mixed serve fleet must serve");
+        let again = run(&cfg, &lt).to_json(&lt).pretty();
+        assert_eq!(report.to_json(&lt).pretty(), again, "determinism");
     }
 
     #[test]

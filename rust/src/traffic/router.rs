@@ -139,7 +139,7 @@ impl StackRouter {
             return Some(live[(seq_no % live.len() as u64) as usize]);
         }
         let mut best: Option<usize> = None;
-        let mut best_key = (f64::INFINITY, u64::MAX, f64::INFINITY);
+        let mut best_key = (f64::INFINITY, f64::INFINITY, f64::INFINITY);
         for (i, s) in snaps.iter().enumerate() {
             if !up(i) {
                 continue;
@@ -155,11 +155,18 @@ impl StackRouter {
 
     /// The policy's ranking key for one snapshot (lower wins; see
     /// [`RoutePolicy`] for semantics). Round-robin never ranks.
-    fn key(&self, s: &StackSnapshot, now_s: f64, need_kv_bytes: f64) -> (f64, u64, f64) {
+    ///
+    /// Work-depth terms (outstanding steps, queue depth) are divided by
+    /// the snapshot's [`StackSnapshot::compute_scale`] so heterogeneous
+    /// fleets rank by *relative* load: a stack with twice the SM tier
+    /// at equal depth is half as loaded. `compute_scale` is exactly 1.0
+    /// for `hetrax3d` stacks and division by 1.0 is bitwise-exact, so
+    /// homogeneous fleets keep the pre-fleet ranking bit for bit.
+    fn key(&self, s: &StackSnapshot, now_s: f64, need_kv_bytes: f64) -> (f64, f64, f64) {
         let backlog = (s.horizon_s - now_s).max(0.0);
         match self.policy {
-            RoutePolicy::RoundRobin => (0.0, 0, 0.0),
-            RoutePolicy::JoinShortestQueue => (backlog, 0u64, 0.0),
+            RoutePolicy::RoundRobin => (0.0, 0.0, 0.0),
+            RoutePolicy::JoinShortestQueue => (backlog, 0.0, 0.0),
             RoutePolicy::KvAware => {
                 // Saturated when the committed bytes cannot take the
                 // reservation. Oversized requests (need > every
@@ -169,26 +176,32 @@ impl StackRouter {
                 let saturated = need_kv_bytes > 0.0
                     && need_kv_bytes <= s.kv_capacity_bytes
                     && s.kv_committed_bytes + need_kv_bytes > s.kv_capacity_bytes + 1e-6;
-                ((saturated as u64) as f64, s.outstanding_steps, backlog)
+                (
+                    (saturated as u64) as f64,
+                    s.outstanding_steps as f64 / s.compute_scale,
+                    backlog,
+                )
             }
-            RoutePolicy::LatencyAware => {
-                (backlog + s.ewma_ttft_s + s.ewma_itl_s, s.queue_depth as u64, 0.0)
-            }
+            RoutePolicy::LatencyAware => (
+                backlog + s.ewma_ttft_s + s.ewma_itl_s,
+                s.queue_depth as f64 / s.compute_scale,
+                0.0,
+            ),
         }
     }
 }
 
 /// Strict lexicographic `<` on a ranking key (ties never displace an
 /// earlier, lower-index winner).
-fn key_lt(a: (f64, u64, f64), b: (f64, u64, f64)) -> bool {
+fn key_lt(a: (f64, f64, f64), b: (f64, f64, f64)) -> bool {
     a.0 < b.0 || (a.0 == b.0 && a.1 < b.1) || (a.0 == b.0 && a.1 == b.1 && a.2 < b.2)
 }
 
 /// Lowest key wins; ties break to the lowest stack index (strict `<`
 /// while scanning ascending indices).
-fn argmin(snaps: &[StackSnapshot], key: impl Fn(&StackSnapshot) -> (f64, u64, f64)) -> usize {
+fn argmin(snaps: &[StackSnapshot], key: impl Fn(&StackSnapshot) -> (f64, f64, f64)) -> usize {
     let mut best = 0usize;
-    let mut best_key = (f64::INFINITY, u64::MAX, f64::INFINITY);
+    let mut best_key = (f64::INFINITY, f64::INFINITY, f64::INFINITY);
     for (i, s) in snaps.iter().enumerate() {
         let k = key(s);
         if key_lt(k, best_key) {
@@ -217,6 +230,8 @@ mod tests {
             ewma_ttft_s: 0.0,
             ewma_itl_s: 0.0,
             health: crate::cluster::HealthState::Healthy,
+            arch: crate::fleet::StackArchId::Hetrax3d,
+            compute_scale: 1.0,
         }
     }
 
@@ -321,6 +336,29 @@ mod tests {
         snaps[1].horizon_s = 9.0;
         assert_eq!(router.choose_masked(0, 0.0, &snaps, 0.0, &[false, true]), Some(1));
         assert_eq!(router.choose_masked(0, 0.0, &snaps, 0.0, &[false, false]), None);
+    }
+
+    #[test]
+    fn compute_scale_normalizes_work_depth_terms() {
+        // Same raw depth everywhere; the larger-arch stack must rank as
+        // proportionally emptier under kv and latency.
+        let mut snaps: Vec<StackSnapshot> = (0..2).map(snap).collect();
+        snaps[0].outstanding_steps = 40;
+        snaps[1].outstanding_steps = 40;
+        snaps[1].compute_scale = 2.0;
+        let kv = StackRouter::new(2, RoutePolicy::KvAware);
+        assert_eq!(kv.choose(0, 0.0, &snaps, 10.0), 1, "40/2.0 beats 40/1.0");
+        // Enough raw depth on the big stack and the ranking flips back.
+        snaps[1].outstanding_steps = 90;
+        assert_eq!(kv.choose(1, 0.0, &snaps, 10.0), 0);
+        // Latency policy normalizes queue depth the same way (equal
+        // backlog+EWMA makes the second term decisive).
+        let mut snaps: Vec<StackSnapshot> = (0..2).map(snap).collect();
+        snaps[0].queue_depth = 6;
+        snaps[1].queue_depth = 8;
+        snaps[1].compute_scale = 2.0;
+        let lat = StackRouter::new(2, RoutePolicy::LatencyAware);
+        assert_eq!(lat.choose(0, 0.0, &snaps, 0.0), 1, "8/2.0 beats 6/1.0");
     }
 
     #[test]
