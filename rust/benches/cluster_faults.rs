@@ -90,7 +90,9 @@ fn main() {
     let mut doc = report.to_json(&dc);
     doc.set("bench", "cluster_faults")
         .set("fault_schedule", schedule.to_json())
-        .set("faults", outcome.to_json())
+        // The windowed form adds per-stack health-transition counts and
+        // the thermal-trip window indices (DESIGN.md §Bench-Schemas).
+        .set("faults", outcome.to_json_with_windows(dc.throttle.interval_s))
         .set("retryable_completion_rate", rate)
         .set("run_median_faulted_s", t_faulted.median_s())
         .set("bench_threads", auto);

@@ -1,0 +1,95 @@
+//! Observability overhead bench: the zero-overhead-when-off contract,
+//! measured. Times the `cluster_routing` scenario three ways — the
+//! plain entry point, the explicit `Recorder::Off` path (the same code;
+//! `decodetest::run` delegates), and a live recorder — and asserts the
+//! off path costs < 2% wall-clock over the plain path (plus a small
+//! absolute floor so timer noise on a millisecond-scale run cannot
+//! flake the assertion). Also re-asserts the recorder's determinism
+//! contract: a live recorder never perturbs the report, and the
+//! exported trace and metrics are byte-identical across runs and
+//! thread counts. Emits `BENCH_obs.json` (path overridable via
+//! `BENCH_OBS_JSON`; schema: DESIGN.md §Bench-Schemas).
+
+use hetrax::config::Config;
+use hetrax::decode::decodetest;
+use hetrax::obs::Recorder;
+use hetrax::traffic::RoutePolicy;
+use hetrax::util::bench::Bencher;
+use hetrax::util::json::Json;
+use hetrax::util::pool;
+
+fn main() {
+    let cfg = Config::default();
+    let auto = pool::resolve_threads(0);
+    let dc = decodetest::cluster_routing_scenario(&cfg, RoutePolicy::KvAware);
+
+    let b = Bencher::quick();
+    let t_base = b.time("cluster_routing, plain entry point", || {
+        decodetest::run(&cfg, &dc)
+    });
+    let t_off = b.time("cluster_routing, Recorder::Off", || {
+        decodetest::run_traced(&cfg, &dc, &Recorder::Off)
+    });
+    let t_on = b.time("cluster_routing, live recorder", || {
+        decodetest::run_traced(&cfg, &dc, &Recorder::on())
+    });
+
+    // The headline assertion: recording disabled costs < 2% wall-clock.
+    // The absolute floor (2 ms) keeps sub-millisecond timer jitter from
+    // failing a contract that is structurally true (run == run_traced
+    // with the off recorder, one enum discriminant branch per hook).
+    let (base, off, on) = (t_base.median_s(), t_off.median_s(), t_on.median_s());
+    assert!(
+        off <= base * 1.02 + 0.002,
+        "no-op recorder must cost < 2%: off {off:.6}s vs base {base:.6}s"
+    );
+
+    // A live recorder observes without perturbing.
+    let plain = decodetest::run(&cfg, &dc);
+    let rec = Recorder::on();
+    let traced = decodetest::run_traced(&cfg, &dc, &rec);
+    assert_eq!(
+        plain.to_json(&dc).pretty(),
+        traced.to_json(&dc).pretty(),
+        "a live recorder must not change the report"
+    );
+
+    // Determinism: trace and metrics byte-identical across runs and
+    // thread counts (all timestamps are virtual).
+    let capture = |threads: usize| {
+        let mut dcx = dc.clone();
+        dcx.threads = threads;
+        let r = Recorder::on();
+        decodetest::run_traced(&cfg, &dcx, &r);
+        (
+            r.trace_json().expect("recorder on").pretty(),
+            r.metrics_jsonl().expect("recorder on"),
+        )
+    };
+    let (trace, metrics) = capture(dc.threads);
+    assert_eq!((trace.clone(), metrics.clone()), capture(dc.threads), "reruns must match");
+    assert_eq!((trace.clone(), metrics.clone()), capture(auto), "threads must not leak");
+
+    let events = rec.with_buf(|buf| buf.events.len()).expect("recorder on");
+    let overhead = |x: f64| if base > 0.0 { x / base - 1.0 } else { 0.0 };
+    println!(
+        "\n  overhead: off {:+.2}%, live {:+.2}% ({events} events recorded)",
+        overhead(off) * 100.0,
+        overhead(on) * 100.0
+    );
+
+    let mut doc = Json::obj();
+    doc.set("bench", "obs_overhead")
+        .set("scenario", "cluster_routing")
+        .set("run_median_base_s", base)
+        .set("run_median_off_s", off)
+        .set("run_median_on_s", on)
+        .set("off_overhead_frac", overhead(off))
+        .set("on_overhead_frac", overhead(on))
+        .set("trace_events", events)
+        .set("metrics_lines", metrics.lines().count())
+        .set("bench_threads", auto);
+    let out = std::env::var("BENCH_OBS_JSON").unwrap_or_else(|_| "BENCH_obs.json".into());
+    std::fs::write(&out, doc.pretty()).expect("write bench json");
+    println!("wrote {out}");
+}

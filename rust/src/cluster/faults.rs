@@ -39,6 +39,7 @@ use std::collections::{BinaryHeap, HashMap};
 
 use crate::cluster::{ClusterStack, StackSnapshot};
 use crate::coordinator::Request;
+use crate::obs::{Candidate, Outcome, Recorder};
 use crate::traffic::router::{RoutePolicy, StackRouter};
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
@@ -383,6 +384,9 @@ pub struct FaultOutcome {
     pub degradations: u64,
     /// `(t_s, stack, new state)` in delivery order.
     pub transitions: Vec<(f64, usize, HealthState)>,
+    /// `(t_s, stack)` per applied thermal trip, in delivery order — the
+    /// raw timeline behind the `thermal_trip_windows` bench field.
+    pub thermal_trip_log: Vec<(f64, usize)>,
     /// Health per stack when the event stream drained.
     pub final_health: Vec<HealthState>,
     /// `Σ` KvPool reserved bytes after `finish()` (caller-filled; 0 until then).
@@ -407,6 +411,7 @@ impl FaultOutcome {
             recoveries: 0,
             degradations: 0,
             transitions: Vec::new(),
+            thermal_trip_log: Vec::new(),
             final_health: vec![HealthState::Healthy; stacks],
             kv_reserved_end_bytes: 0.0,
             kv_used_end_bytes: 0.0,
@@ -435,6 +440,20 @@ impl FaultOutcome {
             && self.arrived + self.surrendered == completed + shed + refused + self.failed
     }
 
+    /// Health transitions applied to each stack (index = stack; length
+    /// matches [`FaultOutcome::final_health`]) — the per-stack churn
+    /// signal `BENCH_faults.json` surfaces next to the aggregate
+    /// conservation identities.
+    pub fn transition_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.final_health.len()];
+        for &(_, stack, _) in &self.transitions {
+            if let Some(c) = counts.get_mut(stack) {
+                *c += 1;
+            }
+        }
+        counts
+    }
+
     /// Serialize for `BENCH_faults.json` / `hetrax faulttest` (schema:
     /// DESIGN.md §Bench-Schemas).
     pub fn to_json(&self) -> Json {
@@ -450,7 +469,8 @@ impl FaultOutcome {
         let final_health: Vec<Json> =
             self.final_health.iter().map(|h| Json::from(h.name())).collect();
         let mut doc = Json::obj();
-        doc.set("arrived", self.arrived)
+        doc.set("transition_counts", self.transition_counts())
+            .set("arrived", self.arrived)
             .set("pushes", self.pushes)
             .set("requeued", self.requeued)
             .set("no_route", self.no_route)
@@ -466,6 +486,30 @@ impl FaultOutcome {
             .set("final_health", final_health)
             .set("kv_reserved_end_bytes", self.kv_reserved_end_bytes)
             .set("kv_used_end_bytes", self.kv_used_end_bytes);
+        doc
+    }
+
+    /// [`FaultOutcome::to_json`] plus the thermal-trip timeline resolved
+    /// to control-window indices: each applied trip is reported as
+    /// `{t_s, stack, window}` with `window = ⌊t_s / window_s⌋` — which
+    /// admission-control window of the tripping stack crossed the
+    /// ceiling. `window_s` is the controller interval
+    /// (`ThrottleConfig::interval_s`); non-positive values report
+    /// window 0 for every trip.
+    pub fn to_json_with_windows(&self, window_s: f64) -> Json {
+        let trips: Vec<Json> = self
+            .thermal_trip_log
+            .iter()
+            .map(|&(t_s, stack)| {
+                let window =
+                    if window_s > 0.0 { (t_s.max(0.0) / window_s).floor() as u64 } else { 0 };
+                let mut j = Json::obj();
+                j.set("t_s", t_s).set("stack", stack).set("window", window);
+                j
+            })
+            .collect();
+        let mut doc = self.to_json();
+        doc.set("thermal_trip_windows", trips);
         doc
     }
 }
@@ -545,6 +589,7 @@ struct Driver<'a, S: ClusterStack, F: FnMut(&Request) -> f64> {
     meta: HashMap<u64, ReqMeta>,
     reads_snaps: bool,
     snaps: Vec<StackSnapshot>,
+    rec: &'a Recorder,
     out: FaultOutcome,
 }
 
@@ -575,6 +620,7 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
             .expect("surrendered request was never delivered");
         if m.attempts >= retry.max_retries {
             self.out.failed += 1;
+            self.rec.terminal(now, req.id, None, Outcome::Failed);
             return;
         }
         let backoff = (retry.base_backoff_s * 2f64.powi(m.attempts as i32))
@@ -584,9 +630,11 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
         let t_retry = now + (backoff * jitter).max(0.0);
         if t_retry > m.deadline_s {
             self.out.failed += 1;
+            self.rec.terminal(now, req.id, None, Outcome::Failed);
             return;
         }
         m.attempts += 1;
+        self.rec.retry(now, req.id, m.attempts, t_retry);
         req.arrival_s = t_retry;
         // The failover target re-runs the whole prefill: recovery carries a
         // full recompute cost, not a cache handoff.
@@ -610,6 +658,7 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
         self.health[i] = HealthState::Dead;
         self.cause[i] = None;
         self.out.transitions.push((t, i, HealthState::Dead));
+        self.rec.health(t, i, HealthState::Dead.name());
         for req in surrendered {
             self.retry_or_fail(t, req);
         }
@@ -624,15 +673,18 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
             FaultKind::Crash => {
                 self.step_all(t);
                 self.out.crashes += 1;
+                self.rec.fault(t, i, "crash");
                 self.kill(t, i);
             }
             FaultKind::Stall { duration_s } => {
                 self.out.stalls += 1;
+                self.rec.fault(t, i, "stall");
                 self.stall_until[i] = self.stall_until[i].max(t + duration_s.max(0.0));
                 if self.health[i].routable() {
                     self.health[i] = HealthState::Quarantined;
                     self.cause[i] = Some(Cause::Stall);
                     self.out.transitions.push((t, i, HealthState::Quarantined));
+                    self.rec.health(t, i, HealthState::Quarantined.name());
                 }
                 self.heap.push(Reverse(Ev {
                     t: self.stall_until[i],
@@ -658,6 +710,7 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
         self.health[i] = state;
         self.cause[i] = None;
         self.out.transitions.push((t, i, state));
+        self.rec.health(t, i, state.name());
     }
 
     fn on_stall_end(&mut self, t: f64, i: usize) {
@@ -706,6 +759,7 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
                 }
                 if self.stacks[i].completed() as f64 * w.writes_per_completion > w.write_budget {
                     self.out.wear_deaths += 1;
+                    self.rec.fault(t, i, "wear_death");
                     self.kill(t, i);
                 }
             }
@@ -722,6 +776,8 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
                     continue;
                 }
                 self.out.thermal_trips += 1;
+                self.out.thermal_trip_log.push((t, i));
+                self.rec.fault(t, i, "thermal_trip");
                 if self.health[i] == HealthState::Degraded {
                     // Second strike: a degraded stack that trips dies.
                     self.kill(t, i);
@@ -731,6 +787,7 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
                 self.cause[i] = Some(Cause::Thermal);
                 self.stacks[i].set_emergency(true);
                 self.out.transitions.push((t, i, HealthState::Quarantined));
+                self.rec.health(t, i, HealthState::Quarantined.name());
                 if self.arrivals_outstanding > 0 {
                     self.heap.push(Reverse(Ev {
                         t: t + rule.cooldown_s.max(0.0),
@@ -745,18 +802,36 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
     }
 
     fn on_arrival(&mut self, t: f64, seq: u64, req: Request) {
+        let record = self.rec.enabled();
+        let first_delivery = !self.meta.contains_key(&req.id);
         let deadline_s = req.arrival_s + self.schedule.retry.deadline_s;
         self.meta.entry(req.id).or_insert(ReqMeta { attempts: 0, deadline_s });
         // (virtual_time, stack_idx, seq_no): advance every stack to this
         // instant in index order, snapshot in index order, then route.
         self.step_all(t);
-        if self.reads_snaps {
+        if self.reads_snaps || record {
             self.snap_all();
         }
         self.check_rules(t);
         let routable: Vec<bool> = self.health.iter().map(|h| h.routable()).collect();
         let need = (self.need_kv_bytes)(&req);
-        match self.router.choose_masked(seq, t, &self.snaps, need, &routable) {
+        let pick = self.router.choose_masked(seq, t, &self.snaps, need, &routable);
+        if record {
+            if first_delivery {
+                self.rec.arrival(t, req.id);
+            }
+            let candidates: Vec<Candidate> = self
+                .snaps
+                .iter()
+                .map(|s| Candidate {
+                    stack: s.stack,
+                    key: self.router.rank_key(s, t, need),
+                    routable: routable.get(s.stack).copied().unwrap_or(true),
+                })
+                .collect();
+            self.rec.route(t, req.id, self.router.policy.name(), pick, candidates);
+        }
+        match pick {
             Some(pick) => {
                 self.stacks[pick].push(req);
                 self.out.pushes += 1;
@@ -805,6 +880,29 @@ where
     S: ClusterStack,
     F: FnMut(&Request) -> f64,
 {
+    drive_faulty_obs(stacks, requests, router, schedule, need_kv_bytes, &Recorder::Off)
+}
+
+/// [`drive_faulty`] with an observability [`Recorder`]. With
+/// [`Recorder::Off`] (what [`drive_faulty`] passes) the driver is
+/// structurally identical to the pre-observability path; when recording
+/// it additionally captures arrivals (first deliveries only — retries
+/// show up as `retry` hops), route decisions with per-candidate ranking
+/// keys and routable masks, fault events, health transitions, and
+/// `failed` terminals, all in the fault driver's own
+/// `(t, class, seq)` delivery order.
+pub fn drive_faulty_obs<S, F>(
+    stacks: &mut [S],
+    requests: &[Request],
+    router: &StackRouter,
+    schedule: &FaultSchedule,
+    need_kv_bytes: F,
+    rec: &Recorder,
+) -> FaultOutcome
+where
+    S: ClusterStack,
+    F: FnMut(&Request) -> f64,
+{
     assert!(!stacks.is_empty(), "cluster needs at least one stack");
     let n = stacks.len();
     let mut heap = BinaryHeap::with_capacity(requests.len() + schedule.events.len());
@@ -844,6 +942,7 @@ where
         meta: HashMap::new(),
         reads_snaps,
         snaps: Vec::with_capacity(n),
+        rec,
         out: FaultOutcome::new(n, requests.len() as u64),
     }
     .run()
@@ -1196,6 +1295,87 @@ mod tests {
         assert_eq!(out.final_health[0], HealthState::Dead);
         assert!(stacks[0].pushed.is_empty());
         assert_eq!(stacks[1].pushed.len(), 4);
+    }
+
+    #[test]
+    fn recorder_captures_crash_retries_and_masked_routes() {
+        // The crash_surrenders_and_retries_on_survivor scenario, traced.
+        let reqs = stream(4, 0.1);
+        let router = StackRouter::new(2, RoutePolicy::RoundRobin);
+        let schedule = FaultSchedule {
+            events: vec![FaultEvent { t_s: 0.25, stack: 0, kind: FaultKind::Crash }],
+            thermal: None,
+            wear: None,
+            retry: retry_fast(),
+            recover_p: 1.0,
+            seed: 9,
+        };
+        let mut plain = vec![Mock::new(), Mock::new()];
+        let baseline = drive_faulty(&mut plain, &reqs, &router, &schedule, |_| 0.0);
+        let rec = crate::obs::Recorder::on();
+        let mut stacks = vec![Mock::new(), Mock::new()];
+        let out = drive_faulty_obs(&mut stacks, &reqs, &router, &schedule, |_| 0.0, &rec);
+        assert_eq!(out, baseline, "recording must not perturb the run");
+        rec.with_buf(|b| {
+            use crate::obs::Event;
+            let count = |f: &dyn Fn(&Event) -> bool| b.events.iter().filter(|&e| f(e)).count();
+            // 4 original arrivals; the 2 surrendered requests re-arrive as
+            // retry hops, not new arrivals.
+            assert_eq!(count(&|e| matches!(e, Event::Arrival { .. })), 4);
+            assert_eq!(
+                count(&|e| matches!(e, Event::Retry { .. })) as u64,
+                out.requeued
+            );
+            // One route decision per delivery attempt that found a stack,
+            // plus any that found none.
+            assert_eq!(
+                count(&|e| matches!(e, Event::Route { .. })) as u64,
+                out.pushes + out.no_route
+            );
+            assert_eq!(
+                count(&|e| matches!(e, Event::Fault { kind: "crash", .. })) as u64,
+                out.crashes
+            );
+            assert_eq!(
+                count(&|e| matches!(e, Event::Health { state: "dead", .. })),
+                1
+            );
+            // Post-crash route decisions must mark stack 0 unroutable.
+            let masked = b.events.iter().any(|e| {
+                matches!(e, Event::Route { candidates, .. }
+                    if candidates.iter().any(|c| c.stack == 0 && !c.routable))
+            });
+            assert!(masked, "rejected candidates must carry routable=false");
+        });
+    }
+
+    #[test]
+    fn transition_counts_and_trip_windows_surface_per_stack() {
+        let mut out = FaultOutcome::new(3, 10);
+        out.transitions.push((0.1, 0, HealthState::Quarantined));
+        out.transitions.push((0.2, 0, HealthState::Healthy));
+        out.transitions.push((0.3, 2, HealthState::Dead));
+        out.thermal_trips = 1;
+        out.thermal_trip_log.push((0.12, 0));
+        assert_eq!(out.transition_counts(), vec![2, 0, 1]);
+        let doc = out.to_json_with_windows(0.05);
+        let counts: Vec<usize> = doc
+            .get("transition_counts")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(counts, vec![2, 0, 1]);
+        let trips = doc.get("thermal_trip_windows").unwrap().as_arr().unwrap();
+        assert_eq!(trips.len(), 1);
+        assert_eq!(trips[0].get("stack").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(trips[0].get("window").unwrap().as_usize().unwrap(), 2);
+        // Degenerate interval never divides by zero.
+        let flat = out.to_json_with_windows(0.0);
+        let trips = flat.get("thermal_trip_windows").unwrap().as_arr().unwrap();
+        assert_eq!(trips[0].get("window").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]

@@ -52,6 +52,7 @@ pub use faults::{
 
 use crate::coordinator::Request;
 use crate::fleet::StackArchId;
+use crate::obs::{Candidate, Recorder};
 use crate::traffic::router::StackRouter;
 
 /// Smoothing factor for the rolling TTFT/ITL telemetry the `latency`
@@ -192,7 +193,30 @@ pub fn drive<S, F>(
     requests: &[Request],
     router: &StackRouter,
     pinned: Option<&[usize]>,
+    need_kv_bytes: F,
+) -> Vec<usize>
+where
+    S: ClusterStack,
+    F: FnMut(&Request) -> f64,
+{
+    drive_obs(stacks, requests, router, pinned, need_kv_bytes, &Recorder::Off)
+}
+
+/// [`drive`] with an observability [`Recorder`]. With
+/// [`Recorder::Off`] (what [`drive`] passes) the loop is structurally
+/// identical to the pre-observability stepper — same snapshot builds,
+/// same `need_kv_bytes` evaluations, one discriminant branch per
+/// arrival — so the off-path stays byte-identical. When recording, the
+/// stepper additionally snapshots on every arrival (a pure read, even
+/// for round-robin and pinned replay) to capture each candidate's
+/// ranking key alongside the arrival and route events.
+pub fn drive_obs<S, F>(
+    stacks: &mut [S],
+    requests: &[Request],
+    router: &StackRouter,
+    pinned: Option<&[usize]>,
     mut need_kv_bytes: F,
+    rec: &Recorder,
 ) -> Vec<usize>
 where
     S: ClusterStack,
@@ -202,6 +226,7 @@ where
     if let Some(a) = pinned {
         assert_eq!(a.len(), requests.len(), "pinned assignment must cover the stream");
     }
+    let record = rec.enabled();
     // Pinned replay and round-robin never read the snapshots; skip
     // building them (they walk per-stack queues) on those paths.
     let reads_snaps =
@@ -218,16 +243,29 @@ where
         for s in stacks.iter_mut() {
             s.step_until(t);
         }
-        if reads_snaps {
+        if reads_snaps || record {
             snaps.clear();
             for (i, s) in stacks.iter().enumerate() {
                 snaps.push(s.snapshot(i));
             }
         }
+        let need = if pinned.is_none() || record { need_kv_bytes(r) } else { 0.0 };
         let pick = match pinned {
             Some(a) => a[seq_no].min(stacks.len() - 1),
-            None => router.choose(seq_no as u64, t, &snaps, need_kv_bytes(r)),
+            None => router.choose(seq_no as u64, t, &snaps, need),
         };
+        if record {
+            rec.arrival(t, r.id);
+            let candidates: Vec<Candidate> = snaps
+                .iter()
+                .map(|s| Candidate {
+                    stack: s.stack,
+                    key: router.rank_key(s, t, need),
+                    routable: true,
+                })
+                .collect();
+            rec.route(t, r.id, router.policy.name(), Some(pick), candidates);
+        }
         stacks[pick].push(r.clone());
         assignment.push(pick);
     }
@@ -314,6 +352,43 @@ mod tests {
         let got = drive(&mut stacks, &reqs, &router, Some(&pin), |_| 0.0);
         assert_eq!(got, vec![1, 1, 0, 1]);
         assert_eq!(stacks[1].pushed, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn recording_never_changes_the_assignment_and_logs_every_route() {
+        let reqs = stream(6, 0.2);
+        let router = StackRouter::new(2, RoutePolicy::JoinShortestQueue);
+        let mut plain = vec![Probe::new(), Probe::new()];
+        let baseline = drive(&mut plain, &reqs, &router, None, |_| 0.0);
+        let rec = crate::obs::Recorder::on();
+        let mut traced = vec![Probe::new(), Probe::new()];
+        let got = drive_obs(&mut traced, &reqs, &router, None, |_| 0.0, &rec);
+        assert_eq!(got, baseline);
+        let (arrivals, routes) = rec
+            .with_buf(|b| {
+                let a = b
+                    .events
+                    .iter()
+                    .filter(|e| matches!(e, crate::obs::Event::Arrival { .. }))
+                    .count();
+                let r = b
+                    .events
+                    .iter()
+                    .filter(|e| matches!(e, crate::obs::Event::Route { .. }))
+                    .count();
+                (a, r)
+            })
+            .unwrap();
+        assert_eq!((arrivals, routes), (6, 6));
+        // Every route event carries both candidates' ranking keys.
+        rec.with_buf(|b| {
+            for e in &b.events {
+                if let crate::obs::Event::Route { candidates, chosen, .. } = e {
+                    assert_eq!(candidates.len(), 2);
+                    assert!(chosen.is_some());
+                }
+            }
+        });
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::decode::scheduler::{
 use crate::decode::telemetry::DecodeTelemetry;
 use crate::fleet::{self, StackArchId};
 use crate::model::ModelId;
+use crate::obs::Recorder;
 use crate::traffic::generator::{
     ArrivalPattern, OutputLenDist, ReplayEvent, RequestMix, TrafficGen,
 };
@@ -426,6 +427,7 @@ fn run_inner(
     dc: &DecodeConfig,
     mode: RouteMode,
     faults: Option<&FaultSchedule>,
+    rec: &Recorder,
 ) -> (DecodeReport, Option<FaultOutcome>) {
     let generator = TrafficGen {
         pattern: dc.pattern.clone(),
@@ -481,9 +483,16 @@ fn run_inner(
     debug_assert_eq!(archs.len(), router.stacks);
     let mut stacks: Vec<DecodeStack> = archs
         .iter()
-        .map(|a| {
+        .enumerate()
+        .map(|(i, a)| {
             let di = distinct.iter().position(|d| d == a).unwrap();
-            DecodeStack::with_arch(&cfgs[di], dc, &tables[di], &engines[di], &a.spec())
+            let mut s =
+                DecodeStack::with_arch(&cfgs[di], dc, &tables[di], &engines[di], &a.spec());
+            if rec.enabled() {
+                rec.stack_label(i, format!("stack {i} ({})", a.name()));
+                s.attach_obs(rec.clone(), i);
+            }
+            s
         })
         .collect();
     let need = |r: &Request| {
@@ -493,15 +502,16 @@ fn run_inner(
     };
     let fault_outcome = match faults {
         None => {
-            cluster::drive(&mut stacks, &requests, &router, pinned.as_deref(), need);
+            cluster::drive_obs(&mut stacks, &requests, &router, pinned.as_deref(), need, rec);
             None
         }
-        Some(schedule) => Some(cluster::drive_faulty(
+        Some(schedule) => Some(cluster::drive_faulty_obs(
             &mut stacks,
             &requests,
             &router,
             schedule,
             need,
+            rec,
         )),
     };
     let outcomes: Vec<DecodeStackOutcome> =
@@ -518,7 +528,17 @@ fn run_inner(
 /// cluster stepper with live routing and aggregate the per-stack
 /// outcomes.
 pub fn run(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
-    run_inner(cfg, dc, RouteMode::Live, None).0
+    run_traced(cfg, dc, &Recorder::Off)
+}
+
+/// [`run`] with an observability recorder attached to every stack and
+/// the cluster event loop. With [`Recorder::Off`] this **is** `run` —
+/// the delegation is the zero-overhead pin the `obs_overhead` bench
+/// measures. With a live recorder the simulation is unperturbed (the
+/// recorder only observes) and the captured trace is byte-identical
+/// across runs and thread counts.
+pub fn run_traced(cfg: &Config, dc: &DecodeConfig, rec: &Recorder) -> DecodeReport {
+    run_inner(cfg, dc, RouteMode::Live, None, rec).0
 }
 
 /// Serve the stream with the **retired pre-pass KV-aware assignment**
@@ -527,7 +547,7 @@ pub fn run(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
 /// against. `dc.policy` is ignored for routing (the assignment is
 /// pinned) but still recorded in the report.
 pub fn run_prepass_kv(cfg: &Config, dc: &DecodeConfig) -> DecodeReport {
-    run_inner(cfg, dc, RouteMode::PrepassKv, None).0
+    run_inner(cfg, dc, RouteMode::PrepassKv, None, &Recorder::Off).0
 }
 
 /// Run a full decode test under a fault schedule: live routing masked by
@@ -542,7 +562,19 @@ pub fn run_with_faults(
     dc: &DecodeConfig,
     schedule: &FaultSchedule,
 ) -> (DecodeReport, FaultOutcome) {
-    let (report, outcome) = run_inner(cfg, dc, RouteMode::Live, Some(schedule));
+    run_with_faults_traced(cfg, dc, schedule, &Recorder::Off)
+}
+
+/// [`run_with_faults`] with an observability recorder: fault events,
+/// health transitions, retry hops, and per-request terminals land in
+/// the trace alongside the per-stack lifecycle spans.
+pub fn run_with_faults_traced(
+    cfg: &Config,
+    dc: &DecodeConfig,
+    schedule: &FaultSchedule,
+    rec: &Recorder,
+) -> (DecodeReport, FaultOutcome) {
+    let (report, outcome) = run_inner(cfg, dc, RouteMode::Live, Some(schedule), rec);
     (report, outcome.expect("a schedule was supplied"))
 }
 
@@ -1155,5 +1187,137 @@ mod tests {
             let a = run(&cfg, &dc).to_json(&dc).pretty();
             assert_eq!(a, report.to_json(&dc).pretty(), "{policy:?}: determinism");
         }
+    }
+
+    #[test]
+    fn recorder_never_perturbs_the_simulation() {
+        // The zero-overhead contract, behavioral half: the off recorder
+        // IS the plain path (delegation), and a live recorder only
+        // observes — every report byte is identical either way, on both
+        // the plain and the faulted drive.
+        let cfg = Config::default();
+        let dc = skewed_routing_scenario(RoutePolicy::KvAware);
+        let plain = run(&cfg, &dc).to_json(&dc).pretty();
+        let off = run_traced(&cfg, &dc, &crate::obs::Recorder::Off)
+            .to_json(&dc)
+            .pretty();
+        let on = run_traced(&cfg, &dc, &crate::obs::Recorder::on())
+            .to_json(&dc)
+            .pretty();
+        assert_eq!(plain, off, "off recorder must be the plain path");
+        assert_eq!(plain, on, "a live recorder must not perturb the run");
+
+        let (dcf, schedule) = faulted_cluster_scenario(RoutePolicy::KvAware);
+        let (r0, o0) = run_with_faults(&cfg, &dcf, &schedule);
+        let rec = crate::obs::Recorder::on();
+        let (r1, o1) = run_with_faults_traced(&cfg, &dcf, &schedule, &rec);
+        assert_eq!(r0.to_json(&dcf).pretty(), r1.to_json(&dcf).pretty());
+        assert_eq!(o0.to_json().pretty(), o1.to_json().pretty());
+    }
+
+    #[test]
+    fn traced_faulted_run_reproduces_across_runs_and_threads() {
+        // The recorder's own determinism contract: on the seeded
+        // crash + thermal-quarantine scenario, the exported trace and
+        // metrics streams are byte-identical across reruns and across
+        // thread counts (all timestamps are virtual).
+        let cfg = Config::default();
+        let capture = |threads: usize| {
+            let (mut dc, schedule) = faulted_cluster_scenario(RoutePolicy::KvAware);
+            dc.threads = threads;
+            let rec = crate::obs::Recorder::on();
+            run_with_faults_traced(&cfg, &dc, &schedule, &rec);
+            (
+                rec.trace_json().expect("recorder on").pretty(),
+                rec.metrics_jsonl().expect("recorder on"),
+            )
+        };
+        let (t1, m1) = capture(1);
+        let (t1b, m1b) = capture(1);
+        let (t8, m8) = capture(8);
+        assert_eq!(t1, t1b, "trace must reproduce byte for byte");
+        assert_eq!(m1, m1b, "metrics must reproduce byte for byte");
+        assert_eq!(t1, t8, "thread count must not leak into the trace");
+        assert_eq!(m1, m8, "thread count must not leak into the metrics");
+    }
+
+    #[test]
+    fn traced_faulted_run_double_entry_agrees_with_counters() {
+        // Double-entry acceptance: every terminal event in the trace
+        // counts exactly against the conservation counters, fault and
+        // health events against the failover ledger, and the inspect
+        // reconstruction closes every request's lifecycle.
+        use crate::obs::{inspect, Event, Outcome};
+        let cfg = Config::default();
+        let (dc, schedule) = faulted_cluster_scenario(RoutePolicy::KvAware);
+        let rec = crate::obs::Recorder::on();
+        let (report, out) = run_with_faults_traced(&cfg, &dc, &schedule, &rec);
+        let t = &report.total;
+        assert!(out.conserved(t.submitted, t.completed, t.shed, t.refused_kv));
+
+        rec.with_buf(|b| {
+            let count = |f: &dyn Fn(&Event) -> bool| {
+                b.events.iter().filter(|&e| f(e)).count() as u64
+            };
+            assert_eq!(
+                count(&|e| matches!(
+                    e,
+                    Event::Terminal { outcome: Outcome::Completed, .. }
+                )),
+                t.completed,
+            );
+            assert_eq!(
+                count(&|e| matches!(e, Event::Terminal { outcome: Outcome::Shed, .. })),
+                t.shed,
+            );
+            assert_eq!(
+                count(&|e| matches!(
+                    e,
+                    Event::Terminal { outcome: Outcome::RefusedKv, .. }
+                )),
+                t.refused_kv,
+            );
+            assert_eq!(
+                count(&|e| matches!(
+                    e,
+                    Event::Terminal { outcome: Outcome::Failed, .. }
+                )),
+                out.failed,
+            );
+            assert_eq!(
+                count(&|e| matches!(e, Event::Fault { kind: "crash", .. })),
+                out.crashes
+            );
+            assert_eq!(
+                count(&|e| matches!(e, Event::Fault { kind: "thermal_trip", .. })),
+                out.thermal_trips
+            );
+            assert_eq!(
+                count(&|e| matches!(e, Event::Health { .. })),
+                out.transitions.len() as u64,
+                "one health event per recorded transition"
+            );
+            assert!(count(&|e| matches!(e, Event::Retry { .. })) > 0);
+            assert!(count(&|e| matches!(e, Event::Window { .. })) > 0);
+            assert!(count(&|e| matches!(e, Event::DecodeStep { .. })) > 0);
+
+            // Every distinct request arrived exactly once.
+            let arrivals = count(&|e| matches!(e, Event::Arrival { .. }));
+            assert_eq!(arrivals, out.arrived, "one arrival per distinct request");
+        })
+        .expect("recorder on");
+
+        let trace = rec.trace_json().expect("recorder on");
+        let rows = inspect::request_table(&trace).expect("well-formed trace");
+        assert_eq!(rows.len() as u64, out.arrived);
+        assert!(
+            rows.iter().all(|r| r.outcome != "open"),
+            "every lifecycle must close"
+        );
+        // The digest renders deterministically on a real trace.
+        let d1 = inspect::digest(&trace, 5, 50.0).expect("digest");
+        let d2 = inspect::digest(&trace, 5, 50.0).expect("digest");
+        assert_eq!(d1, d2);
+        assert!(d1.contains("slowest requests"), "digest lists top-k rows");
     }
 }

@@ -75,6 +75,7 @@ use crate::decode::kv::{KvCacheConfig, KvPool};
 use crate::decode::telemetry::DecodeTelemetry;
 use crate::fleet::{self, StackArch, StackArchId};
 use crate::model::{ArchVariant, ModelId};
+use crate::obs::{Outcome, Recorder, WindowSample, DECODE_STEP_SAMPLE};
 use crate::power;
 use crate::traffic::admission::{AdmissionController, BatchCost, ThrottleConfig};
 use crate::traffic::generator::{ArrivalPattern, RequestMix};
@@ -298,9 +299,12 @@ fn retire(
     tel: &mut DecodeTelemetry,
     kv: &mut KvPool,
     log: &mut Option<Vec<Completion>>,
+    obs: &Recorder,
+    obs_stack: usize,
     a: ActiveGen,
 ) {
     tel.completed += 1;
+    obs.terminal(a.last_token_s, a.id, Some(obs_stack), Outcome::Completed);
     tel.e2e_us.record(us(a.last_token_s - a.arrival_s));
     if a.out_tokens > 1 {
         let tpot = (a.last_token_s - a.first_token_s) / (a.out_tokens - 1) as f64;
@@ -432,6 +436,14 @@ pub struct DecodeStack<'a> {
     handoffs: VecDeque<KvHandoff>,
     /// Total KV bytes received over the interconnect (energy model).
     xfer_bytes: f64,
+    /// Observability handle ([`Recorder::Off`] by default: one enum
+    /// discriminant branch per hook, no allocation) and this stack's
+    /// trace index ([`DecodeStack::attach_obs`]).
+    obs: Recorder,
+    obs_stack: usize,
+    /// Decode-step counter for [`DECODE_STEP_SAMPLE`] sampling —
+    /// advanced only while recording, so the off path stays untouched.
+    obs_steps: u64,
 }
 
 impl<'a> DecodeStack<'a> {
@@ -509,7 +521,19 @@ impl<'a> DecodeStack<'a> {
             completion_log: None,
             handoffs: VecDeque::new(),
             xfer_bytes: 0.0,
+            obs: Recorder::Off,
+            obs_stack: 0,
+            obs_steps: 0,
         }
+    }
+
+    /// Attach an observability recorder, labelling this stack's trace
+    /// track `stack`. Off by default; attaching never changes a
+    /// scheduling decision — every hook only reads state the loop
+    /// already computed (the recorder-off equivalence tests pin this).
+    pub fn attach_obs(&mut self, rec: Recorder, stack: usize) {
+        self.obs = rec;
+        self.obs_stack = stack;
     }
 
     fn peak_kv_of(&self, r: &Request) -> f64 {
@@ -572,12 +596,15 @@ impl<'a> DecodeStack<'a> {
         self.tel.submitted += 1;
         if self.done {
             self.tel.shed += 1;
+            self.obs.terminal(self.t, h.id, Some(self.obs_stack), Outcome::Shed);
             return;
         }
         let dw = self.engine.workload(h.model, h.variant);
         let peak = dw.peak_kv_bytes(h.prompt, h.out_tokens);
         if peak > self.kv.capacity_bytes() {
             self.tel.refused_kv += 1;
+            self.obs
+                .terminal(self.t, h.id, Some(self.obs_stack), Outcome::RefusedKv);
             return;
         }
         // Horizon ledger: the decode remainder priced at mid-flight
@@ -681,6 +708,25 @@ impl<'a> DecodeStack<'a> {
             let mut closing = decode_background(self.engine, &self.running, self.interval);
             closing.add(&self.window_cost);
             self.ctl.observe(&closing);
+            if self.obs.enabled() {
+                // Gauges at the close of window `sim_windows`, stamped
+                // at its scheduled end (idle jumps skip the windows in
+                // between — they carry no new information).
+                self.obs.window(
+                    self.window_end,
+                    self.obs_stack,
+                    self.sim_windows,
+                    WindowSample {
+                        reram_c: self.ctl.last_reram_c,
+                        batch_cap: self.ctl.batch_cap,
+                        emergency: self.ctl.in_emergency(),
+                        queue_depth: self.depth,
+                        outstanding_steps: self.outstanding,
+                        kv_committed_bytes: self.kv.reserved_bytes()
+                            + self.pending_kv_bytes,
+                    },
+                );
+            }
             let mut k = ((self.t - self.window_end) / self.interval).floor() as u64 + 1;
             self.window_end += k as f64 * self.interval;
             while self.t >= self.window_end {
@@ -700,6 +746,8 @@ impl<'a> DecodeStack<'a> {
             let r = self.pending.pop_front().expect("front just checked");
             if self.peak_kv_of(&r) > self.kv.capacity_bytes() {
                 self.tel.refused_kv += 1;
+                self.obs
+                    .terminal(self.t, r.id, Some(self.obs_stack), Outcome::RefusedKv);
                 self.outstanding -= r.out_tokens.max(1) as u64;
                 self.depth -= 1;
             } else {
@@ -712,8 +760,10 @@ impl<'a> DecodeStack<'a> {
         let before = self.waiting.len();
         let (t, wait) = (self.t, self.wait);
         let engine = self.engine;
+        let record = self.obs.enabled();
         let mut shed_kv = 0.0f64;
         let mut shed_steps = 0u64;
+        let mut shed_ids: Vec<u64> = Vec::new();
         self.waiting.retain(|r| {
             if t - r.arrival_s <= wait {
                 true
@@ -722,10 +772,16 @@ impl<'a> DecodeStack<'a> {
                     .workload(r.model, r.variant)
                     .peak_kv_bytes(r.seq, r.out_tokens.max(1));
                 shed_steps += r.out_tokens.max(1) as u64;
+                if record {
+                    shed_ids.push(r.id);
+                }
                 false
             }
         });
         self.tel.shed += (before - self.waiting.len()) as u64;
+        for id in shed_ids {
+            self.obs.terminal(t, id, Some(self.obs_stack), Outcome::Shed);
+        }
         self.pending_kv_bytes = (self.pending_kv_bytes - shed_kv).max(0.0);
         self.outstanding -= shed_steps;
         self.depth -= before - self.waiting.len();
@@ -748,6 +804,7 @@ impl<'a> DecodeStack<'a> {
                 break;
             }
             let h = self.handoffs.pop_front().expect("front just checked");
+            self.obs.handoff_join(self.t, self.obs_stack, h.id);
             self.pending_kv_bytes = (self.pending_kv_bytes - peak).max(0.0);
             let used = dw.kv_bytes(h.prompt, 1);
             self.kv.grow(used);
@@ -840,6 +897,7 @@ impl<'a> DecodeStack<'a> {
                         let ok = self.kv.try_reserve(peak_kv);
                         debug_assert!(ok, "reservation was pre-checked");
                     }
+                    let span_start = self.t;
                     let out = self
                         .serve_engine
                         .serve_batch(&mut self.state, &batch)
@@ -849,6 +907,8 @@ impl<'a> DecodeStack<'a> {
                     let end = out.finish_s + surcharge.mha_s;
                     self.state.sm_free = self.state.sm_free.max(end);
                     self.t = end;
+                    self.obs
+                        .prefill(self.obs_stack, req.id, span_start, end, c, true);
                     self.window_cost.add(&cost);
                     self.tel.prefill_chunks += 1;
                     self.tel.sm_busy_s += out.sm_busy_s + surcharge.mha_s;
@@ -896,6 +956,8 @@ impl<'a> DecodeStack<'a> {
                                 &mut self.tel,
                                 &mut self.kv,
                                 &mut self.completion_log,
+                                &self.obs,
+                                self.obs_stack,
                                 a,
                             );
                         } else {
@@ -989,6 +1051,7 @@ impl<'a> DecodeStack<'a> {
                     background,
                 );
                 if let Some(batch) = admitted.into_iter().next() {
+                    let span_start = self.t;
                     let out = self
                         .serve_engine
                         .serve_batch(&mut self.state, &batch)
@@ -1012,6 +1075,14 @@ impl<'a> DecodeStack<'a> {
                         self.tel.tokens_out += 1;
                         let sample = self.t - r.arrival_s;
                         self.record_ttft(sample);
+                        self.obs.prefill(
+                            self.obs_stack,
+                            r.id,
+                            span_start,
+                            self.t,
+                            r.seq,
+                            false,
+                        );
                         let a = ActiveGen {
                             id: r.id,
                             model: r.model,
@@ -1032,6 +1103,8 @@ impl<'a> DecodeStack<'a> {
                                 &mut self.tel,
                                 &mut self.kv,
                                 &mut self.completion_log,
+                                &self.obs,
+                                self.obs_stack,
                                 a,
                             );
                         } else {
@@ -1072,6 +1145,15 @@ impl<'a> DecodeStack<'a> {
             self.dec_ff_ops += sc.ff_ops;
             self.dec_l2_bytes += sc.l2_bytes;
             self.dec_kv_bytes += sc.kv_read_bytes;
+            if self.obs.enabled() {
+                // Sampled: the first step of every DECODE_STEP_SAMPLE
+                // stride (so short generations still leave a mark).
+                self.obs_steps += 1;
+                if self.obs_steps % DECODE_STEP_SAMPLE == 1 {
+                    self.obs
+                        .decode_step(self.obs_stack, start, end, self.running.len());
+                }
+            }
 
             // Every running generation's remaining-step count drops by
             // one; retirements below remove zero-remainder entries.
@@ -1092,7 +1174,14 @@ impl<'a> DecodeStack<'a> {
                 self.tel.tokens_out += 1;
                 if self.running[i].generated >= self.running[i].out_tokens {
                     let done = self.running.remove(i);
-                    retire(&mut self.tel, &mut self.kv, &mut self.completion_log, done);
+                    retire(
+                        &mut self.tel,
+                        &mut self.kv,
+                        &mut self.completion_log,
+                        &self.obs,
+                        self.obs_stack,
+                        done,
+                    );
                 } else {
                     i += 1;
                 }
@@ -1180,6 +1269,26 @@ impl<'a> DecodeStack<'a> {
 
         self.ops += 1;
         if self.ops >= self.ops_budget {
+            if self.obs.enabled() {
+                // Terminal per aborted owner, in the same order the
+                // shed sum below counts them.
+                let (t, stack) = (self.t, self.obs_stack);
+                for r in self.waiting.iter() {
+                    self.obs.terminal(t, r.id, Some(stack), Outcome::Shed);
+                }
+                for a in self.running.iter() {
+                    self.obs.terminal(t, a.id, Some(stack), Outcome::Shed);
+                }
+                if let Some(p) = &self.partial {
+                    self.obs.terminal(t, p.req.id, Some(stack), Outcome::Shed);
+                }
+                for r in self.pending.iter() {
+                    self.obs.terminal(t, r.id, Some(stack), Outcome::Shed);
+                }
+                for h in self.handoffs.iter() {
+                    self.obs.terminal(t, h.id, Some(stack), Outcome::Shed);
+                }
+            }
             // Conservation even on abort: un-ingested arrivals count as
             // shed too, so completed + shed + refused_kv == submitted.
             self.tel.shed += self.waiting.len() as u64
@@ -1249,6 +1358,7 @@ impl ClusterStack for DecodeStack<'_> {
             // spot — conservation (completed + shed + refused_kv ==
             // submitted) survives even the pathological abort path.
             self.tel.shed += 1;
+            self.obs.terminal(self.t, req.id, Some(self.obs_stack), Outcome::Shed);
             return;
         }
         let est = est_service_s(self.engine, self.phases, &req);
@@ -1281,7 +1391,7 @@ impl ClusterStack for DecodeStack<'_> {
     /// reservation released. Mid-flight generations lose their cached
     /// context, so their surrendered [`Request`] carries `input: None`
     /// — the retry pays the full prefill-recompute cost.
-    fn fail(&mut self, _t_s: f64) -> Vec<Request> {
+    fn fail(&mut self, t_s: f64) -> Vec<Request> {
         let mut surrendered: Vec<Request> = Vec::new();
         surrendered.extend(self.pending.drain(..));
         surrendered.extend(self.waiting.drain(..));
@@ -1318,6 +1428,13 @@ impl ClusterStack for DecodeStack<'_> {
             surrendered.push(req);
         }
         self.tel.shed += surrendered.len() as u64;
+        if self.obs.enabled() {
+            // Double-entry with the failover driver: each surrendered
+            // request sheds here and re-opens wherever the retry lands.
+            for r in &surrendered {
+                self.obs.terminal(t_s, r.id, Some(self.obs_stack), Outcome::Shed);
+            }
+        }
         self.pending_kv_bytes = 0.0;
         self.outstanding = 0;
         self.depth = 0;

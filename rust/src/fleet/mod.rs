@@ -55,7 +55,7 @@
 
 use std::collections::HashMap;
 
-use crate::cluster::{ClusterStack, StackSnapshot};
+use crate::cluster::{ClusterStack, HealthState, StackSnapshot};
 use crate::config::{specs, Config};
 use crate::decode::decodetest::{self, DecodeReport};
 use crate::decode::engine::DecodeEngine;
@@ -63,6 +63,7 @@ use crate::decode::kv::KvCacheConfig;
 use crate::decode::scheduler::{
     Completion, DecodeConfig, DecodeStack, KvHandoff,
 };
+use crate::obs::{Candidate, Recorder};
 use crate::traffic::admission::ThrottleConfig;
 use crate::traffic::generator::TrafficGen;
 use crate::traffic::phases;
@@ -460,6 +461,7 @@ fn deliver_handoffs(
     routable: &[bool],
     bw: f64,
     handoff_seq: &mut u64,
+    rec: &Recorder,
     out: &mut FleetOutcome,
 ) {
     completions.sort_by(|a, b| {
@@ -485,6 +487,7 @@ fn deliver_handoffs(
         let snaps = snaps_of(stacks);
         let pick = router.choose_masked(*handoff_seq, c.finish_s, &snaps, need, routable);
         *handoff_seq += 1;
+        rec.handoff_routed(c.finish_s, c.id, pick, kv_bytes, transfer_s);
         match pick {
             Some(target) => {
                 stacks[target].push_handoff(KvHandoff {
@@ -526,6 +529,7 @@ fn crash_stack(
     orig_out: &HashMap<u64, usize>,
     bw: f64,
     handoff_seq: &mut u64,
+    rec: &Recorder,
     out: &mut FleetOutcome,
 ) {
     let n = stacks.len();
@@ -540,12 +544,14 @@ fn crash_stack(
     // must never land on the stack that is crashing at this instant.
     alive[victim] = false;
     out.crashes += 1;
+    rec.fault(t_c, victim, "crash");
+    rec.health(t_c, victim, HealthState::Dead.name());
     let decode_mask: Vec<bool> = (0..n)
         .map(|i| !prefill_mask[i] && alive[i])
         .collect();
     deliver_handoffs(
         pre_crash, orig_out, stacks, engine, handoff_router, &decode_mask, bw,
-        handoff_seq, out,
+        handoff_seq, rec, out,
     );
     let surrendered = stacks[victim].fail(t_c);
     out.surrendered += surrendered.len() as u64;
@@ -563,6 +569,20 @@ fn crash_stack(
         let pick =
             arrival_router.choose_masked(*handoff_seq, t_c, &snaps, need, &route_mask);
         *handoff_seq += 1;
+        if rec.enabled() {
+            // One hop per surrendered request: re-arrives immediately at
+            // the crash instant (no backoff on the fleet path).
+            rec.retry(t_c, retry.id, 1, t_c);
+            let candidates: Vec<Candidate> = snaps
+                .iter()
+                .map(|s| Candidate {
+                    stack: s.stack,
+                    key: arrival_router.rank_key(s, t_c, need),
+                    routable: route_mask.get(s.stack).copied().unwrap_or(false),
+                })
+                .collect();
+            rec.route(t_c, retry.id, arrival_router.policy.name(), pick, candidates);
+        }
         match pick {
             Some(target) => {
                 stacks[target].push(retry);
@@ -581,6 +601,20 @@ fn crash_stack(
 /// Returns the merged [`DecodeReport`] plus the fleet ledger. See the
 /// module docs for the per-arrival event ordering.
 pub fn run_disaggregated(cfg: &Config, fc: &FleetConfig) -> (DecodeReport, FleetOutcome) {
+    run_disaggregated_traced(cfg, fc, &Recorder::Off)
+}
+
+/// [`run_disaggregated`] with an observability recorder threaded through
+/// the driver and every stack. With [`Recorder::Off`] this *is*
+/// `run_disaggregated` (one discriminant branch per hook); with a live
+/// recorder the report and ledger are unchanged and the trace captures
+/// arrivals, route decisions, hand-off routing and joins, crash faults,
+/// retry hops, and every lifecycle terminal.
+pub fn run_disaggregated_traced(
+    cfg: &Config,
+    fc: &FleetConfig,
+    rec: &Recorder,
+) -> (DecodeReport, FleetOutcome) {
     let dc = &fc.dc;
     assert!(dc.stacks >= 2, "disaggregation needs at least 2 stacks");
     let n = dc.stacks;
@@ -617,9 +651,17 @@ pub fn run_disaggregated(cfg: &Config, fc: &FleetConfig) -> (DecodeReport, Fleet
 
     let mut stacks: Vec<DecodeStack<'_>> = archs
         .iter()
-        .map(|a| {
+        .enumerate()
+        .map(|(i, a)| {
             let di = distinct.iter().position(|d| d == a).unwrap();
-            DecodeStack::with_arch(&cfgs[di], dc, &tables[di], &engines[di], &a.spec())
+            let mut s =
+                DecodeStack::with_arch(&cfgs[di], dc, &tables[di], &engines[di], &a.spec());
+            if rec.enabled() {
+                let role = if i < pn { "prefill" } else { "decode" };
+                rec.stack_label(i, format!("stack {i} ({} {role})", a.name()));
+                s.attach_obs(rec.clone(), i);
+            }
+            s
         })
         .collect();
     for s in stacks.iter_mut().take(pn) {
@@ -664,7 +706,7 @@ pub fn run_disaggregated(cfg: &Config, fc: &FleetConfig) -> (DecodeReport, Fleet
                 crash_stack(
                     victim, t_c, &mut stacks, &mut alive, &prefill_mask,
                     account_engine, &arrival_router, &handoff_router, &orig_out,
-                    bw, &mut handoff_seq, &mut out,
+                    bw, &mut handoff_seq, rec, &mut out,
                 );
                 crash = None;
             }
@@ -681,10 +723,11 @@ pub fn run_disaggregated(cfg: &Config, fc: &FleetConfig) -> (DecodeReport, Fleet
             .collect();
         deliver_handoffs(
             done, &orig_out, &mut stacks, account_engine, &handoff_router,
-            &decode_mask, bw, &mut handoff_seq, &mut out,
+            &decode_mask, bw, &mut handoff_seq, rec, &mut out,
         );
 
         out.arrived += 1;
+        rec.arrival(t, req.id);
         orig_out.insert(req.id, req.out_tokens.max(1));
         let mut prefill_req = req.clone();
         prefill_req.out_tokens = 1;
@@ -696,6 +739,17 @@ pub fn run_disaggregated(cfg: &Config, fc: &FleetConfig) -> (DecodeReport, Fleet
             .collect();
         let snaps = snaps_of(&stacks);
         let pick = arrival_router.choose_masked(i as u64, t, &snaps, need, &route_mask);
+        if rec.enabled() {
+            let candidates: Vec<Candidate> = snaps
+                .iter()
+                .map(|s| Candidate {
+                    stack: s.stack,
+                    key: arrival_router.rank_key(s, t, need),
+                    routable: route_mask.get(s.stack).copied().unwrap_or(false),
+                })
+                .collect();
+            rec.route(t, req.id, arrival_router.policy.name(), pick, candidates);
+        }
         match pick {
             Some(target) => {
                 stacks[target].push(prefill_req);
@@ -712,7 +766,7 @@ pub fn run_disaggregated(cfg: &Config, fc: &FleetConfig) -> (DecodeReport, Fleet
             crash_stack(
                 victim, t_c, &mut stacks, &mut alive, &prefill_mask,
                 account_engine, &arrival_router, &handoff_router, &orig_out,
-                bw, &mut handoff_seq, &mut out,
+                bw, &mut handoff_seq, rec, &mut out,
             );
         }
     }
@@ -728,7 +782,7 @@ pub fn run_disaggregated(cfg: &Config, fc: &FleetConfig) -> (DecodeReport, Fleet
         .collect();
     deliver_handoffs(
         done, &orig_out, &mut stacks, account_engine, &handoff_router,
-        &decode_mask, bw, &mut handoff_seq, &mut out,
+        &decode_mask, bw, &mut handoff_seq, rec, &mut out,
     );
 
     let outcomes = stacks.into_iter().map(DecodeStack::finish).collect();
@@ -937,5 +991,104 @@ mod tests {
             report2.to_json(&fc.dc).pretty()
         );
         assert_eq!(out.to_json().pretty(), out2.to_json().pretty());
+    }
+
+    #[test]
+    fn traced_disaggregated_crash_run_reconstructs_and_reproduces() {
+        use crate::obs::{inspect, Event, Outcome, Recorder};
+        let events = replay(20, 8);
+        let fc_of = |threads: usize| {
+            let mut dc = fleet_dc(3, &events);
+            dc.threads = threads;
+            FleetConfig {
+                dc,
+                prefill_stacks: 2,
+                transfer_bw_bps: None,
+                crash: Some((0.008, 0)),
+            }
+        };
+
+        // The recorder must not perturb the simulation.
+        let fc = fc_of(1);
+        let (plain_report, plain_out) = run_disaggregated(&Config::default(), &fc);
+        let rec = Recorder::on();
+        let (report, out) = run_disaggregated_traced(&Config::default(), &fc, &rec);
+        assert_eq!(
+            plain_report.to_json(&fc.dc).pretty(),
+            report.to_json(&fc.dc).pretty(),
+            "tracing must not change the report"
+        );
+        assert_eq!(plain_out.to_json().pretty(), out.to_json().pretty());
+
+        // Trace and metrics are byte-identical across runs and thread counts.
+        let trace_of = |threads: usize| {
+            let r = Recorder::on();
+            let fc = fc_of(threads);
+            run_disaggregated_traced(&Config::default(), &fc, &r);
+            (
+                r.trace_json().expect("recorder on").pretty(),
+                r.metrics_jsonl().expect("recorder on"),
+            )
+        };
+        let (t1, m1) = trace_of(1);
+        let (t1b, m1b) = trace_of(1);
+        let (t4, m4) = trace_of(4);
+        assert_eq!(t1, t1b, "trace must be byte-identical across reruns");
+        assert_eq!(t1, t4, "trace must be byte-identical across thread counts");
+        assert_eq!(m1, m1b);
+        assert_eq!(m1, m4);
+
+        // Double-entry: event counts agree exactly with conservation counters.
+        rec.with_buf(|b| {
+            let count = |f: &dyn Fn(&Event) -> bool| {
+                b.events.iter().filter(|&e| f(e)).count() as u64
+            };
+            assert_eq!(count(&|e| matches!(e, Event::Arrival { .. })), out.arrived);
+            assert_eq!(
+                count(&|e| matches!(e, Event::HandoffRouted { to: Some(_), .. })),
+                out.delivered
+            );
+            assert_eq!(
+                count(&|e| matches!(e, Event::HandoffRouted { to: None, .. })),
+                out.undeliverable
+            );
+            assert_eq!(
+                count(&|e| matches!(e, Event::HandoffJoin { .. })),
+                out.delivered
+            );
+            assert_eq!(count(&|e| matches!(e, Event::Retry { .. })), out.surrendered);
+            assert_eq!(
+                count(&|e| matches!(e, Event::Fault { kind: "crash", .. })),
+                out.crashes
+            );
+            assert_eq!(
+                count(&|e| matches!(
+                    e,
+                    Event::Terminal { outcome: Outcome::Completed, .. }
+                )),
+                report.total.completed,
+            );
+            assert_eq!(
+                count(&|e| matches!(e, Event::Terminal { outcome: Outcome::Shed, .. })),
+                report.total.shed,
+            );
+            assert_eq!(
+                count(&|e| matches!(
+                    e,
+                    Event::Terminal { outcome: Outcome::RefusedKv, .. }
+                )),
+                report.total.refused_kv,
+            );
+        })
+        .expect("recorder on");
+
+        // Every arrival reconstructs to a closed lifecycle in the trace.
+        let trace = rec.trace_json().expect("recorder on");
+        let rows = inspect::request_table(&trace).expect("well-formed trace");
+        assert_eq!(rows.len() as u64, out.arrived);
+        assert!(
+            rows.iter().all(|r| r.outcome != "open"),
+            "every request must reach a terminal state"
+        );
     }
 }

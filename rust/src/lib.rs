@@ -21,6 +21,7 @@ pub mod decode;
 pub mod fleet;
 pub mod model;
 pub mod noc;
+pub mod obs;
 pub mod optim;
 pub mod perf;
 pub mod power;

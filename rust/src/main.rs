@@ -12,6 +12,7 @@
 //! hetrax simulate [--model M] [--seq N]  # cycle-accurate NoC validation
 //! hetrax optimize [--quick]           # full Eq. 6 DSE, prints the front
 //! hetrax serve [--requests N]         # coordinator serving demo
+//! hetrax inspect trace.json           # digest a recorded trace
 //! ```
 //!
 //! Global flags: `--config FILE` (INI overrides), `--seed N`,
@@ -27,6 +28,7 @@ use hetrax::experiments::common::{self, Effort};
 use hetrax::experiments::{ablations, endurance, fig3, fig4, fig5, fig6a, fig6b, fig6c};
 use hetrax::model::{ModelId, Workload};
 use hetrax::noc::{traffic, NocSim, Topology};
+use hetrax::obs::{inspect, Recorder};
 use hetrax::optim::{Evaluator, MooStage, ObjectiveSet};
 use hetrax::perf::PerfEstimator;
 use hetrax::decode::{decodetest, DecodeConfig};
@@ -35,10 +37,13 @@ use hetrax::traffic::loadtest::{self, LoadtestConfig};
 use hetrax::traffic::{ArrivalPattern, OutputLenDist, RequestMix, RoutePolicy};
 use hetrax::util::rng::Rng;
 
-/// Tiny argv parser: positional command + `--key value` / `--flag` pairs.
+/// Tiny argv parser: positional command + `--key value` / `--flag`
+/// pairs, plus bare positional operands (only `inspect` takes any —
+/// every other command rejects them in `main`).
 struct Args {
     command: String,
     flags: Vec<(String, Option<String>)>,
+    positionals: Vec<String>,
 }
 
 impl Args {
@@ -46,23 +51,26 @@ impl Args {
         let mut argv = std::env::args().skip(1);
         let command = argv.next().unwrap_or_else(|| "help".to_string());
         let mut flags = Vec::new();
+        let mut positionals = Vec::new();
         let rest: Vec<String> = argv.collect();
         let mut i = 0;
         while i < rest.len() {
             let arg = &rest[i];
-            let key = arg
-                .strip_prefix("--")
-                .ok_or_else(|| anyhow!("unexpected argument {arg}"))?;
-            let value = if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
-                i += 1;
-                Some(rest[i].clone())
-            } else {
-                None
-            };
-            flags.push((key.to_string(), value));
+            match arg.strip_prefix("--") {
+                Some(key) => {
+                    let value = if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                        i += 1;
+                        Some(rest[i].clone())
+                    } else {
+                        None
+                    };
+                    flags.push((key.to_string(), value));
+                }
+                None => positionals.push(arg.clone()),
+            }
             i += 1;
         }
-        Ok(Args { command, flags })
+        Ok(Args { command, flags, positionals })
     }
 
     fn has(&self, key: &str) -> bool {
@@ -93,6 +101,15 @@ impl Args {
 
 fn main() -> Result<()> {
     let args = Args::parse()?;
+    if args.command != "inspect" {
+        if let Some(p) = args.positionals.first() {
+            bail!("unexpected argument {p:?}");
+        }
+    }
+    match args.command.as_str() {
+        "loadtest" | "decodetest" | "faulttest" => {}
+        other => reject_obs(&args, other)?,
+    }
     let cfg = match args.get("config") {
         Some(path) => Config::from_file(path)?,
         None => Config::default(),
@@ -136,6 +153,7 @@ fn main() -> Result<()> {
         "loadtest" => cmd_loadtest(&cfg, &args, seed),
         "decodetest" => cmd_decodetest(&cfg, &args, seed),
         "faulttest" => cmd_faulttest(&cfg, &args, seed),
+        "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -168,7 +186,9 @@ COMMANDS:
                --duration S --stacks N --policy jsq|rr|kv|latency --models a,b
                --arch a,b,... (per-stack architectures; see decodetest)
                --batch N --slo S --ceiling C --uncontrolled
-               --trace FILE (replay) --threads N --out BENCH_serve.json]
+               --trace FILE (replay) --threads N --out BENCH_serve.json
+               --trace-out FILE (Perfetto trace_event JSON)
+               --metrics-out FILE (per-window metrics JSONL)]
   decodetest  autoregressive decode run: continuous batching, KV-cache
               residency, chunked prefill, TTFT/TPOT/ITL telemetry
               [--pattern ... --rps R --duration S --stacks N
@@ -182,14 +202,20 @@ COMMANDS:
                --max-running N (1 = one-at-a-time) --prefill-batch N
                --chunk-tokens N (0 = whole-prompt prefills)
                --kv-mib M --kv-sm-frac F --ceiling C --uncontrolled
-               --trace FILE (replay) --threads N --out BENCH_decode.json]
+               --trace FILE (replay) --threads N --out BENCH_decode.json
+               --trace-out FILE --metrics-out FILE]
   faulttest   decode run under a deterministic fault schedule: stack
               crashes, thermal-trip quarantines, stalls, wear-out, and
               retry/backoff failover (decodetest flags except
               --disaggregate, plus:)
               [--fault-seed N (generate a schedule)
                --schedule FILE (JSON replay, overrides --fault-seed)
-               --out BENCH_faults.json]
+               --out BENCH_faults.json
+               --trace-out FILE --metrics-out FILE]
+  inspect     deterministic text digest of a recorded trace: top-k
+              slowest requests with per-phase breakdown, per-stack
+              window summaries, SLO-violation and fault timelines
+              [hetrax inspect TRACE.json --top K --slo-ms MS]
 ";
 
 fn cmd_spec(cfg: &Config) -> Result<()> {
@@ -493,19 +519,100 @@ fn reject_disagg(args: &Args, command: &str) -> Result<()> {
     Ok(())
 }
 
-fn write_report(out: &str, doc: &hetrax::util::json::Json) -> Result<()> {
-    if let Some(dir) = std::path::Path::new(out).parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)?;
+/// The observability flags ride only on the serving commands; every
+/// other command rejects them instead of silently ignoring.
+fn reject_obs(args: &Args, command: &str) -> Result<()> {
+    for flag in ["trace-out", "metrics-out"] {
+        if args.has(flag) {
+            bail!(
+                "--{flag} is only supported by `hetrax loadtest | decodetest | \
+                 faulttest` (not {command})"
+            );
         }
     }
-    std::fs::write(out, doc.pretty()).with_context(|| format!("writing {out}"))?;
+    Ok(())
+}
+
+/// `--trace-out` / `--metrics-out`, shared by the serving commands.
+/// Either flag switches the recorder on; with both absent the run goes
+/// down the zero-overhead `Recorder::Off` path.
+struct ObsArgs {
+    trace_out: Option<String>,
+    metrics_out: Option<String>,
+    rec: Recorder,
+}
+
+fn parse_obs(args: &Args) -> Result<ObsArgs> {
+    let path_of = |key: &str| -> Result<Option<String>> {
+        match args.get(key) {
+            Some(v) => Ok(Some(v.to_string())),
+            None if args.has(key) => bail!("--{key} needs a file path"),
+            None => Ok(None),
+        }
+    };
+    let trace_out = path_of("trace-out")?;
+    let metrics_out = path_of("metrics-out")?;
+    let rec = if trace_out.is_some() || metrics_out.is_some() {
+        Recorder::on()
+    } else {
+        Recorder::Off
+    };
+    Ok(ObsArgs { trace_out, metrics_out, rec })
+}
+
+/// Export whatever the run recorded. No-op when both flags are absent.
+fn write_obs(obs: &ObsArgs) -> Result<()> {
+    if let Some(path) = &obs.trace_out {
+        let doc = obs.rec.trace_json().expect("recorder was on");
+        write_text(path, &doc.pretty())?;
+    }
+    if let Some(path) = &obs.metrics_out {
+        let text = obs.rec.metrics_jsonl().expect("recorder was on");
+        write_text(path, &text)?;
+    }
+    Ok(())
+}
+
+fn write_text(out: &str, text: &str) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating parent directory for {out}"))?;
+        }
+    }
+    std::fs::write(out, text).with_context(|| format!("writing {out}"))?;
     println!("wrote {out}");
+    Ok(())
+}
+
+fn write_report(out: &str, doc: &hetrax::util::json::Json) -> Result<()> {
+    write_text(out, &doc.pretty())
+}
+
+/// `hetrax inspect <trace.json>` — deterministic text digest of a
+/// recorded trace: top-k slowest requests with per-phase breakdown,
+/// per-stack control-window summaries, and the SLO-violation and
+/// fault-event timelines.
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args.positionals.first().ok_or_else(|| {
+        anyhow!("usage: hetrax inspect <trace.json> [--top K] [--slo-ms MS]")
+    })?;
+    if let Some(extra) = args.positionals.get(1) {
+        bail!("unexpected argument {extra:?} (inspect takes one trace file)");
+    }
+    let top = args.get_usize("top", 10)?;
+    let slo_ms = args.get_f64("slo-ms", 100.0)?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let trace = hetrax::util::json::parse(&text)
+        .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    let digest = inspect::digest(&trace, top, slo_ms).map_err(|e| anyhow!("{path}: {e}"))?;
+    print!("{digest}");
     Ok(())
 }
 
 fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     reject_disagg(args, "loadtest")?;
+    let obs = parse_obs(args)?;
     let t = parse_traffic(args, 200.0, 2.0)?;
 
     let mut lt = LoadtestConfig::new(t.pattern, RequestMix::models(&t.models));
@@ -521,7 +628,7 @@ fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     lt.throttle.enabled = !t.uncontrolled;
     let duration = t.duration;
 
-    let report = loadtest::run(cfg, &lt);
+    let report = loadtest::run_traced(cfg, &lt, &obs.rec);
     let t = &report.total;
     println!(
         "loadtest {} @ {:.0} rps x {:.1}s over {} stack(s), policy {}",
@@ -553,10 +660,12 @@ fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
         report.throttle_events,
         report.windows
     );
-    write_report(args.get("out").unwrap_or("BENCH_serve.json"), &report.to_json(&lt))
+    write_report(args.get("out").unwrap_or("BENCH_serve.json"), &report.to_json(&lt))?;
+    write_obs(&obs)
 }
 
 fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
+    let obs = parse_obs(args)?;
     let ta = parse_traffic(args, 300.0, 1.0)?;
     let outlen = OutputLenDist::parse(args.get("outlen").unwrap_or("geometric:32"))
         .map_err(|e| anyhow!(e))?;
@@ -579,10 +688,10 @@ fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     dc.throttle.enabled = !ta.uncontrolled;
 
     if let Some(prefill_stacks) = disagg {
-        return cmd_fleet(cfg, args, dc, prefill_stacks);
+        return cmd_fleet(cfg, args, dc, prefill_stacks, &obs);
     }
 
-    let report = decodetest::run(cfg, &dc);
+    let report = decodetest::run_traced(cfg, &dc, &obs.rec);
     let t = &report.total;
     let ms = |us: u64| us as f64 / 1e3;
     println!(
@@ -642,20 +751,27 @@ fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
         report.throttle_events,
         report.windows
     );
-    write_report(args.get("out").unwrap_or("BENCH_decode.json"), &report.to_json(&dc))
+    write_report(args.get("out").unwrap_or("BENCH_decode.json"), &report.to_json(&dc))?;
+    write_obs(&obs)
 }
 
 /// `hetrax decodetest --disaggregate`: prefill-specialized stacks hand
 /// finished prompts to decode stacks over the interposer, with the KV
 /// transfer charged as virtual-time delay before the first decode step.
-fn cmd_fleet(cfg: &Config, args: &Args, dc: DecodeConfig, prefill_stacks: usize) -> Result<()> {
+fn cmd_fleet(
+    cfg: &Config,
+    args: &Args,
+    dc: DecodeConfig,
+    prefill_stacks: usize,
+    obs: &ObsArgs,
+) -> Result<()> {
     let fc = FleetConfig {
         dc,
         prefill_stacks,
         transfer_bw_bps: None,
         crash: None,
     };
-    let (report, out) = fleet::run_disaggregated(cfg, &fc);
+    let (report, out) = fleet::run_disaggregated_traced(cfg, &fc, &obs.rec);
     let dc = &fc.dc;
     let t = &report.total;
     let ms = |us: u64| us as f64 / 1e3;
@@ -712,11 +828,13 @@ fn cmd_fleet(cfg: &Config, args: &Args, dc: DecodeConfig, prefill_stacks: usize)
     doc.set("bench", "fleet_serving")
         .set("fleet", out.to_json())
         .set("per_arch", fleet::per_arch_json(&report, &archs));
-    write_report(args.get("out").unwrap_or("BENCH_fleet.json"), &doc)
+    write_report(args.get("out").unwrap_or("BENCH_fleet.json"), &doc)?;
+    write_obs(obs)
 }
 
 fn cmd_faulttest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     reject_disagg(args, "faulttest")?;
+    let obs = parse_obs(args)?;
     let ta = parse_traffic(args, 300.0, 1.0)?;
     let outlen = OutputLenDist::parse(args.get("outlen").unwrap_or("geometric:32"))
         .map_err(|e| anyhow!(e))?;
@@ -750,7 +868,7 @@ fn cmd_faulttest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
         ),
     };
 
-    let (report, outcome) = decodetest::run_with_faults(cfg, &dc, &schedule);
+    let (report, outcome) = decodetest::run_with_faults_traced(cfg, &dc, &schedule, &obs.rec);
     let t = &report.total;
     println!(
         "faulttest {} @ {:.0} rps x {:.1}s over {} stack(s), policy {}",
@@ -802,8 +920,9 @@ fn cmd_faulttest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     let mut doc = report.to_json(&dc);
     doc.set("bench", "cluster_faults")
         .set("fault_schedule", schedule.to_json())
-        .set("faults", outcome.to_json());
-    write_report(args.get("out").unwrap_or("BENCH_faults.json"), &doc)
+        .set("faults", outcome.to_json_with_windows(dc.throttle.interval_s));
+    write_report(args.get("out").unwrap_or("BENCH_faults.json"), &doc)?;
+    write_obs(&obs)
 }
 
 #[cfg(test)]
@@ -817,7 +936,15 @@ mod tests {
                 .iter()
                 .map(|(k, v)| (k.to_string(), v.map(str::to_string)))
                 .collect(),
+            positionals: Vec::new(),
         }
+    }
+
+    fn args_pos(positionals: &[&str], flags: &[(&str, Option<&str>)]) -> Args {
+        let mut a = args(flags);
+        a.command = "inspect".to_string();
+        a.positionals = positionals.iter().map(|s| s.to_string()).collect();
+        a
     }
 
     #[test]
@@ -951,5 +1078,83 @@ mod tests {
         }
         reject_disagg(&args(&[("stacks", Some("2"))]), "loadtest")
             .expect("unrelated flags must pass");
+    }
+
+    #[test]
+    fn obs_flags_without_a_path_are_clean_errors() {
+        for flag in ["trace-out", "metrics-out"] {
+            let e = parse_obs(&args(&[(flag, None)])).unwrap_err();
+            assert!(e.to_string().contains(flag), "{flag}: {e}");
+            assert!(e.to_string().contains("file path"), "{flag}: {e}");
+        }
+    }
+
+    #[test]
+    fn obs_flags_switch_the_recorder_on() {
+        let off = parse_obs(&args(&[])).unwrap();
+        assert!(!off.rec.enabled(), "no flags means the zero-overhead path");
+        assert!(off.trace_out.is_none() && off.metrics_out.is_none());
+        let on = parse_obs(&args(&[("trace-out", Some("t.json"))])).unwrap();
+        assert!(on.rec.enabled());
+        let on = parse_obs(&args(&[("metrics-out", Some("m.jsonl"))])).unwrap();
+        assert!(on.rec.enabled());
+    }
+
+    #[test]
+    fn unsupported_commands_reject_obs_flags() {
+        for flag in ["trace-out", "metrics-out"] {
+            for cmd in ["serve", "optimize", "fig3", "inspect"] {
+                let e = reject_obs(&args(&[(flag, Some("x.json"))]), cmd).unwrap_err();
+                assert!(e.to_string().contains(flag), "{cmd}: {e}");
+                assert!(e.to_string().contains("loadtest"), "{cmd}: {e}");
+            }
+        }
+        reject_obs(&args(&[("out", Some("x.json"))]), "serve")
+            .expect("unrelated flags must pass");
+    }
+
+    #[test]
+    fn inspect_without_a_trace_is_a_usage_error() {
+        let e = cmd_inspect(&args_pos(&[], &[])).unwrap_err();
+        assert!(e.to_string().contains("usage"), "{e}");
+        let e = cmd_inspect(&args_pos(&["a.json", "b.json"], &[])).unwrap_err();
+        assert!(e.to_string().contains("one trace file"), "{e}");
+    }
+
+    #[test]
+    fn inspect_missing_file_errors_with_context() {
+        let path = std::env::temp_dir().join("hetrax_inspect_missing.json");
+        let path = path.to_str().unwrap();
+        let e = cmd_inspect(&args_pos(&[path], &[])).unwrap_err();
+        assert!(format!("{e:#}").contains("reading"), "{e:#}");
+    }
+
+    #[test]
+    fn inspect_malformed_file_errors_with_context() {
+        let dir = std::env::temp_dir();
+        let bad_json = dir.join("hetrax_inspect_bad.json");
+        std::fs::write(&bad_json, "this is not json {").unwrap();
+        let e = cmd_inspect(&args_pos(&[bad_json.to_str().unwrap()], &[])).unwrap_err();
+        assert!(format!("{e:#}").contains("parsing"), "{e:#}");
+
+        let not_trace = dir.join("hetrax_inspect_nottrace.json");
+        std::fs::write(&not_trace, "{\"bench\": \"decode_steady\"}").unwrap();
+        let e = cmd_inspect(&args_pos(&[not_trace.to_str().unwrap()], &[])).unwrap_err();
+        assert!(format!("{e:#}").contains("traceEvents"), "{e:#}");
+    }
+
+    #[test]
+    fn unwritable_output_paths_are_clean_errors() {
+        // A file used as a directory component makes the target
+        // unwritable no matter the uid the tests run under.
+        let blocker = std::env::temp_dir().join("hetrax_write_blocker");
+        std::fs::write(&blocker, "x").unwrap();
+        let out = blocker.join("trace.json");
+        let e = write_text(out.to_str().unwrap(), "{}").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(
+            msg.contains("creating parent directory") || msg.contains("writing"),
+            "{msg}"
+        );
     }
 }

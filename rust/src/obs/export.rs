@@ -1,0 +1,316 @@
+//! Trace and metrics serialization for the recorder buffer.
+//!
+//! Two formats, both deterministic (sorted object keys via
+//! `crate::util::json::Json`, integer virtual-time microseconds via
+//! [`super::us`], events in serial event-loop order):
+//!
+//! * **Chrome/Perfetto `trace_event` JSON** ([`trace_json`]) — open the
+//!   file in `chrome://tracing` or `ui.perfetto.dev`. Track layout:
+//!   `tid 0` is the cluster track carrying one *async* span per request
+//!   (`ph: "b"/"n"/"e"`, `cat: "request"`, `id` = request id) with route
+//!   decisions, retries, and KV hand-offs as instants inside the span;
+//!   `tid stack+1` is one track per stack (named by `thread_name`
+//!   metadata) carrying *complete* slices (`ph: "X"`) for prefill
+//!   chunks and sampled decode steps, *counter* series (`ph: "C"`,
+//!   name `stack{i}`) for the per-window gauges, and *instants*
+//!   (`ph: "i"`) for health transitions, fault events, and KV joins.
+//! * **Metrics JSONL** ([`metrics_jsonl`]) — one compact JSON object
+//!   per line for the time-series events only (window gauges, health
+//!   transitions, fault events), each tagged with a `"type"` field;
+//!   grep/jq-friendly without loading the full trace.
+
+use crate::util::json::Json;
+
+use super::{Event, TraceBuf, us};
+
+fn base(ph: &str, name: &str, pid: u64, tid: u64, ts: u64) -> Json {
+    let mut e = Json::obj();
+    e.set("ph", ph).set("name", name).set("pid", pid).set("tid", tid).set("ts", ts);
+    e
+}
+
+fn opt_stack(v: Option<usize>) -> Json {
+    match v {
+        Some(s) => Json::from(s),
+        None => Json::Null,
+    }
+}
+
+fn event_json(ev: &Event) -> Json {
+    match ev {
+        Event::Arrival { t_s, id } => {
+            let mut e = base("b", "request", 0, 0, us(*t_s));
+            e.set("cat", "request").set("id", *id);
+            e
+        }
+        Event::Route { t_s, id, policy, chosen, candidates } => {
+            let mut e = base("n", "route", 0, 0, us(*t_s));
+            e.set("cat", "request").set("id", *id);
+            let mut args = Json::obj();
+            args.set("policy", *policy).set("chosen", opt_stack(*chosen));
+            let cands: Vec<Json> = candidates
+                .iter()
+                .map(|c| {
+                    let mut cj = Json::obj();
+                    cj.set("stack", c.stack)
+                        .set("key", c.key.to_vec())
+                        .set("routable", c.routable);
+                    cj
+                })
+                .collect();
+            args.set("candidates", Json::Arr(cands));
+            e.set("args", args);
+            e
+        }
+        Event::Prefill { stack, id, start_s, end_s, tokens, chunk } => {
+            let name = if *chunk { "prefill_chunk" } else { "prefill" };
+            let mut e = base("X", name, 0, (*stack as u64) + 1, us(*start_s));
+            e.set("dur", us(*end_s).saturating_sub(us(*start_s)));
+            let mut args = Json::obj();
+            args.set("id", *id).set("tokens", *tokens);
+            e.set("args", args);
+            e
+        }
+        Event::DecodeStep { stack, start_s, end_s, batch } => {
+            let mut e = base("X", "decode_step", 0, (*stack as u64) + 1, us(*start_s));
+            e.set("dur", us(*end_s).saturating_sub(us(*start_s)));
+            let mut args = Json::obj();
+            args.set("batch", *batch);
+            e.set("args", args);
+            e
+        }
+        Event::HandoffRouted { t_s, id, to, kv_bytes, transfer_s } => {
+            let mut e = base("n", "handoff", 0, 0, us(*t_s));
+            e.set("cat", "request").set("id", *id);
+            let mut args = Json::obj();
+            args.set("to", opt_stack(*to))
+                .set("kv_bytes", *kv_bytes)
+                .set("transfer_us", us(*transfer_s));
+            e.set("args", args);
+            e
+        }
+        Event::HandoffJoin { t_s, stack, id } => {
+            let mut e = base("i", "kv_join", 0, (*stack as u64) + 1, us(*t_s));
+            e.set("s", "t");
+            let mut args = Json::obj();
+            args.set("id", *id);
+            e.set("args", args);
+            e
+        }
+        Event::Retry { t_s, id, attempt, next_t_s } => {
+            let mut e = base("n", "retry", 0, 0, us(*t_s));
+            e.set("cat", "request").set("id", *id);
+            let mut args = Json::obj();
+            args.set("attempt", *attempt as u64).set("next_us", us(*next_t_s));
+            e.set("args", args);
+            e
+        }
+        Event::Terminal { t_s, id, stack, outcome } => {
+            let mut e = base("e", "request", 0, 0, us(*t_s));
+            e.set("cat", "request").set("id", *id);
+            let mut args = Json::obj();
+            args.set("outcome", outcome.name()).set("stack", opt_stack(*stack));
+            e.set("args", args);
+            e
+        }
+        Event::Window { t_s, stack, window, sample } => {
+            let mut e = base(
+                "C",
+                &format!("stack{stack}"),
+                0,
+                (*stack as u64) + 1,
+                us(*t_s),
+            );
+            let mut args = Json::obj();
+            args.set("reram_c", sample.reram_c)
+                .set("batch_cap", sample.batch_cap)
+                .set("emergency", if sample.emergency { 1u64 } else { 0 })
+                .set("queue_depth", sample.queue_depth)
+                .set("outstanding_steps", sample.outstanding_steps)
+                .set("kv_committed_mib", sample.kv_committed_bytes / (1024.0 * 1024.0))
+                .set("window", *window);
+            e.set("args", args);
+            e
+        }
+        Event::Health { t_s, stack, state } => {
+            let mut e = base(
+                "i",
+                &format!("health:{state}"),
+                0,
+                (*stack as u64) + 1,
+                us(*t_s),
+            );
+            e.set("s", "t");
+            let mut args = Json::obj();
+            args.set("stack", *stack).set("state", *state);
+            e.set("args", args);
+            e
+        }
+        Event::Fault { t_s, stack, kind } => {
+            let mut e = base(
+                "i",
+                &format!("fault:{kind}"),
+                0,
+                (*stack as u64) + 1,
+                us(*t_s),
+            );
+            e.set("s", "t");
+            let mut args = Json::obj();
+            args.set("stack", *stack).set("kind", *kind);
+            e.set("args", args);
+            e
+        }
+    }
+}
+
+/// Build the Chrome/Perfetto `trace_event` document for a buffer.
+pub fn trace_json(buf: &TraceBuf) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(buf.events.len() + buf.labels.len());
+    for (stack, label) in &buf.labels {
+        let mut e = base("M", "thread_name", 0, (*stack as u64) + 1, 0);
+        let mut args = Json::obj();
+        args.set("name", label.as_str());
+        e.set("args", args);
+        events.push(e);
+    }
+    for ev in &buf.events {
+        events.push(event_json(ev));
+    }
+    let mut doc = Json::obj();
+    doc.set("displayTimeUnit", "ms").set("traceEvents", Json::Arr(events));
+    doc
+}
+
+/// Build the flat metrics JSONL text (window gauges, health
+/// transitions, fault events — one compact object per line).
+pub fn metrics_jsonl(buf: &TraceBuf) -> String {
+    let mut out = String::new();
+    for ev in &buf.events {
+        let line = match ev {
+            Event::Window { t_s, stack, window, sample } => {
+                let mut j = Json::obj();
+                j.set("type", "window")
+                    .set("t_us", us(*t_s))
+                    .set("stack", *stack)
+                    .set("window", *window)
+                    .set("reram_c", sample.reram_c)
+                    .set("batch_cap", sample.batch_cap)
+                    .set("emergency", sample.emergency)
+                    .set("queue_depth", sample.queue_depth)
+                    .set("outstanding_steps", sample.outstanding_steps)
+                    .set("kv_committed_bytes", sample.kv_committed_bytes);
+                j
+            }
+            Event::Health { t_s, stack, state } => {
+                let mut j = Json::obj();
+                j.set("type", "health")
+                    .set("t_us", us(*t_s))
+                    .set("stack", *stack)
+                    .set("state", *state);
+                j
+            }
+            Event::Fault { t_s, stack, kind } => {
+                let mut j = Json::obj();
+                j.set("type", "fault")
+                    .set("t_us", us(*t_s))
+                    .set("stack", *stack)
+                    .set("kind", *kind);
+                j
+            }
+            _ => continue,
+        };
+        out.push_str(&line.compact());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Outcome, Recorder, WindowSample};
+    use crate::util::json;
+
+    fn sample() -> WindowSample {
+        WindowSample {
+            reram_c: 48.5,
+            batch_cap: 8,
+            emergency: false,
+            queue_depth: 3,
+            outstanding_steps: 40,
+            kv_committed_bytes: 2.0 * 1024.0 * 1024.0,
+        }
+    }
+
+    fn recorded() -> Recorder {
+        let rec = Recorder::on();
+        rec.stack_label(0, "stack 0 (hetrax3d)".into());
+        rec.arrival(0.001, 5);
+        rec.route(0.001, 5, "jsq", Some(0), vec![]);
+        rec.prefill(0, 5, 0.001, 0.002, 128, false);
+        rec.decode_step(0, 0.002, 0.0021, 4);
+        rec.window(0.05, 0, 1, sample());
+        rec.health(0.06, 0, "degraded");
+        rec.fault(0.06, 0, "thermal_trip");
+        rec.terminal(0.1, 5, Some(0), Outcome::Completed);
+        rec
+    }
+
+    #[test]
+    fn trace_parses_and_carries_all_events() {
+        let doc = recorded().trace_json().unwrap();
+        let text = doc.pretty();
+        let back = json::parse(&text).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 metadata + 8 recorded events.
+        assert_eq!(events.len(), 9);
+        assert_eq!(
+            back.get("displayTimeUnit").unwrap().as_str().unwrap(),
+            "ms"
+        );
+        let phases: Vec<&str> = events
+            .iter()
+            .map(|e| e.get("ph").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(phases, vec!["M", "b", "n", "X", "X", "C", "i", "i", "e"]);
+        // The async span lives on tid 0; stack work on tid 1.
+        assert_eq!(events[1].get("tid").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(events[3].get("tid").unwrap().as_usize().unwrap(), 1);
+        // Timestamps are integer virtual microseconds.
+        assert_eq!(events[1].get("ts").unwrap().as_f64().unwrap(), 1000.0);
+        assert_eq!(
+            events[3].get("dur").unwrap().as_f64().unwrap(),
+            1000.0
+        );
+    }
+
+    #[test]
+    fn metrics_jsonl_is_one_parsable_object_per_line() {
+        let text = recorded().metrics_jsonl().unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3); // window + health + fault
+        let types: Vec<String> = lines
+            .iter()
+            .map(|l| {
+                json::parse(l)
+                    .unwrap()
+                    .get("type")
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    .to_string()
+            })
+            .collect();
+        assert_eq!(types, vec!["window", "health", "fault"]);
+        assert!(lines[0].contains("\"reram_c\":48.5"));
+    }
+
+    #[test]
+    fn export_is_byte_stable_across_calls() {
+        let rec = recorded();
+        assert_eq!(
+            rec.trace_json().unwrap().pretty(),
+            rec.trace_json().unwrap().pretty()
+        );
+        assert_eq!(rec.metrics_jsonl(), rec.metrics_jsonl());
+    }
+}

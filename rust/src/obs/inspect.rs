@@ -1,0 +1,376 @@
+//! Deterministic text digest of an exported trace (`hetrax inspect`).
+//!
+//! Works from the *exported* Perfetto JSON (not the in-memory buffer),
+//! so it can explain any trace file the CLIs wrote — including ones
+//! from another machine. Everything is rebuilt from the `trace_event`
+//! stream: per-request phase breakdowns from the async span plus the
+//! per-stack `X` slices, window summaries from the `C` counter series,
+//! and fault/health timelines from the instants. Output is a pure
+//! function of the trace bytes (BTreeMap iteration, fixed `{:.3}`
+//! formatting), so two runs of `hetrax inspect` on the same file —
+//! or on traces from two byte-identical runs — print identical text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// One request's lifecycle, rebuilt from the trace events.
+#[derive(Debug, Clone, Default)]
+pub struct ReqRow {
+    pub id: u64,
+    pub arrival_us: u64,
+    pub end_us: u64,
+    /// Final outcome (last terminal wins — a request shed on a dying
+    /// stack and completed on a survivor is `completed`).
+    pub outcome: String,
+    /// Stack of the final terminal (`None` when it never landed).
+    pub final_stack: Option<usize>,
+    pub retries: u64,
+    /// First prefill launch minus arrival.
+    pub queue_us: u64,
+    /// Total prefill (all chunks) attributed to this request.
+    pub prefill_us: u64,
+    /// KV hand-off wire time charged to this request.
+    pub transfer_us: u64,
+    /// Remainder of the span (decode steps + scheduling residency).
+    pub decode_us: u64,
+    /// Number of terminals recorded (> 1 means retried hops).
+    pub terminals: u64,
+}
+
+impl ReqRow {
+    /// End-to-end virtual time from arrival to the final terminal.
+    pub fn e2e_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.arrival_us)
+    }
+}
+
+/// Per-stack roll-up of the window counter series.
+#[derive(Debug, Clone, Default)]
+pub struct StackWindows {
+    pub label: String,
+    pub windows: u64,
+    pub reram_c_max: f64,
+    pub emergency_windows: u64,
+    pub queue_depth_max: u64,
+    pub outstanding_max: u64,
+}
+
+fn num(e: &Json, key: &str) -> Option<f64> {
+    e.get(key)?.as_f64()
+}
+
+fn unum(e: &Json, key: &str) -> Option<u64> {
+    num(e, key).map(|v| v as u64)
+}
+
+fn events_of(trace: &Json) -> Result<&[Json], String> {
+    trace
+        .get("traceEvents")
+        .and_then(|t| t.as_arr())
+        .ok_or_else(|| "trace has no traceEvents array (not a trace_event file?)".to_string())
+}
+
+/// Rebuild the per-request lifecycle table from a parsed trace,
+/// sorted by request id. Errors when the document is not a
+/// `trace_event` file.
+pub fn request_table(trace: &Json) -> Result<Vec<ReqRow>, String> {
+    let events = events_of(trace)?;
+    let mut rows: BTreeMap<u64, ReqRow> = BTreeMap::new();
+    let mut first_prefill: BTreeMap<u64, u64> = BTreeMap::new();
+    for e in events {
+        let ph = e.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        let name = e.get("name").and_then(|n| n.as_str()).unwrap_or("");
+        match ph {
+            "b" if name == "request" => {
+                let (Some(id), Some(ts)) = (unum(e, "id"), unum(e, "ts")) else { continue };
+                let row = rows.entry(id).or_default();
+                row.id = id;
+                row.arrival_us = ts;
+            }
+            "e" => {
+                let (Some(id), Some(ts)) = (unum(e, "id"), unum(e, "ts")) else { continue };
+                let row = rows.entry(id).or_default();
+                row.id = id;
+                row.end_us = row.end_us.max(ts);
+                row.terminals += 1;
+                if let Some(args) = e.get("args") {
+                    if let Some(o) = args.get("outcome").and_then(|o| o.as_str()) {
+                        row.outcome = o.to_string();
+                    }
+                    row.final_stack = args.get("stack").and_then(|s| s.as_f64()).map(|s| s as usize);
+                }
+            }
+            "n" if name == "retry" => {
+                let Some(id) = unum(e, "id") else { continue };
+                let row = rows.entry(id).or_default();
+                row.id = id;
+                row.retries += 1;
+            }
+            "n" if name == "handoff" => {
+                let Some(id) = unum(e, "id") else { continue };
+                let row = rows.entry(id).or_default();
+                row.id = id;
+                if let Some(t) = e.get("args").and_then(|a| unum(a, "transfer_us")) {
+                    row.transfer_us += t;
+                }
+            }
+            "X" if name == "prefill" || name == "prefill_chunk" => {
+                let Some(id) = e.get("args").and_then(|a| unum(a, "id")) else { continue };
+                let (Some(ts), Some(dur)) = (unum(e, "ts"), unum(e, "dur")) else { continue };
+                let row = rows.entry(id).or_default();
+                row.id = id;
+                row.prefill_us += dur;
+                let first = first_prefill.entry(id).or_insert(u64::MAX);
+                *first = (*first).min(ts);
+            }
+            _ => {}
+        }
+    }
+    let mut out: Vec<ReqRow> = rows.into_values().collect();
+    for row in &mut out {
+        if let Some(&first) = first_prefill.get(&row.id) {
+            row.queue_us = first.saturating_sub(row.arrival_us);
+        }
+        row.decode_us = row
+            .e2e_us()
+            .saturating_sub(row.queue_us + row.prefill_us + row.transfer_us);
+        if row.outcome.is_empty() {
+            row.outcome = "open".to_string();
+        }
+    }
+    Ok(out)
+}
+
+/// Roll up the per-stack window counter series (and track labels).
+pub fn stack_windows(trace: &Json) -> Result<BTreeMap<usize, StackWindows>, String> {
+    let events = events_of(trace)?;
+    let mut stacks: BTreeMap<usize, StackWindows> = BTreeMap::new();
+    for e in events {
+        let ph = e.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        match ph {
+            "M" => {
+                let Some(tid) = unum(e, "tid") else { continue };
+                if tid == 0 {
+                    continue;
+                }
+                if let Some(name) = e.at(&["args", "name"]).and_then(|n| n.as_str()) {
+                    stacks.entry((tid - 1) as usize).or_default().label = name.to_string();
+                }
+            }
+            "C" => {
+                let Some(tid) = unum(e, "tid") else { continue };
+                if tid == 0 {
+                    continue;
+                }
+                let s = stacks.entry((tid - 1) as usize).or_default();
+                s.windows += 1;
+                if let Some(args) = e.get("args") {
+                    if let Some(c) = num(args, "reram_c") {
+                        s.reram_c_max = s.reram_c_max.max(c);
+                    }
+                    if num(args, "emergency").unwrap_or(0.0) > 0.0 {
+                        s.emergency_windows += 1;
+                    }
+                    if let Some(q) = unum(args, "queue_depth") {
+                        s.queue_depth_max = s.queue_depth_max.max(q);
+                    }
+                    if let Some(o) = unum(args, "outstanding_steps") {
+                        s.outstanding_max = s.outstanding_max.max(o);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(stacks)
+}
+
+fn ms(us: u64) -> f64 {
+    us as f64 / 1000.0
+}
+
+/// Build the deterministic text digest of a parsed trace: outcome
+/// totals, top-`top_k` slowest requests with per-phase breakdown,
+/// per-stack window summaries, SLO violations (completed requests with
+/// end-to-end > `slo_ms`), and fault / health timelines.
+pub fn digest(trace: &Json, top_k: usize, slo_ms: f64) -> Result<String, String> {
+    let rows = request_table(trace)?;
+    let windows = stack_windows(trace)?;
+    let events = events_of(trace)?;
+
+    let mut out = String::new();
+    let count = |o: &str| rows.iter().filter(|r| r.outcome == o).count();
+    let _ = writeln!(
+        out,
+        "requests: {} (completed {}, shed {}, refused_kv {}, failed {})",
+        rows.len(),
+        count("completed"),
+        count("shed"),
+        count("refused_kv"),
+        count("failed"),
+    );
+
+    let mut ranked: Vec<&ReqRow> = rows.iter().collect();
+    ranked.sort_by(|a, b| b.e2e_us().cmp(&a.e2e_us()).then(a.id.cmp(&b.id)));
+    let k = top_k.min(ranked.len());
+    let _ = writeln!(out, "top {k} slowest requests (virtual ms):");
+    for r in ranked.iter().take(k) {
+        let _ = writeln!(
+            out,
+            "  req {:>6}  e2e {:>10.3}  queue {:>10.3}  prefill {:>9.3}  transfer {:>8.3}  decode {:>10.3}  retries {}  outcome {}{}",
+            r.id,
+            ms(r.e2e_us()),
+            ms(r.queue_us),
+            ms(r.prefill_us),
+            ms(r.transfer_us),
+            ms(r.decode_us),
+            r.retries,
+            r.outcome,
+            match r.final_stack {
+                Some(s) => format!("  stack {s}"),
+                None => String::new(),
+            },
+        );
+    }
+
+    let _ = writeln!(out, "per-stack control windows:");
+    for (stack, w) in &windows {
+        let label = if w.label.is_empty() {
+            format!("stack {stack}")
+        } else {
+            w.label.clone()
+        };
+        let _ = writeln!(
+            out,
+            "  {label}: windows {}  reram_c max {:.3}  emergency {}  queue max {}  outstanding max {}",
+            w.windows, w.reram_c_max, w.emergency_windows, w.queue_depth_max, w.outstanding_max,
+        );
+    }
+
+    let violations: Vec<&ReqRow> = ranked
+        .iter()
+        .copied()
+        .filter(|r| r.outcome == "completed" && ms(r.e2e_us()) > slo_ms)
+        .collect();
+    let _ = writeln!(
+        out,
+        "SLO violations (e2e > {slo_ms:.3} ms): {} of {} completed",
+        violations.len(),
+        count("completed"),
+    );
+    for r in &violations {
+        let _ = writeln!(out, "  req {:>6}  e2e {:>10.3} ms", r.id, ms(r.e2e_us()));
+    }
+
+    // Fault and health timelines from the instant events, in trace
+    // (event-loop) order.
+    let mut faults = 0usize;
+    let mut health = 0usize;
+    let mut timeline = String::new();
+    for e in events {
+        if e.get("ph").and_then(|p| p.as_str()) != Some("i") {
+            continue;
+        }
+        let Some(args) = e.get("args") else { continue };
+        let ts = unum(e, "ts").unwrap_or(0);
+        if let Some(kind) = args.get("kind").and_then(|k| k.as_str()) {
+            let stack = unum(args, "stack").unwrap_or(0);
+            let _ = writeln!(timeline, "  t {:>10.3} ms  stack {stack}  fault {kind}", ms(ts));
+            faults += 1;
+        } else if let Some(state) = args.get("state").and_then(|s| s.as_str()) {
+            let stack = unum(args, "stack").unwrap_or(0);
+            let _ = writeln!(timeline, "  t {:>10.3} ms  stack {stack}  health -> {state}", ms(ts));
+            health += 1;
+        }
+    }
+    let _ = writeln!(out, "fault events: {faults}, health transitions: {health}");
+    out.push_str(&timeline);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Outcome, Recorder, WindowSample};
+
+    fn traced() -> Json {
+        let rec = Recorder::on();
+        rec.stack_label(0, "stack 0 (hetrax3d)".into());
+        rec.stack_label(1, "stack 1 (hetrax3d)".into());
+        // Request 1: arrival -> prefill -> completed on stack 0.
+        rec.arrival(0.000, 1);
+        rec.prefill(0, 1, 0.001, 0.003, 128, false);
+        rec.terminal(0.010, 1, Some(0), Outcome::Completed);
+        // Request 2: shed on stack 0, retried, completed on stack 1.
+        rec.arrival(0.002, 2);
+        rec.terminal(0.004, 2, Some(0), Outcome::Shed);
+        rec.retry(0.004, 2, 1, 0.014);
+        rec.prefill(1, 2, 0.015, 0.016, 64, true);
+        rec.terminal(0.050, 2, Some(1), Outcome::Completed);
+        // Request 3: failed without ever landing.
+        rec.arrival(0.003, 3);
+        rec.terminal(0.005, 3, None, Outcome::Failed);
+        rec.window(
+            0.05,
+            0,
+            1,
+            WindowSample {
+                reram_c: 51.0,
+                batch_cap: 4,
+                emergency: true,
+                queue_depth: 5,
+                outstanding_steps: 9,
+                kv_committed_bytes: 0.0,
+            },
+        );
+        rec.fault(0.004, 0, "crash");
+        rec.health(0.004, 0, "dead");
+        rec.trace_json().unwrap()
+    }
+
+    #[test]
+    fn table_reconstructs_phases_and_final_outcomes() {
+        let rows = request_table(&traced()).unwrap();
+        assert_eq!(rows.len(), 3);
+        let r1 = &rows[0];
+        assert_eq!((r1.id, r1.outcome.as_str()), (1, "completed"));
+        assert_eq!(r1.arrival_us, 0);
+        assert_eq!(r1.queue_us, 1_000);
+        assert_eq!(r1.prefill_us, 2_000);
+        assert_eq!(r1.e2e_us(), 10_000);
+        assert_eq!(r1.decode_us, 7_000);
+        let r2 = &rows[1];
+        assert_eq!(r2.outcome, "completed"); // last terminal wins
+        assert_eq!(r2.terminals, 2);
+        assert_eq!(r2.retries, 1);
+        assert_eq!(r2.final_stack, Some(1));
+        let r3 = &rows[2];
+        assert_eq!(r3.outcome, "failed");
+        assert_eq!(r3.final_stack, None);
+    }
+
+    #[test]
+    fn digest_is_deterministic_and_complete() {
+        let trace = traced();
+        let a = digest(&trace, 10, 5.0).unwrap();
+        let b = digest(&trace, 10, 5.0).unwrap();
+        assert_eq!(a, b);
+        assert!(a.starts_with("requests: 3 (completed 2, shed 0, refused_kv 0, failed 1)"));
+        assert!(a.contains("top 3 slowest requests"));
+        assert!(a.contains("stack 0 (hetrax3d): windows 1  reram_c max 51.000  emergency 1"));
+        assert!(a.contains("SLO violations (e2e > 5.000 ms): 2 of 2 completed"));
+        assert!(a.contains("fault crash"));
+        assert!(a.contains("health -> dead"));
+    }
+
+    #[test]
+    fn non_trace_document_errors_with_context() {
+        let mut j = Json::obj();
+        j.set("bench", "decode");
+        let err = request_table(&j).unwrap_err();
+        assert!(err.contains("traceEvents"));
+        assert!(digest(&j, 5, 1.0).is_err());
+    }
+}

@@ -1,0 +1,414 @@
+//! S14 — Observability: deterministic virtual-time tracing and
+//! per-window time-series metrics for the serving stack.
+//!
+//! Every telemetry surface the repo had before this module was an
+//! end-of-run aggregate: when a p99 TTFT outlier or a thermal trip
+//! shows up in a `BENCH_*.json` there is no record of *which* request,
+//! *which* stack, or *which* control window caused it. This module adds
+//! the missing record: a [`Recorder`] handle threaded through the
+//! cluster event loop (`crate::cluster::drive_obs`), the fault driver
+//! (`crate::cluster::faults::drive_faulty_obs`), the decode and serve
+//! stacks, and the disaggregated fleet driver captures
+//!
+//! 1. **per-request lifecycle spans** keyed by virtual time — arrival →
+//!    route decision (policy, chosen stack, every candidate's ranking
+//!    key) → queue → prefill chunks → KV hand-off + transfer delay →
+//!    decode steps (sampled every [`DECODE_STEP_SAMPLE`]) → retry /
+//!    backoff hops → completion / shed / refused / failed — and
+//! 2. **per-control-window time series** per stack — ReRAM temperature,
+//!    admission batch cap, emergency mode, queue depth, outstanding
+//!    decode steps, committed KV bytes — plus health-state transitions
+//!    and fault events from the fault layer.
+//!
+//! Export formats: Chrome/Perfetto `trace_event` JSON
+//! ([`export::trace_json`]; open the file in `ui.perfetto.dev`) and a
+//! flat metrics JSONL ([`export::metrics_jsonl`]), both wired into the
+//! CLIs via `--trace-out` / `--metrics-out`; `hetrax inspect
+//! <trace.json>` prints the deterministic text digest built by
+//! [`inspect::digest`].
+//!
+//! # Determinism contract
+//!
+//! All timestamps are **virtual** (simulated-clock seconds, exported as
+//! integer microseconds via [`us`]); events are appended in the serial
+//! event-loop order, which is itself ordered by `(virtual_time,
+//! stack_idx, seq_no)` and never by thread schedule. Recorder output is
+//! therefore byte-identical across runs and thread counts — asserted by
+//! tests in `decode::decodetest` and `fleet` — and the
+//! [`Recorder::Off`] path performs no allocation and no work beyond one
+//! enum-discriminant branch per hook, pinned byte-identical to the
+//! pre-observability output and bounded by the `obs_overhead` bench
+//! (`BENCH_obs.json`). Design record: DESIGN.md §Observability.
+
+pub mod export;
+pub mod inspect;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::util::json::Json;
+
+/// Decode steps are sampled: one [`Event::DecodeStep`] is recorded per
+/// this many steps per stack (the first step of each stride). Keeps
+/// long-generation traces proportional without losing the cadence.
+pub const DECODE_STEP_SAMPLE: u64 = 32;
+
+/// Virtual seconds → integer trace microseconds (the `ts` unit of the
+/// `trace_event` format). Clamped at zero; rounding makes the mapping
+/// stable against the last-ulp noise a f64 sum could otherwise surface.
+pub fn us(seconds: f64) -> u64 {
+    (seconds.max(0.0) * 1e6).round() as u64
+}
+
+/// How a request's lifecycle span ended on a stack. A retried request
+/// may carry several terminals (shed on the dying stack, completed on a
+/// survivor); the double-entry tests count each against the matching
+/// conservation counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Retired with its full output budget served.
+    Completed,
+    /// Dropped: aged out, surrendered by a failing stack, or aborted.
+    Shed,
+    /// Refused at ingest — peak KV reservation exceeds the pool budget.
+    RefusedKv,
+    /// Retry budget or deadline exhausted in the fault layer.
+    Failed,
+}
+
+impl Outcome {
+    /// Stable wire name (used in trace args and the inspect digest).
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Completed => "completed",
+            Outcome::Shed => "shed",
+            Outcome::RefusedKv => "refused_kv",
+            Outcome::Failed => "failed",
+        }
+    }
+}
+
+/// One stack's ranking key at a route decision — the router's full
+/// candidate view, chosen and rejected alike.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub stack: usize,
+    /// The policy's lexicographic ranking key (lower wins); see
+    /// `crate::traffic::router::StackRouter::rank_key`.
+    pub key: [f64; 3],
+    /// False when the fault layer masked this stack out.
+    pub routable: bool,
+}
+
+/// One control window's gauge readings for one stack.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowSample {
+    /// ReRAM-tier temperature the admission controller evaluated (°C).
+    pub reram_c: f64,
+    /// Throttled admission batch cap after the window's decision.
+    pub batch_cap: usize,
+    /// Thermal emergency mode (fault-layer quarantine clamp) active.
+    pub emergency: bool,
+    /// Requests accepted but not yet running.
+    pub queue_depth: usize,
+    /// Output tokens still owed across running + queued work.
+    pub outstanding_steps: u64,
+    /// KV bytes committed (pool reservations + queued peaks).
+    pub kv_committed_bytes: f64,
+}
+
+/// One recorded observation. Timestamps are virtual seconds; export
+/// converts them with [`us`].
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A request entered the system (original deliveries only; retries
+    /// record [`Event::Retry`] hops instead).
+    Arrival { t_s: f64, id: u64 },
+    /// A route decision: the policy, the pick (`None` = no routable
+    /// stack), and every candidate's ranking key.
+    Route {
+        t_s: f64,
+        id: u64,
+        policy: &'static str,
+        chosen: Option<usize>,
+        candidates: Vec<Candidate>,
+    },
+    /// A prefill batch launch→finish for one member request (`chunk`
+    /// marks a chunked-prefill slice; `tokens` is the slice length).
+    Prefill {
+        stack: usize,
+        id: u64,
+        start_s: f64,
+        end_s: f64,
+        tokens: usize,
+        chunk: bool,
+    },
+    /// One sampled decode step of the running batch.
+    DecodeStep { stack: usize, start_s: f64, end_s: f64, batch: usize },
+    /// A KV hand-off routed at hand-off time (`to = None` means no live
+    /// decode stack; `transfer_s` is the charged wire delay).
+    HandoffRouted {
+        t_s: f64,
+        id: u64,
+        to: Option<usize>,
+        kv_bytes: f64,
+        transfer_s: f64,
+    },
+    /// A delivered hand-off joined the decode stack's running set.
+    HandoffJoin { t_s: f64, stack: usize, id: u64 },
+    /// A retry/backoff hop: the request re-arrives at `next_t_s`.
+    Retry { t_s: f64, id: u64, attempt: u32, next_t_s: f64 },
+    /// A lifecycle span ended on `stack` with `outcome`.
+    Terminal { t_s: f64, id: u64, stack: Option<usize>, outcome: Outcome },
+    /// One control window closed on `stack` (`window` is the stack's
+    /// window index).
+    Window { t_s: f64, stack: usize, window: u64, sample: WindowSample },
+    /// A health-machine transition (state names from
+    /// `crate::cluster::HealthState::name`).
+    Health { t_s: f64, stack: usize, state: &'static str },
+    /// A fault-layer event: `crash`, `stall`, `stall_end`,
+    /// `thermal_trip`, `thermal_recover`, `wear_death`, `recovery`.
+    Fault { t_s: f64, stack: usize, kind: &'static str },
+}
+
+/// The recording buffer behind an enabled [`Recorder`]: stack labels
+/// plus every event in serial event-loop order.
+#[derive(Debug, Default)]
+pub struct TraceBuf {
+    /// Stack index → display label (`"stack 0 (hetrax3d)"`), emitted as
+    /// `thread_name` metadata so Perfetto names the tracks.
+    pub labels: BTreeMap<usize, String>,
+    pub events: Vec<Event>,
+}
+
+/// The observability handle threaded through the serving stack. Cheap
+/// to clone ([`Recorder::Off`] is a unit; the on-state is an `Rc`) and
+/// safe to share across stacks because all stack stepping, finishing,
+/// and event-loop work is serial — the worker pool only parallelizes
+/// pure phase-table construction, which never records.
+///
+/// Every recording method is a no-op behind a single discriminant
+/// branch when the recorder is [`Recorder::Off`] — the zero-overhead
+/// contract the `obs_overhead` bench pins.
+#[derive(Debug, Clone, Default)]
+pub enum Recorder {
+    /// Record nothing (the default everywhere).
+    #[default]
+    Off,
+    /// Append to the shared buffer.
+    On(Rc<RefCell<TraceBuf>>),
+}
+
+impl Recorder {
+    /// A recorder with a fresh, empty buffer.
+    pub fn on() -> Recorder {
+        Recorder::On(Rc::new(RefCell::new(TraceBuf::default())))
+    }
+
+    /// Whether recording is active. Callers building non-trivial event
+    /// payloads (candidate vectors, shed-id collections) gate the
+    /// construction on this so the off-path never allocates.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        matches!(self, Recorder::On(_))
+    }
+
+    #[inline]
+    fn push(&self, ev: Event) {
+        if let Recorder::On(buf) = self {
+            buf.borrow_mut().events.push(ev);
+        }
+    }
+
+    /// Name a stack's track (shown by Perfetto and the inspect digest).
+    pub fn stack_label(&self, stack: usize, label: String) {
+        if let Recorder::On(buf) = self {
+            buf.borrow_mut().labels.insert(stack, label);
+        }
+    }
+
+    /// Record an original arrival (opens the request's async span).
+    #[inline]
+    pub fn arrival(&self, t_s: f64, id: u64) {
+        self.push(Event::Arrival { t_s, id });
+    }
+
+    /// Record a route decision. Build `candidates` only when
+    /// [`Recorder::enabled`] — the vector is allocated by the caller.
+    #[inline]
+    pub fn route(
+        &self,
+        t_s: f64,
+        id: u64,
+        policy: &'static str,
+        chosen: Option<usize>,
+        candidates: Vec<Candidate>,
+    ) {
+        self.push(Event::Route { t_s, id, policy, chosen, candidates });
+    }
+
+    /// Record one request's share of a prefill batch or chunk.
+    #[inline]
+    pub fn prefill(
+        &self,
+        stack: usize,
+        id: u64,
+        start_s: f64,
+        end_s: f64,
+        tokens: usize,
+        chunk: bool,
+    ) {
+        self.push(Event::Prefill { stack, id, start_s, end_s, tokens, chunk });
+    }
+
+    /// Record a sampled decode step (the caller applies
+    /// [`DECODE_STEP_SAMPLE`]).
+    #[inline]
+    pub fn decode_step(&self, stack: usize, start_s: f64, end_s: f64, batch: usize) {
+        self.push(Event::DecodeStep { stack, start_s, end_s, batch });
+    }
+
+    /// Record a KV hand-off routing decision and its transfer charge.
+    #[inline]
+    pub fn handoff_routed(
+        &self,
+        t_s: f64,
+        id: u64,
+        to: Option<usize>,
+        kv_bytes: f64,
+        transfer_s: f64,
+    ) {
+        self.push(Event::HandoffRouted { t_s, id, to, kv_bytes, transfer_s });
+    }
+
+    /// Record a hand-off joining the decode stack's running set.
+    #[inline]
+    pub fn handoff_join(&self, t_s: f64, stack: usize, id: u64) {
+        self.push(Event::HandoffJoin { t_s, stack, id });
+    }
+
+    /// Record a retry/backoff hop.
+    #[inline]
+    pub fn retry(&self, t_s: f64, id: u64, attempt: u32, next_t_s: f64) {
+        self.push(Event::Retry { t_s, id, attempt, next_t_s });
+    }
+
+    /// Record a lifecycle terminal (completion, shed, refusal, failure).
+    #[inline]
+    pub fn terminal(&self, t_s: f64, id: u64, stack: Option<usize>, outcome: Outcome) {
+        self.push(Event::Terminal { t_s, id, stack, outcome });
+    }
+
+    /// Record one closed control window's gauges.
+    #[inline]
+    pub fn window(&self, t_s: f64, stack: usize, window: u64, sample: WindowSample) {
+        self.push(Event::Window { t_s, stack, window, sample });
+    }
+
+    /// Record a health-machine transition.
+    #[inline]
+    pub fn health(&self, t_s: f64, stack: usize, state: &'static str) {
+        self.push(Event::Health { t_s, stack, state });
+    }
+
+    /// Record a fault-layer event.
+    #[inline]
+    pub fn fault(&self, t_s: f64, stack: usize, kind: &'static str) {
+        self.push(Event::Fault { t_s, stack, kind });
+    }
+
+    /// The Chrome/Perfetto `trace_event` document, or `None` when off.
+    pub fn trace_json(&self) -> Option<Json> {
+        match self {
+            Recorder::Off => None,
+            Recorder::On(buf) => Some(export::trace_json(&buf.borrow())),
+        }
+    }
+
+    /// The flat metrics JSONL text, or `None` when off.
+    pub fn metrics_jsonl(&self) -> Option<String> {
+        match self {
+            Recorder::Off => None,
+            Recorder::On(buf) => Some(export::metrics_jsonl(&buf.borrow())),
+        }
+    }
+
+    /// Run `f` over the buffer when recording (test/digest helper).
+    pub fn with_buf<T>(&self, f: impl FnOnce(&TraceBuf) -> T) -> Option<T> {
+        match self {
+            Recorder::Off => None,
+            Recorder::On(buf) => Some(f(&buf.borrow())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_recorder_records_nothing_and_exports_none() {
+        let rec = Recorder::Off;
+        assert!(!rec.enabled());
+        rec.arrival(0.1, 1);
+        rec.terminal(0.2, 1, Some(0), Outcome::Completed);
+        rec.stack_label(0, "stack 0".into());
+        assert!(rec.trace_json().is_none());
+        assert!(rec.metrics_jsonl().is_none());
+        assert!(rec.with_buf(|b| b.events.len()).is_none());
+    }
+
+    #[test]
+    fn on_recorder_appends_in_call_order() {
+        let rec = Recorder::on();
+        assert!(rec.enabled());
+        rec.arrival(0.0, 7);
+        rec.route(0.0, 7, "jsq", Some(1), vec![Candidate {
+            stack: 0,
+            key: [1.0, 0.0, 0.0],
+            routable: true,
+        }]);
+        rec.terminal(0.5, 7, Some(1), Outcome::Completed);
+        let kinds = rec
+            .with_buf(|b| {
+                b.events
+                    .iter()
+                    .map(|e| match e {
+                        Event::Arrival { .. } => "arrival",
+                        Event::Route { .. } => "route",
+                        Event::Terminal { .. } => "terminal",
+                        _ => "other",
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .unwrap();
+        assert_eq!(kinds, vec!["arrival", "route", "terminal"]);
+    }
+
+    #[test]
+    fn clones_share_one_buffer() {
+        let rec = Recorder::on();
+        let clone = rec.clone();
+        rec.arrival(0.0, 1);
+        clone.arrival(0.1, 2);
+        assert_eq!(rec.with_buf(|b| b.events.len()), Some(2));
+    }
+
+    #[test]
+    fn us_rounds_and_clamps() {
+        assert_eq!(us(0.0), 0);
+        assert_eq!(us(-1.0), 0);
+        assert_eq!(us(1.5), 1_500_000);
+        assert_eq!(us(0.0000014999), 1);
+        assert_eq!(us(0.0000015001), 2);
+    }
+
+    #[test]
+    fn outcome_names_are_stable() {
+        assert_eq!(Outcome::Completed.name(), "completed");
+        assert_eq!(Outcome::Shed.name(), "shed");
+        assert_eq!(Outcome::RefusedKv.name(), "refused_kv");
+        assert_eq!(Outcome::Failed.name(), "failed");
+    }
+}

@@ -20,6 +20,7 @@ use crate::cluster::{self, ClusterStack, HealthState, StackSnapshot};
 use crate::config::Config;
 use crate::coordinator::{Batcher, BatcherConfig, Engine, Request, ServeState};
 use crate::fleet::{self, StackArch, StackArchId};
+use crate::obs::{Outcome, Recorder, WindowSample};
 use crate::traffic::admission::{AdmissionController, BatchCost, ThrottleConfig};
 use crate::traffic::generator::{ArrivalPattern, RequestMix, TrafficGen};
 use crate::traffic::phases::{phase_table, PhaseInfo, PhaseKey};
@@ -268,6 +269,10 @@ pub(crate) struct ServeStack<'a> {
     ewma_latency_s: f64,
     arch_id: StackArchId,
     compute_scale: f64,
+    /// Observability handle ([`Recorder::Off`] by default) and this
+    /// stack's trace index ([`ServeStack::attach_obs`]).
+    obs: Recorder,
+    obs_stack: usize,
 }
 
 impl<'a> ServeStack<'a> {
@@ -316,7 +321,17 @@ impl<'a> ServeStack<'a> {
             ewma_latency_s: 0.0,
             arch_id: arch.id,
             compute_scale: arch.compute_scale,
+            obs: Recorder::Off,
+            obs_stack: 0,
         }
+    }
+
+    /// Attach an observability recorder under trace index `stack`. Off
+    /// by default; attaching never changes a serving decision — the
+    /// recorder-off equivalence tests pin this.
+    pub(crate) fn attach_obs(&mut self, rec: Recorder, stack: usize) {
+        self.obs = rec;
+        self.obs_stack = stack;
     }
 
     /// Serve one control window `[t, t + interval)`.
@@ -332,15 +347,23 @@ impl<'a> ServeStack<'a> {
         }
         let mut shed = 0u64;
         let wait = self.wait;
+        let record = self.obs.enabled();
+        let mut shed_ids: Vec<u64> = Vec::new();
         self.backlog.retain(|r| {
             if wend - r.arrival_s > wait {
                 shed += 1;
+                if record {
+                    shed_ids.push(r.id);
+                }
                 false
             } else {
                 true
             }
         });
         self.telemetry.shed += shed;
+        for id in shed_ids {
+            self.obs.terminal(t, id, Some(self.obs_stack), Outcome::Shed);
+        }
         self.telemetry.queue_depth.record(self.backlog.len() as u64);
 
         let bc = self.lt.batcher.with_max_batch(self.ctl.batch_cap);
@@ -380,8 +403,44 @@ impl<'a> ServeStack<'a> {
                     self.telemetry.completed == 1,
                 );
             }
+            if record {
+                // Requests and responses correspond 1:1 in batch order.
+                for (r, resp) in b.requests.iter().zip(&out.responses) {
+                    self.obs.prefill(
+                        self.obs_stack,
+                        r.id,
+                        out.start_s,
+                        resp.finish_s,
+                        r.seq,
+                        false,
+                    );
+                    self.obs.terminal(
+                        resp.finish_s,
+                        r.id,
+                        Some(self.obs_stack),
+                        Outcome::Completed,
+                    );
+                }
+            }
         }
 
+        if record {
+            self.obs.window(
+                wend,
+                self.obs_stack,
+                self.window_i,
+                WindowSample {
+                    reram_c: self.ctl.last_reram_c,
+                    batch_cap: self.ctl.batch_cap,
+                    emergency: self.ctl.in_emergency(),
+                    queue_depth: self.backlog.len() + self.pending.len(),
+                    // One-shot prefill traffic: no decode steps owed, no
+                    // KV residency.
+                    outstanding_steps: 0,
+                    kv_committed_bytes: 0.0,
+                },
+            );
+        }
         self.t = wend;
         self.window_i += 1;
         if self.window_i >= self.max_windows
@@ -390,6 +449,11 @@ impl<'a> ServeStack<'a> {
             // Backstop: shed whatever is left and stop (pathological
             // configs only; arrivals still pending are abandoned, as the
             // pre-cluster loop abandoned its un-ingested shard tail).
+            if record {
+                for r in self.backlog.iter() {
+                    self.obs.terminal(wend, r.id, Some(self.obs_stack), Outcome::Shed);
+                }
+            }
             self.telemetry.shed += self.backlog.len() as u64;
             self.backlog.clear();
             self.done = true;
@@ -446,6 +510,7 @@ impl ClusterStack for ServeStack<'_> {
             // The window backstop already stopped this stack: count the
             // arrival as shed so conservation survives the abort path.
             self.telemetry.shed += 1;
+            self.obs.terminal(self.t, req.id, Some(self.obs_stack), Outcome::Shed);
             return;
         }
         let info = self.phases[&(req.model, req.variant, req.seq)];
@@ -457,11 +522,16 @@ impl ClusterStack for ServeStack<'_> {
     /// requests for re-routing, counting each as shed here (the
     /// failover driver re-submits survivors elsewhere — double-entry).
     /// Prefill traffic holds no KV residency, so nothing to release.
-    fn fail(&mut self, _t_s: f64) -> Vec<Request> {
+    fn fail(&mut self, t_s: f64) -> Vec<Request> {
         let mut surrendered: Vec<Request> = Vec::new();
         surrendered.extend(self.pending.drain(..));
         surrendered.append(&mut self.backlog);
         self.telemetry.shed += surrendered.len() as u64;
+        if self.obs.enabled() {
+            for r in &surrendered {
+                self.obs.terminal(t_s, r.id, Some(self.obs_stack), Outcome::Shed);
+            }
+        }
         self.done = true;
         surrendered
     }
@@ -483,6 +553,14 @@ impl ClusterStack for ServeStack<'_> {
 /// cluster stepper (live routing at each arrival) and aggregate the
 /// per-stack outcomes.
 pub fn run(cfg: &Config, lt: &LoadtestConfig) -> LoadtestReport {
+    run_traced(cfg, lt, &Recorder::Off)
+}
+
+/// [`run`] with an observability recorder threaded through the cluster
+/// event loop and every stack. With [`Recorder::Off`] this *is* `run`
+/// (one discriminant branch per hook); with a live recorder the report
+/// is unchanged and the trace captures every lifecycle span.
+pub fn run_traced(cfg: &Config, lt: &LoadtestConfig, rec: &Recorder) -> LoadtestReport {
     let generator = TrafficGen {
         pattern: lt.pattern.clone(),
         mix: lt.mix.clone(),
@@ -510,13 +588,19 @@ pub fn run(cfg: &Config, lt: &LoadtestConfig) -> LoadtestReport {
     debug_assert_eq!(archs.len(), router.stacks);
     let mut stacks: Vec<ServeStack> = archs
         .iter()
-        .map(|a| {
+        .enumerate()
+        .map(|(i, a)| {
             let di = distinct.iter().position(|d| d == a).unwrap();
-            ServeStack::with_arch(&cfgs[di], lt, &tables[di], &a.spec())
+            let mut s = ServeStack::with_arch(&cfgs[di], lt, &tables[di], &a.spec());
+            if rec.enabled() {
+                rec.stack_label(i, format!("stack {i} ({})", a.name()));
+                s.attach_obs(rec.clone(), i);
+            }
+            s
         })
         .collect();
     // One-shot prefill traffic holds no KV residency: need 0 bytes.
-    cluster::drive(&mut stacks, &requests, &router, None, |_| 0.0);
+    cluster::drive_obs(&mut stacks, &requests, &router, None, |_| 0.0, rec);
     let outcomes: Vec<StackOutcome> = stacks.into_iter().map(ServeStack::finish).collect();
 
     let mut total = StackTelemetry::new();
@@ -585,6 +669,46 @@ mod tests {
         lt.threads = 4;
         let c = run(&cfg, &lt).to_json(&lt).pretty();
         assert_eq!(a, c, "thread count must not change output");
+    }
+
+    #[test]
+    fn traced_run_matches_untraced_and_terminals_balance() {
+        // Recorder-off is the plain path by delegation; recorder-on must
+        // not move a byte of the report, and the trace's lifecycle
+        // terminals must agree with the conservation counters exactly.
+        use crate::obs::Event;
+        let cfg = Config::default();
+        let mut lt = base(300.0, 0.8);
+        lt.stacks = 2;
+        let plain = run(&cfg, &lt).to_json(&lt).pretty();
+        let rec = Recorder::on();
+        let report = run_traced(&cfg, &lt, &rec);
+        assert_eq!(
+            plain,
+            report.to_json(&lt).pretty(),
+            "recording must not change the report"
+        );
+        let (completed, shed, windows, prefills) = rec
+            .with_buf(|b| {
+                let count = |f: &dyn Fn(&Event) -> bool| {
+                    b.events.iter().filter(|&e| f(e)).count() as u64
+                };
+                (
+                    count(&|e| {
+                        matches!(e, Event::Terminal { outcome: Outcome::Completed, .. })
+                    }),
+                    count(&|e| {
+                        matches!(e, Event::Terminal { outcome: Outcome::Shed, .. })
+                    }),
+                    count(&|e| matches!(e, Event::Window { .. })),
+                    count(&|e| matches!(e, Event::Prefill { .. })),
+                )
+            })
+            .unwrap();
+        assert_eq!(completed, report.total.completed, "double-entry: completed");
+        assert_eq!(shed, report.total.shed, "double-entry: shed");
+        assert_eq!(prefills, report.total.completed, "one serve span each");
+        assert!(windows > 0, "per-window gauges must be sampled");
     }
 
     #[test]

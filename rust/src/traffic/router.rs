@@ -153,6 +153,17 @@ impl StackRouter {
         best
     }
 
+    /// The policy's ranking key for one snapshot as an array — the
+    /// observability layer records this for every candidate at each
+    /// route decision (chosen and rejected alike), so a trace can show
+    /// *why* a stack won. Pure read; identical ordering semantics to
+    /// the internal ranking (lower wins lexicographically, round-robin
+    /// ranks everything equal).
+    pub fn rank_key(&self, s: &StackSnapshot, now_s: f64, need_kv_bytes: f64) -> [f64; 3] {
+        let (a, b, c) = self.key(s, now_s, need_kv_bytes);
+        [a, b, c]
+    }
+
     /// The policy's ranking key for one snapshot (lower wins; see
     /// [`RoutePolicy`] for semantics). Round-robin never ranks.
     ///

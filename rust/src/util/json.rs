@@ -92,6 +92,45 @@ impl Json {
         s
     }
 
+    /// Serialize without any whitespace — one value per line for JSONL
+    /// streams. Object keys stay sorted, so output is byte-stable.
+    pub fn compact(&self) -> String {
+        let mut s = String::new();
+        self.write_compact(&mut s);
+        s
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => write_num(out, *n),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -450,6 +489,17 @@ mod tests {
         assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(parse("{}").unwrap(), Json::obj());
         assert_eq!(parse(" null ").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn compact_has_no_whitespace_and_roundtrips() {
+        let mut j = Json::obj();
+        j.set("b", vec![1u64, 2]).set("a", 1.5).set("s", "x y");
+        let text = j.compact();
+        assert_eq!(text, r#"{"a":1.5,"b":[1,2],"s":"x y"}"#);
+        assert_eq!(parse(&text).unwrap(), j);
+        assert_eq!(Json::Arr(vec![]).compact(), "[]");
+        assert_eq!(Json::obj().compact(), "{}");
     }
 
     #[test]
