@@ -1,0 +1,141 @@
+//! Cluster scale bench: the PR 9 tentpole acceptance. Sweeps cluster
+//! size N at a fixed offered load and times the full lockstep serve
+//! (route + step + drain) under the indexed next-event stepper with
+//! JSQ(d) snapshot sampling, against the retained linear oracle.
+//!
+//! The claim under test is *near-linear in events, not N×events*: at a
+//! fixed arrival stream, growing the cluster from 8 to 1000 stacks must
+//! not grow the per-event cost — the heap only steps stacks with work
+//! due and the router only snapshots d sampled candidates, so idle
+//! stacks are free. The linear oracle pays O(N) per arrival and is
+//! timed alongside to show the gap. Asserts: event throughput at the
+//! largest N within 2x of N=8 (indexed stepper); heap byte-identical to
+//! the oracle at every N; output byte-identical across runs and thread
+//! counts. Emits `BENCH_cluster_scale.json` (override the path via
+//! `CLUSTER_SCALE_JSON`; cap the sweep via `CLUSTER_SCALE_MAX_N` — CI
+//! smokes N ≤ 128; schema: DESIGN.md §Bench-Schemas).
+
+use hetrax::cluster::Stepper;
+use hetrax::config::Config;
+use hetrax::decode::decodetest;
+use hetrax::decode::DecodeConfig;
+use hetrax::model::ModelId;
+use hetrax::traffic::{ArrivalPattern, OutputLenDist, RequestMix, RoutePolicy};
+use hetrax::util::bench::Bencher;
+use hetrax::util::json::Json;
+use hetrax::util::pool;
+
+/// Fixed offered load: the datacenter regime (many mostly-idle stacks)
+/// where indexed stepping pays off. Per-stack load falls as N grows.
+const RPS: f64 = 2000.0;
+const DURATION_S: f64 = 0.25;
+const SAMPLE_D: usize = 4;
+
+fn scenario(n: usize, stepper: Stepper) -> DecodeConfig {
+    let mix = RequestMix::single(ModelId::BertBase)
+        .with_output(OutputLenDist::Geometric { mean: 6.0 });
+    let mut dc = DecodeConfig::new(ArrivalPattern::Poisson { rps: RPS }, mix);
+    dc.duration_s = DURATION_S;
+    dc.stacks = n;
+    dc.policy = RoutePolicy::JoinShortestQueue;
+    dc.seed = 0xCA1E;
+    dc.threads = 1;
+    dc.sample_d = SAMPLE_D;
+    dc.stepper = stepper;
+    dc
+}
+
+fn main() {
+    let cfg = Config::default();
+    let auto = pool::resolve_threads(0);
+    let max_n: usize = std::env::var("CLUSTER_SCALE_MAX_N")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(1000);
+
+    let mut sizes: Vec<usize> =
+        [8usize, 64, 256, 1000].into_iter().filter(|&n| n <= max_n).collect();
+    if sizes.is_empty() {
+        sizes.push(max_n.max(1));
+    } else if *sizes.last().unwrap() < max_n {
+        sizes.push(max_n);
+    }
+
+    let b = Bencher::quick();
+    let mut rows: Vec<Json> = Vec::new();
+    let mut events_per_s: Vec<(usize, f64)> = Vec::new();
+    for &n in &sizes {
+        let idx = scenario(n, Stepper::Indexed);
+        let lin = scenario(n, Stepper::Linear);
+
+        // The heap must be invisible in the output at every size.
+        let report = decodetest::run(&cfg, &idx);
+        let oracle = decodetest::run(&cfg, &lin);
+        assert_eq!(
+            report.to_json(&idx).pretty(),
+            oracle.to_json(&lin).pretty(),
+            "N={n}: indexed stepper diverged from the linear oracle"
+        );
+        let events = report.total.submitted;
+
+        let t_idx = b.time(&format!("indexed  N={n:<5}"), || decodetest::run(&cfg, &idx));
+        let t_lin = b.time(&format!("linear   N={n:<5}"), || decodetest::run(&cfg, &lin));
+        let ev_s = events as f64 / t_idx.median_s();
+        events_per_s.push((n, ev_s));
+
+        let mut row = Json::obj();
+        row.set("stacks", n)
+            .set("rps", RPS)
+            .set("events", events)
+            .set("completed", report.total.completed)
+            .set("indexed_median_s", t_idx.median_s())
+            .set("linear_median_s", t_lin.median_s())
+            .set("events_per_s", ev_s)
+            .set("speedup_vs_linear", t_lin.median_s() / t_idx.median_s());
+        rows.push(row);
+    }
+
+    // The tentpole acceptance: near-linear in events, not N×events —
+    // per-event throughput at the largest N within 2x of the smallest.
+    let (n0, ev0) = events_per_s[0];
+    let (n1, ev1) = *events_per_s.last().unwrap();
+    println!(
+        "\n  event throughput: N={n0} -> {:.0} events/s, N={n1} -> {:.0} events/s ({:.2}x)",
+        ev0,
+        ev1,
+        ev0 / ev1
+    );
+    if n1 > n0 {
+        assert!(
+            ev1 >= 0.5 * ev0,
+            "indexed stepper must hold per-event throughput within 2x \
+             from N={n0} ({ev0:.0}/s) to N={n1} ({ev1:.0}/s)"
+        );
+    }
+
+    // Determinism contract: the document is byte-identical across
+    // repeated runs and across thread counts at the largest size.
+    let doc_of = |threads: usize| {
+        let mut dc = scenario(n1, Stepper::Indexed);
+        dc.threads = threads;
+        decodetest::run(&cfg, &dc).to_json(&dc).pretty()
+    };
+    let canonical = doc_of(1);
+    assert_eq!(canonical, doc_of(1), "same config+seed must reproduce byte-identically");
+    assert_eq!(canonical, doc_of(auto), "thread count must not change the output");
+
+    let mut doc = Json::obj();
+    doc.set("bench", "cluster_scale")
+        .set("pattern", "poisson")
+        .set("rps", RPS)
+        .set("duration_s", DURATION_S)
+        .set("policy", "jsq")
+        .set("sample_d", SAMPLE_D)
+        .set("max_n", max_n)
+        .set("rows", Json::Arr(rows))
+        .set("bench_threads", auto);
+    let out = std::env::var("CLUSTER_SCALE_JSON")
+        .unwrap_or_else(|_| "BENCH_cluster_scale.json".into());
+    std::fs::write(&out, doc.pretty()).expect("write bench json");
+    println!("wrote {out}");
+}

@@ -37,7 +37,7 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
-use crate::cluster::{ClusterStack, StackSnapshot};
+use crate::cluster::{ClusterStack, EventQueue, StackSnapshot, Stepper};
 use crate::coordinator::Request;
 use crate::obs::{Candidate, Outcome, Recorder};
 use crate::traffic::router::{RoutePolicy, StackRouter};
@@ -589,14 +589,24 @@ struct Driver<'a, S: ClusterStack, F: FnMut(&Request) -> f64> {
     meta: HashMap<u64, ReqMeta>,
     reads_snaps: bool,
     snaps: Vec<StackSnapshot>,
+    /// `Some` in indexed-stepper mode: only due stacks advance per
+    /// event. `None` (the linear oracle cadence) whenever the schedule
+    /// carries a thermal or wear rule — both read every stack at every
+    /// arrival — or a recorder is live (trace event order).
+    queue: Option<EventQueue>,
     rec: &'a Recorder,
     out: FaultOutcome,
 }
 
 impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
     fn step_all(&mut self, t: f64) {
-        for s in self.stacks.iter_mut() {
-            s.step_until(t);
+        match &mut self.queue {
+            Some(q) => q.advance(self.stacks, t),
+            None => {
+                for s in self.stacks.iter_mut() {
+                    s.step_until(t);
+                }
+            }
         }
     }
 
@@ -604,6 +614,17 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
         self.snaps.clear();
         for (i, s) in self.stacks.iter().enumerate() {
             let mut snap = s.snapshot(i);
+            snap.health = self.health[i];
+            self.snaps.push(snap);
+        }
+    }
+
+    /// JSQ(d): snapshot only the sampled candidates (ascending index,
+    /// health overlaid like [`Driver::snap_all`]).
+    fn snap_some(&mut self, cands: &[usize]) {
+        self.snaps.clear();
+        for &i in cands {
+            let mut snap = self.stacks[i].snapshot(i);
             snap.health = self.health[i];
             self.snaps.push(snap);
         }
@@ -653,7 +674,16 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
     /// Kill stack `i` at `t` (caller has stepped all stacks to `t`):
     /// surrender in-flight work, mark `Dead`, retry or fail each request.
     fn kill(&mut self, t: f64, i: usize) {
+        // Indexed mode only advances *due* stacks: the victim must reach
+        // the crash instant first so it completes exactly what the
+        // linear oracle would have before surrendering the rest.
+        if let Some(q) = &mut self.queue {
+            q.step_one(self.stacks, i, t);
+        }
         let surrendered = self.stacks[i].fail(t);
+        if let Some(q) = &mut self.queue {
+            q.rekey(self.stacks, i);
+        }
         self.out.surrendered += surrendered.len() as u64;
         self.health[i] = HealthState::Dead;
         self.cause[i] = None;
@@ -806,16 +836,37 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
         let first_delivery = !self.meta.contains_key(&req.id);
         let deadline_s = req.arrival_s + self.schedule.retry.deadline_s;
         self.meta.entry(req.id).or_insert(ReqMeta { attempts: 0, deadline_s });
-        // (virtual_time, stack_idx, seq_no): advance every stack to this
-        // instant in index order, snapshot in index order, then route.
+        // (virtual_time, stack_idx, seq_no): advance the stacks with
+        // work before this instant in index order, snapshot in index
+        // order, then route.
         self.step_all(t);
+        // JSQ(d): sample candidates unless a thermal rule is active —
+        // the rule reads every stack's temperature per arrival, so it
+        // needs the full snapshot vector regardless of policy.
+        let sampled = if (self.reads_snaps || record) && self.schedule.thermal.is_none() {
+            self.router.sample(seq)
+        } else {
+            None
+        };
         if self.reads_snaps || record {
-            self.snap_all();
+            match &sampled {
+                Some(cands) => self.snap_some(cands),
+                None => self.snap_all(),
+            }
         }
         self.check_rules(t);
         let routable: Vec<bool> = self.health.iter().map(|h| h.routable()).collect();
-        let need = (self.need_kv_bytes)(&req);
-        let pick = self.router.choose_masked(seq, t, &self.snaps, need, &routable);
+        // Only the kv-aware ranking consumes the reservation size; see
+        // the same gate in `cluster::drive_stepped`.
+        let need = if self.router.policy == RoutePolicy::KvAware {
+            (self.need_kv_bytes)(&req)
+        } else {
+            0.0
+        };
+        let pick = match &sampled {
+            Some(_) => self.router.choose_sampled_masked(t, &self.snaps, need, &routable),
+            None => self.router.choose_masked(seq, t, &self.snaps, need, &routable),
+        };
         if record {
             if first_delivery {
                 self.rec.arrival(t, req.id);
@@ -834,6 +885,9 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
         match pick {
             Some(pick) => {
                 self.stacks[pick].push(req);
+                if let Some(q) = &mut self.queue {
+                    q.rekey(self.stacks, pick);
+                }
                 self.out.pushes += 1;
             }
             None => {
@@ -856,6 +910,13 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
                 Payload::Fault(kind, stack) => self.on_fault(ev.t, stack, kind),
                 Payload::StallEnd(i) => self.on_stall_end(ev.t, i),
                 Payload::ThermalRecover(i) => self.on_thermal_recover(ev.t, i),
+            }
+        }
+        // Indexed mode: bring every stale stack to the last event
+        // instant, as the oracle's per-event full advance guarantees.
+        if let Some(q) = self.queue.take() {
+            if prev_t > f64::NEG_INFINITY {
+                q.finish(self.stacks, prev_t);
             }
         }
         self.out.final_health = self.health;
@@ -903,7 +964,34 @@ where
     S: ClusterStack,
     F: FnMut(&Request) -> f64,
 {
+    drive_faulty_stepped(Stepper::default(), stacks, requests, router, schedule, need_kv_bytes, rec)
+}
+
+/// [`drive_faulty_obs`] with an explicit [`Stepper`]. The indexed
+/// stepper applies only when the schedule carries no thermal rule (it
+/// reads every stack's live temperature per arrival), no wear rule (it
+/// reads every stack's completion count per arrival), and no live
+/// recorder (trace event order follows the linear cadence) — otherwise
+/// the driver falls back to the linear oracle, which is always correct.
+pub fn drive_faulty_stepped<S, F>(
+    stepper: Stepper,
+    stacks: &mut [S],
+    requests: &[Request],
+    router: &StackRouter,
+    schedule: &FaultSchedule,
+    need_kv_bytes: F,
+    rec: &Recorder,
+) -> FaultOutcome
+where
+    S: ClusterStack,
+    F: FnMut(&Request) -> f64,
+{
     assert!(!stacks.is_empty(), "cluster needs at least one stack");
+    let indexed = stepper == Stepper::Indexed
+        && schedule.thermal.is_none()
+        && schedule.wear.is_none()
+        && !rec.enabled();
+    let queue = indexed.then(|| EventQueue::new(stacks));
     let n = stacks.len();
     let mut heap = BinaryHeap::with_capacity(requests.len() + schedule.events.len());
     let mut fault_seq = 0u64;
@@ -942,6 +1030,7 @@ where
         meta: HashMap::new(),
         reads_snaps,
         snaps: Vec::with_capacity(n),
+        queue,
         rec,
         out: FaultOutcome::new(n, requests.len() as u64),
     }

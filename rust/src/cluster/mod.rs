@@ -26,8 +26,34 @@
 //! pre-refactor per-shard loops behaved. The loop itself is serial —
 //! per-event work is far too small to amortize a fan-out — so the
 //! byte-identical-across-`HETRAX_THREADS` contract is structural; the
-//! worker pool still parallelizes the phase-table construction, which
-//! dominates setup cost.
+//! worker pool parallelizes the phase-table construction and the
+//! post-stream drain ([`crate::util::pool::par_map_owned`]), both of
+//! which preserve input order.
+//!
+//! **Indexed stepping ([`Stepper::Indexed`], the default).** Advancing
+//! all N stacks at every arrival is O(N × events) — correct, but it
+//! collapses at N≈1000. The indexed stepper keeps a binary-heap
+//! [`EventQueue`] over per-stack next-wakeup times
+//! ([`ClusterStack::next_event_s`]) keyed `(virtual_time, stack_idx,
+//! generation)`, and per arrival advances only the stacks whose key is
+//! `<=` the arrival instant (non-strict: a serve window closing exactly
+//! at the instant must run, as the linear oracle runs it). Equivalence
+//! with the retained linear oracle ([`Stepper::Linear`]) rests on
+//! *cadence invariance*: `step_until(t1); step_until(t2)` is
+//! observationally identical to `step_until(t2)` for every stack in
+//! this repo — window closes are lazy and batched, the controller fold
+//! is memoryless, and ingestion/age-out/launch decisions depend on
+//! decision instants, not on when the stepping call happens. A stack's
+//! `next_event_s` must therefore never exceed the next instant at which
+//! its *routing-visible* snapshot state would change under the oracle;
+//! returning an earlier instant (or [`f64::NEG_INFINITY`], the trait
+//! default) is always safe — the stack is merely stepped where the
+//! oracle would have found nothing to do. After the stream ends a
+//! catch-up pass advances every stale stack to the last event instant,
+//! because end-of-run window counts depend on the final clock. Proof
+//! sketch and the ops-budget caveat: DESIGN.md §Cluster. Recording
+//! traces forces the linear cadence (Window-event order is part of the
+//! trace contract).
 //!
 //! **Equivalence pins** (asserted by tests in `decode::decodetest`,
 //! `traffic::loadtest` and here): a single-stack cluster run is
@@ -44,10 +70,12 @@
 
 pub mod faults;
 pub mod prepass;
+#[cfg(test)]
+mod testkit;
 
 pub use faults::{
-    drive_faulty, FaultEvent, FaultKind, FaultOutcome, FaultSchedule, HealthState, RetryPolicy,
-    ThermalRule, WearRule,
+    drive_faulty, drive_faulty_obs, drive_faulty_stepped, FaultEvent, FaultKind, FaultOutcome,
+    FaultSchedule, HealthState, RetryPolicy, ThermalRule, WearRule,
 };
 
 use crate::coordinator::Request;
@@ -173,6 +201,161 @@ pub trait ClusterStack {
     /// clamps the stack's admission batch cap to its floor until the
     /// live temperature recovers). Default: no-op.
     fn set_emergency(&mut self, _on: bool) {}
+
+    /// The earliest future instant at which this stack's
+    /// *routing-visible* state (any [`StackSnapshot`] field a policy
+    /// reads) could change if left unstepped — the indexed stepper's
+    /// wake-up key. Must be a lower bound: returning too early is safe
+    /// (the stack is stepped where the oracle would no-op), returning
+    /// too late diverges. The default, [`f64::NEG_INFINITY`], makes the
+    /// stack due at every arrival — exactly the linear cadence — so
+    /// stacks that don't implement the hook stay correct.
+    fn next_event_s(&self) -> f64 {
+        f64::NEG_INFINITY
+    }
+}
+
+/// Which stepping strategy [`drive_stepped`] uses to advance stacks to
+/// each arrival instant. Both produce byte-identical results (the
+/// `cluster::testkit` equivalence grid pins it); `Linear` survives as
+/// the oracle and as the forced cadence for traced runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum Stepper {
+    /// Advance every stack at every arrival — O(N × events). The
+    /// reference semantics.
+    Linear,
+    /// Advance only stacks whose [`ClusterStack::next_event_s`] is due —
+    /// O(due × log N) per arrival via [`EventQueue`].
+    #[default]
+    Indexed,
+}
+
+impl Stepper {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stepper::Linear => "linear",
+            Stepper::Indexed => "indexed",
+        }
+    }
+}
+
+/// Min-heap entry: `(virtual_time, stack_idx, generation)` under
+/// `total_cmp` — the module's event ordering rule, verbatim.
+#[derive(Debug, Clone, Copy)]
+struct Wakeup {
+    t_s: f64,
+    stack: usize,
+    gen: u64,
+}
+
+impl PartialEq for Wakeup {
+    fn eq(&self, other: &Wakeup) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Wakeup {}
+impl PartialOrd for Wakeup {
+    fn partial_cmp(&self, other: &Wakeup) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Wakeup {
+    fn cmp(&self, other: &Wakeup) -> std::cmp::Ordering {
+        self.t_s
+            .total_cmp(&other.t_s)
+            .then(self.stack.cmp(&other.stack))
+            .then(self.gen.cmp(&other.gen))
+    }
+}
+
+/// The indexed stepper's next-event queue: one live entry per stack
+/// (lazy deletion — re-keying bumps the stack's generation counter and
+/// pushes a fresh entry; stale generations are skipped on pop).
+/// Everything is driven by the serial event loop, so determinism is
+/// structural here exactly as in the linear path.
+pub(crate) struct EventQueue {
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<Wakeup>>,
+    /// Generation of each stack's current live entry.
+    gen: Vec<u64>,
+    /// How far each stack has been explicitly stepped (the catch-up
+    /// pass skips stacks already at the final instant, preserving the
+    /// linear oracle's step-call sequence for always-due stacks).
+    stepped_to: Vec<f64>,
+    /// Scratch: indices due at the current instant, sorted ascending.
+    due: Vec<usize>,
+}
+
+impl EventQueue {
+    pub(crate) fn new<S: ClusterStack>(stacks: &[S]) -> EventQueue {
+        let mut q = EventQueue {
+            heap: std::collections::BinaryHeap::with_capacity(stacks.len() + 1),
+            gen: vec![0; stacks.len()],
+            stepped_to: vec![f64::NEG_INFINITY; stacks.len()],
+            due: Vec::new(),
+        };
+        for (i, s) in stacks.iter().enumerate() {
+            q.heap.push(std::cmp::Reverse(Wakeup { t_s: s.next_event_s(), stack: i, gen: 0 }));
+        }
+        q
+    }
+
+    /// Replace stack `i`'s wake-up key after its state changed (it was
+    /// stepped, pushed to, or failed).
+    pub(crate) fn rekey<S: ClusterStack>(&mut self, stacks: &[S], i: usize) {
+        self.gen[i] += 1;
+        self.heap.push(std::cmp::Reverse(Wakeup {
+            t_s: stacks[i].next_event_s(),
+            stack: i,
+            gen: self.gen[i],
+        }));
+    }
+
+    /// Advance every stack whose wake-up is due (`<= t`) to `t`, in
+    /// ascending stack index — the same order the linear loop steps
+    /// them. Pops all due entries first so a stack re-keying to an
+    /// already-past instant (e.g. the `NEG_INFINITY` default) is stepped
+    /// exactly once per event.
+    pub(crate) fn advance<S: ClusterStack>(&mut self, stacks: &mut [S], t: f64) {
+        self.due.clear();
+        while let Some(&std::cmp::Reverse(w)) = self.heap.peek() {
+            if w.t_s > t {
+                break;
+            }
+            self.heap.pop();
+            if self.gen[w.stack] == w.gen {
+                self.due.push(w.stack);
+            }
+        }
+        self.due.sort_unstable();
+        let due = std::mem::take(&mut self.due);
+        for &i in &due {
+            stacks[i].step_until(t);
+            self.stepped_to[i] = t;
+            self.rekey(stacks, i);
+        }
+        self.due = due;
+    }
+
+    /// Step stack `i` to `t` unconditionally (fault paths that mutate a
+    /// specific stack mid-event need it at the event instant first, as
+    /// the linear oracle guarantees).
+    pub(crate) fn step_one<S: ClusterStack>(&mut self, stacks: &mut [S], i: usize, t: f64) {
+        stacks[i].step_until(t);
+        self.stepped_to[i] = t;
+        self.rekey(stacks, i);
+    }
+
+    /// End-of-stream catch-up: bring every stale stack to the last event
+    /// instant. End-of-run window counters depend on the final clock, so
+    /// skipping this would diverge from the linear oracle.
+    pub(crate) fn finish<S: ClusterStack>(mut self, stacks: &mut [S], t: f64) {
+        for (i, s) in stacks.iter_mut().enumerate() {
+            if self.stepped_to[i] < t {
+                s.step_until(t);
+                self.stepped_to[i] = t;
+            }
+        }
+    }
 }
 
 /// Drive the shared arrival stream through the stacks in lockstep
@@ -215,6 +398,25 @@ pub fn drive_obs<S, F>(
     requests: &[Request],
     router: &StackRouter,
     pinned: Option<&[usize]>,
+    need_kv_bytes: F,
+    rec: &Recorder,
+) -> Vec<usize>
+where
+    S: ClusterStack,
+    F: FnMut(&Request) -> f64,
+{
+    drive_stepped(Stepper::default(), stacks, requests, router, pinned, need_kv_bytes, rec)
+}
+
+/// [`drive_obs`] with an explicit [`Stepper`] — the full-parameter core
+/// every wrapper resolves to. The `cluster::testkit` equivalence grid
+/// calls it with [`Stepper::Linear`] to run the retained oracle.
+pub fn drive_stepped<S, F>(
+    stepper: Stepper,
+    stacks: &mut [S],
+    requests: &[Request],
+    router: &StackRouter,
+    pinned: Option<&[usize]>,
     mut need_kv_bytes: F,
     rec: &Recorder,
 ) -> Vec<usize>
@@ -225,12 +427,29 @@ where
     assert!(!stacks.is_empty(), "cluster needs at least one stack");
     if let Some(a) = pinned {
         assert_eq!(a.len(), requests.len(), "pinned assignment must cover the stream");
+        // An out-of-range index means the replay does not describe this
+        // cluster (a corrupted or mismatched assignment): refuse it
+        // up front rather than silently re-routing the request.
+        for (i, &p) in a.iter().enumerate() {
+            assert!(
+                p < stacks.len(),
+                "pinned assignment out of range: request {i} -> stack {p}, \
+                 but the cluster has {} stacks (corrupted replay?)",
+                stacks.len()
+            );
+        }
     }
     let record = rec.enabled();
     // Pinned replay and round-robin never read the snapshots; skip
-    // building them (they walk per-stack queues) on those paths.
+    // building them on those paths.
     let reads_snaps =
         pinned.is_none() && router.policy != crate::traffic::router::RoutePolicy::RoundRobin;
+    // Recording forces the linear cadence: Window events are emitted as
+    // stacks step, and their order is part of the trace contract.
+    let mut queue = match stepper {
+        Stepper::Indexed if !record => Some(EventQueue::new(stacks)),
+        _ => None,
+    };
     let mut assignment = Vec::with_capacity(requests.len());
     let mut snaps: Vec<StackSnapshot> = Vec::with_capacity(stacks.len());
     let mut prev_t = f64::NEG_INFINITY;
@@ -238,21 +457,52 @@ where
         let t = r.arrival_s;
         debug_assert!(t >= prev_t, "arrival stream must be sorted");
         prev_t = t;
-        // (virtual_time, stack_idx, seq_no): advance every stack to this
-        // instant in index order, snapshot in index order, then route.
-        for s in stacks.iter_mut() {
-            s.step_until(t);
-        }
-        if reads_snaps || record {
-            snaps.clear();
-            for (i, s) in stacks.iter().enumerate() {
-                snaps.push(s.snapshot(i));
+        // (virtual_time, stack_idx, seq_no): advance the stacks with
+        // work before this instant in index order, snapshot in index
+        // order, then route.
+        match &mut queue {
+            Some(q) => q.advance(stacks, t),
+            None => {
+                for s in stacks.iter_mut() {
+                    s.step_until(t);
+                }
             }
         }
-        let need = if pinned.is_none() || record { need_kv_bytes(r) } else { 0.0 };
+        // JSQ(d): snapshot only the seeded candidate draw when sampling
+        // is active (None = the full-snapshot path, which is also what
+        // `--sample-d` >= N resolves to, bit-exactly).
+        let sampled = if reads_snaps || record { router.sample(seq_no as u64) } else { None };
+        if reads_snaps || record {
+            snaps.clear();
+            match &sampled {
+                Some(cands) => {
+                    for &i in cands {
+                        snaps.push(stacks[i].snapshot(i));
+                    }
+                }
+                None => {
+                    for (i, s) in stacks.iter().enumerate() {
+                        snaps.push(s.snapshot(i));
+                    }
+                }
+            }
+        }
+        // Only the kv-aware ranking ever consumes the KV reservation —
+        // for every other policy (and for pinned replay without a rank
+        // to record) the closure's result would be dropped unread.
+        let need = if router.policy == crate::traffic::router::RoutePolicy::KvAware
+            && (pinned.is_none() || record)
+        {
+            need_kv_bytes(r)
+        } else {
+            0.0
+        };
         let pick = match pinned {
-            Some(a) => a[seq_no].min(stacks.len() - 1),
-            None => router.choose(seq_no as u64, t, &snaps, need),
+            Some(a) => a[seq_no],
+            None => match &sampled {
+                Some(_) => router.choose_sampled(t, &snaps, need),
+                None => router.choose(seq_no as u64, t, &snaps, need),
+            },
         };
         if record {
             rec.arrival(t, r.id);
@@ -267,7 +517,15 @@ where
             rec.route(t, r.id, router.policy.name(), Some(pick), candidates);
         }
         stacks[pick].push(r.clone());
+        if let Some(q) = &mut queue {
+            q.rekey(stacks, pick);
+        }
         assignment.push(pick);
+    }
+    if let Some(q) = queue {
+        if prev_t > f64::NEG_INFINITY {
+            q.finish(stacks, prev_t);
+        }
     }
     assignment
 }
@@ -344,14 +602,96 @@ mod tests {
     }
 
     #[test]
-    fn pinned_assignment_overrides_policy_and_clamps() {
+    fn pinned_assignment_overrides_policy() {
         let mut stacks = vec![Probe::new(), Probe::new()];
         let reqs = stream(4, 0.1);
         let router = StackRouter::new(2, RoutePolicy::JoinShortestQueue);
-        let pin = vec![1usize, 1, 0, 9]; // 9 clamps to the last stack
+        let pin = vec![1usize, 1, 0, 1];
         let got = drive(&mut stacks, &reqs, &router, Some(&pin), |_| 0.0);
-        assert_eq!(got, vec![1, 1, 0, 1]);
+        assert_eq!(got, pin);
         assert_eq!(stacks[1].pushed, vec![0, 1, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "pinned assignment out of range")]
+    fn out_of_range_pinned_assignment_is_a_clean_error() {
+        // A pinned index past the cluster means the replay does not
+        // describe this cluster; it used to clamp silently to the last
+        // stack, hiding the corruption.
+        let mut stacks = vec![Probe::new(), Probe::new()];
+        let reqs = stream(4, 0.1);
+        let router = StackRouter::new(2, RoutePolicy::JoinShortestQueue);
+        let pin = vec![1usize, 1, 0, 9];
+        drive(&mut stacks, &reqs, &router, Some(&pin), |_| 0.0);
+    }
+
+    #[test]
+    fn indexed_stepper_matches_linear_on_probes() {
+        // The Probe's default next_event_s (NEG_INFINITY) makes every
+        // stack due at every arrival, so the indexed stepper must
+        // reproduce the linear oracle's step-call sequence exactly —
+        // including the ascending-index order within each instant.
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::JoinShortestQueue] {
+            let reqs = stream(9, 0.25);
+            let router = StackRouter::new(3, policy);
+            let rec = Recorder::Off;
+            let mut lin = vec![Probe::new(), Probe::new(), Probe::new()];
+            let a = drive_stepped(
+                Stepper::Linear, &mut lin, &reqs, &router, None, |_| 0.0, &rec,
+            );
+            let mut idx = vec![Probe::new(), Probe::new(), Probe::new()];
+            let b = drive_stepped(
+                Stepper::Indexed, &mut idx, &reqs, &router, None, |_| 0.0, &rec,
+            );
+            assert_eq!(a, b, "{policy:?}: assignment must not depend on the stepper");
+            for (l, i) in lin.iter().zip(&idx) {
+                assert_eq!(l.deadlines, i.deadlines, "{policy:?}: same step cadence");
+                assert_eq!(l.pushed, i.pushed);
+            }
+        }
+    }
+
+    /// A stack that sleeps until its declared wake-up: records which
+    /// deadlines it actually saw, and only has work every `period`.
+    struct Sleeper {
+        deadlines: Vec<f64>,
+        clock: f64,
+        period: f64,
+    }
+
+    impl ClusterStack for Sleeper {
+        fn step_until(&mut self, deadline_s: f64) {
+            self.deadlines.push(deadline_s);
+            self.clock = self.clock.max(deadline_s);
+        }
+
+        fn snapshot(&self, stack: usize) -> StackSnapshot {
+            Probe::new().snapshot(stack)
+        }
+
+        fn push(&mut self, _req: Request) {}
+
+        fn next_event_s(&self) -> f64 {
+            // Next period boundary strictly after the clock.
+            (self.clock / self.period).floor() * self.period + self.period
+        }
+    }
+
+    #[test]
+    fn indexed_stepper_skips_idle_stacks_and_catches_up_at_the_end() {
+        // Arrivals every 0.1 s; the sleeper only wakes each 1.0 s. The
+        // indexed stepper must step it at period boundaries (non-strict:
+        // an arrival exactly at the boundary wakes it) plus the final
+        // catch-up instant — not at all 21 arrivals.
+        let mut stacks = vec![Sleeper { deadlines: Vec::new(), clock: 0.0, period: 1.0 }];
+        let reqs = stream(21, 0.1); // t = 0.0 .. 2.0
+        let router = StackRouter::new(1, RoutePolicy::RoundRobin);
+        drive(&mut stacks, &reqs, &router, None, |_| 0.0);
+        assert_eq!(
+            stacks[0].deadlines,
+            vec![1.0, 2.0],
+            "due exactly at its boundaries; 2.0 is both a boundary and the last arrival"
+        );
     }
 
     #[test]

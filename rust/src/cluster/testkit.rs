@@ -1,0 +1,260 @@
+//! Equivalence and determinism harness for the cluster steppers
+//! (PR 9's pin). The indexed next-event stepper ([`Stepper::Indexed`])
+//! is an optimization, not a semantics change: every cell of the grid
+//! below runs the same scenario under the retained linear oracle
+//! ([`Stepper::Linear`]) and under the heap, and asserts byte-identical
+//! serialized output — reports, failover ledgers, traces. The grid
+//! spans cluster size, routing policy, fault pressure, disaggregation
+//! and tracing, because each axis exercises a different part of the
+//! stepping contract (snapshot staleness, kill-path catch-up, the
+//! record→linear fallback, the parallel post-stream drain).
+//!
+//! The harness lives here rather than next to either caller because it
+//! pins the *cluster* contract: any new [`ClusterStack`] implementation
+//! or stepping strategy must survive this grid unchanged. Proof sketch
+//! for why the heap is equivalent: DESIGN.md §Cluster.
+
+use crate::cluster::{self, FaultSchedule, Stepper};
+use crate::config::Config;
+use crate::decode::decodetest;
+use crate::decode::DecodeConfig;
+use crate::fleet::{self, FleetConfig};
+use crate::model::ModelId;
+use crate::obs::Recorder;
+use crate::traffic::{ArrivalPattern, OutputLenDist, RequestMix, RoutePolicy};
+use crate::util::rng::Rng;
+
+/// All snapshot-reading policies plus round-robin — the live-routing
+/// axis of the grid. Pinned replay is exercised separately through
+/// [`decodetest::run_prepass_kv`].
+const POLICIES: [RoutePolicy; 4] = [
+    RoutePolicy::JoinShortestQueue,
+    RoutePolicy::KvAware,
+    RoutePolicy::LatencyAware,
+    RoutePolicy::RoundRobin,
+];
+
+fn scenario(n: usize, policy: RoutePolicy, stepper: Stepper) -> DecodeConfig {
+    let mix = RequestMix::single(ModelId::BertBase)
+        .with_output(OutputLenDist::Geometric { mean: 8.0 });
+    // Offered load scales with the cluster so big-N cells actually
+    // spread work (and so heap order at equal instants gets exercised),
+    // while the request count stays test-sized.
+    let mut dc = DecodeConfig::new(ArrivalPattern::Poisson { rps: 25.0 * n as f64 }, mix);
+    dc.duration_s = 0.2;
+    dc.stacks = n;
+    dc.policy = policy;
+    dc.seed = 0x51ED ^ n as u64;
+    dc.threads = 1;
+    dc.stepper = stepper;
+    dc
+}
+
+/// Serialize a fault-free run: the full `BENCH_decode.json` document.
+fn fingerprint(dc: &DecodeConfig) -> String {
+    decodetest::run(&Config::default(), dc).to_json(dc).pretty()
+}
+
+#[test]
+fn grid_indexed_matches_linear_fault_free() {
+    for n in [1usize, 2, 8, 64, 256] {
+        for policy in POLICIES {
+            let lin = fingerprint(&scenario(n, policy, Stepper::Linear));
+            let idx = fingerprint(&scenario(n, policy, Stepper::Indexed));
+            assert_eq!(lin, idx, "N={n} {}: stepper must be invisible", policy.name());
+        }
+    }
+}
+
+#[test]
+fn grid_indexed_matches_linear_on_pinned_replay() {
+    // Pinned replay never consults the policy, so the stepper is the
+    // only moving part — and the KV prepass assignment spreads work
+    // unevenly, which is exactly when stale-stack catch-up matters.
+    let cfg = Config::default();
+    for n in [2usize, 8, 64] {
+        let lin = scenario(n, RoutePolicy::KvAware, Stepper::Linear);
+        let mut idx = scenario(n, RoutePolicy::KvAware, Stepper::Indexed);
+        let a = decodetest::run_prepass_kv(&cfg, &lin).to_json(&lin).pretty();
+        let b = decodetest::run_prepass_kv(&cfg, &idx).to_json(&idx).pretty();
+        assert_eq!(a, b, "N={n}: pinned replay must not depend on the stepper");
+        // And the replay equals itself across thread counts (the
+        // parallel drain is behind the same report).
+        idx.threads = 4;
+        let c = decodetest::run_prepass_kv(&cfg, &idx).to_json(&idx).pretty();
+        assert_eq!(a, c, "N={n}: thread count must not change pinned output");
+    }
+}
+
+#[test]
+fn grid_indexed_matches_linear_under_faults() {
+    // Generated schedules mix crashes and stalls (heap path) with
+    // occasional thermal/wear rules (which force the linear fallback —
+    // those cells pin that the fallback dispatch is seamless).
+    let cfg = Config::default();
+    for n in [2usize, 8, 64] {
+        for policy in [RoutePolicy::JoinShortestQueue, RoutePolicy::KvAware, RoutePolicy::RoundRobin]
+        {
+            for fault_seed in [1u64, 9] {
+                let schedule = FaultSchedule::generate(fault_seed, n, 0.2);
+                let lin = scenario(n, policy, Stepper::Linear);
+                let idx = scenario(n, policy, Stepper::Indexed);
+                let (ra, oa) = decodetest::run_with_faults(&cfg, &lin, &schedule);
+                let (rb, ob) = decodetest::run_with_faults(&cfg, &idx, &schedule);
+                assert_eq!(
+                    ra.to_json(&lin).pretty(),
+                    rb.to_json(&idx).pretty(),
+                    "N={n} {} seed {fault_seed}: faulted report diverged",
+                    policy.name()
+                );
+                assert_eq!(
+                    oa.to_json().pretty(),
+                    ob.to_json().pretty(),
+                    "N={n} {} seed {fault_seed}: failover ledger diverged",
+                    policy.name()
+                );
+            }
+        }
+    }
+    // The hand-built crash + thermal-quarantine scenario: thermal rules
+    // read every stack per arrival, so this cell runs the documented
+    // linear fallback on both sides and must still agree.
+    let (mut dc, schedule) = decodetest::faulted_cluster_scenario(RoutePolicy::KvAware);
+    dc.stepper = Stepper::Linear;
+    let (ra, oa) = decodetest::run_with_faults(&cfg, &dc, &schedule);
+    dc.stepper = Stepper::Indexed;
+    let (rb, ob) = decodetest::run_with_faults(&cfg, &dc, &schedule);
+    assert_eq!(ra.to_json(&dc).pretty(), rb.to_json(&dc).pretty());
+    assert_eq!(oa.to_json().pretty(), ob.to_json().pretty());
+}
+
+#[test]
+fn traced_runs_agree_bytewise_and_recording_changes_nothing() {
+    // Recording forces the linear cadence (Window-event order is part
+    // of the trace contract), so a traced indexed run must produce the
+    // linear oracle's trace byte for byte — and tracing must never
+    // change the report itself.
+    let cfg = Config::default();
+    let dc_lin = scenario(8, RoutePolicy::JoinShortestQueue, Stepper::Linear);
+    let dc_idx = scenario(8, RoutePolicy::JoinShortestQueue, Stepper::Indexed);
+
+    let rec_lin = Recorder::on();
+    let rep_lin = decodetest::run_traced(&cfg, &dc_lin, &rec_lin);
+    let rec_idx = Recorder::on();
+    let rep_idx = decodetest::run_traced(&cfg, &dc_idx, &rec_idx);
+    assert_eq!(
+        rec_lin.trace_json().unwrap().pretty(),
+        rec_idx.trace_json().unwrap().pretty(),
+        "traces must be byte-identical across steppers"
+    );
+    assert_eq!(
+        rec_lin.metrics_jsonl().unwrap(),
+        rec_idx.metrics_jsonl().unwrap(),
+        "metrics series must be byte-identical across steppers"
+    );
+    assert_eq!(
+        rep_lin.to_json(&dc_lin).pretty(),
+        rep_idx.to_json(&dc_idx).pretty()
+    );
+    // Tracing itself is invisible to the results.
+    assert_eq!(
+        fingerprint(&dc_idx),
+        rep_idx.to_json(&dc_idx).pretty(),
+        "a live recorder must not change the report"
+    );
+}
+
+#[test]
+fn jsq_d_saturated_is_bit_exact_and_fixed_d_is_deterministic() {
+    // `d == 0` and any `d >= stacks` resolve to the full-snapshot path
+    // (StackRouter::sample returns None), so all of these are one
+    // equivalence class — bit for bit.
+    let base = scenario(8, RoutePolicy::JoinShortestQueue, Stepper::Indexed);
+    let full = fingerprint(&base);
+    for d in [8usize, 9, 1000] {
+        let mut dc = base.clone();
+        dc.sample_d = d;
+        assert_eq!(full, fingerprint(&dc), "d={d} >= stacks must equal full snapshots");
+    }
+    // A real sampling degree changes the assignment but is a pure
+    // function of (seed, seq_no): identical across repeat runs, across
+    // thread counts, and across steppers.
+    let mut dc = base.clone();
+    dc.sample_d = 2;
+    let once = fingerprint(&dc);
+    assert_eq!(once, fingerprint(&dc), "JSQ(2) must reproduce run-to-run");
+    let mut threaded = dc.clone();
+    threaded.threads = 4;
+    assert_eq!(once, fingerprint(&threaded), "JSQ(2) must not see thread count");
+    let mut linear = dc.clone();
+    linear.stepper = Stepper::Linear;
+    assert_eq!(once, fingerprint(&linear), "JSQ(2) must not see the stepper");
+    // And sampling composes with the fault driver the same way.
+    let schedule = FaultSchedule::generate(3, 8, 0.2);
+    let cfg = Config::default();
+    let (_, oa) = decodetest::run_with_faults(&cfg, &dc, &schedule);
+    let (_, ob) = decodetest::run_with_faults(&cfg, &linear, &schedule);
+    assert_eq!(oa.to_json().pretty(), ob.to_json().pretty());
+}
+
+#[test]
+fn disaggregated_drain_is_stepper_and_thread_invariant() {
+    // The disaggregated fleet steps linearly by design (hand-off
+    // delivery couples the stacks), but its post-stream drain now fans
+    // out — so the cell pins thread-count and stepper-field invariance.
+    let cfg = Config::default();
+    let run = |threads: usize, stepper: Stepper| {
+        let mut dc = scenario(4, RoutePolicy::JoinShortestQueue, stepper);
+        dc.threads = threads;
+        let fc = FleetConfig {
+            dc,
+            prefill_stacks: 2,
+            transfer_bw_bps: None,
+            crash: Some((0.05, 0)),
+        };
+        let (report, outcome) = fleet::run_disaggregated(&cfg, &fc);
+        format!("{}\n{}", report.to_json(&fc.dc).pretty(), outcome.to_json().pretty())
+    };
+    let a = run(1, Stepper::Indexed);
+    assert_eq!(a, run(4, Stepper::Indexed), "drain must not see thread count");
+    assert_eq!(a, run(1, Stepper::Linear), "fleet ignores the stepper knob");
+}
+
+#[test]
+fn random_scenarios_conserve_requests_and_never_leak_kv() {
+    // 100 seeded draws over cluster size, load, output mix, sampling
+    // degree and fault pressure, all through the indexed stepper: every
+    // request resolves exactly once and the KV pools drain to zero.
+    let cfg = Config::default();
+    let mut rng = Rng::new(0xD15C0);
+    for draw in 0..100u64 {
+        let n = 1 + rng.below(32);
+        let rps = 50.0 + rng.below(400) as f64;
+        let policy = POLICIES[rng.below(POLICIES.len())];
+        let mean = 4.0 + rng.below(12) as f64;
+        let mix =
+            RequestMix::single(ModelId::BertBase).with_output(OutputLenDist::Geometric { mean });
+        let mut dc = DecodeConfig::new(ArrivalPattern::Poisson { rps }, mix);
+        dc.duration_s = 0.15;
+        dc.stacks = n;
+        dc.policy = policy;
+        dc.seed = draw ^ 0xFACE;
+        dc.threads = 1;
+        dc.sample_d = rng.below(n + 2);
+        let schedule = if rng.chance(0.5) {
+            FaultSchedule::generate(draw, n, dc.duration_s)
+        } else {
+            FaultSchedule::empty()
+        };
+        let (report, out) = decodetest::run_with_faults(&cfg, &dc, &schedule);
+        let t = &report.total;
+        assert!(
+            out.conserved(t.submitted, t.completed, t.shed, t.refused_kv),
+            "draw {draw} (N={n}, {}, d={}): lost a request",
+            policy.name(),
+            dc.sample_d
+        );
+        assert_eq!(out.kv_reserved_end_bytes, 0.0, "draw {draw}: leaked reservations");
+        assert_eq!(out.kv_used_end_bytes, 0.0, "draw {draw}: leaked cache bytes");
+    }
+}

@@ -479,7 +479,7 @@ fn run_inner(
         )),
     };
 
-    let router = StackRouter::new(dc.stacks, dc.policy);
+    let router = StackRouter::new(dc.stacks, dc.policy).with_sampling(dc.sample_d, dc.seed);
     debug_assert_eq!(archs.len(), router.stacks);
     let mut stacks: Vec<DecodeStack> = archs
         .iter()
@@ -502,10 +502,19 @@ fn run_inner(
     };
     let fault_outcome = match faults {
         None => {
-            cluster::drive_obs(&mut stacks, &requests, &router, pinned.as_deref(), need, rec);
+            cluster::drive_stepped(
+                dc.stepper,
+                &mut stacks,
+                &requests,
+                &router,
+                pinned.as_deref(),
+                need,
+                rec,
+            );
             None
         }
-        Some(schedule) => Some(cluster::drive_faulty_obs(
+        Some(schedule) => Some(cluster::drive_faulty_stepped(
+            dc.stepper,
             &mut stacks,
             &requests,
             &router,
@@ -514,8 +523,13 @@ fn run_inner(
             rec,
         )),
     };
-    let outcomes: Vec<DecodeStackOutcome> =
-        stacks.into_iter().map(DecodeStack::finish).collect();
+    // Post-stream drain: independent per stack, so it fans out — except
+    // under a live recorder, where the serial drain keeps trace order.
+    let outcomes: Vec<DecodeStackOutcome> = if rec.enabled() {
+        stacks.into_iter().map(DecodeStack::finish).collect()
+    } else {
+        pool::par_map_owned(stacks, threads, DecodeStack::finish)
+    };
     let fault_outcome = fault_outcome.map(|mut o| {
         o.kv_reserved_end_bytes = outcomes.iter().map(|s| s.kv_reserved_end_bytes).sum();
         o.kv_used_end_bytes = outcomes.iter().map(|s| s.kv_used_end_bytes).sum();

@@ -118,6 +118,16 @@ pub struct DecodeConfig {
     /// entry broadcasts to all stacks; otherwise the length must equal
     /// `stacks` (the CLI validates).
     pub archs: Vec<StackArchId>,
+    /// Cluster stepping strategy ([`cluster::Stepper`], default
+    /// indexed). The `cluster::testkit` grid pins the two bit-identical;
+    /// the linear oracle stays selectable for the equivalence harness
+    /// and for bisection when a new stack type lands.
+    pub stepper: cluster::Stepper,
+    /// JSQ(d) snapshot sampling: per arrival the router snapshots only
+    /// `sample_d` seeded-random candidate stacks instead of all of them.
+    /// 0 (default) and any `d >= stacks` mean full snapshots —
+    /// bit-identical to the pre-sampling router.
+    pub sample_d: usize,
 }
 
 impl DecodeConfig {
@@ -136,6 +146,8 @@ impl DecodeConfig {
             throttle: ThrottleConfig::default(),
             threads: 0,
             archs: Vec::new(),
+            stepper: cluster::Stepper::default(),
+            sample_d: 0,
         }
     }
 }
@@ -1323,6 +1335,52 @@ impl ClusterStack for DecodeStack<'_> {
             if let Advance::Stop = self.advance(Some(deadline_s)) {
                 break;
             }
+        }
+    }
+
+    fn next_event_s(&self) -> f64 {
+        // Wakeup bound for the indexed cluster stepper: never later than
+        // the next instant this stack's routing-visible state (snapshot
+        // fields, completion counters) can change. Earlier is always
+        // safe — the stack just steps and finds nothing due.
+        if self.done {
+            return f64::INFINITY;
+        }
+        if !self.running.is_empty() {
+            // Generations in flight: windows launch back-to-back from
+            // `self.t`, so the stack is always due.
+            return self.t;
+        }
+        let next_arrival = self
+            .pending
+            .front()
+            .map_or(f64::INFINITY, |r| r.arrival_s);
+        let next_handoff = self
+            .handoffs
+            .front()
+            .map_or(f64::INFINITY, |h| h.ready_s);
+        let pending_work = self.partial.is_some() || !self.waiting.is_empty();
+        if pending_work {
+            if self.t < self.admit_block_until {
+                // Thermally blocked: nothing changes until the block
+                // lifts, new work lands, or a waiting request ages past
+                // the queue-wait bound and sheds.
+                let ageout = self
+                    .waiting
+                    .front()
+                    .map_or(f64::INFINITY, |r| r.arrival_s + self.wait);
+                self.admit_block_until
+                    .min(next_handoff)
+                    .min(next_arrival)
+                    .min(ageout)
+            } else {
+                // Launchable work (or the defensive shed path): due now.
+                self.t
+            }
+        } else {
+            // Fully idle: asleep until the next routed arrival becomes
+            // ingestible or a hand-off finishes its wire residency.
+            next_arrival.min(next_handoff)
         }
     }
 

@@ -785,7 +785,17 @@ pub fn run_disaggregated_traced(
         &decode_mask, bw, &mut handoff_seq, rec, &mut out,
     );
 
-    let outcomes = stacks.into_iter().map(DecodeStack::finish).collect();
+    // Post-stream drain: hand-offs are all delivered by now, so the
+    // per-stack `finish()` calls are independent and fan out across
+    // workers — except under a live recorder, where the serial drain
+    // keeps the trace's window-event order. (The per-arrival stepping
+    // above stays linear: prefill→decode hand-off delivery couples the
+    // stacks, so there is no idle set to skip.)
+    let outcomes = if rec.enabled() {
+        stacks.into_iter().map(DecodeStack::finish).collect()
+    } else {
+        crate::util::pool::par_map_owned(stacks, threads, DecodeStack::finish)
+    };
     let report = decodetest::aggregate(dc, outcomes);
     (report, out)
 }

@@ -186,6 +186,8 @@ COMMANDS:
                --duration S --stacks N --policy jsq|rr|kv|latency --models a,b
                --arch a,b,... (per-stack architectures; see decodetest)
                --batch N --slo S --ceiling C --uncontrolled
+               --sample-d D (JSQ(d): snapshot D sampled stacks per
+                 arrival; 0 or D >= stacks = full snapshots)
                --trace FILE (replay) --threads N --out BENCH_serve.json
                --trace-out FILE (Perfetto trace_event JSON)
                --metrics-out FILE (per-window metrics JSONL)]
@@ -202,6 +204,7 @@ COMMANDS:
                --max-running N (1 = one-at-a-time) --prefill-batch N
                --chunk-tokens N (0 = whole-prompt prefills)
                --kv-mib M --kv-sm-frac F --ceiling C --uncontrolled
+               --sample-d D (JSQ(d) snapshot sampling; see loadtest)
                --trace FILE (replay) --threads N --out BENCH_decode.json
                --trace-out FILE --metrics-out FILE]
   faulttest   decode run under a deterministic fault schedule: stack
@@ -353,6 +356,7 @@ struct TrafficArgs {
     threads: usize,
     ceiling: Option<f64>,
     uncontrolled: bool,
+    sample_d: usize,
 }
 
 /// Parse the shared traffic surface. Unknown or missing `--policy`
@@ -376,6 +380,7 @@ fn parse_traffic(args: &Args, default_rps: f64, default_duration: f64) -> Result
         }
         None => RoutePolicy::JoinShortestQueue,
     };
+    let sample_d = args.get_usize("sample-d", 0)?;
     let pattern = parse_pattern(args, rps, duration)?;
     // Replay traces carry their own arrival instants; every generated
     // pattern needs a positive rate or the run would serve nothing (or
@@ -396,6 +401,7 @@ fn parse_traffic(args: &Args, default_rps: f64, default_duration: f64) -> Result
             None => None,
         },
         uncontrolled: args.has("uncontrolled"),
+        sample_d,
     })
 }
 
@@ -624,6 +630,7 @@ fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     lt.batcher.max_batch = args.get_usize("batch", 8)?;
     lt.slo_s = args.get_f64("slo", 0.25)?;
     lt.threads = t.threads;
+    lt.sample_d = t.sample_d;
     lt.throttle.ceiling_c = t.ceiling.unwrap_or(lt.throttle.ceiling_c);
     lt.throttle.enabled = !t.uncontrolled;
     let duration = t.duration;
@@ -684,6 +691,7 @@ fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     dc.kv.capacity_bytes = args.get_f64("kv-mib", 128.0)? * 1024.0 * 1024.0;
     dc.kv.sm_frac = args.get_f64("kv-sm-frac", dc.kv.sm_frac)?;
     dc.threads = ta.threads;
+    dc.sample_d = ta.sample_d;
     dc.throttle.ceiling_c = ta.ceiling.unwrap_or(dc.throttle.ceiling_c);
     dc.throttle.enabled = !ta.uncontrolled;
 
@@ -852,6 +860,7 @@ fn cmd_faulttest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     dc.kv.capacity_bytes = args.get_f64("kv-mib", 128.0)? * 1024.0 * 1024.0;
     dc.kv.sm_frac = args.get_f64("kv-sm-frac", dc.kv.sm_frac)?;
     dc.threads = ta.threads;
+    dc.sample_d = ta.sample_d;
     dc.throttle.ceiling_c = ta.ceiling.unwrap_or(dc.throttle.ceiling_c);
     dc.throttle.enabled = !ta.uncontrolled;
 
@@ -988,6 +997,21 @@ mod tests {
         assert_eq!(t.stacks, 2);
         assert_eq!(t.models, vec![ModelId::BertBase]);
         assert!(t.archs.is_empty(), "no --arch means the hetrax3d default");
+    }
+
+    #[test]
+    fn sample_d_parses_and_defaults_to_full_snapshots() {
+        let t = parse_traffic(&args(&[]), 200.0, 1.0).expect("defaults must parse");
+        assert_eq!(t.sample_d, 0, "no --sample-d means full snapshots");
+        let t = parse_traffic(
+            &args(&[("stacks", Some("64")), ("sample-d", Some("4"))]),
+            200.0,
+            1.0,
+        )
+        .expect("--sample-d must parse");
+        assert_eq!(t.sample_d, 4);
+        let e = parse_traffic(&args(&[("sample-d", Some("two"))]), 200.0, 1.0).unwrap_err();
+        assert!(e.to_string().contains("sample-d"), "{e}");
     }
 
     #[test]

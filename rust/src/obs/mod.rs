@@ -43,9 +43,8 @@
 pub mod export;
 pub mod inspect;
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::util::json::Json;
 
@@ -183,10 +182,14 @@ pub struct TraceBuf {
 }
 
 /// The observability handle threaded through the serving stack. Cheap
-/// to clone ([`Recorder::Off`] is a unit; the on-state is an `Rc`) and
-/// safe to share across stacks because all stack stepping, finishing,
-/// and event-loop work is serial — the worker pool only parallelizes
-/// pure phase-table construction, which never records.
+/// to clone ([`Recorder::Off`] is a unit; the on-state is an
+/// `Arc<Mutex<..>>`, making stacks `Send` so the post-stream drain can
+/// fan out across the worker pool when the recorder is off). When a
+/// recorder is *live* every drain and event-loop pass runs serially —
+/// trace event order is part of the determinism contract, so recording
+/// paths never share the buffer across threads, and the lock is
+/// therefore uncontended (it exists to satisfy `Send`, not to
+/// synchronize).
 ///
 /// Every recording method is a no-op behind a single discriminant
 /// branch when the recorder is [`Recorder::Off`] — the zero-overhead
@@ -197,13 +200,13 @@ pub enum Recorder {
     #[default]
     Off,
     /// Append to the shared buffer.
-    On(Rc<RefCell<TraceBuf>>),
+    On(Arc<Mutex<TraceBuf>>),
 }
 
 impl Recorder {
     /// A recorder with a fresh, empty buffer.
     pub fn on() -> Recorder {
-        Recorder::On(Rc::new(RefCell::new(TraceBuf::default())))
+        Recorder::On(Arc::new(Mutex::new(TraceBuf::default())))
     }
 
     /// Whether recording is active. Callers building non-trivial event
@@ -217,14 +220,14 @@ impl Recorder {
     #[inline]
     fn push(&self, ev: Event) {
         if let Recorder::On(buf) = self {
-            buf.borrow_mut().events.push(ev);
+            buf.lock().expect("trace buffer poisoned").events.push(ev);
         }
     }
 
     /// Name a stack's track (shown by Perfetto and the inspect digest).
     pub fn stack_label(&self, stack: usize, label: String) {
         if let Recorder::On(buf) = self {
-            buf.borrow_mut().labels.insert(stack, label);
+            buf.lock().expect("trace buffer poisoned").labels.insert(stack, label);
         }
     }
 
@@ -322,7 +325,9 @@ impl Recorder {
     pub fn trace_json(&self) -> Option<Json> {
         match self {
             Recorder::Off => None,
-            Recorder::On(buf) => Some(export::trace_json(&buf.borrow())),
+            Recorder::On(buf) => {
+                Some(export::trace_json(&buf.lock().expect("trace buffer poisoned")))
+            }
         }
     }
 
@@ -330,7 +335,9 @@ impl Recorder {
     pub fn metrics_jsonl(&self) -> Option<String> {
         match self {
             Recorder::Off => None,
-            Recorder::On(buf) => Some(export::metrics_jsonl(&buf.borrow())),
+            Recorder::On(buf) => {
+                Some(export::metrics_jsonl(&buf.lock().expect("trace buffer poisoned")))
+            }
         }
     }
 
@@ -338,7 +345,7 @@ impl Recorder {
     pub fn with_buf<T>(&self, f: impl FnOnce(&TraceBuf) -> T) -> Option<T> {
         match self {
             Recorder::Off => None,
-            Recorder::On(buf) => Some(f(&buf.borrow())),
+            Recorder::On(buf) => Some(f(&buf.lock().expect("trace buffer poisoned"))),
         }
     }
 }

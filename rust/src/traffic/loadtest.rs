@@ -51,6 +51,12 @@ pub struct LoadtestConfig {
     /// hetrax3d (bit-identical to the pre-fleet path), one entry
     /// broadcasts, otherwise one entry per stack.
     pub archs: Vec<StackArchId>,
+    /// Cluster stepping strategy (default indexed); the linear oracle
+    /// stays selectable for the `cluster::testkit` equivalence grid.
+    pub stepper: cluster::Stepper,
+    /// JSQ(d) snapshot sampling degree: 0 (default) or `d >= stacks`
+    /// means full snapshots, bit-identical to the pre-sampling router.
+    pub sample_d: usize,
 }
 
 impl LoadtestConfig {
@@ -67,6 +73,8 @@ impl LoadtestConfig {
             slo_s: 0.25,
             threads: 0,
             archs: Vec::new(),
+            stepper: cluster::Stepper::default(),
+            sample_d: 0,
         }
     }
 }
@@ -485,6 +493,19 @@ impl ClusterStack for ServeStack<'_> {
         }
     }
 
+    fn next_event_s(&self) -> f64 {
+        // A serve stack runs fixed windows back-to-back: the next state
+        // change is the end of the window in progress. `step_until`
+        // pops a window once its end is at or before the cluster's
+        // instant, so this bound is exact (and the non-strict heap pop
+        // keeps the boundary-equal window in the same order).
+        if self.done {
+            f64::INFINITY
+        } else {
+            self.t + self.interval
+        }
+    }
+
     fn snapshot(&self, stack: usize) -> StackSnapshot {
         StackSnapshot {
             stack,
@@ -584,7 +605,7 @@ pub fn run_traced(cfg: &Config, lt: &LoadtestConfig, rec: &Recorder) -> Loadtest
         .map(|c| phase_table(c, &requests, threads))
         .collect();
 
-    let router = StackRouter::new(lt.stacks, lt.policy);
+    let router = StackRouter::new(lt.stacks, lt.policy).with_sampling(lt.sample_d, lt.seed);
     debug_assert_eq!(archs.len(), router.stacks);
     let mut stacks: Vec<ServeStack> = archs
         .iter()
@@ -600,8 +621,16 @@ pub fn run_traced(cfg: &Config, lt: &LoadtestConfig, rec: &Recorder) -> Loadtest
         })
         .collect();
     // One-shot prefill traffic holds no KV residency: need 0 bytes.
-    cluster::drive_obs(&mut stacks, &requests, &router, None, |_| 0.0, rec);
-    let outcomes: Vec<StackOutcome> = stacks.into_iter().map(ServeStack::finish).collect();
+    cluster::drive_stepped(lt.stepper, &mut stacks, &requests, &router, None, |_| 0.0, rec);
+    // Post-stream drain: once arrivals end the per-stack `finish()`
+    // calls are independent, so they fan out across workers — except
+    // under a live recorder, where the serial drain keeps the trace's
+    // window-event order.
+    let outcomes: Vec<StackOutcome> = if rec.enabled() {
+        stacks.into_iter().map(ServeStack::finish).collect()
+    } else {
+        pool::par_map_owned(stacks, threads, ServeStack::finish)
+    };
 
     let mut total = StackTelemetry::new();
     let mut peak_c = 0.0f64;

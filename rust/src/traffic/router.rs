@@ -13,6 +13,7 @@
 //! DESIGN.md §Cluster.
 
 use crate::cluster::StackSnapshot;
+use crate::util::rng::Rng;
 
 /// Request-to-stack dispatch policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -81,11 +82,99 @@ impl RoutePolicy {
 pub struct StackRouter {
     pub stacks: usize,
     pub policy: RoutePolicy,
+    /// Power-of-d-choices snapshot sampling (JSQ(d)): when non-zero and
+    /// `< stacks`, snapshot-reading policies rank `sample_d` seeded
+    /// candidate stacks per arrival instead of all `stacks`. `0`
+    /// disables; `>= stacks` reproduces full-snapshot routing
+    /// bit-exactly ([`StackRouter::sample`] returns `None` for both).
+    pub sample_d: usize,
+    /// Seed for the per-arrival candidate draw; folded with the
+    /// arrival's `seq_no` so the draw is a pure function of
+    /// `(sample_seed, seq_no)` — deterministic across runs and threads.
+    pub sample_seed: u64,
 }
 
 impl StackRouter {
     pub fn new(stacks: usize, policy: RoutePolicy) -> StackRouter {
-        StackRouter { stacks: stacks.max(1), policy }
+        StackRouter { stacks: stacks.max(1), policy, sample_d: 0, sample_seed: 0 }
+    }
+
+    /// Enable JSQ(d) candidate sampling (see [`StackRouter::sample_d`]).
+    pub fn with_sampling(mut self, d: usize, seed: u64) -> StackRouter {
+        self.sample_d = d;
+        self.sample_seed = seed;
+        self
+    }
+
+    /// The candidate set for the arrival at `seq_no`, or `None` when the
+    /// full snapshot path applies (sampling off, `d >= stacks`, or
+    /// round-robin, which never reads snapshots). The draw is stateless:
+    /// a fresh [`Rng`] keyed by `(sample_seed, seq_no)` rejects
+    /// duplicates until `d` distinct indices are drawn, then sorts them
+    /// ascending so argmin ties still break to the lowest stack index.
+    pub fn sample(&self, seq_no: u64) -> Option<Vec<usize>> {
+        if self.sample_d == 0
+            || self.sample_d >= self.stacks
+            || self.policy == RoutePolicy::RoundRobin
+        {
+            return None;
+        }
+        let mut rng = Rng::new(self.sample_seed ^ seq_no.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut picks: Vec<usize> = Vec::with_capacity(self.sample_d);
+        while picks.len() < self.sample_d {
+            let c = rng.below(self.stacks);
+            if !picks.contains(&c) {
+                picks.push(c);
+            }
+        }
+        picks.sort_unstable();
+        Some(picks)
+    }
+
+    /// [`StackRouter::choose`] over a sampled candidate set: `snaps`
+    /// holds one snapshot per candidate (ascending stack index, each
+    /// carrying its real index in [`StackSnapshot::stack`]). Returns the
+    /// winning candidate's real stack index.
+    pub fn choose_sampled(
+        &self,
+        now_s: f64,
+        snaps: &[StackSnapshot],
+        need_kv_bytes: f64,
+    ) -> usize {
+        debug_assert!(
+            self.policy != RoutePolicy::RoundRobin && !snaps.is_empty(),
+            "sampling applies only to snapshot-reading policies"
+        );
+        snaps[argmin(snaps, |s| self.key(s, now_s, need_kv_bytes))].stack
+    }
+
+    /// [`StackRouter::choose_sampled`] with non-routable stacks masked
+    /// out. Faithful JSQ(d) semantics: when none of the `d` sampled
+    /// candidates is routable the arrival takes the `no_route` path
+    /// (retry/backoff under the fault driver) even if an unsampled stack
+    /// is healthy — the router never widens the draw.
+    pub fn choose_sampled_masked(
+        &self,
+        now_s: f64,
+        snaps: &[StackSnapshot],
+        need_kv_bytes: f64,
+        routable: &[bool],
+    ) -> Option<usize> {
+        debug_assert!(self.policy != RoutePolicy::RoundRobin);
+        let up = |i: usize| routable.get(i).copied().unwrap_or(true);
+        let mut best: Option<usize> = None;
+        let mut best_key = (f64::INFINITY, f64::INFINITY, f64::INFINITY);
+        for s in snaps.iter() {
+            if !up(s.stack) {
+                continue;
+            }
+            let k = self.key(s, now_s, need_kv_bytes);
+            if best.is_none() || key_lt(k, best_key) {
+                best = Some(s.stack);
+                best_key = k;
+            }
+        }
+        best
     }
 
     /// Pick the stack for the arrival at `now_s`. `seq_no` is the
@@ -370,6 +459,73 @@ mod tests {
         snaps[1].compute_scale = 2.0;
         let lat = StackRouter::new(2, RoutePolicy::LatencyAware);
         assert_eq!(lat.choose(0, 0.0, &snaps, 0.0), 1, "8/2.0 beats 6/1.0");
+    }
+
+    #[test]
+    fn sampling_off_d_saturated_and_round_robin_take_the_full_path() {
+        assert!(StackRouter::new(8, RoutePolicy::JoinShortestQueue).sample(3).is_none());
+        for d in [8, 9, 1000] {
+            let r = StackRouter::new(8, RoutePolicy::JoinShortestQueue).with_sampling(d, 1);
+            assert!(r.sample(3).is_none(), "d={d} >= stacks must mean full snapshots");
+        }
+        let rr = StackRouter::new(8, RoutePolicy::RoundRobin).with_sampling(2, 1);
+        assert!(rr.sample(3).is_none(), "round-robin never reads snapshots");
+    }
+
+    #[test]
+    fn sample_draws_d_distinct_sorted_indices_deterministically() {
+        let r = StackRouter::new(64, RoutePolicy::KvAware).with_sampling(4, 0xFEED);
+        for seq in 0..200u64 {
+            let cands = r.sample(seq).expect("sampling active");
+            assert_eq!(cands.len(), 4);
+            assert!(cands.windows(2).all(|w| w[0] < w[1]), "sorted, distinct");
+            assert!(cands.iter().all(|&c| c < 64));
+            assert_eq!(r.sample(seq), Some(cands), "pure function of (seed, seq)");
+        }
+        // Different seq_nos (and seeds) actually vary the draw.
+        assert_ne!(r.sample(0), r.sample(1));
+        let other = StackRouter::new(64, RoutePolicy::KvAware).with_sampling(4, 0xBEEF);
+        assert_ne!(r.sample(0), other.sample(0));
+    }
+
+    #[test]
+    fn choose_sampled_is_choose_restricted_to_the_candidates() {
+        let mut snaps: Vec<StackSnapshot> = (0..6).map(snap).collect();
+        for (i, s) in snaps.iter_mut().enumerate() {
+            s.horizon_s = [5.0, 1.0, 3.0, 0.5, 4.0, 2.0][i];
+        }
+        let r = StackRouter::new(6, RoutePolicy::JoinShortestQueue).with_sampling(3, 7);
+        for seq in 0..50u64 {
+            let cands = r.sample(seq).unwrap();
+            let sub: Vec<StackSnapshot> = cands.iter().map(|&i| snaps[i]).collect();
+            let pick = r.choose_sampled(0.0, &sub, 0.0);
+            assert!(cands.contains(&pick));
+            // The pick is the best-ranked candidate, by the full key.
+            let best = cands
+                .iter()
+                .copied()
+                .min_by(|&a, &b| snaps[a].horizon_s.total_cmp(&snaps[b].horizon_s))
+                .unwrap();
+            assert_eq!(pick, best, "seq {seq}: argmin over candidates");
+        }
+    }
+
+    #[test]
+    fn choose_sampled_masked_never_widens_the_draw() {
+        let snaps: Vec<StackSnapshot> = (0..4).map(snap).collect();
+        let r = StackRouter::new(4, RoutePolicy::JoinShortestQueue).with_sampling(2, 3);
+        let cands = r.sample(0).unwrap();
+        let sub: Vec<StackSnapshot> = cands.iter().map(|&i| snaps[i]).collect();
+        // All candidates masked out: no_route even though other stacks
+        // are healthy — JSQ(d) never re-draws.
+        let mut mask = vec![true; 4];
+        for &c in &cands {
+            mask[c] = false;
+        }
+        assert_eq!(r.choose_sampled_masked(0.0, &sub, 0.0, &mask), None);
+        // One candidate routable: it wins regardless of rank.
+        mask[cands[1]] = true;
+        assert_eq!(r.choose_sampled_masked(0.0, &sub, 0.0, &mask), Some(cands[1]));
     }
 
     #[test]

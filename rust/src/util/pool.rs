@@ -15,6 +15,7 @@
 //! the hot path.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Resolve a thread-count knob: `0` means auto (the `HETRAX_THREADS` env
 /// var when set, otherwise one worker per available core), anything else
@@ -86,6 +87,60 @@ where
     par_map_threads(items, resolve_threads(0), f)
 }
 
+/// [`par_map_threads`] for consuming maps: `f` takes each item **by
+/// value**. This is what the post-stream cluster drain needs — once
+/// arrivals end, the per-stack `finish()` calls are independent, but
+/// they consume the stack. Items are parked in `Mutex<Option<T>>` slots
+/// so workers can take ownership through a shared reference; the mutexes
+/// are uncontended by construction (the atomic cursor hands each index
+/// to exactly one worker). Results come back in input order, preserving
+/// the byte-identical-across-thread-counts contract.
+pub fn par_map_owned<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len());
+    if threads <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let parked: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let item = parked[i]
+                            .lock()
+                            .expect("item slot poisoned")
+                            .take()
+                            .expect("item taken once");
+                        local.push((i, f(item)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for w in workers {
+            for (i, r) in w.join().expect("worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots.into_iter().map(|r| r.expect("slot filled")).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +196,26 @@ mod tests {
     fn resolve_threads_literal_and_floor() {
         assert_eq!(resolve_threads(3), 3);
         assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn owned_map_consumes_in_input_order() {
+        // Non-Clone items prove ownership actually transfers.
+        struct Token(usize);
+        let items: Vec<Token> = (0..97).map(Token).collect();
+        let out = par_map_owned(items, 4, |t| t.0 * 3);
+        assert_eq!(out, (0..97).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn owned_map_serial_parallel_and_edge_cases_agree() {
+        let f = |x: u64| x.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(17);
+        let items: Vec<u64> = (0..100).collect();
+        assert_eq!(
+            par_map_owned(items.clone(), 1, f),
+            par_map_owned(items, 8, f)
+        );
+        assert!(par_map_owned(Vec::<u32>::new(), 8, |x| x).is_empty());
+        assert_eq!(par_map_owned(vec![7u32], 8, |x| x + 1), vec![8]);
     }
 }
