@@ -14,6 +14,13 @@
 //! counts. Emits `BENCH_cluster_scale.json` (override the path via
 //! `CLUSTER_SCALE_JSON`; cap the sweep via `CLUSTER_SCALE_MAX_N` — CI
 //! smokes N ≤ 128; schema: DESIGN.md §Bench-Schemas).
+//!
+//! PR 10 adds the stream-length sweep: arrivals ∈ {10k, 100k, 1M} at a
+//! fixed cluster, run through the bounded-chunk arrival stream with the
+//! `util::mem` gauge installed. The claim is O(stacks + in-flight)
+//! memory — `peak_mem_bytes` must stay within 1.5x of the 10k point
+//! while per-event throughput stays within 2x. Cap the sweep via
+//! `CLUSTER_SCALE_MAX_ARRIVALS` (CI smokes ≤ 100k).
 
 use hetrax::cluster::Stepper;
 use hetrax::config::Config;
@@ -23,13 +30,23 @@ use hetrax::model::ModelId;
 use hetrax::traffic::{ArrivalPattern, OutputLenDist, RequestMix, RoutePolicy};
 use hetrax::util::bench::Bencher;
 use hetrax::util::json::Json;
-use hetrax::util::pool;
+use hetrax::util::{mem, pool};
+
+/// The peak-memory claim needs the counting allocator in this binary
+/// (the library never installs it on its own).
+#[global_allocator]
+static ALLOC: mem::CountingAlloc = mem::CountingAlloc;
 
 /// Fixed offered load: the datacenter regime (many mostly-idle stacks)
 /// where indexed stepping pays off. Per-stack load falls as N grows.
 const RPS: f64 = 2000.0;
 const DURATION_S: f64 = 0.25;
 const SAMPLE_D: usize = 4;
+
+/// Stream-length sweep shape: a fixed mid-size cluster at a rate high
+/// enough that 1M arrivals stay a tractable simulated duration.
+const STREAM_N: usize = 64;
+const STREAM_RPS: f64 = 20_000.0;
 
 fn scenario(n: usize, stepper: Stepper) -> DecodeConfig {
     let mix = RequestMix::single(ModelId::BertBase)
@@ -69,7 +86,9 @@ fn main() {
         let lin = scenario(n, Stepper::Linear);
 
         // The heap must be invisible in the output at every size.
+        mem::reset_peak();
         let report = decodetest::run(&cfg, &idx);
+        let peak_mem = mem::peak_bytes();
         let oracle = decodetest::run(&cfg, &lin);
         assert_eq!(
             report.to_json(&idx).pretty(),
@@ -91,7 +110,8 @@ fn main() {
             .set("indexed_median_s", t_idx.median_s())
             .set("linear_median_s", t_lin.median_s())
             .set("events_per_s", ev_s)
-            .set("speedup_vs_linear", t_lin.median_s() / t_idx.median_s());
+            .set("speedup_vs_linear", t_lin.median_s() / t_idx.median_s())
+            .set("peak_mem_bytes", peak_mem);
         rows.push(row);
     }
 
@@ -124,6 +144,76 @@ fn main() {
     assert_eq!(canonical, doc_of(1), "same config+seed must reproduce byte-identically");
     assert_eq!(canonical, doc_of(auto), "thread count must not change the output");
 
+    // ---- Stream-length sweep (PR 10): memory flat as arrivals grow ----
+    // Fixed cluster, growing stream: duration = arrivals / rate, served
+    // through the default bounded-chunk arrival stream. With the stream
+    // never materialized, peak live bytes are O(stacks + in-flight) and
+    // must not follow the stream length.
+    let max_arrivals: usize = std::env::var("CLUSTER_SCALE_MAX_ARRIVALS")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(1_000_000);
+    let mut lengths: Vec<usize> = [10_000usize, 100_000, 1_000_000]
+        .into_iter()
+        .filter(|&a| a <= max_arrivals)
+        .collect();
+    if lengths.is_empty() {
+        lengths.push(max_arrivals.max(1));
+    }
+
+    let mut stream_rows: Vec<Json> = Vec::new();
+    let mut stream_stats: Vec<(usize, f64, usize)> = Vec::new();
+    for &arrivals in &lengths {
+        let mut dc = scenario(STREAM_N, Stepper::Indexed);
+        dc.pattern = ArrivalPattern::Poisson { rps: STREAM_RPS };
+        dc.duration_s = arrivals as f64 / STREAM_RPS;
+        // One timed run per length (a Bencher repeat at 1M arrivals
+        // would dominate the whole bench); the gauge reads the phase's
+        // high-water mark, so the single pass is the measurement.
+        mem::reset_peak();
+        let start = std::time::Instant::now();
+        let report = decodetest::run(&cfg, &dc);
+        let wall_s = start.elapsed().as_secs_f64();
+        let peak = mem::peak_bytes();
+        let ev_s = report.total.submitted as f64 / wall_s;
+        println!(
+            "  stream   A={arrivals:<8} {:>9} arrived  {:>8.2} MiB peak  {:.0} events/s",
+            report.total.submitted,
+            peak as f64 / (1024.0 * 1024.0),
+            ev_s
+        );
+        let mut row = Json::obj();
+        row.set("arrivals_target", arrivals)
+            .set("arrived", report.total.submitted)
+            .set("completed", report.total.completed)
+            .set("stacks", STREAM_N)
+            .set("rps", STREAM_RPS)
+            .set("duration_s", dc.duration_s)
+            .set("stream_chunk", dc.stream_chunk)
+            .set("wall_s", wall_s)
+            .set("events_per_s", ev_s)
+            .set("peak_mem_bytes", peak);
+        stream_rows.push(row);
+        stream_stats.push((arrivals, ev_s, peak));
+    }
+
+    // The constant-memory acceptance: every longer stream holds peak
+    // memory within 1.5x of the shortest point, and per-event
+    // throughput within 2x (streaming must not trade time for space).
+    let (a0, sev0, peak0) = stream_stats[0];
+    for &(a, sev, peak) in &stream_stats[1..] {
+        assert!(
+            peak as f64 <= 1.5 * peak0 as f64,
+            "peak memory must stay flat as the stream grows: \
+             {a0} arrivals -> {peak0} B, {a} arrivals -> {peak} B (> 1.5x)"
+        );
+        assert!(
+            sev >= 0.5 * sev0,
+            "streaming must hold per-event throughput within 2x: \
+             {a0} arrivals -> {sev0:.0}/s, {a} arrivals -> {sev:.0}/s"
+        );
+    }
+
     let mut doc = Json::obj();
     doc.set("bench", "cluster_scale")
         .set("pattern", "poisson")
@@ -133,6 +223,8 @@ fn main() {
         .set("sample_d", SAMPLE_D)
         .set("max_n", max_n)
         .set("rows", Json::Arr(rows))
+        .set("max_arrivals", max_arrivals)
+        .set("stream_rows", Json::Arr(stream_rows))
         .set("bench_threads", auto);
     let out = std::env::var("CLUSTER_SCALE_JSON")
         .unwrap_or_else(|_| "BENCH_cluster_scale.json".into());

@@ -9,7 +9,12 @@ use hetrax::model::ModelId;
 use hetrax::traffic::loadtest::{self, LoadtestConfig};
 use hetrax::traffic::{ArrivalPattern, RequestMix, RoutePolicy};
 use hetrax::util::bench::Bencher;
-use hetrax::util::pool;
+use hetrax::util::{mem, pool};
+
+/// Report `peak_mem_bytes` from the counting allocator (util::mem);
+/// the library never installs the shim on its own.
+#[global_allocator]
+static ALLOC: mem::CountingAlloc = mem::CountingAlloc;
 
 fn config(threads: usize) -> LoadtestConfig {
     let mut lt = LoadtestConfig::new(
@@ -44,7 +49,9 @@ fn main() {
     let parallel = loadtest::run(&cfg, &lt_par).to_json(&lt_par).pretty();
     assert_eq!(serial, parallel, "loadtest output must not depend on threads");
 
+    mem::reset_peak();
     let report = loadtest::run(&cfg, &lt);
+    let peak_mem = mem::peak_bytes();
     println!(
         "\n  {} completed / {} submitted, p99 {:.2} ms, ReRAM peak {:.1} C, {} throttle events",
         report.total.completed,
@@ -57,6 +64,7 @@ fn main() {
     let mut doc = report.to_json(&lt);
     doc.set("run_median_s", t_serial.median_s())
         .set("run_median_parallel_s", t_par.median_s())
+        .set("peak_mem_bytes", peak_mem)
         .set("bench_threads", auto);
     let out = std::env::var("BENCH_SERVE_JSON").unwrap_or_else(|_| "BENCH_serve.json".into());
     std::fs::write(&out, doc.pretty()).expect("write bench json");

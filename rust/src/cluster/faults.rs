@@ -532,7 +532,8 @@ enum Payload {
 
 /// Heap event, totally ordered by `(t, class, seq)`: class 0 is
 /// fault/lifecycle (seq = creation order), class 1 is arrivals (seq = stream
-/// order, retries numbered past the originals).
+/// order, retries numbered from [`RETRY_SEQ_BASE`] so at an equal instant
+/// every original precedes every retry).
 #[derive(Debug, Clone)]
 struct Ev {
     t: f64,
@@ -571,7 +572,15 @@ struct ReqMeta {
     deadline_s: f64,
 }
 
-struct Driver<'a, S: ClusterStack, F: FnMut(&Request) -> f64> {
+/// Retry arrivals are renumbered from here: any retry's class-1
+/// sequence number must exceed any original's so that, at an equal
+/// instant, originals deliver first (the materialized driver numbered
+/// retries past `requests.len()`; the streamed driver does not know
+/// the stream length, and every original seq is far below this base,
+/// so the total order is unchanged).
+const RETRY_SEQ_BASE: u64 = 1 << 63;
+
+struct Driver<'a, S: ClusterStack, F: FnMut(&Request) -> f64, I: Iterator<Item = Request>> {
     stacks: &'a mut [S],
     router: &'a StackRouter,
     schedule: &'a FaultSchedule,
@@ -580,11 +589,27 @@ struct Driver<'a, S: ClusterStack, F: FnMut(&Request) -> f64> {
     health: Vec<HealthState>,
     cause: Vec<Option<Cause>>,
     stall_until: Vec<f64>,
+    /// Fault/lifecycle events and retry re-enqueues only — original
+    /// arrivals are pulled lazily from `source`, so the heap stays
+    /// O(faults + in-flight retries) instead of O(events).
     heap: BinaryHeap<Reverse<Ev>>,
+    /// The arrival stream, pulled one look-ahead event at a time.
+    source: I,
+    /// The next source arrival, already wrapped with its delivery key
+    /// (kept one ahead so exhaustion is known while the last arrival
+    /// is being processed — the recovery-rescheduling termination
+    /// bound reads it).
+    pending: Option<Ev>,
+    /// `source` returned `None` — no originals remain beyond `pending`.
+    source_done: bool,
+    /// Next original arrival's class-1 sequence number (stream order).
+    stream_seq: u64,
     fault_seq: u64,
+    /// Next retry sequence number (starts at [`RETRY_SEQ_BASE`]).
     arr_seq: u64,
-    /// Arrival-class events still in the heap; recovery re-checks stop
-    /// rescheduling once nothing remains to route (termination bound).
+    /// Arrival-class events pulled but not yet delivered (pending +
+    /// retries in the heap); with `source_done` this bounds recovery
+    /// re-checks once nothing remains to route.
     arrivals_outstanding: u64,
     meta: HashMap<u64, ReqMeta>,
     reads_snaps: bool,
@@ -598,7 +623,55 @@ struct Driver<'a, S: ClusterStack, F: FnMut(&Request) -> f64> {
     out: FaultOutcome,
 }
 
-impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
+impl<S: ClusterStack, F: FnMut(&Request) -> f64, I: Iterator<Item = Request>> Driver<'_, S, F, I> {
+    /// Pull the next original arrival into `pending` (no-op while one
+    /// is already staged or the source is exhausted).
+    fn refill(&mut self) {
+        if self.pending.is_none() && !self.source_done {
+            match self.source.next() {
+                Some(r) => {
+                    let seq = self.stream_seq;
+                    self.stream_seq += 1;
+                    self.out.arrived += 1;
+                    self.arrivals_outstanding += 1;
+                    self.pending =
+                        Some(Ev { t: r.arrival_s, class: 1, seq, payload: Payload::Arrival(r) });
+                }
+                None => self.source_done = true,
+            }
+        }
+    }
+
+    /// The globally next event under the `(t, class, seq)` order:
+    /// merge the staged source arrival against the heap front. The
+    /// two can never tie — original and retry sequence spaces are
+    /// disjoint, and fault events are class 0.
+    fn next_event(&mut self) -> Option<Ev> {
+        self.refill();
+        let take_pending = match (self.heap.peek(), self.pending.as_ref()) {
+            (None, None) => return None,
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            (Some(Reverse(h)), Some(p)) => p < h,
+        };
+        if take_pending {
+            let ev = self.pending.take();
+            self.refill();
+            ev
+        } else {
+            self.heap.pop().map(|Reverse(ev)| ev)
+        }
+    }
+
+    /// Whether any arrival-class event can still deliver — the
+    /// termination bound for recovery re-checks. Matches the
+    /// materialized driver's `arrivals_outstanding > 0` truth value:
+    /// undelivered originals are `pending` plus the unexhausted
+    /// source, retries are counted in `arrivals_outstanding`.
+    fn arrivals_remaining(&self) -> bool {
+        self.arrivals_outstanding > 0 || !self.source_done
+    }
+
     fn step_all(&mut self, t: f64) {
         match &mut self.queue {
             Some(q) => q.advance(self.stacks, t),
@@ -763,7 +836,7 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
         if reram_c > rule.emergency_ceiling_c {
             // Still hot: stay quarantined, re-check after another cooldown —
             // but only while arrivals remain to route (termination bound).
-            if self.arrivals_outstanding > 0 {
+            if self.arrivals_remaining() {
                 self.heap.push(Reverse(Ev {
                     t: t + rule.cooldown_s.max(0.0),
                     class: 0,
@@ -818,7 +891,7 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
                 self.stacks[i].set_emergency(true);
                 self.out.transitions.push((t, i, HealthState::Quarantined));
                 self.rec.health(t, i, HealthState::Quarantined.name());
-                if self.arrivals_outstanding > 0 {
+                if self.arrivals_remaining() {
                     self.heap.push(Reverse(Ev {
                         t: t + rule.cooldown_s.max(0.0),
                         class: 0,
@@ -899,7 +972,7 @@ impl<S: ClusterStack, F: FnMut(&Request) -> f64> Driver<'_, S, F> {
 
     fn run(mut self) -> FaultOutcome {
         let mut prev_t = f64::NEG_INFINITY;
-        while let Some(Reverse(ev)) = self.heap.pop() {
+        while let Some(ev) = self.next_event() {
             debug_assert!(ev.t >= prev_t, "event stream must be monotone");
             prev_t = ev.t;
             match ev.payload {
@@ -986,6 +1059,34 @@ where
     S: ClusterStack,
     F: FnMut(&Request) -> f64,
 {
+    let arrivals = requests.iter().cloned();
+    drive_faulty_stream(stepper, stacks, arrivals, router, schedule, need_kv_bytes, rec)
+}
+
+/// [`drive_faulty_stepped`] over an arrival iterator instead of a
+/// materialized slice — the constant-memory entry. Arrivals are pulled
+/// with exactly one event of look-ahead (the merge against the fault
+/// heap needs the next arrival instant, nothing more), so peak memory
+/// is O(stacks + faults + in-flight retries) regardless of stream
+/// length. The iterator must yield requests sorted by `arrival_s`
+/// (the slice contract, unchanged); [`FaultOutcome::arrived`] counts
+/// what the iterator actually produced. Byte-identical to the slice
+/// path on the same stream — `drive_faulty_stepped` is now a wrapper
+/// over this function, so the two cannot drift.
+pub fn drive_faulty_stream<S, F, I>(
+    stepper: Stepper,
+    stacks: &mut [S],
+    arrivals: I,
+    router: &StackRouter,
+    schedule: &FaultSchedule,
+    need_kv_bytes: F,
+    rec: &Recorder,
+) -> FaultOutcome
+where
+    S: ClusterStack,
+    F: FnMut(&Request) -> f64,
+    I: IntoIterator<Item = Request>,
+{
     assert!(!stacks.is_empty(), "cluster needs at least one stack");
     let indexed = stepper == Stepper::Indexed
         && schedule.thermal.is_none()
@@ -993,7 +1094,7 @@ where
         && !rec.enabled();
     let queue = indexed.then(|| EventQueue::new(stacks));
     let n = stacks.len();
-    let mut heap = BinaryHeap::with_capacity(requests.len() + schedule.events.len());
+    let mut heap = BinaryHeap::with_capacity(schedule.events.len() + 16);
     let mut fault_seq = 0u64;
     for e in &schedule.events {
         heap.push(Reverse(Ev {
@@ -1003,14 +1104,6 @@ where
             payload: Payload::Fault(e.kind, e.stack),
         }));
         fault_seq += 1;
-    }
-    for (i, r) in requests.iter().enumerate() {
-        heap.push(Reverse(Ev {
-            t: r.arrival_s,
-            class: 1,
-            seq: i as u64,
-            payload: Payload::Arrival(r.clone()),
-        }));
     }
     let reads_snaps =
         router.policy != RoutePolicy::RoundRobin || schedule.thermal.is_some();
@@ -1024,15 +1117,19 @@ where
         cause: vec![None; n],
         stall_until: vec![0.0; n],
         heap,
+        source: arrivals.into_iter(),
+        pending: None,
+        source_done: false,
+        stream_seq: 0,
         fault_seq,
-        arr_seq: requests.len() as u64,
-        arrivals_outstanding: requests.len() as u64,
+        arr_seq: RETRY_SEQ_BASE,
+        arrivals_outstanding: 0,
         meta: HashMap::new(),
         reads_snaps,
         snaps: Vec::with_capacity(n),
         queue,
         rec,
-        out: FaultOutcome::new(n, requests.len() as u64),
+        out: FaultOutcome::new(n, 0),
     }
     .run()
 }
@@ -1159,6 +1256,60 @@ mod tests {
             assert_eq!(out.failed, 0);
             assert!(out.transitions.is_empty());
             assert_eq!(out.arrived + out.requeued, out.pushes + out.no_route);
+        }
+    }
+
+    #[test]
+    fn streamed_arrivals_match_the_slice_path_without_materializing() {
+        // The slice entry wraps the streaming core, so this pins the other
+        // direction: feeding arrivals one at a time from a lazy iterator —
+        // never holding the stream in a Vec — produces the same pushes,
+        // ledger, and health timeline, fault schedule and all.
+        let reqs = stream(12, 0.1);
+        let schedule = FaultSchedule {
+            events: vec![
+                FaultEvent { t_s: 0.25, stack: 0, kind: FaultKind::Crash },
+                FaultEvent { t_s: 0.45, stack: 1, kind: FaultKind::Stall { duration_s: 0.2 } },
+            ],
+            thermal: None,
+            wear: None,
+            retry: retry_fast(),
+            recover_p: 1.0,
+            seed: 7,
+        };
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::JoinShortestQueue] {
+            for stepper in [Stepper::Linear, Stepper::Indexed] {
+                let router = StackRouter::new(3, policy);
+                let mut a = vec![Mock::new(), Mock::new(), Mock::new()];
+                let slice = drive_faulty_stepped(
+                    stepper,
+                    &mut a,
+                    &reqs,
+                    &router,
+                    &schedule,
+                    |_| 0.0,
+                    &Recorder::Off,
+                );
+                let mut b = vec![Mock::new(), Mock::new(), Mock::new()];
+                let lazy = (0..12u64)
+                    .map(|i| Request::synthetic(i, ModelId::BertBase, 128, i as f64 * 0.1));
+                let streamed = drive_faulty_stream(
+                    stepper,
+                    &mut b,
+                    lazy,
+                    &router,
+                    &schedule,
+                    |_| 0.0,
+                    &Recorder::Off,
+                );
+                assert_eq!(streamed.arrived, 12, "streamed entry counts pulls");
+                assert_eq!(streamed, slice, "outcome diverged under {policy:?}/{stepper:?}");
+                for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                    let ax: Vec<u64> = x.pushed.iter().map(|r| r.id).collect();
+                    let bx: Vec<u64> = y.pushed.iter().map(|r| r.id).collect();
+                    assert_eq!(ax, bx, "stack {i} diverged under {policy:?}/{stepper:?}");
+                }
+            }
         }
     }
 

@@ -74,8 +74,8 @@ pub mod prepass;
 mod testkit;
 
 pub use faults::{
-    drive_faulty, drive_faulty_obs, drive_faulty_stepped, FaultEvent, FaultKind, FaultOutcome,
-    FaultSchedule, HealthState, RetryPolicy, ThermalRule, WearRule,
+    drive_faulty, drive_faulty_obs, drive_faulty_stepped, drive_faulty_stream, FaultEvent,
+    FaultKind, FaultOutcome, FaultSchedule, HealthState, RetryPolicy, ThermalRule, WearRule,
 };
 
 use crate::coordinator::Request;
@@ -408,23 +408,24 @@ where
     drive_stepped(Stepper::default(), stacks, requests, router, pinned, need_kv_bytes, rec)
 }
 
-/// [`drive_obs`] with an explicit [`Stepper`] — the full-parameter core
-/// every wrapper resolves to. The `cluster::testkit` equivalence grid
-/// calls it with [`Stepper::Linear`] to run the retained oracle.
+/// [`drive_obs`] with an explicit [`Stepper`] — the slice entry over
+/// the per-arrival [`DriveLoop`] core. The `cluster::testkit`
+/// equivalence grid calls it with [`Stepper::Linear`] to run the
+/// retained oracle; [`drive_stream_stepped`] runs the same core off a
+/// bounded iterator instead of a materialized slice.
 pub fn drive_stepped<S, F>(
     stepper: Stepper,
     stacks: &mut [S],
     requests: &[Request],
     router: &StackRouter,
     pinned: Option<&[usize]>,
-    mut need_kv_bytes: F,
+    need_kv_bytes: F,
     rec: &Recorder,
 ) -> Vec<usize>
 where
     S: ClusterStack,
     F: FnMut(&Request) -> f64,
 {
-    assert!(!stacks.is_empty(), "cluster needs at least one stack");
     if let Some(a) = pinned {
         assert_eq!(a.len(), requests.len(), "pinned assignment must cover the stream");
         // An out-of-range index means the replay does not describe this
@@ -439,31 +440,143 @@ where
             );
         }
     }
-    let record = rec.enabled();
-    // Pinned replay and round-robin never read the snapshots; skip
-    // building them on those paths.
-    let reads_snaps =
-        pinned.is_none() && router.policy != crate::traffic::router::RoutePolicy::RoundRobin;
-    // Recording forces the linear cadence: Window events are emitted as
-    // stacks step, and their order is part of the trace contract.
-    let mut queue = match stepper {
-        Stepper::Indexed if !record => Some(EventQueue::new(stacks)),
-        _ => None,
-    };
+    let mut d = DriveLoop::new(stepper, stacks, router, pinned, need_kv_bytes, rec);
     let mut assignment = Vec::with_capacity(requests.len());
-    let mut snaps: Vec<StackSnapshot> = Vec::with_capacity(stacks.len());
-    let mut prev_t = f64::NEG_INFINITY;
-    for (seq_no, r) in requests.iter().enumerate() {
+    for r in requests {
+        assignment.push(d.route(r.clone()));
+    }
+    d.finish();
+    assignment
+}
+
+/// Drive a *streamed* arrival sequence: identical per-arrival semantics
+/// to [`drive_stepped`] (same step/snapshot/route/push order, so the
+/// result is byte-identical — the testkit grid pins it), but arrivals
+/// are pulled from the iterator in bounded look-ahead chunks of
+/// `chunk` requests and dropped once routed, so memory is O(stacks +
+/// in-flight) instead of O(events). `chunk = 0` means unbounded
+/// look-ahead: the stream is materialized whole first, reproducing the
+/// legacy memory profile (the chunk-invariance pin runs {1, 64, 0}).
+/// Returns the number of requests routed; per-request assignments are
+/// deliberately not retained (retaining them would reintroduce the
+/// O(events) term — callers needing the assignment use the slice
+/// entry).
+pub fn drive_stream_stepped<S, F, I>(
+    stepper: Stepper,
+    stacks: &mut [S],
+    arrivals: I,
+    router: &StackRouter,
+    need_kv_bytes: F,
+    rec: &Recorder,
+    chunk: usize,
+) -> u64
+where
+    S: ClusterStack,
+    F: FnMut(&Request) -> f64,
+    I: IntoIterator<Item = Request>,
+{
+    let mut arrivals = arrivals.into_iter();
+    let mut d = DriveLoop::new(stepper, stacks, router, None, need_kv_bytes, rec);
+    let mut routed = 0u64;
+    if chunk == 0 {
+        let all: Vec<Request> = arrivals.collect();
+        for r in all {
+            d.route(r);
+            routed += 1;
+        }
+    } else {
+        let mut buf: Vec<Request> = Vec::with_capacity(chunk.min(1 << 16));
+        loop {
+            buf.clear();
+            buf.extend(arrivals.by_ref().take(chunk));
+            if buf.is_empty() {
+                break;
+            }
+            for r in buf.drain(..) {
+                d.route(r);
+                routed += 1;
+            }
+        }
+    }
+    d.finish();
+    routed
+}
+
+/// The per-arrival cluster loop, factored out of [`drive_stepped`] so
+/// the slice and streaming entries share one body: step due stacks,
+/// snapshot, route, push, rekey — in the `(virtual_time, stack_idx,
+/// seq_no)` order the module contract specifies. Holds only O(stacks)
+/// state; the arrival source hands it one request at a time.
+struct DriveLoop<'a, S, F> {
+    stacks: &'a mut [S],
+    router: &'a StackRouter,
+    pinned: Option<&'a [usize]>,
+    need_kv_bytes: F,
+    rec: &'a Recorder,
+    record: bool,
+    reads_snaps: bool,
+    queue: Option<EventQueue>,
+    snaps: Vec<StackSnapshot>,
+    prev_t: f64,
+    seq_no: u64,
+}
+
+impl<'a, S, F> DriveLoop<'a, S, F>
+where
+    S: ClusterStack,
+    F: FnMut(&Request) -> f64,
+{
+    fn new(
+        stepper: Stepper,
+        stacks: &'a mut [S],
+        router: &'a StackRouter,
+        pinned: Option<&'a [usize]>,
+        need_kv_bytes: F,
+        rec: &'a Recorder,
+    ) -> DriveLoop<'a, S, F> {
+        assert!(!stacks.is_empty(), "cluster needs at least one stack");
+        let record = rec.enabled();
+        // Pinned replay and round-robin never read the snapshots; skip
+        // building them on those paths.
+        let reads_snaps =
+            pinned.is_none() && router.policy != crate::traffic::router::RoutePolicy::RoundRobin;
+        // Recording forces the linear cadence: Window events are emitted
+        // as stacks step, and their order is part of the trace contract.
+        let queue = match stepper {
+            Stepper::Indexed if !record => Some(EventQueue::new(stacks)),
+            _ => None,
+        };
+        let snaps = Vec::with_capacity(stacks.len());
+        DriveLoop {
+            stacks,
+            router,
+            pinned,
+            need_kv_bytes,
+            rec,
+            record,
+            reads_snaps,
+            queue,
+            snaps,
+            prev_t: f64::NEG_INFINITY,
+            seq_no: 0,
+        }
+    }
+
+    /// Route one arrival (stream order; `r.arrival_s` must be
+    /// non-decreasing) and return the chosen stack.
+    fn route(&mut self, r: Request) -> usize {
+        let seq_no = self.seq_no;
+        self.seq_no += 1;
         let t = r.arrival_s;
-        debug_assert!(t >= prev_t, "arrival stream must be sorted");
-        prev_t = t;
+        debug_assert!(t >= self.prev_t, "arrival stream must be sorted");
+        self.prev_t = t;
         // (virtual_time, stack_idx, seq_no): advance the stacks with
         // work before this instant in index order, snapshot in index
         // order, then route.
-        match &mut queue {
-            Some(q) => q.advance(stacks, t),
+        match &mut self.queue {
+            Some(q) => q.advance(self.stacks, t),
             None => {
-                for s in stacks.iter_mut() {
+                for s in self.stacks.iter_mut() {
                     s.step_until(t);
                 }
             }
@@ -471,18 +584,22 @@ where
         // JSQ(d): snapshot only the seeded candidate draw when sampling
         // is active (None = the full-snapshot path, which is also what
         // `--sample-d` >= N resolves to, bit-exactly).
-        let sampled = if reads_snaps || record { router.sample(seq_no as u64) } else { None };
-        if reads_snaps || record {
-            snaps.clear();
+        let sampled = if self.reads_snaps || self.record {
+            self.router.sample(seq_no)
+        } else {
+            None
+        };
+        if self.reads_snaps || self.record {
+            self.snaps.clear();
             match &sampled {
                 Some(cands) => {
                     for &i in cands {
-                        snaps.push(stacks[i].snapshot(i));
+                        self.snaps.push(self.stacks[i].snapshot(i));
                     }
                 }
                 None => {
-                    for (i, s) in stacks.iter().enumerate() {
-                        snaps.push(s.snapshot(i));
+                    for (i, s) in self.stacks.iter().enumerate() {
+                        self.snaps.push(s.snapshot(i));
                     }
                 }
             }
@@ -490,44 +607,48 @@ where
         // Only the kv-aware ranking ever consumes the KV reservation —
         // for every other policy (and for pinned replay without a rank
         // to record) the closure's result would be dropped unread.
-        let need = if router.policy == crate::traffic::router::RoutePolicy::KvAware
-            && (pinned.is_none() || record)
+        let need = if self.router.policy == crate::traffic::router::RoutePolicy::KvAware
+            && (self.pinned.is_none() || self.record)
         {
-            need_kv_bytes(r)
+            (self.need_kv_bytes)(&r)
         } else {
             0.0
         };
-        let pick = match pinned {
-            Some(a) => a[seq_no],
+        let pick = match self.pinned {
+            Some(a) => a[seq_no as usize],
             None => match &sampled {
-                Some(_) => router.choose_sampled(t, &snaps, need),
-                None => router.choose(seq_no as u64, t, &snaps, need),
+                Some(_) => self.router.choose_sampled(t, &self.snaps, need),
+                None => self.router.choose(seq_no, t, &self.snaps, need),
             },
         };
-        if record {
-            rec.arrival(t, r.id);
-            let candidates: Vec<Candidate> = snaps
+        if self.record {
+            self.rec.arrival(t, r.id);
+            let candidates: Vec<Candidate> = self
+                .snaps
                 .iter()
                 .map(|s| Candidate {
                     stack: s.stack,
-                    key: router.rank_key(s, t, need),
+                    key: self.router.rank_key(s, t, need),
                     routable: true,
                 })
                 .collect();
-            rec.route(t, r.id, router.policy.name(), Some(pick), candidates);
+            self.rec.route(t, r.id, self.router.policy.name(), Some(pick), candidates);
         }
-        stacks[pick].push(r.clone());
-        if let Some(q) = &mut queue {
-            q.rekey(stacks, pick);
+        self.stacks[pick].push(r);
+        if let Some(q) = &mut self.queue {
+            q.rekey(self.stacks, pick);
         }
-        assignment.push(pick);
+        pick
     }
-    if let Some(q) = queue {
-        if prev_t > f64::NEG_INFINITY {
-            q.finish(stacks, prev_t);
+
+    /// End-of-stream: the indexed stepper's catch-up pass.
+    fn finish(mut self) {
+        if let Some(q) = self.queue.take() {
+            if self.prev_t > f64::NEG_INFINITY {
+                q.finish(self.stacks, self.prev_t);
+            }
         }
     }
-    assignment
 }
 
 #[cfg(test)]
@@ -729,6 +850,40 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn streamed_drive_matches_slice_drive_at_any_chunk() {
+        // The streaming entry must reproduce the slice entry's step
+        // cadence and push sequence exactly, at every chunk size (0 =
+        // unbounded look-ahead) and under both steppers.
+        let reqs = stream(17, 0.2);
+        for stepper in [Stepper::Linear, Stepper::Indexed] {
+            for policy in [RoutePolicy::RoundRobin, RoutePolicy::JoinShortestQueue] {
+                let router = StackRouter::new(3, policy);
+                let mut base = vec![Probe::new(), Probe::new(), Probe::new()];
+                let _assignment = drive_stepped(
+                    stepper, &mut base, &reqs, &router, None, |_| 0.0, &Recorder::Off,
+                );
+                for chunk in [0usize, 1, 3, 64] {
+                    let mut st = vec![Probe::new(), Probe::new(), Probe::new()];
+                    let routed = drive_stream_stepped(
+                        stepper,
+                        &mut st,
+                        reqs.iter().cloned(),
+                        &router,
+                        |_| 0.0,
+                        &Recorder::Off,
+                        chunk,
+                    );
+                    assert_eq!(routed, reqs.len() as u64);
+                    for (b, s) in base.iter().zip(&st) {
+                        assert_eq!(b.deadlines, s.deadlines, "{stepper:?} chunk {chunk}");
+                        assert_eq!(b.pushed, s.pushed, "{stepper:?} chunk {chunk}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -221,6 +221,95 @@ fn disaggregated_drain_is_stepper_and_thread_invariant() {
 }
 
 #[test]
+fn streaming_chunk_size_is_invisible_across_the_grid() {
+    // PR 10's pin: the bounded-look-ahead arrival stream is a memory
+    // optimization, not a semantics change. `stream_chunk` 0
+    // (materialize the whole stream up front — the legacy profile), 1
+    // (the strictest generator/serving interleave) and 64 must produce
+    // byte-identical output on every axis the stepper grid covers.
+    let cfg = Config::default();
+    let sweep = |make: &dyn Fn() -> DecodeConfig, run: &dyn Fn(&DecodeConfig) -> String, tag: &str| {
+        let mut dc = make();
+        dc.stream_chunk = 0;
+        let materialized = run(&dc);
+        for chunk in [1usize, 64] {
+            let mut dc = make();
+            dc.stream_chunk = chunk;
+            assert_eq!(materialized, run(&dc), "{tag}: chunk {chunk} diverged");
+        }
+        materialized
+    };
+
+    // Fault-free, across cluster size x policy x stepper.
+    for n in [2usize, 8, 64] {
+        for policy in [RoutePolicy::JoinShortestQueue, RoutePolicy::KvAware] {
+            for stepper in [Stepper::Linear, Stepper::Indexed] {
+                sweep(
+                    &|| scenario(n, policy, stepper),
+                    &fingerprint,
+                    &format!("N={n} {} {stepper:?}", policy.name()),
+                );
+            }
+        }
+    }
+
+    // Faulted: the lazy one-ahead driver against the slice path, with
+    // the failover ledger included in the fingerprint.
+    let faulted = |dc: &DecodeConfig| {
+        let schedule = FaultSchedule::generate(9, dc.stacks, dc.duration_s);
+        let (report, out) = decodetest::run_with_faults(&cfg, dc, &schedule);
+        format!("{}\n{}", report.to_json(dc).pretty(), out.to_json().pretty())
+    };
+    for stepper in [Stepper::Linear, Stepper::Indexed] {
+        sweep(
+            &|| scenario(8, RoutePolicy::JoinShortestQueue, stepper),
+            &faulted,
+            &format!("faulted {stepper:?}"),
+        );
+    }
+
+    // Traced: chunking must not perturb Window-event cadence or the
+    // per-window metrics series.
+    sweep(
+        &|| scenario(8, RoutePolicy::KvAware, Stepper::Indexed),
+        &|dc| {
+            let rec = Recorder::on();
+            let report = decodetest::run_traced(&cfg, dc, &rec);
+            format!(
+                "{}\n{}\n{}",
+                report.to_json(dc).pretty(),
+                rec.trace_json().unwrap().pretty(),
+                rec.metrics_jsonl().unwrap()
+            )
+        },
+        "traced",
+    );
+
+    // Disaggregated: the fleet's arrival loop streams too, including
+    // under a mid-run prefill-stack crash, and across thread counts.
+    for threads in [1usize, 4] {
+        sweep(
+            &|| {
+                let mut dc = scenario(4, RoutePolicy::JoinShortestQueue, Stepper::Indexed);
+                dc.threads = threads;
+                dc
+            },
+            &|dc| {
+                let fc = FleetConfig {
+                    dc: dc.clone(),
+                    prefill_stacks: 2,
+                    transfer_bw_bps: None,
+                    crash: Some((0.05, 0)),
+                };
+                let (report, out) = fleet::run_disaggregated(&cfg, &fc);
+                format!("{}\n{}", report.to_json(&fc.dc).pretty(), out.to_json().pretty())
+            },
+            &format!("disaggregated threads={threads}"),
+        );
+    }
+}
+
+#[test]
 fn random_scenarios_conserve_requests_and_never_leak_kv() {
     // 100 seeded draws over cluster size, load, output mix, sampling
     // degree and fault pressure, all through the indexed stepper: every

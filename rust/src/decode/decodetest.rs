@@ -434,7 +434,15 @@ fn run_inner(
         mix: dc.mix.clone(),
         seed: dc.seed,
     };
-    let requests = generator.generate(dc.duration_s);
+    // Streamed runs (`stream_chunk > 0`) never materialize the arrival
+    // vector: phase tables and engines come from the generator's
+    // stream-length-independent key superset, and arrivals flow from
+    // the bounded iterator straight into the drive loop. Pre-pass
+    // routing folds over the whole stream to build its assignment, so
+    // it always materializes.
+    let streaming = dc.stream_chunk > 0 && matches!(mode, RouteMode::Live);
+    let requests: Vec<Request> =
+        if streaming { Vec::new() } else { generator.generate(dc.duration_s) };
     let threads = pool::resolve_threads(dc.threads);
     // Per-architecture configs, phase tables, and engines — one set per
     // *distinct* arch, shared by that arch's stacks. A homogeneous
@@ -448,10 +456,15 @@ fn run_inner(
         }
     }
     let cfgs: Vec<Config> = distinct.iter().map(|a| a.spec().config(cfg)).collect();
-    let keys = phases::decode_keys(&requests);
+    let keys = if streaming { generator.decode_keys() } else { phases::decode_keys(&requests) };
+    let candidates: Vec<phases::PhaseKey> = if streaming {
+        generator.phase_keys()
+    } else {
+        requests.iter().map(|r| (r.model, r.variant, r.seq)).collect()
+    };
     let tables: Vec<_> = cfgs
         .iter()
-        .map(|c| phases::phase_table_with_chunks(c, &requests, dc.chunk_tokens, threads))
+        .map(|c| phases::phase_table_for_keys(c, &candidates, dc.chunk_tokens, threads))
         .collect();
     let engines: Vec<DecodeEngine> = cfgs
         .iter()
@@ -500,28 +513,56 @@ fn run_inner(
             .workload(r.model, r.variant)
             .peak_kv_bytes(r.seq, r.out_tokens.max(1))
     };
-    let fault_outcome = match faults {
-        None => {
-            cluster::drive_stepped(
+    let fault_outcome = if streaming {
+        match faults {
+            None => {
+                cluster::drive_stream_stepped(
+                    dc.stepper,
+                    &mut stacks,
+                    generator.stream(dc.duration_s),
+                    &router,
+                    need,
+                    rec,
+                    dc.stream_chunk,
+                );
+                None
+            }
+            // The fault driver's look-ahead is a single event, so the
+            // chunk knob has nothing left to bound.
+            Some(schedule) => Some(cluster::drive_faulty_stream(
+                dc.stepper,
+                &mut stacks,
+                generator.stream(dc.duration_s),
+                &router,
+                schedule,
+                need,
+                rec,
+            )),
+        }
+    } else {
+        match faults {
+            None => {
+                cluster::drive_stepped(
+                    dc.stepper,
+                    &mut stacks,
+                    &requests,
+                    &router,
+                    pinned.as_deref(),
+                    need,
+                    rec,
+                );
+                None
+            }
+            Some(schedule) => Some(cluster::drive_faulty_stepped(
                 dc.stepper,
                 &mut stacks,
                 &requests,
                 &router,
-                pinned.as_deref(),
+                schedule,
                 need,
                 rec,
-            );
-            None
+            )),
         }
-        Some(schedule) => Some(cluster::drive_faulty_stepped(
-            dc.stepper,
-            &mut stacks,
-            &requests,
-            &router,
-            schedule,
-            need,
-            rec,
-        )),
     };
     // Post-stream drain: independent per stack, so it fans out — except
     // under a live recorder, where the serial drain keeps trace order.
@@ -649,6 +690,40 @@ mod tests {
         dc.threads = 4;
         let c = run(&cfg, &dc).to_json(&dc).pretty();
         assert_eq!(a, c, "thread count must not change output");
+    }
+
+    #[test]
+    fn streamed_run_is_byte_identical_to_materialized() {
+        // The constant-memory path must not change a single output
+        // byte: the same config serialized with the stream materialized
+        // up front (`stream_chunk = 0`) and streamed at several chunk
+        // sizes, fault-free and faulted. The cluster::testkit grid
+        // sweeps the full scenario matrix; this pins the decode CLI's
+        // own entry points.
+        let cfg = Config::default();
+        let mut dc = base(200.0, 0.8);
+        dc.stacks = 2;
+        dc.stream_chunk = 0;
+        let materialized = run(&cfg, &dc).to_json(&dc).pretty();
+        for chunk in [1usize, 64, 1024] {
+            let mut s = dc.clone();
+            s.stream_chunk = chunk;
+            let streamed = run(&cfg, &s).to_json(&s).pretty();
+            assert_eq!(streamed, materialized, "chunk {chunk} diverged");
+        }
+
+        let (mut dcf, schedule) = faulted_cluster_scenario(RoutePolicy::KvAware);
+        dcf.stream_chunk = 0;
+        let (r0, o0) = run_with_faults(&cfg, &dcf, &schedule);
+        let mut dcs = dcf.clone();
+        dcs.stream_chunk = 64;
+        let (r1, o1) = run_with_faults(&cfg, &dcs, &schedule);
+        assert_eq!(
+            r0.to_json(&dcf).pretty(),
+            r1.to_json(&dcs).pretty(),
+            "faulted streamed run diverged"
+        );
+        assert_eq!(o0.to_json().pretty(), o1.to_json().pretty());
     }
 
     #[test]

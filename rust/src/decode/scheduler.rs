@@ -128,6 +128,15 @@ pub struct DecodeConfig {
     /// 0 (default) and any `d >= stacks` mean full snapshots —
     /// bit-identical to the pre-sampling router.
     pub sample_d: usize,
+    /// Arrival-stream look-ahead (requests buffered at a time) for the
+    /// live run path: the generator is consumed as a bounded iterator
+    /// and arrivals are dropped once routed, so memory is O(stacks +
+    /// in-flight) regardless of `duration_s`. 0 materializes the whole
+    /// stream up front (the legacy memory profile). Results are
+    /// byte-identical at every value — the `cluster::testkit` grid pins
+    /// {1, 64, 0}. Pre-pass routing replays a whole-stream assignment
+    /// and always materializes.
+    pub stream_chunk: usize,
 }
 
 impl DecodeConfig {
@@ -148,6 +157,7 @@ impl DecodeConfig {
             archs: Vec::new(),
             stepper: cluster::Stepper::default(),
             sample_d: 0,
+            stream_chunk: 1024,
         }
     }
 }

@@ -450,11 +450,14 @@ fn snaps_of(stacks: &[DecodeStack<'_>]) -> Vec<StackSnapshot> {
 /// Route a batch of prefill completions to decode stacks. Completions are
 /// sorted by `(finish_s, id)` so delivery order — and therefore the
 /// KV-aware router's view — is deterministic regardless of which stack
-/// finished which prefill.
+/// finished which prefill. Each completion *consumes* its `orig_out`
+/// entry (a prefill completes at most once per request id — a crash
+/// surrenders queued work before it can complete), so the budget map
+/// stays O(in-flight) on streamed runs instead of O(arrivals).
 #[allow(clippy::too_many_arguments)]
 fn deliver_handoffs(
     mut completions: Vec<Completion>,
-    orig_out: &HashMap<u64, usize>,
+    orig_out: &mut HashMap<u64, usize>,
     stacks: &mut [DecodeStack<'_>],
     engine: &DecodeEngine<'_>,
     router: &StackRouter,
@@ -472,7 +475,7 @@ fn deliver_handoffs(
     });
     for c in completions {
         out.completions_prefill += 1;
-        let budget = orig_out.get(&c.id).copied().unwrap_or(1);
+        let budget = orig_out.remove(&c.id).unwrap_or(1);
         if budget <= 1 {
             // Single-token request: the prefill emission IS the answer.
             continue;
@@ -526,7 +529,7 @@ fn crash_stack(
     engine: &DecodeEngine<'_>,
     arrival_router: &StackRouter,
     handoff_router: &StackRouter,
-    orig_out: &HashMap<u64, usize>,
+    orig_out: &mut HashMap<u64, usize>,
     bw: f64,
     handoff_seq: &mut u64,
     rec: &Recorder,
@@ -626,7 +629,14 @@ pub fn run_disaggregated_traced(
         mix: dc.mix.clone(),
         seed: dc.seed,
     };
-    let requests = generator.generate(dc.duration_s);
+    // Streamed runs (`stream_chunk > 0`, the default) never materialize
+    // the arrival vector: the driver below is one-arrival-at-a-time
+    // already, so the stream feeds it directly and the phase tables and
+    // engines come from the generator's stream-length-independent key
+    // superset. 0 keeps the legacy whole-stream materialization.
+    let streaming = dc.stream_chunk > 0;
+    let requests: Vec<crate::coordinator::Request> =
+        if streaming { Vec::new() } else { generator.generate(dc.duration_s) };
     let threads = crate::util::pool::resolve_threads(dc.threads);
 
     let archs = resolve_archs(&dc.archs, n);
@@ -639,10 +649,15 @@ pub fn run_disaggregated_traced(
     // Per-distinct-arch configs, phase tables, and engines. Declared
     // before the stacks so the borrows outlive them.
     let cfgs: Vec<Config> = distinct.iter().map(|a| a.spec().config(cfg)).collect();
-    let keys = phases::decode_keys(&requests);
+    let keys = if streaming { generator.decode_keys() } else { phases::decode_keys(&requests) };
+    let candidates: Vec<phases::PhaseKey> = if streaming {
+        generator.phase_keys()
+    } else {
+        requests.iter().map(|r| (r.model, r.variant, r.seq)).collect()
+    };
     let tables: Vec<_> = cfgs
         .iter()
-        .map(|c| phases::phase_table_with_chunks(c, &requests, dc.chunk_tokens, threads))
+        .map(|c| phases::phase_table_for_keys(c, &candidates, dc.chunk_tokens, threads))
         .collect();
     let engines: Vec<DecodeEngine<'_>> = cfgs
         .iter()
@@ -699,13 +714,21 @@ pub fn run_disaggregated_traced(
     let mut handoff_seq: u64 = 0;
     let mut crash = fc.crash;
 
-    for (i, req) in requests.iter().enumerate() {
+    // The owned-arrival iterator: the seeded stream (O(1) memory) or the
+    // materialized vector, depending on the knob. Both feed the same
+    // per-arrival body, so the results are byte-identical.
+    let arrivals: Box<dyn Iterator<Item = crate::coordinator::Request>> = if streaming {
+        Box::new(generator.stream(dc.duration_s))
+    } else {
+        Box::new(requests.into_iter())
+    };
+    for (i, req) in arrivals.enumerate() {
         let t = req.arrival_s;
         if let Some((t_c, victim)) = crash {
             if t_c <= t && victim < n && alive[victim] {
                 crash_stack(
                     victim, t_c, &mut stacks, &mut alive, &prefill_mask,
-                    account_engine, &arrival_router, &handoff_router, &orig_out,
+                    account_engine, &arrival_router, &handoff_router, &mut orig_out,
                     bw, &mut handoff_seq, rec, &mut out,
                 );
                 crash = None;
@@ -722,7 +745,7 @@ pub fn run_disaggregated_traced(
             .map(|j| !prefill_mask[j] && alive[j])
             .collect();
         deliver_handoffs(
-            done, &orig_out, &mut stacks, account_engine, &handoff_router,
+            done, &mut orig_out, &mut stacks, account_engine, &handoff_router,
             &decode_mask, bw, &mut handoff_seq, rec, &mut out,
         );
 
@@ -765,7 +788,7 @@ pub fn run_disaggregated_traced(
         if victim < n && alive[victim] {
             crash_stack(
                 victim, t_c, &mut stacks, &mut alive, &prefill_mask,
-                account_engine, &arrival_router, &handoff_router, &orig_out,
+                account_engine, &arrival_router, &handoff_router, &mut orig_out,
                 bw, &mut handoff_seq, rec, &mut out,
             );
         }
@@ -781,7 +804,7 @@ pub fn run_disaggregated_traced(
         .map(|j| !prefill_mask[j] && alive[j])
         .collect();
     deliver_handoffs(
-        done, &orig_out, &mut stacks, account_engine, &handoff_router,
+        done, &mut orig_out, &mut stacks, account_engine, &handoff_router,
         &decode_mask, bw, &mut handoff_seq, rec, &mut out,
     );
 
@@ -971,6 +994,31 @@ mod tests {
             report2.to_json(&fc.dc).pretty()
         );
         assert_eq!(out.to_json().pretty(), out2.to_json().pretty());
+    }
+
+    #[test]
+    fn streamed_fleet_is_byte_identical_to_materialized() {
+        // The disaggregated driver fed by the bounded stream (several
+        // chunk sizes) must reproduce the materialized run byte for
+        // byte — report and ledger — including across a mid-stream
+        // crash, where the budget map is consumed on delivery.
+        let events = replay(20, 8);
+        let doc = |chunk: usize| {
+            let mut dc = fleet_dc(3, &events);
+            dc.stream_chunk = chunk;
+            let fc = FleetConfig {
+                dc,
+                prefill_stacks: 2,
+                transfer_bw_bps: None,
+                crash: Some((0.008, 0)),
+            };
+            let (r, o) = run_disaggregated(&Config::default(), &fc);
+            format!("{}\n{}", r.to_json(&fc.dc).pretty(), o.to_json().pretty())
+        };
+        let materialized = doc(0);
+        for chunk in [1usize, 64, 1024] {
+            assert_eq!(doc(chunk), materialized, "chunk {chunk} diverged");
+        }
     }
 
     #[test]

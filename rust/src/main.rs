@@ -37,6 +37,12 @@ use hetrax::traffic::loadtest::{self, LoadtestConfig};
 use hetrax::traffic::{ArrivalPattern, OutputLenDist, RequestMix, RoutePolicy};
 use hetrax::util::rng::Rng;
 
+/// Peak-memory gauge (util::mem) — installed here rather than in the
+/// library so embedders and the test binary keep the plain system
+/// allocator. `peak_mem_bytes` in the bench reports comes from this.
+#[global_allocator]
+static ALLOC: hetrax::util::mem::CountingAlloc = hetrax::util::mem::CountingAlloc;
+
 /// Tiny argv parser: positional command + `--key value` / `--flag`
 /// pairs, plus bare positional operands (only `inspect` takes any —
 /// every other command rejects them in `main`).
@@ -188,6 +194,9 @@ COMMANDS:
                --batch N --slo S --ceiling C --uncontrolled
                --sample-d D (JSQ(d): snapshot D sampled stacks per
                  arrival; 0 or D >= stacks = full snapshots)
+               --stream-chunk N (arrival look-ahead; default 1024,
+                 0 = materialize the whole stream; results are
+                 byte-identical at every value)
                --trace FILE (replay) --threads N --out BENCH_serve.json
                --trace-out FILE (Perfetto trace_event JSON)
                --metrics-out FILE (per-window metrics JSONL)]
@@ -205,6 +214,7 @@ COMMANDS:
                --chunk-tokens N (0 = whole-prompt prefills)
                --kv-mib M --kv-sm-frac F --ceiling C --uncontrolled
                --sample-d D (JSQ(d) snapshot sampling; see loadtest)
+               --stream-chunk N (arrival look-ahead; see loadtest)
                --trace FILE (replay) --threads N --out BENCH_decode.json
                --trace-out FILE --metrics-out FILE]
   faulttest   decode run under a deterministic fault schedule: stack
@@ -357,7 +367,16 @@ struct TrafficArgs {
     ceiling: Option<f64>,
     uncontrolled: bool,
     sample_d: usize,
+    stream_chunk: usize,
 }
+
+/// Expected-arrival ceiling for generated patterns. Streaming keeps the
+/// arrival *stream* out of memory, but every admitted request still
+/// costs per-request serving state and telemetry, so a run whose
+/// expected count tops this is a mis-typed flag (e.g. `--duration 7200
+/// --rps 1e9`), not a workload — reject it up front with the math shown
+/// rather than grinding for hours.
+const MAX_EXPECTED_ARRIVALS: f64 = 1e9;
 
 /// Parse the shared traffic surface. Unknown or missing `--policy`
 /// values are hard errors (never a silent default); `--policy` absent
@@ -388,6 +407,14 @@ fn parse_traffic(args: &Args, default_rps: f64, default_duration: f64) -> Result
     if !matches!(pattern, ArrivalPattern::Replay { .. }) && (!rps.is_finite() || rps <= 0.0) {
         bail!("--rps must be a positive arrival rate (got {rps})");
     }
+    if !matches!(pattern, ArrivalPattern::Replay { .. }) && rps * duration > MAX_EXPECTED_ARRIVALS
+    {
+        bail!(
+            "--rps {rps} x --duration {duration} expects ~{:.2e} arrivals, over the \
+             {MAX_EXPECTED_ARRIVALS:.0e} practical limit — lower one of them",
+            rps * duration
+        );
+    }
     Ok(TrafficArgs {
         pattern,
         models: parse_models(args)?,
@@ -402,6 +429,7 @@ fn parse_traffic(args: &Args, default_rps: f64, default_duration: f64) -> Result
         },
         uncontrolled: args.has("uncontrolled"),
         sample_d,
+        stream_chunk: args.get_usize("stream-chunk", 1024)?,
     })
 }
 
@@ -425,10 +453,9 @@ fn parse_pattern(args: &Args, rps: f64, duration: f64) -> Result<ArrivalPattern>
             let path = args
                 .get("trace")
                 .ok_or_else(|| anyhow!("--pattern replay needs --trace FILE"))?;
-            let text = std::fs::read_to_string(path)
-                .with_context(|| format!("reading {path}"))?;
-            ArrivalPattern::replay_from_json(&text)
-                .map_err(|e| anyhow!("parsing {path}: {e}"))?
+            // Streams JSONL traces line-by-line (whole-doc arrays are
+            // sniffed and still accepted); errors carry path + line.
+            ArrivalPattern::replay_from_path(path).map_err(|e| anyhow!(e))?
         }
         other => bail!("unknown pattern {other:?}"),
     })
@@ -633,6 +660,7 @@ fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     lt.sample_d = t.sample_d;
     lt.throttle.ceiling_c = t.ceiling.unwrap_or(lt.throttle.ceiling_c);
     lt.throttle.enabled = !t.uncontrolled;
+    lt.stream_chunk = t.stream_chunk;
     let duration = t.duration;
 
     let report = loadtest::run_traced(cfg, &lt, &obs.rec);
@@ -667,7 +695,11 @@ fn cmd_loadtest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
         report.throttle_events,
         report.windows
     );
-    write_report(args.get("out").unwrap_or("BENCH_serve.json"), &report.to_json(&lt))?;
+    // Peak memory rides only on the CLI report, never inside to_json —
+    // the determinism tests compare to_json output across runs.
+    let mut doc = report.to_json(&lt);
+    doc.set("peak_mem_bytes", hetrax::util::mem::peak_bytes());
+    write_report(args.get("out").unwrap_or("BENCH_serve.json"), &doc)?;
     write_obs(&obs)
 }
 
@@ -694,6 +726,7 @@ fn cmd_decodetest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     dc.sample_d = ta.sample_d;
     dc.throttle.ceiling_c = ta.ceiling.unwrap_or(dc.throttle.ceiling_c);
     dc.throttle.enabled = !ta.uncontrolled;
+    dc.stream_chunk = ta.stream_chunk;
 
     if let Some(prefill_stacks) = disagg {
         return cmd_fleet(cfg, args, dc, prefill_stacks, &obs);
@@ -863,6 +896,7 @@ fn cmd_faulttest(cfg: &Config, args: &Args, seed: u64) -> Result<()> {
     dc.sample_d = ta.sample_d;
     dc.throttle.ceiling_c = ta.ceiling.unwrap_or(dc.throttle.ceiling_c);
     dc.throttle.enabled = !ta.uncontrolled;
+    dc.stream_chunk = ta.stream_chunk;
 
     let schedule = match args.get("schedule") {
         Some(path) => {
@@ -976,6 +1010,40 @@ mod tests {
             let e = parse_traffic(&args(&[("duration", Some(d))]), 200.0, 1.0).unwrap_err();
             assert!(e.to_string().contains("--duration"), "{d}: {e}");
         }
+    }
+
+    #[test]
+    fn absurd_rps_x_duration_is_a_clean_error() {
+        // Satellite of the streaming PR: a mis-typed flag pair whose
+        // expected arrival count tops the practical limit must fail
+        // fast with the math shown, not grind for hours.
+        let e = parse_traffic(
+            &args(&[("rps", Some("1e9")), ("duration", Some("7200"))]),
+            200.0,
+            1.0,
+        )
+        .unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("arrivals"), "{msg}");
+        assert!(msg.contains("practical limit"), "{msg}");
+        // The boundary itself is fine: 1e9 expected arrivals exactly.
+        parse_traffic(
+            &args(&[("rps", Some("1e6")), ("duration", Some("1000"))]),
+            200.0,
+            1.0,
+        )
+        .expect("at-limit rps x duration must parse");
+        // High rate alone is fine while the product stays under limit.
+        let t = parse_traffic(
+            &args(&[("rps", Some("1e9")), ("duration", Some("0.5"))]),
+            200.0,
+            1.0,
+        )
+        .expect("under-limit high rps must parse");
+        assert_eq!(t.stream_chunk, 1024, "streaming look-ahead defaults on");
+        let t = parse_traffic(&args(&[("stream-chunk", Some("0"))]), 200.0, 1.0)
+            .expect("--stream-chunk 0 (materialize) must parse");
+        assert_eq!(t.stream_chunk, 0);
     }
 
     #[test]

@@ -151,32 +151,90 @@ impl ArrivalPattern {
         };
         let mut events = Vec::new();
         for (i, e) in arr.as_arr().ok_or("\"events\" is not an array")?.iter().enumerate() {
-            let t_s = e
-                .get("t_s")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| format!("event {i}: missing t_s"))?;
-            let model = e
-                .get("model")
-                .and_then(Json::as_str)
-                .and_then(ModelId::parse)
-                .ok_or_else(|| format!("event {i}: bad model"))?;
-            let variant = match e.get("variant").and_then(Json::as_str) {
-                Some(v) => {
-                    ArchVariant::parse(v).ok_or_else(|| format!("event {i}: bad variant"))?
-                }
-                None => model.default_variant(),
-            };
-            let seq = e
-                .get("seq")
-                .and_then(Json::as_usize)
-                .filter(|&s| s > 0)
-                .ok_or_else(|| format!("event {i}: bad seq"))?;
-            let out_tokens = e.get("out_tokens").and_then(Json::as_usize).unwrap_or(0);
-            events.push(ReplayEvent { t_s, model, variant, seq, out_tokens });
+            let ev = event_from_json(e).map_err(|why| format!("event {i}: {why}"))?;
+            events.push(ev);
         }
         events.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).unwrap());
         Ok(ArrivalPattern::Replay { events })
     }
+
+    /// Parse a replay trace from a buffered reader, one JSON event
+    /// object per line (JSONL) — the constant-memory ingest path for
+    /// long recorded traces: the file is never held in memory whole,
+    /// only the parsed events. Blank lines are skipped; a malformed
+    /// line fails with its 1-based line number and a context snippet.
+    pub fn replay_from_jsonl<R: std::io::BufRead>(reader: R) -> Result<ArrivalPattern, String> {
+        let mut events = Vec::new();
+        for (i, line) in reader.lines().enumerate() {
+            let n = i + 1;
+            let line = line.map_err(|e| format!("line {n}: read error: {e}"))?;
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let snippet = |why: String| {
+                let ctx: String = trimmed.chars().take(60).collect();
+                let ellipsis = if trimmed.chars().count() > 60 { "…" } else { "" };
+                format!("line {n}: {why} in {ctx:?}{ellipsis}")
+            };
+            let doc = json::parse(trimmed).map_err(&snippet)?;
+            let ev = event_from_json(&doc).map_err(&snippet)?;
+            events.push(ev);
+        }
+        events.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).unwrap());
+        Ok(ArrivalPattern::Replay { events })
+    }
+
+    /// Load a replay trace from disk, sniffing the format: a leading
+    /// `[` or a first line that is not a complete event object means a
+    /// whole-document JSON trace ([`ArrivalPattern::replay_from_json`]);
+    /// otherwise the file is read line-by-line as JSONL
+    /// ([`ArrivalPattern::replay_from_jsonl`]) without ever
+    /// materializing it whole.
+    pub fn replay_from_path(path: &str) -> Result<ArrivalPattern, String> {
+        use std::io::{BufRead, BufReader, Read};
+        let open = || {
+            std::fs::File::open(path).map_err(|e| format!("cannot read trace {path:?}: {e}"))
+        };
+        let mut first = String::new();
+        BufReader::new(open()?)
+            .read_line(&mut first)
+            .map_err(|e| format!("cannot read trace {path:?}: {e}"))?;
+        let line_is_event = json::parse(first.trim())
+            .ok()
+            .filter(|d| matches!(d, Json::Obj(_)))
+            .as_ref()
+            .map(|d| event_from_json(d).is_ok())
+            .unwrap_or(false);
+        if line_is_event {
+            ArrivalPattern::replay_from_jsonl(BufReader::new(open()?))
+                .map_err(|e| format!("trace {path:?}: {e}"))
+        } else {
+            let mut text = String::new();
+            open()?
+                .read_to_string(&mut text)
+                .map_err(|e| format!("cannot read trace {path:?}: {e}"))?;
+            ArrivalPattern::replay_from_json(&text).map_err(|e| format!("trace {path:?}: {e}"))
+        }
+    }
+}
+
+/// Decode one replay event object; errors name the offending field
+/// (callers prefix the event index or line number).
+fn event_from_json(e: &Json) -> Result<ReplayEvent, String> {
+    let t_s = e.get("t_s").and_then(Json::as_f64).ok_or("missing t_s")?;
+    let model = e
+        .get("model")
+        .and_then(Json::as_str)
+        .and_then(ModelId::parse)
+        .ok_or("bad model")?;
+    let variant = match e.get("variant").and_then(Json::as_str) {
+        Some(v) => ArchVariant::parse(v).ok_or("bad variant")?,
+        None => model.default_variant(),
+    };
+    let seq = e.get("seq").and_then(Json::as_usize).filter(|&s| s > 0).ok_or("bad seq")?;
+    let out_tokens = e.get("out_tokens").and_then(Json::as_usize).unwrap_or(0);
+    Ok(ReplayEvent { t_s, model, variant, seq, out_tokens })
 }
 
 /// Weighted mix over models and sequence lengths, plus an optional
@@ -249,108 +307,259 @@ fn exp_rate(rng: &mut Rng, rate: f64) -> f64 {
     -(1.0 - rng.f64()).ln() / rate
 }
 
-fn push_sample(requests: &mut Vec<Request>, rng: &mut Rng, mix: &RequestMix, t: f64) {
-    let (model, variant, seq) = mix.sample(rng);
-    let mut r = Request::synthetic(0, model, seq, t);
-    r.variant = variant;
-    if let Some(dist) = &mix.output {
-        r.out_tokens = dist.sample(rng);
-    }
-    requests.push(r);
-}
-
 impl TrafficGen {
     /// Generate the full arrival stream for `duration_s` simulated
     /// seconds, sorted by arrival time with ids in arrival order.
+    /// Exactly `self.stream(duration_s).collect()` — the materialized
+    /// and streamed paths cannot drift because this *is* the stream.
     pub fn generate(&self, duration_s: f64) -> Vec<Request> {
-        let mut rng = Rng::new(self.seed);
-        let mut requests = Vec::new();
+        self.stream(duration_s).collect()
+    }
 
-        match &self.pattern {
+    /// The same arrival stream as [`TrafficGen::generate`], as a
+    /// pull-based iterator: one request is in memory at a time, so a
+    /// multi-hour replay runs in O(1) generator memory. The iterator
+    /// owns its own `Rng` seeded identically to `generate`'s and
+    /// replicates its draw order draw-for-draw, so
+    /// `stream(d).collect::<Vec<_>>() == generate(d)` byte-for-byte
+    /// (ids, bit-exact arrival times, sampled mixes and output
+    /// lengths) — pinned by the tests below.
+    pub fn stream(&self, duration_s: f64) -> ArrivalStream<'_> {
+        let mut rng = Rng::new(self.seed);
+        let state = match &self.pattern {
             ArrivalPattern::Poisson { rps } => {
                 if *rps > 0.0 {
-                    let mut t = 0.0;
-                    loop {
-                        t += exp_rate(&mut rng, *rps);
-                        if t >= duration_s {
-                            break;
-                        }
-                        push_sample(&mut requests, &mut rng, &self.mix, t);
-                    }
+                    StreamState::Poisson { rps: *rps, t: 0.0 }
+                } else {
+                    StreamState::Done
                 }
             }
             ArrivalPattern::Bursty { rps, burst, mean_on_s, mean_off_s } => {
                 let duty = mean_on_s / (mean_on_s + mean_off_s);
                 let rate_on = rps * burst.max(1.0);
                 let rate_off = ((rps - rate_on * duty) / (1.0 - duty).max(1e-9)).max(0.0);
-                let mut t = 0.0;
-                let mut on = true;
-                let mut state_end = exp_rate(&mut rng, 1.0 / mean_on_s);
-                while t < duration_s {
-                    let rate = if on { rate_on } else { rate_off };
-                    let dt = if rate > 0.0 {
-                        exp_rate(&mut rng, rate)
-                    } else {
-                        f64::INFINITY
-                    };
-                    if t + dt <= state_end {
-                        t += dt;
-                        if t < duration_s {
-                            push_sample(&mut requests, &mut rng, &self.mix, t);
-                        }
-                    } else {
-                        // Exponential holding times are memoryless, so
-                        // redrawing the inter-arrival at the boundary is
-                        // distributionally exact.
-                        t = state_end;
-                        on = !on;
-                        let mean = if on { *mean_on_s } else { *mean_off_s };
-                        state_end = t + exp_rate(&mut rng, 1.0 / mean);
-                    }
+                // First draw: the initial on-state holding time — the
+                // same first draw `generate` made.
+                let state_end = exp_rate(&mut rng, 1.0 / mean_on_s);
+                StreamState::Bursty {
+                    rate_on,
+                    rate_off,
+                    mean_on_s: *mean_on_s,
+                    mean_off_s: *mean_off_s,
+                    t: 0.0,
+                    on: true,
+                    state_end,
                 }
             }
             ArrivalPattern::Diurnal { rps, period_s, amplitude } => {
                 let a = amplitude.clamp(0.0, 0.999);
                 let rate_max = rps * (1.0 + a);
                 if rate_max > 0.0 {
-                    let two_pi = 2.0 * std::f64::consts::PI;
-                    let mut t = 0.0;
-                    loop {
-                        t += exp_rate(&mut rng, rate_max);
-                        if t >= duration_s {
-                            break;
-                        }
-                        let phase = two_pi * t / period_s - std::f64::consts::FRAC_PI_2;
-                        let rate = rps * (1.0 + a * phase.sin());
-                        if rng.f64() * rate_max < rate {
-                            push_sample(&mut requests, &mut rng, &self.mix, t);
-                        }
+                    StreamState::Diurnal { rps: *rps, period_s: *period_s, a, rate_max, t: 0.0 }
+                } else {
+                    StreamState::Done
+                }
+            }
+            ArrivalPattern::Replay { events } => StreamState::Replay { events, i: 0 },
+        };
+        ArrivalStream { rng, mix: &self.mix, duration_s, next_id: 0, state }
+    }
+
+    /// Every phase-table key this generator can emit, without
+    /// materializing the stream: the cartesian mix (models × seqs,
+    /// default variants) for the synthetic patterns, the recorded
+    /// events for replay. A *superset* of the keys the stream actually
+    /// samples is harmless — phase tables are lookup-only and every
+    /// entry is a pure function of its key — and the superset is
+    /// O(models · seqs), independent of stream length.
+    pub fn phase_keys(&self) -> Vec<(ModelId, ArchVariant, usize)> {
+        let mut keys: Vec<(ModelId, ArchVariant, usize)> = Vec::new();
+        let mut push = |k| {
+            if !keys.contains(&k) {
+                keys.push(k);
+            }
+        };
+        match &self.pattern {
+            ArrivalPattern::Replay { events } => {
+                for e in events {
+                    push((e.model, e.variant, e.seq));
+                }
+            }
+            _ => {
+                for &(m, _) in &self.mix.models {
+                    for &(s, _) in &self.mix.seqs {
+                        push((m, m.default_variant(), s));
                     }
                 }
             }
-            ArrivalPattern::Replay { events } => {
-                for e in events {
-                    if e.t_s >= duration_s {
-                        break;
+        }
+        keys
+    }
+
+    /// The (model, variant) companion of [`TrafficGen::phase_keys`] —
+    /// what [`crate::decode::DecodeEngine::build`] needs tables for.
+    pub fn decode_keys(&self) -> Vec<(ModelId, ArchVariant)> {
+        let mut keys: Vec<(ModelId, ArchVariant)> = Vec::new();
+        for (m, v, _) in self.phase_keys() {
+            if !keys.contains(&(m, v)) {
+                keys.push((m, v));
+            }
+        }
+        keys
+    }
+}
+
+/// Per-pattern iterator state for [`ArrivalStream`]. Each variant
+/// carries exactly the loop variables of the corresponding arm of the
+/// old batch generator, so one `next()` call performs one iteration of
+/// that loop (or several, for thinning rejections and MMPP state
+/// flips, which emitted nothing).
+enum StreamState<'a> {
+    Poisson {
+        rps: f64,
+        t: f64,
+    },
+    Bursty {
+        rate_on: f64,
+        rate_off: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+        t: f64,
+        on: bool,
+        state_end: f64,
+    },
+    Diurnal {
+        rps: f64,
+        period_s: f64,
+        a: f64,
+        rate_max: f64,
+        t: f64,
+    },
+    Replay {
+        events: &'a [ReplayEvent],
+        i: usize,
+    },
+    Done,
+}
+
+/// Pull-based seeded arrival stream (see [`TrafficGen::stream`]).
+/// Requests are produced one at a time in arrival order with
+/// sequential ids; dropping the iterator early is always safe (the
+/// tail is simply never drawn).
+pub struct ArrivalStream<'a> {
+    rng: Rng,
+    mix: &'a RequestMix,
+    duration_s: f64,
+    next_id: u64,
+    state: StreamState<'a>,
+}
+
+impl ArrivalStream<'_> {
+    /// Sample the mix for an arrival at `t` — draw-for-draw the old
+    /// generator's `push_sample`.
+    fn emit(&mut self, t: f64) -> Request {
+        let (model, variant, seq) = self.mix.sample(&mut self.rng);
+        let mut r = Request::synthetic(self.next_id, model, seq, t);
+        r.variant = variant;
+        if let Some(dist) = &self.mix.output {
+            r.out_tokens = dist.sample(&mut self.rng);
+        }
+        self.next_id += 1;
+        r
+    }
+}
+
+impl Iterator for ArrivalStream<'_> {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        loop {
+            match &mut self.state {
+                StreamState::Poisson { rps, t } => {
+                    *t += exp_rate(&mut self.rng, *rps);
+                    if *t >= self.duration_s {
+                        self.state = StreamState::Done;
+                        return None;
                     }
-                    let mut r = Request::synthetic(0, e.model, e.seq, e.t_s);
+                    let at = *t;
+                    return Some(self.emit(at));
+                }
+                StreamState::Bursty {
+                    rate_on,
+                    rate_off,
+                    mean_on_s,
+                    mean_off_s,
+                    t,
+                    on,
+                    state_end,
+                } => {
+                    if *t >= self.duration_s {
+                        self.state = StreamState::Done;
+                        return None;
+                    }
+                    let rate = if *on { *rate_on } else { *rate_off };
+                    let dt = if rate > 0.0 {
+                        exp_rate(&mut self.rng, rate)
+                    } else {
+                        f64::INFINITY
+                    };
+                    if *t + dt <= *state_end {
+                        *t += dt;
+                        if *t < self.duration_s {
+                            let at = *t;
+                            return Some(self.emit(at));
+                        }
+                        self.state = StreamState::Done;
+                        return None;
+                    }
+                    // Exponential holding times are memoryless, so
+                    // redrawing the inter-arrival at the boundary is
+                    // distributionally exact.
+                    *t = *state_end;
+                    *on = !*on;
+                    let mean = if *on { *mean_on_s } else { *mean_off_s };
+                    *state_end = *t + exp_rate(&mut self.rng, 1.0 / mean);
+                }
+                StreamState::Diurnal { rps, period_s, a, rate_max, t } => {
+                    *t += exp_rate(&mut self.rng, *rate_max);
+                    if *t >= self.duration_s {
+                        self.state = StreamState::Done;
+                        return None;
+                    }
+                    let two_pi = 2.0 * std::f64::consts::PI;
+                    let phase = two_pi * *t / *period_s - std::f64::consts::FRAC_PI_2;
+                    let rate = *rps * (1.0 + *a * phase.sin());
+                    if self.rng.f64() * *rate_max < rate {
+                        let at = *t;
+                        return Some(self.emit(at));
+                    }
+                    // Thinning rejection: no arrival, draw again.
+                }
+                StreamState::Replay { events, i } => {
+                    let Some(e) = events.get(*i) else {
+                        self.state = StreamState::Done;
+                        return None;
+                    };
+                    if e.t_s >= self.duration_s {
+                        self.state = StreamState::Done;
+                        return None;
+                    }
+                    *i += 1;
+                    let mut r = Request::synthetic(self.next_id, e.model, e.seq, e.t_s);
                     r.variant = e.variant;
                     r.out_tokens = if e.out_tokens > 0 {
                         e.out_tokens
                     } else if let Some(dist) = &self.mix.output {
-                        dist.sample(&mut rng)
+                        dist.sample(&mut self.rng)
                     } else {
                         0
                     };
-                    requests.push(r);
+                    self.next_id += 1;
+                    return Some(r);
                 }
+                StreamState::Done => return None,
             }
         }
-
-        for (i, r) in requests.iter_mut().enumerate() {
-            r.id = i as u64;
-        }
-        requests
     }
 }
 
@@ -561,6 +770,143 @@ mod tests {
         let reqs = g.generate(1.0);
         assert_eq!(reqs[0].out_tokens, 7, "recorded length wins");
         assert_eq!(reqs[1].out_tokens, 3, "missing length sampled from mix");
+    }
+
+    #[test]
+    fn stream_collect_is_byte_identical_to_generate_on_every_pattern() {
+        // The tentpole pin: the materialized and streamed paths agree
+        // request-for-request — same ids, bit-exact times, same sampled
+        // mixes and output lengths — across all four patterns, with and
+        // without an output distribution. (`generate` delegates to
+        // `stream` today; this guards any future divergence, and the
+        // empirical-rate tests above pin the distributions themselves.)
+        let patterns = vec![
+            ArrivalPattern::Poisson { rps: 350.0 },
+            ArrivalPattern::Bursty {
+                rps: 200.0,
+                burst: 4.0,
+                mean_on_s: 0.2,
+                mean_off_s: 0.8,
+            },
+            ArrivalPattern::Diurnal { rps: 400.0, period_s: 1.0, amplitude: 0.9 },
+            ArrivalPattern::replay_from_json(
+                r#"[{"t_s": 0.1, "model": "bert-tiny", "seq": 64},
+                    {"t_s": 0.4, "model": "bert-base", "seq": 128},
+                    {"t_s": 0.9, "model": "bert-tiny", "seq": 64, "out_tokens": 5}]"#,
+            )
+            .unwrap(),
+        ];
+        for pattern in patterns {
+            for output in [None, Some(OutputLenDist::Geometric { mean: 12.0 })] {
+                let mut mix = RequestMix::single(ModelId::BertBase);
+                mix.output = output;
+                let g = TrafficGen { pattern: pattern.clone(), mix, seed: 0x57AE };
+                let batch = g.generate(1.5);
+                let streamed: Vec<Request> = g.stream(1.5).collect();
+                assert_eq!(batch.len(), streamed.len(), "{}", pattern.name());
+                for (a, b) in batch.iter().zip(&streamed) {
+                    assert_eq!(a.id, b.id);
+                    assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+                    assert_eq!(a.model, b.model);
+                    assert_eq!(a.variant, b.variant);
+                    assert_eq!(a.seq, b.seq);
+                    assert_eq!(a.out_tokens, b.out_tokens);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_is_lazy_and_resumable_mid_pull() {
+        // Pulling k then collecting the rest equals one full collect —
+        // the bounded-chunk drivers depend on this.
+        let g = gen(ArrivalPattern::Poisson { rps: 300.0 }, 9);
+        let full = g.generate(1.0);
+        assert!(full.len() > 20);
+        let mut s = g.stream(1.0);
+        let head: Vec<Request> = s.by_ref().take(7).collect();
+        let tail: Vec<Request> = s.collect();
+        assert_eq!(head.len(), 7);
+        assert_eq!(head.len() + tail.len(), full.len());
+        let rejoined: Vec<Request> = head.into_iter().chain(tail).collect();
+        for (a, b) in full.iter().zip(&rejoined) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn jsonl_replay_parses_sorts_and_reports_line_errors() {
+        let text = "\n{\"t_s\": 0.5, \"model\": \"bert-tiny\", \"seq\": 64}\n\n\
+                    {\"t_s\": 0.1, \"model\": \"bart-base\", \"seq\": 128, \"variant\": \"encoder-decoder\"}\n";
+        let p = ArrivalPattern::replay_from_jsonl(text.as_bytes()).unwrap();
+        let ArrivalPattern::Replay { events } = &p else { panic!("not a replay") };
+        assert_eq!(events.len(), 2, "blank lines skipped");
+        assert!(events[0].t_s < events[1].t_s, "sorted by time");
+        assert_eq!(events[0].model, ModelId::BartBase);
+
+        // Malformed entry: error names the 1-based line and shows context.
+        let bad = "{\"t_s\": 0.5, \"model\": \"bert-tiny\", \"seq\": 64}\n\
+                   {\"t_s\": 0.6, \"model\": \"no-such-model\", \"seq\": 64}\n";
+        let err = ArrivalPattern::replay_from_jsonl(bad.as_bytes()).unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("bad model"), "{err}");
+        assert!(err.contains("no-such-model"), "{err}");
+        // Missing required field is caught too.
+        let err = ArrivalPattern::replay_from_jsonl("{\"model\": \"bert-tiny\", \"seq\": 1}".as_bytes())
+            .unwrap_err();
+        assert!(err.contains("line 1") && err.contains("missing t_s"), "{err}");
+    }
+
+    #[test]
+    fn jsonl_and_array_replays_generate_identical_streams() {
+        let array = r#"[
+            {"t_s": 0.2, "model": "bert-tiny", "seq": 64},
+            {"t_s": 0.7, "model": "bert-base", "seq": 128}
+        ]"#;
+        let jsonl = "{\"t_s\": 0.2, \"model\": \"bert-tiny\", \"seq\": 64}\n\
+                     {\"t_s\": 0.7, \"model\": \"bert-base\", \"seq\": 128}\n";
+        let a = gen(ArrivalPattern::replay_from_json(array).unwrap(), 3).generate(1.0);
+        let b = gen(ArrivalPattern::replay_from_jsonl(jsonl.as_bytes()).unwrap(), 3).generate(1.0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.id, x.model, x.seq), (y.id, y.model, y.seq));
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn phase_keys_cover_every_streamed_request() {
+        // The key superset must contain every (model, variant, seq) the
+        // stream can emit — the streaming drivers build phase tables
+        // from it instead of a materialized request vector.
+        let mut mix = RequestMix::models(&[ModelId::BertTiny, ModelId::BertBase]);
+        mix.seqs = vec![(64, 0.5), (256, 0.5)];
+        let g = TrafficGen {
+            pattern: ArrivalPattern::Poisson { rps: 500.0 },
+            mix,
+            seed: 21,
+        };
+        let keys = g.phase_keys();
+        assert_eq!(keys.len(), 4, "models x seqs");
+        for r in g.stream(1.0) {
+            assert!(keys.contains(&(r.model, r.variant, r.seq)), "{:?}", r.model);
+        }
+        let pairs = g.decode_keys();
+        for (m, v, _) in &keys {
+            assert!(pairs.contains(&(*m, *v)));
+        }
+        // Replay: keys come from the recorded events themselves.
+        let rp = gen(
+            ArrivalPattern::replay_from_json(
+                r#"[{"t_s": 0.1, "model": "bart-base", "seq": 96}]"#,
+            )
+            .unwrap(),
+            0,
+        );
+        let keys = rp.phase_keys();
+        assert_eq!(keys.len(), 1);
+        assert_eq!(keys[0].2, 96);
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::fleet::{self, StackArch, StackArchId};
 use crate::obs::{Outcome, Recorder, WindowSample};
 use crate::traffic::admission::{AdmissionController, BatchCost, ThrottleConfig};
 use crate::traffic::generator::{ArrivalPattern, RequestMix, TrafficGen};
-use crate::traffic::phases::{phase_table, PhaseInfo, PhaseKey};
+use crate::traffic::phases::{phase_table, phase_table_for_keys, PhaseInfo, PhaseKey};
 use crate::traffic::router::{RoutePolicy, StackRouter};
 use crate::traffic::telemetry::StackTelemetry;
 use crate::util::json::Json;
@@ -57,6 +57,13 @@ pub struct LoadtestConfig {
     /// JSQ(d) snapshot sampling degree: 0 (default) or `d >= stacks`
     /// means full snapshots, bit-identical to the pre-sampling router.
     pub sample_d: usize,
+    /// Arrival-stream look-ahead (requests buffered at a time): the
+    /// generator is consumed as a bounded iterator and arrivals are
+    /// dropped once routed, so memory is O(stacks + in-flight)
+    /// regardless of `duration_s`. 0 materializes the whole stream up
+    /// front (the legacy memory profile). Byte-identical at every value
+    /// (the `cluster::testkit` grid pins {1, 64, 0}).
+    pub stream_chunk: usize,
 }
 
 impl LoadtestConfig {
@@ -75,6 +82,7 @@ impl LoadtestConfig {
             archs: Vec::new(),
             stepper: cluster::Stepper::default(),
             sample_d: 0,
+            stream_chunk: 1024,
         }
     }
 }
@@ -587,7 +595,13 @@ pub fn run_traced(cfg: &Config, lt: &LoadtestConfig, rec: &Recorder) -> Loadtest
         mix: lt.mix.clone(),
         seed: lt.seed,
     };
-    let requests = generator.generate(lt.duration_s);
+    // Streamed runs (`stream_chunk > 0`, the default) never materialize
+    // the arrival vector: phase tables come from the generator's
+    // stream-length-independent key superset and arrivals flow from the
+    // bounded iterator straight into the drive loop.
+    let streaming = lt.stream_chunk > 0;
+    let requests: Vec<Request> =
+        if streaming { Vec::new() } else { generator.generate(lt.duration_s) };
     let threads = pool::resolve_threads(lt.threads);
     // One config + phase table per *distinct* architecture; a
     // homogeneous hetrax3d fleet builds exactly the pre-fleet single
@@ -600,10 +614,12 @@ pub fn run_traced(cfg: &Config, lt: &LoadtestConfig, rec: &Recorder) -> Loadtest
         }
     }
     let cfgs: Vec<Config> = distinct.iter().map(|a| a.spec().config(cfg)).collect();
-    let tables: Vec<_> = cfgs
-        .iter()
-        .map(|c| phase_table(c, &requests, threads))
-        .collect();
+    let tables: Vec<_> = if streaming {
+        let candidates = generator.phase_keys();
+        cfgs.iter().map(|c| phase_table_for_keys(c, &candidates, 0, threads)).collect()
+    } else {
+        cfgs.iter().map(|c| phase_table(c, &requests, threads)).collect()
+    };
 
     let router = StackRouter::new(lt.stacks, lt.policy).with_sampling(lt.sample_d, lt.seed);
     debug_assert_eq!(archs.len(), router.stacks);
@@ -621,7 +637,19 @@ pub fn run_traced(cfg: &Config, lt: &LoadtestConfig, rec: &Recorder) -> Loadtest
         })
         .collect();
     // One-shot prefill traffic holds no KV residency: need 0 bytes.
-    cluster::drive_stepped(lt.stepper, &mut stacks, &requests, &router, None, |_| 0.0, rec);
+    if streaming {
+        cluster::drive_stream_stepped(
+            lt.stepper,
+            &mut stacks,
+            generator.stream(lt.duration_s),
+            &router,
+            |_| 0.0,
+            rec,
+            lt.stream_chunk,
+        );
+    } else {
+        cluster::drive_stepped(lt.stepper, &mut stacks, &requests, &router, None, |_| 0.0, rec);
+    }
     // Post-stream drain: once arrivals end the per-stack `finish()`
     // calls are independent, so they fan out across workers — except
     // under a live recorder, where the serial drain keeps the trace's
@@ -698,6 +726,24 @@ mod tests {
         lt.threads = 4;
         let c = run(&cfg, &lt).to_json(&lt).pretty();
         assert_eq!(a, c, "thread count must not change output");
+    }
+
+    #[test]
+    fn streamed_run_is_byte_identical_to_materialized() {
+        // The constant-memory path must not change a single output
+        // byte: the default streamed run vs `stream_chunk = 0` (the
+        // legacy whole-stream materialization), at several chunk sizes.
+        let cfg = Config::default();
+        let mut lt = base(250.0, 1.0);
+        lt.stacks = 2;
+        lt.stream_chunk = 0;
+        let materialized = run(&cfg, &lt).to_json(&lt).pretty();
+        for chunk in [1usize, 64, 1024] {
+            let mut s = lt.clone();
+            s.stream_chunk = chunk;
+            let streamed = run(&cfg, &s).to_json(&s).pretty();
+            assert_eq!(streamed, materialized, "chunk {chunk} diverged");
+        }
     }
 
     #[test]

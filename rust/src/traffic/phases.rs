@@ -50,6 +50,23 @@ pub fn phase_table_with_chunks(
     chunk_tokens: usize,
     threads: usize,
 ) -> HashMap<PhaseKey, PhaseInfo> {
+    let keys: Vec<PhaseKey> = requests.iter().map(|r| (r.model, r.variant, r.seq)).collect();
+    phase_table_for_keys(cfg, &keys, chunk_tokens, threads)
+}
+
+/// Phase table from candidate keys instead of a materialized request
+/// vector — the streaming drivers feed this from
+/// [`crate::traffic::TrafficGen::phase_keys`], a stream-length-
+/// independent superset of the keys the run will look up. Duplicates
+/// are deduped in first-seen order; extra keys cost one evaluation
+/// each and are otherwise inert (every entry is a pure function of its
+/// key, and callers only ever look entries up).
+pub fn phase_table_for_keys(
+    cfg: &Config,
+    candidates: &[PhaseKey],
+    chunk_tokens: usize,
+    threads: usize,
+) -> HashMap<PhaseKey, PhaseInfo> {
     let mut keys: Vec<PhaseKey> = Vec::new();
     let mut seen: HashSet<PhaseKey> = HashSet::new();
     let mut push = |k: PhaseKey| {
@@ -57,13 +74,13 @@ pub fn phase_table_with_chunks(
             keys.push(k);
         }
     };
-    for r in requests {
-        push((r.model, r.variant, r.seq));
-        if chunk_tokens > 0 && r.seq > chunk_tokens {
-            push((r.model, r.variant, chunk_tokens));
-            let tail = r.seq % chunk_tokens;
+    for &(model, variant, seq) in candidates {
+        push((model, variant, seq));
+        if chunk_tokens > 0 && seq > chunk_tokens {
+            push((model, variant, chunk_tokens));
+            let tail = seq % chunk_tokens;
             if tail > 0 {
-                push((r.model, r.variant, tail));
+                push((model, variant, tail));
             }
         }
     }

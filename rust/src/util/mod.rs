@@ -1,7 +1,7 @@
 //! Shared utilities: deterministic PRNG, statistics, JSON, HTX tensor IO,
-//! the scoped-thread worker pool, and the bench harness. All
-//! self-contained — the offline environment provides no
-//! rand/serde/criterion.
+//! the scoped-thread worker pool, the bench harness, and the
+//! counting-allocator peak-memory gauge. All self-contained — the
+//! offline environment provides no rand/serde/criterion.
 //!
 //! Design record: DESIGN.md §Module-Index; the pool's input-order
 //! determinism contract and the `LogHistogram` percentiles are
@@ -9,6 +9,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod mem;
 pub mod pool;
 pub mod rng;
 pub mod stats;
